@@ -1,0 +1,52 @@
+//! The headline claim: lossless Llama-3.1-405B on ONE 8x80GB node.
+//!
+//! BF16 405B is ~810 GB — more than 8x80 GB of HBM, so deployment
+//! needs two nodes. DF11 compresses it to ~551 GB, which fits a single
+//! node with room for KV cache. This example builds the shard plans,
+//! verifies feasibility both ways, and estimates serving throughput.
+//!
+//! Run: `cargo run --release --example llama405b_single_node`
+
+use dfloat11::bench_harness::{fmt, Table};
+use dfloat11::gpu_sim::Device;
+use dfloat11::model::zoo;
+use dfloat11::multi_gpu::{min_gpus, plan_layer_sharding, throughput, ShardFormat};
+
+fn main() -> anyhow::Result<()> {
+    let model = zoo::llama31_405b();
+    let device = Device::a100_80g();
+    println!(
+        "{}: {:.0}B params, BF16 {} (paper: 811.71 GB)\n",
+        model.name,
+        model.num_params() as f64 / 1e9,
+        fmt::bytes(model.bf16_bytes()),
+    );
+
+    let mut table = Table::new(&["format", "gpus", "max shard", "fits 8x80GB?", "est tok/s (b=32)"]);
+    for format in [ShardFormat::Bf16, ShardFormat::Df11] {
+        let plan = plan_layer_sharding(&model, &device, 8, format)?;
+        let tps = if plan.feasible {
+            format!("{:.2}", throughput(&model, &plan, 32))
+        } else {
+            "-".to_string()
+        };
+        table.row(&[
+            format!("{format:?}"),
+            "8".into(),
+            fmt::bytes(*plan.bytes_per_gpu.iter().max().unwrap()),
+            if plan.feasible { "YES".into() } else { "no".to_string() },
+            tps,
+        ]);
+    }
+    table.print();
+
+    let bf16_need = min_gpus(&model, &device, ShardFormat::Bf16);
+    let df11_need = min_gpus(&model, &device, ShardFormat::Df11);
+    println!(
+        "\nminimum A100-80G count: BF16 {bf16_need} GPUs (two nodes), DF11 {df11_need} GPUs (one node)\n\
+         -> DF11 halves the hardware requirement with bit-identical outputs."
+    );
+    assert!(df11_need <= 8 && bf16_need > 8);
+    println!("llama405b_single_node OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Figure 5 live: how many tokens fit before OOM?
+//!
+//! With a fixed GPU memory budget, DF11's ~30% weight savings go to the
+//! KV cache, extending the maximum generation length 5.7–14.9×. This
+//! example drives the KV-cache manager against the simulated HBM
+//! allocator until OOM for both formats, plus prints the analytic curve
+//! for the paper's model/GPU pairs.
+//!
+//! Run: `cargo run --release --example long_generation`
+
+use dfloat11::bench_harness::{fmt, Table};
+use dfloat11::gpu_sim::{Device, HbmAllocator, MemoryCategory};
+use dfloat11::kvcache::KvCacheManager;
+use dfloat11::model::zoo;
+use dfloat11::offload::DF11_RATIO;
+
+fn main() -> anyhow::Result<()> {
+    // Paper pairs (Figure 5): model x GPU where BF16 fits but barely.
+    let cases = [
+        (zoo::llama31_8b(), Device::a5000()),
+        (zoo::qwen3_14b(), Device::a100_40g()),
+        (zoo::mistral_nemo(), Device::a100_40g()),
+        (zoo::llama33_70b(), Device::a100_80g().clone_n(2)),
+    ];
+
+    let mut table = Table::new(&[
+        "model", "device", "bf16 max tokens", "df11 max tokens", "gain",
+    ]);
+    for (cfg, device) in cases {
+        let mgr = KvCacheManager::new(&cfg, 16);
+        let overhead = (device.hbm_bytes as f64 * 0.08) as u64; // workspace
+        let usable = device.hbm_bytes - overhead;
+        let bf16_free = usable.saturating_sub(cfg.bf16_bytes());
+        let df11_free = usable.saturating_sub((cfg.bf16_bytes() as f64 * DF11_RATIO) as u64);
+        let t_bf16 = mgr.max_tokens_within(bf16_free, 1);
+        let t_df11 = mgr.max_tokens_within(df11_free, 1);
+        let gain = if t_bf16 == 0 {
+            "∞ (bf16 OOM at load)".to_string()
+        } else {
+            format!("{:.2}x", t_df11 as f64 / t_bf16 as f64)
+        };
+        table.row(&[
+            cfg.name.clone(),
+            device.name.to_string(),
+            t_bf16.to_string(),
+            t_df11.to_string(),
+            gain,
+        ]);
+    }
+    println!("Figure 5 (analytic): max decodable tokens at batch 1\n");
+    table.print();
+    println!("\npaper: DF11 supports 5.70-14.86x longer generation.\n");
+
+    // Live demonstration: actually grow a sequence page by page until
+    // the simulated allocator refuses.
+    let cfg = zoo::llama31_8b();
+    let device = Device::a5000();
+    for (label, ratio) in [("bf16", 1.0f64), ("df11", DF11_RATIO)] {
+        let mut hbm = HbmAllocator::new(device.clone());
+        let weights = (cfg.bf16_bytes() as f64 * ratio) as u64;
+        hbm.alloc(MemoryCategory::Weights, weights)?;
+        hbm.alloc(MemoryCategory::Overhead, (device.hbm_bytes as f64 * 0.08) as u64)?;
+        let mut mgr = KvCacheManager::new(&cfg, 16);
+        mgr.add_sequence(1)?;
+        let mut tokens = 0u64;
+        while mgr.extend(&mut hbm, 1, 256).is_ok() {
+            tokens += 256;
+        }
+        println!(
+            "{label}: weights {} -> OOM after {tokens} tokens (kv {} / free-at-start)",
+            fmt::bytes(weights),
+            fmt::bytes(hbm.breakdown()[&MemoryCategory::KvCache]),
+        );
+    }
+    println!("long_generation OK");
+    Ok(())
+}
+
+/// Helper: pretend-n-GPU device (aggregate HBM) for the 70B row.
+trait CloneN {
+    fn clone_n(&self, n: u32) -> Device;
+}
+impl CloneN for Device {
+    fn clone_n(&self, n: u32) -> Device {
+        Device {
+            hbm_bytes: self.hbm_bytes * n as u64,
+            ..self.clone()
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! §Perf probe: measure decode paths on a 2^20-element tensor.
+use dfloat11::bf16::Bf16;
+use dfloat11::dfloat11::decompress::decompress_sequential_into;
+use dfloat11::huffman::decode::decode_all_scalar;
+use dfloat11::rng::Rng;
+use dfloat11::Df11Tensor;
+use std::time::Instant;
+
+fn main() {
+    let n = 1 << 20;
+    let mut rng = Rng::new(7);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    let w: Vec<Bf16> = xs.into_iter().map(Bf16::from_f32).collect();
+    let t = Df11Tensor::compress(&w).unwrap();
+    let bytes = (n * 2) as f64;
+    let mut out = vec![Bf16::from_bits(0); n];
+
+    // step 0a: scalar oracle (linear codeword scan) — lower bound ref.
+    let t0 = Instant::now();
+    let _ = decode_all_scalar(t.codebook().canonical(), t.encoded(), t.bit_len()).unwrap();
+    println!("scalar oracle      : {:>8.1} MB/s", bytes / t0.elapsed().as_secs_f64() / 1e6);
+
+    // step 0b: hierarchical LUT walk via decode_all (BitReader peek per symbol).
+    let t0 = Instant::now();
+    let iters = 5;
+    for _ in 0..iters {
+        let _ = dfloat11::huffman::decode::decode_all(t.codebook(), t.encoded(), t.bit_len()).unwrap();
+    }
+    println!("hier LUT + BitReader: {:>8.1} MB/s", bytes * iters as f64 / t0.elapsed().as_secs_f64() / 1e6);
+
+    // step 1+2: sequential with fast table (current production).
+    let _ = decompress_sequential_into(&t, &mut out); // warm table
+    let t0 = Instant::now();
+    let iters = 20;
+    for _ in 0..iters {
+        decompress_sequential_into(&t, &mut out).unwrap();
+    }
+    println!("sequential+fast    : {:>8.1} MB/s", bytes * iters as f64 / t0.elapsed().as_secs_f64() / 1e6);
+    assert_eq!(out, w);
+
+    // two-phase kernel (fidelity path).
+    let t0 = Instant::now();
+    let iters = 5;
+    for _ in 0..iters {
+        t.decompress_into(&mut out).unwrap();
+    }
+    println!("two-phase kernel   : {:>8.1} MB/s", bytes * iters as f64 / t0.elapsed().as_secs_f64() / 1e6);
+}

@@ -1,0 +1,159 @@
+//! Quickstart: compress a tensor to DFloat11, decompress it bit-exactly,
+//! and (if artifacts are built) run the L1 Pallas decode kernel through
+//! the PJRT runtime on real encoded data.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dfloat11::bench_harness::fmt;
+use dfloat11::bf16::Bf16;
+use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::entropy::component_entropy;
+use dfloat11::rng::Rng;
+use dfloat11::Df11Tensor;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic weight matrix with LLM-like statistics.
+    let n = 1 << 20;
+    let mut rng = Rng::new(7);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    let weights: Vec<Bf16> = xs.into_iter().map(Bf16::from_f32).collect();
+
+    // 2. The paper's motivation (Figure 1): the exponent field is
+    //    information-sparse.
+    let e = component_entropy(&weights);
+    println!(
+        "entropy/bits: sign {:.2}/1, exponent {:.2}/8, mantissa {:.2}/7",
+        e.sign_bits, e.exponent_bits, e.mantissa_bits
+    );
+
+    // 3. Compress.
+    let tensor = Df11Tensor::compress(&weights)?;
+    let stats = tensor.stats();
+    println!(
+        "compressed {} -> {} ({:.2}%, {:.2} bits/weight; paper Table 1: ~68%, ~10.9)",
+        fmt::bytes(stats.original_bytes),
+        fmt::bytes(stats.compressed_bytes),
+        stats.ratio_percent(),
+        stats.bits_per_weight()
+    );
+
+    // 4. Decompress via the faithful two-phase kernel simulation…
+    let t0 = std::time::Instant::now();
+    let restored = tensor.decompress()?;
+    let kernel_dt = t0.elapsed().as_secs_f64();
+    assert_eq!(restored, weights, "bit-for-bit identical (Table 2)");
+    // …and via the optimized sequential hot path.
+    let t0 = std::time::Instant::now();
+    let restored2 = decompress_sequential(&tensor)?;
+    let seq_dt = t0.elapsed().as_secs_f64();
+    assert_eq!(restored2, weights);
+    println!(
+        "decompress: two-phase kernel {} ({}), sequential {} ({})",
+        fmt::seconds(kernel_dt),
+        fmt::throughput_bps(stats.original_bytes as f64 / kernel_dt),
+        fmt::seconds(seq_dt),
+        fmt::throughput_bps(stats.original_bytes as f64 / seq_dt),
+    );
+
+    // 5. If `make artifacts` has run, execute the L1 Pallas DF11 decode
+    //    kernel as an AOT artifact on the PJRT CPU client with the real
+    //    demo container — proving the L1 -> L3 path composes without
+    //    Python at runtime, bit for bit.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("df11_decode.hlo.txt").exists() && dir.join("demo_encoded.bin").exists() {
+        run_pallas_artifact(&dir)?;
+    } else {
+        println!("(artifacts/ not built; run `make artifacts` to exercise the PJRT path)");
+    }
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn read_bin(path: &std::path::Path) -> anyhow::Result<Vec<u8>> {
+    Ok(std::fs::read(path)?)
+}
+
+fn read_i32(path: &std::path::Path) -> anyhow::Result<Vec<i32>> {
+    let b = std::fs::read(path)?;
+    Ok(b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+/// Load the demo container dumped by aot.py, run the AOT Pallas decode
+/// kernel via PJRT, verify against the expected BF16 bits.
+fn run_pallas_artifact(dir: &std::path::Path) -> anyhow::Result<()> {
+    use dfloat11::runtime::{literal_i32, ArtifactMeta, Runtime};
+
+    let meta = ArtifactMeta::load(dir)?;
+    let demo = meta
+        .df11_demo
+        .ok_or_else(|| anyhow::anyhow!("meta.json lacks df11_decode"))?;
+
+    let encoded = read_bin(&dir.join("demo_encoded.bin"))?;
+    let gaps = read_i32(&dir.join("demo_gaps.bin"))?;
+    let outpos = read_i32(&dir.join("demo_outpos.bin"))?;
+    let luts = read_i32(&dir.join("demo_luts.bin"))?;
+    let lens = read_i32(&dir.join("demo_lens.bin"))?;
+    let sm = read_bin(&dir.join("demo_sm.bin"))?;
+    let expected_raw = read_bin(&dir.join("demo_expected.bin"))?;
+    let expected: Vec<u16> = expected_raw
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+    assert_eq!(encoded.len(), demo.encoded_len);
+    assert_eq!(gaps.len(), demo.num_chunks);
+    assert_eq!(expected.len(), demo.num_elements);
+
+    let rt = Runtime::cpu(dir)?;
+    let exe = rt.executable("df11_decode")?;
+    println!(
+        "PJRT {}: df11_decode compiled ({} elements, {} chunks, {} LUTs)",
+        rt.platform(),
+        demo.num_elements,
+        demo.num_chunks,
+        demo.num_luts
+    );
+
+    let enc_lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &[encoded.len()],
+        &encoded,
+    )
+    .map_err(wrap)?;
+    let sm_lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        &[sm.len()],
+        &sm,
+    )
+    .map_err(wrap)?;
+    let t0 = std::time::Instant::now();
+    let result = exe
+        .execute::<xla::Literal>(&[
+            enc_lit,
+            literal_i32(&gaps, &[demo.num_chunks as i64])?,
+            literal_i32(&outpos, &[demo.num_chunks as i64])?,
+            literal_i32(&luts, &[demo.num_luts as i64, 256])?,
+            literal_i32(&lens, &[256])?,
+            sm_lit,
+        ])
+        .map_err(wrap)?;
+    let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+    let out = lit.to_tuple1().map_err(wrap)?;
+    let decoded = out.to_vec::<u16>().map_err(wrap)?;
+    assert_eq!(
+        decoded, expected,
+        "PJRT-executed Pallas kernel must be bit-exact"
+    );
+    println!(
+        "PJRT df11_decode: {} weights decoded bit-exactly in {}",
+        decoded.len(),
+        fmt::seconds(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}

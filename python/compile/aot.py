@@ -1,0 +1,230 @@
+"""AOT lowering: JAX functions -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (shapes fixed at lowering time, recorded in meta.json):
+
+  block_fwd_b{B}.hlo.txt   one decoder block, decode step, batch B
+  embed_b{B}.hlo.txt       token embedding gather, batch B
+  lm_head_b{B}.hlo.txt     final norm + LM head, batch B
+  df11_decode.hlo.txt      the L1 Pallas DF11 decode kernel (demo shape)
+
+Run once via `make artifacts`; the Rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Must match rust/src/model/mod.rs::ModelConfig::tiny_100m().
+TINY_100M = dict(
+    name="tiny-llama-100m",
+    vocab_size=256,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2304,
+    max_seq_len=512,
+)
+
+BATCH_SIZES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_block_fwd(cfg: dict, batch: int) -> str:
+    d = cfg["d_model"]
+    kv = cfg["n_kv_heads"] * (d // cfg["n_heads"])
+    ff = cfg["d_ff"]
+    ms = cfg["max_seq_len"]
+
+    def fn(x, q, k, v, o, gate, up, down, kc, vc, pos):
+        xo, kco, vco = model.block_forward(
+            x, q, k, v, o, gate, up, down, kc, vc, pos,
+            cfg["n_heads"], cfg["n_kv_heads"],
+        )
+        return (xo, kco, vco)
+
+    lowered = jax.jit(fn).lower(
+        spec((batch, d)),
+        spec((d, d)),
+        spec((d, kv)),
+        spec((d, kv)),
+        spec((d, d)),
+        spec((d, ff)),
+        spec((d, ff)),
+        spec((ff, d)),
+        spec((batch, ms, kv)),
+        spec((batch, ms, kv)),
+        spec((), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_embed(cfg: dict, batch: int) -> str:
+    def fn(tokens, emb):
+        return (model.embed(tokens, emb),)
+
+    lowered = jax.jit(fn).lower(
+        spec((batch,), jnp.int32),
+        spec((cfg["vocab_size"], cfg["d_model"])),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_lm_head(cfg: dict, batch: int) -> str:
+    def fn(x, w):
+        return (model.lm_head(x, w),)
+
+    lowered = jax.jit(fn).lower(
+        spec((batch, cfg["d_model"])),
+        spec((cfg["d_model"], cfg["vocab_size"])),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_df11_decode() -> tuple[str, dict]:
+    """Lower the L1 Pallas decode kernel at a fixed demo shape.
+
+    The encoded stream for the demo shape is produced by ref.encode at
+    runtime-prep time; what we fix here are the array *sizes*, recorded
+    in meta.json so the Rust quickstart can build matching inputs.
+    """
+    from .kernels import ref
+    from .kernels.dfloat11 import _decode_kernel
+    from jax.experimental import pallas as pl
+
+    # Deterministic demo tensor (seed fixed; ~8k weights).
+    rng = np.random.default_rng(11)
+    x = (rng.standard_normal(8192) * 0.02).astype(np.float32)
+    bits = (x.view(np.uint32) >> 16).astype(np.uint16)
+    enc = ref.encode(bits)
+
+    chunks_per_program = 8
+    num_chunks = len(enc.gaps)
+    grid = (num_chunks + chunks_per_program - 1) // chunks_per_program
+    kernel = partial(
+        _decode_kernel,
+        bytes_per_chunk=enc.bytes_per_chunk,
+        bit_len=enc.bit_len,
+        chunks_per_program=chunks_per_program,
+        num_chunks=num_chunks,
+    )
+
+    def fn(encoded, gaps, outpos, luts, lens, sm):
+        out = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            out_shape=jax.ShapeDtypeStruct((enc.num_elements,), jnp.uint16),
+            interpret=True,
+        )(encoded, gaps, outpos, luts, lens, sm)
+        return (out,)
+
+    lowered = jax.jit(fn).lower(
+        spec((len(enc.encoded),), jnp.uint8),
+        spec((num_chunks,), jnp.int32),
+        spec((num_chunks,), jnp.int32),
+        spec(enc.luts.shape, jnp.int32),
+        spec((256,), jnp.int32),
+        spec((enc.num_elements,), jnp.uint8),
+    )
+    meta = dict(
+        num_elements=enc.num_elements,
+        num_chunks=num_chunks,
+        encoded_len=len(enc.encoded),
+        num_luts=int(enc.luts.shape[0]),
+        bit_len=enc.bit_len,
+        bytes_per_chunk=enc.bytes_per_chunk,
+        seed=11,
+    )
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-pallas",
+        action="store_true",
+        help="skip the (slow to trace) pallas demo artifact",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = TINY_100M
+    meta = {"model": cfg, "batch_sizes": list(BATCH_SIZES), "artifacts": {}}
+
+    for b in BATCH_SIZES:
+        for name, text in [
+            (f"block_fwd_b{b}", lower_block_fwd(cfg, b)),
+            (f"embed_b{b}", lower_embed(cfg, b)),
+            (f"lm_head_b{b}", lower_lm_head(cfg, b)),
+        ]:
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            meta["artifacts"][name] = f"{name}.hlo.txt"
+            print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.skip_pallas:
+        text, df11_meta = lower_df11_decode()
+        path = os.path.join(args.out_dir, "df11_decode.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"]["df11_decode"] = "df11_decode.hlo.txt"
+        meta["df11_decode"] = df11_meta
+        print(f"wrote {path} ({len(text)} chars)")
+        # Dump the demo container as flat little-endian binaries so the
+        # Rust quickstart can execute the artifact on REAL data and
+        # verify bit-exactness without a Python runtime dependency.
+        from .kernels import ref as _ref
+
+        rng = np.random.default_rng(df11_meta["seed"])
+        x = (rng.standard_normal(df11_meta["num_elements"]) * 0.02).astype(np.float32)
+        bits = (x.view(np.uint32) >> 16).astype(np.uint16)
+        enc = _ref.encode(bits)
+        demo = {
+            "demo_encoded.bin": enc.encoded.astype(np.uint8),
+            "demo_gaps.bin": enc.gaps.astype("<i4"),
+            "demo_outpos.bin": enc.chunk_out_pos.astype("<i4"),
+            "demo_luts.bin": enc.luts.astype("<i4"),
+            "demo_lens.bin": enc.code_lengths.astype("<i4"),
+            "demo_sm.bin": enc.sign_mantissa.astype(np.uint8),
+            "demo_expected.bin": bits.astype("<u2"),
+        }
+        for name, arr in demo.items():
+            arr.tofile(os.path.join(args.out_dir, name))
+        print("wrote demo container binaries")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

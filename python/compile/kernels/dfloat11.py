@@ -1,0 +1,175 @@
+"""L1: the DF11 decompression kernel in Pallas (TPU adaptation).
+
+The paper's CUDA kernel (Algorithm 1) is reorganized for the TPU
+execution model — see DESIGN.md § Hardware-Adaptation:
+
+* CUDA **threadblock** -> Pallas **grid program**: each grid step decodes
+  one run of `chunks_per_program` chunks of the encoded stream.
+* Per-thread **gap array** & per-block **output positions** -> per-chunk
+  `gaps` / `chunk_out_pos` auxiliary arrays, precomputed by the encoder.
+  With output positions known per chunk, the GPU kernel's phase 1
+  (count) + intra-block Blelloch scan collapse into a host-side prefix
+  sum, and the device kernel decodes in a **single pass** — TPUs have no
+  warp divergence to coordinate around, and the VPU wants one regular
+  loop.
+* Hierarchical **LUTs in SRAM** -> LUT tables as kernel operands that
+  the compiler keeps in VMEM ((k+1) x 256 x 4 bytes, far under the
+  ~16 MB budget).
+* The decoded BF16 tile feeds `jnp.dot` on the MXU in model.py — the
+  paper's decompress-then-GEMM fusion.
+
+`interpret=True` everywhere: the image's PJRT plugin is CPU-only; real
+TPU lowering would emit a Mosaic custom-call it cannot execute. The
+kernel is structured for TPU but *validated* through the interpreter
+against `ref.decode_reference`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import Df11Encoded, INVALID, POINTER_FLAG
+
+
+def _decode_kernel(
+    encoded_ref,  # uint8[padded_bytes + 4]
+    gaps_ref,  # int32[C]
+    outpos_ref,  # int32[C]
+    luts_ref,  # int32[k, 256]
+    lens_ref,  # int32[256]
+    sm_ref,  # uint8[N]
+    out_ref,  # uint16[N]
+    *,
+    bytes_per_chunk: int,
+    bit_len: int,
+    chunks_per_program: int,
+    num_chunks: int,
+):
+    """One grid program: decode `chunks_per_program` consecutive chunks."""
+    pid = pl.program_id(0)
+    chunk_bits = bytes_per_chunk * 8
+
+    def read_byte_window(bitpos):
+        """The next 8 bits starting at `bitpos`, as an int32 in [0, 255]."""
+        byte_idx = bitpos // 8
+        off = bitpos % 8
+        b0 = pl.load(encoded_ref, (byte_idx,)).astype(jnp.int32)
+        b1 = pl.load(encoded_ref, (byte_idx + 1,)).astype(jnp.int32)
+        # off == 0 would make `b1 >> 8` shift by the full width; guard it.
+        shifted = ((b0 << off) | (b1 >> jnp.maximum(8 - off, 0))) & 0xFF
+        return jnp.where(off == 0, b0, shifted)
+
+    def decode_one(bitpos):
+        """Walk the LUT hierarchy: returns (symbol, code_len)."""
+
+        def cond(state):
+            _, entry, _ = state
+            return entry >= POINTER_FLAG
+
+        def body(state):
+            level, entry, _ = state
+            table = entry - POINTER_FLAG
+            byte = read_byte_window(bitpos + level * 8)
+            nxt = pl.load(luts_ref, (table, byte))
+            return level + 1, nxt, byte
+
+        byte0 = read_byte_window(bitpos)
+        entry0 = pl.load(luts_ref, (0, byte0))
+        # Start as if table 0 were pointed to; loop chases pointers.
+        _, entry, _ = lax.while_loop(cond, body, (jnp.int32(1), entry0, byte0))
+        symbol = entry
+        length = pl.load(lens_ref, (symbol,))
+        return symbol, length
+
+    def do_chunk(i, _):
+        c = pid * chunks_per_program + i
+        in_range = c < num_chunks
+
+        def run(_):
+            chunk_start = c * chunk_bits
+            chunk_end = jnp.minimum(chunk_start + chunk_bits, bit_len)
+            start = chunk_start + pl.load(gaps_ref, (c,))
+            out0 = pl.load(outpos_ref, (c,))
+
+            def cond(state):
+                bitpos, _ = state
+                return bitpos < chunk_end
+
+            def body(state):
+                bitpos, idx = state
+                symbol, length = decode_one(bitpos)
+                sm = pl.load(sm_ref, (idx,)).astype(jnp.int32)
+                word = ((sm >> 7) << 15) | (symbol << 7) | (sm & 0x7F)
+                pl.store(out_ref, (idx,), word.astype(jnp.uint16))
+                return bitpos + length, idx + 1
+
+            lax.while_loop(cond, body, (start, out0))
+            return 0
+
+        lax.cond(in_range, run, lambda _: 0, 0)
+        return ()
+
+    lax.fori_loop(0, chunks_per_program, do_chunk, ())
+
+
+def decode_pallas(enc: Df11Encoded, chunks_per_program: int = 8) -> np.ndarray:
+    """Decode a DF11-encoded tensor with the Pallas kernel.
+
+    Returns uint16 BF16 bit patterns, bit-for-bit equal to the input of
+    `ref.encode`.
+    """
+    num_chunks = len(enc.gaps)
+    grid = (num_chunks + chunks_per_program - 1) // chunks_per_program
+    if enc.luts.min() < INVALID:
+        raise ValueError("bad LUT entries")
+
+    kernel = functools.partial(
+        _decode_kernel,
+        bytes_per_chunk=enc.bytes_per_chunk,
+        bit_len=enc.bit_len,
+        chunks_per_program=chunks_per_program,
+        num_chunks=num_chunks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        out_shape=jax.ShapeDtypeStruct((enc.num_elements,), jnp.uint16),
+        interpret=True,
+    )(
+        jnp.asarray(enc.encoded, dtype=jnp.uint8),
+        jnp.asarray(enc.gaps, dtype=jnp.int32),
+        jnp.asarray(enc.chunk_out_pos, dtype=jnp.int32),
+        jnp.asarray(enc.luts, dtype=jnp.int32),
+        jnp.asarray(enc.code_lengths, dtype=jnp.int32),
+        jnp.asarray(enc.sign_mantissa, dtype=jnp.uint8),
+    )
+    return np.asarray(out)
+
+
+def decode_to_bf16(enc: Df11Encoded, shape: tuple[int, ...], chunks_per_program: int = 8):
+    """Decode and bitcast to a bfloat16 jax array of `shape` (the form
+    the L2 model consumes before feeding the MXU)."""
+    bits = decode_pallas(enc, chunks_per_program)
+    return lax.bitcast_convert_type(
+        jnp.asarray(bits).reshape(shape), jnp.bfloat16
+    )
+
+
+def vmem_footprint_bytes(enc: Df11Encoded, chunks_per_program: int = 8) -> int:
+    """Estimated VMEM residency per grid step (DESIGN.md §6: LUTs +
+    CodeLengths + the working chunk window + aux slices).
+
+    This is the quantity we report against the ~16 MB VMEM budget in
+    lieu of real-TPU profiling (interpret mode gives no hardware
+    counters).
+    """
+    luts = enc.luts.size * 4 + 256 * 4
+    window = chunks_per_program * enc.bytes_per_chunk + 4
+    aux = chunks_per_program * 8  # gap + outpos slices
+    return luts + window + aux

@@ -1,0 +1,261 @@
+"""Pure-Python/NumPy DF11 reference: encoder + oracle decoder.
+
+This is the build-time half of the L1 kernel story:
+
+* the **encoder** mirrors the Rust container format (canonical Huffman
+  over BF16 exponents, MSB-first bit packing, per-chunk gap array and
+  output positions) so the Pallas kernel can be tested on realistic
+  inputs without the Rust toolchain;
+* the **oracle decoder** (`decode_reference`) is the trivially-correct
+  sequential implementation the Pallas kernel is validated against in
+  pytest (python/tests/test_kernel.py).
+
+Build-time only: nothing here runs on the serving path.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+MAX_CODE_LEN = 32
+# Wide LUT entry encoding: values < 256 decode a symbol; >= POINTER_FLAG
+# point at table (entry - POINTER_FLAG); INVALID marks impossible prefixes.
+POINTER_FLAG = 256
+INVALID = -1
+
+
+def split_planes(bits: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split uint16 BF16 bit patterns into (exponent, sign_mantissa) bytes."""
+    bits = bits.astype(np.uint32)
+    exponents = ((bits >> 7) & 0xFF).astype(np.uint8)
+    sign_mantissa = (((bits >> 8) & 0x80) | (bits & 0x7F)).astype(np.uint8)
+    return exponents, sign_mantissa
+
+
+def merge_planes(exponents: np.ndarray, sign_mantissa: np.ndarray) -> np.ndarray:
+    """Reassemble uint16 BF16 bits from the two planes."""
+    e = exponents.astype(np.uint32)
+    sm = sign_mantissa.astype(np.uint32)
+    return (((sm >> 7) << 15) | (e << 7) | (sm & 0x7F)).astype(np.uint16)
+
+
+def huffman_code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Optimal Huffman code lengths for 256 byte symbols (0 = unused)."""
+    symbols = [s for s in range(256) if freqs[s] > 0]
+    lengths = np.zeros(256, dtype=np.uint8)
+    if not symbols:
+        raise ValueError("no symbols")
+    if len(symbols) == 1:
+        lengths[symbols[0]] = 1
+        return lengths
+    # Heap of (freq, tiebreak_id, node). Leaves are indices into symbols.
+    parent: dict[int, int] = {}
+    heap = [(int(freqs[s]), i, i) for i, s in enumerate(symbols)]
+    heapq.heapify(heap)
+    next_id = len(symbols)
+    while len(heap) > 1:
+        fa, _, a = heapq.heappop(heap)
+        fb, _, b = heapq.heappop(heap)
+        parent[a] = next_id
+        parent[b] = next_id
+        heapq.heappush(heap, (fa + fb, next_id, next_id))
+        next_id += 1
+    for i, s in enumerate(symbols):
+        depth = 0
+        cur = i
+        while cur in parent:
+            cur = parent[cur]
+            depth += 1
+        if depth > MAX_CODE_LEN:
+            raise ValueError(f"code length {depth} exceeds {MAX_CODE_LEN}")
+        lengths[s] = depth
+    return lengths
+
+
+def canonical_codes(lengths: np.ndarray) -> dict[int, tuple[int, int]]:
+    """Canonical code assignment: symbol -> (bits, len)."""
+    order = sorted(
+        (s for s in range(256) if lengths[s] > 0), key=lambda s: (lengths[s], s)
+    )
+    codes: dict[int, tuple[int, int]] = {}
+    code = 0
+    prev = 0
+    for s in order:
+        ln = int(lengths[s])
+        if prev:
+            code = (code + 1) << (ln - prev)
+        prev = ln
+        codes[s] = (code, ln)
+    return codes
+
+
+def build_wide_luts(lengths: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Hierarchical 256-entry LUTs in the kernel-friendly wide layout.
+
+    Returns (luts[int32, k x 256], code_lengths[int32, 256]).
+    """
+    codes = canonical_codes(lengths)
+    tables = [np.full(256, INVALID, dtype=np.int32)]
+    path_index: dict[tuple[int, ...], int] = {(): 0}
+
+    def table_for(path: tuple[int, ...]) -> int:
+        if path in path_index:
+            return path_index[path]
+        parent_t = table_for(path[:-1])
+        idx = len(tables)
+        tables.append(np.full(256, INVALID, dtype=np.int32))
+        path_index[path] = idx
+        assert tables[parent_t][path[-1]] == INVALID, "pointer collision"
+        tables[parent_t][path[-1]] = POINTER_FLAG + idx
+        return idx
+
+    for s, (bits, ln) in codes.items():
+        depth = (ln - 1) // 8
+        fill = (depth + 1) * 8 - ln
+        aligned = bits << fill
+        path = tuple((aligned >> ((depth - d) * 8)) & 0xFF for d in range(depth))
+        t = table_for(path)
+        last = aligned & 0xFF
+        for e in range(last, last + (1 << fill)):
+            assert tables[t][e] == INVALID, "entry collision"
+            tables[t][e] = s
+    code_lengths = lengths.astype(np.int32)
+    return np.stack(tables), code_lengths
+
+
+@dataclass
+class Df11Encoded:
+    """A DF11-encoded tensor (python mirror of the Rust container)."""
+
+    encoded: np.ndarray  # uint8, padded to whole chunks (+4 spill bytes)
+    bit_len: int
+    gaps: np.ndarray  # int32 per chunk
+    chunk_out_pos: np.ndarray  # int32 per chunk (TPU adaptation: per chunk)
+    luts: np.ndarray  # int32 (k, 256)
+    code_lengths: np.ndarray  # int32 (256,)
+    sign_mantissa: np.ndarray  # uint8 (n,)
+    num_elements: int
+    bytes_per_chunk: int
+
+
+def encode(bits_u16: np.ndarray, bytes_per_chunk: int = 8) -> Df11Encoded:
+    """Encode BF16 bit patterns into the DF11 layout.
+
+    The gap array and per-chunk output positions are computed exactly as
+    the Rust encoder does (including the gap=31 sentinel for a trailing
+    chunk that contains only the tail of the final codeword).
+    """
+    bits_u16 = np.asarray(bits_u16, dtype=np.uint16).ravel()
+    exponents, sign_mantissa = split_planes(bits_u16)
+    freqs = np.bincount(exponents, minlength=256).astype(np.uint64)
+    lengths = huffman_code_lengths(freqs)
+    codes = canonical_codes(lengths)
+    luts, code_lengths = build_wide_luts(lengths)
+
+    len_arr = np.zeros(256, dtype=np.uint64)
+    for s, (_, ln) in codes.items():
+        len_arr[s] = ln
+    sym_lens = len_arr[exponents]
+    bit_len = int(sym_lens.sum())
+
+    chunk_bits = bytes_per_chunk * 8
+    num_chunks = max((bit_len + chunk_bits - 1) // chunk_bits, 1)
+
+    # Code start offsets (exclusive prefix sum of lengths).
+    starts = np.zeros(len(exponents), dtype=np.uint64)
+    if len(exponents) > 1:
+        starts[1:] = np.cumsum(sym_lens[:-1])
+
+    # Bit-pack MSB-first.
+    out = bytearray(num_chunks * bytes_per_chunk + 4)  # +4 spill window
+    acc = 0
+    acc_bits = 0
+    pos = 0
+    for s in exponents:
+        b, ln = codes[int(s)]
+        acc = (acc << ln) | b
+        acc_bits += ln
+        while acc_bits >= 8:
+            acc_bits -= 8
+            out[pos] = (acc >> acc_bits) & 0xFF
+            pos += 1
+        acc &= (1 << acc_bits) - 1
+    if acc_bits:
+        out[pos] = (acc << (8 - acc_bits)) & 0xFF
+
+    # Gap array + per-chunk counts. Chunks without a code start keep the
+    # gap=31 sentinel (provably lands at/after bit_len -> kernel skips).
+    gaps = np.full(num_chunks, 31, dtype=np.int32)
+    counts = np.zeros(num_chunks, dtype=np.int64)
+    chunk_of = (starts // chunk_bits).astype(np.int64)
+    np.add.at(counts, chunk_of, 1)
+    first_idx = np.full(num_chunks, -1, dtype=np.int64)
+    for i in range(len(exponents) - 1, -1, -1):
+        first_idx[chunk_of[i]] = i
+    has = first_idx >= 0
+    gaps[has] = (
+        starts[first_idx[has]] - chunk_of[first_idx[has]].astype(np.uint64) * chunk_bits
+    ).astype(np.int32)
+
+    chunk_out_pos = np.zeros(num_chunks, dtype=np.int32)
+    if num_chunks > 1:
+        chunk_out_pos[1:] = np.cumsum(counts[:-1]).astype(np.int32)
+
+    return Df11Encoded(
+        encoded=np.frombuffer(bytes(out), dtype=np.uint8),
+        bit_len=bit_len,
+        gaps=gaps,
+        chunk_out_pos=chunk_out_pos,
+        luts=luts,
+        code_lengths=code_lengths,
+        sign_mantissa=sign_mantissa,
+        num_elements=len(exponents),
+        bytes_per_chunk=bytes_per_chunk,
+    )
+
+
+def decode_reference(enc: Df11Encoded) -> np.ndarray:
+    """Sequential oracle decoder: returns uint16 BF16 bit patterns."""
+    out = np.zeros(enc.num_elements, dtype=np.uint16)
+    data = enc.encoded
+    bitpos = 0
+    for i in range(enc.num_elements):
+        table = 0
+        level = 0
+        while True:
+            byte_idx = (bitpos + level * 8) // 8
+            off = (bitpos + level * 8) % 8
+            b0 = int(data[byte_idx])
+            b1 = int(data[byte_idx + 1]) if byte_idx + 1 < len(data) else 0
+            window = ((b0 << off) | (b1 >> (8 - off))) & 0xFF if off else b0
+            entry = int(enc.luts[table][window])
+            if entry == INVALID:
+                raise ValueError(f"invalid prefix at bit {bitpos}")
+            if entry >= POINTER_FLAG:
+                table = entry - POINTER_FLAG
+                level += 1
+                continue
+            symbol = entry
+            break
+        ln = int(enc.code_lengths[symbol])
+        sm = int(enc.sign_mantissa[i])
+        out[i] = ((sm >> 7) << 15) | (symbol << 7) | (sm & 0x7F)
+        bitpos += ln
+    if bitpos != enc.bit_len:
+        raise ValueError(f"consumed {bitpos} bits, expected {enc.bit_len}")
+    return out
+
+
+def compression_ratio(enc: Df11Encoded) -> float:
+    """Compressed bytes / original bytes (Table 1's ratio, python side)."""
+    comp = (
+        len(enc.encoded)
+        + enc.sign_mantissa.nbytes
+        + (len(enc.gaps) * 5 + 7) // 8
+        + enc.chunk_out_pos.nbytes
+        + 256
+    )
+    return comp / (enc.num_elements * 2)

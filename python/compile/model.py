@@ -1,0 +1,152 @@
+"""L2: the Llama-style transformer in JAX (build-time only).
+
+These functions define the compute graph the Rust coordinator executes
+through PJRT: `aot.py` lowers them to HLO text with fixed shapes, and
+`rust/src/runtime/` loads + compiles + runs the artifacts on the request
+path (Python never runs at serving time).
+
+The math mirrors `rust/src/nn/` + `coordinator::engine::NativeBackend`
+one-to-one (RMSNorm eps 1e-6 with unit gain, RoPE theta 10000, SiLU
+gated MLP, GQA attention over a fixed-size KV cache with positions
+masked beyond `pos`), so the native and PJRT backends are numerically
+interchangeable.
+
+The DF11 story at this layer: decompressed BF16 weights arrive as
+*arguments* (decompression happens in the Rust coordinator or in the L1
+Pallas kernel); the block forward feeds them straight into `jnp.dot` —
+on a real TPU these hit the MXU in bf16, here f32 keeps CPU-PJRT
+numerics exact vs the Rust reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+ROPE_THETA = 1e4
+
+
+def rmsnorm(x: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm with unit gain over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + EPS)
+
+
+def rope(x: jnp.ndarray, n_heads: int, head_dim: int, pos) -> jnp.ndarray:
+    """Rotary embedding for a single position.
+
+    `x` is (batch, n_heads * head_dim); `pos` is a scalar (traced).
+    """
+    b = x.shape[0]
+    xs = x.reshape(b, n_heads, head_dim)
+    half = head_dim // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = 1.0 / (ROPE_THETA ** (2.0 * i / head_dim))
+    angle = pos.astype(jnp.float32) * freq
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    a = xs[..., :half]
+    bb = xs[..., half:]
+    rot = jnp.concatenate([a * cos - bb * sin, a * sin + bb * cos], axis=-1)
+    return rot.reshape(b, n_heads * head_dim)
+
+
+def embed(tokens: jnp.ndarray, embed_matrix: jnp.ndarray) -> jnp.ndarray:
+    """Token embedding gather: (batch,) x (vocab, d) -> (batch, d)."""
+    return jnp.take(embed_matrix, tokens, axis=0)
+
+
+def block_forward(
+    x: jnp.ndarray,  # (batch, d)
+    q_w: jnp.ndarray,  # (d, d)
+    k_w: jnp.ndarray,  # (d, kv)
+    v_w: jnp.ndarray,  # (d, kv)
+    o_w: jnp.ndarray,  # (d, d)
+    gate_w: jnp.ndarray,  # (d, ff)
+    up_w: jnp.ndarray,  # (d, ff)
+    down_w: jnp.ndarray,  # (ff, d)
+    k_cache: jnp.ndarray,  # (batch, max_seq, kv)
+    v_cache: jnp.ndarray,  # (batch, max_seq, kv)
+    pos: jnp.ndarray,  # scalar int32
+    n_heads: int,
+    n_kv_heads: int,
+):
+    """One decoder block, single-token decode step.
+
+    Returns (x_out, k_cache_out, v_cache_out).
+    """
+    b, d = x.shape
+    kv = k_w.shape[1]
+    head_dim = d // n_heads
+    group = n_heads // n_kv_heads
+    max_seq = k_cache.shape[1]
+
+    h = rmsnorm(x)
+    q = h @ q_w
+    k = h @ k_w
+    v = h @ v_w
+    q = rope(q, n_heads, head_dim, pos)
+    k = rope(k, n_kv_heads, head_dim, pos)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k[:, None, :], (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v[:, None, :], (0, pos, 0))
+
+    # GQA attention over positions [0, pos].
+    qh = q.reshape(b, n_heads, head_dim)
+    kh = k_cache.reshape(b, max_seq, n_kv_heads, head_dim)
+    vh = v_cache.reshape(b, max_seq, n_kv_heads, head_dim)
+    # Expand kv heads to query heads.
+    kh = jnp.repeat(kh, group, axis=2)  # (b, max_seq, n_heads, head_dim)
+    vh = jnp.repeat(vh, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", qh, kh) / jnp.sqrt(
+        jnp.asarray(head_dim, dtype=x.dtype)
+    )
+    mask = jnp.arange(max_seq)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhs,bshd->bhd", probs, vh).reshape(b, d)
+    x = x + attn @ o_w
+
+    h2 = rmsnorm(x)
+    g = h2 @ gate_w
+    u = h2 @ up_w
+    x = x + (jax.nn.silu(g) * u) @ down_w
+    return x, k_cache, v_cache
+
+
+def lm_head(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Final norm + LM head: (batch, d) x (d, vocab) -> (batch, vocab)."""
+    return rmsnorm(x) @ w
+
+
+def decode_step(params: dict, tokens: jnp.ndarray, k_caches, v_caches, pos):
+    """A full fused decode step (used by the e2e artifact): embed ->
+    all blocks -> lm head. `params` is a dict of weight arrays; caches
+    are lists of per-layer arrays.
+
+    Returns (logits, new_k_caches, new_v_caches).
+    """
+    n_layers = len(k_caches)
+    x = embed(tokens, params["embed.tok"])
+    new_k, new_v = [], []
+    for l in range(n_layers):
+        g = f"block.{l}"
+        x, kc, vc = block_forward(
+            x,
+            params[f"{g}.q_proj"],
+            params[f"{g}.k_proj"],
+            params[f"{g}.v_proj"],
+            params[f"{g}.o_proj"],
+            params[f"{g}.gate_proj"],
+            params[f"{g}.up_proj"],
+            params[f"{g}.down_proj"],
+            k_caches[l],
+            v_caches[l],
+            pos,
+            params["n_heads"],
+            params["n_kv_heads"],
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = lm_head(x, params["lm_head"])
+    return logits, new_k, new_v

@@ -1,0 +1,148 @@
+"""L2 model tests: shapes, cache semantics, and numerical sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = dict(d=32, heads=4, kv_heads=2, ff=64, vocab=64, max_seq=16)
+
+
+def make_weights(seed=0):
+    rng = np.random.default_rng(seed)
+    d, ff, vocab = CFG["d"], CFG["ff"], CFG["vocab"]
+    kv = CFG["kv_heads"] * (d // CFG["heads"])
+    def w(*shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.1)
+    return dict(
+        q=w(d, d), k=w(d, kv), v=w(d, kv), o=w(d, d),
+        gate=w(d, ff), up=w(d, ff), down=w(ff, d),
+        emb=w(vocab, d), head=w(d, vocab),
+    )
+
+
+def run_block(x, ws, kc, vc, pos):
+    return model.block_forward(
+        x, ws["q"], ws["k"], ws["v"], ws["o"], ws["gate"], ws["up"], ws["down"],
+        kc, vc, jnp.asarray(pos, dtype=jnp.int32),
+        CFG["heads"], CFG["kv_heads"],
+    )
+
+
+class TestBlockForward:
+    def test_shapes(self):
+        ws = make_weights()
+        b, d = 2, CFG["d"]
+        kv = CFG["kv_heads"] * (d // CFG["heads"])
+        x = jnp.ones((b, d))
+        kc = jnp.zeros((b, CFG["max_seq"], kv))
+        vc = jnp.zeros((b, CFG["max_seq"], kv))
+        xo, kco, vco = run_block(x, ws, kc, vc, 0)
+        assert xo.shape == (b, d)
+        assert kco.shape == kc.shape
+        assert vco.shape == vc.shape
+
+    def test_cache_written_at_pos(self):
+        ws = make_weights()
+        b, d = 1, CFG["d"]
+        kv = CFG["kv_heads"] * (d // CFG["heads"])
+        x = jnp.ones((b, d))
+        kc = jnp.zeros((b, CFG["max_seq"], kv))
+        vc = jnp.zeros((b, CFG["max_seq"], kv))
+        _, kco, _ = run_block(x, ws, kc, vc, 3)
+        assert float(jnp.abs(kco[0, 3]).sum()) > 0
+        assert float(jnp.abs(kco[0, 4:]).sum()) == 0
+        assert float(jnp.abs(kco[0, :3]).sum()) == 0
+
+    def test_future_positions_masked(self):
+        # Garbage in cache positions > pos must not change the output.
+        ws = make_weights()
+        b, d = 1, CFG["d"]
+        kv = CFG["kv_heads"] * (d // CFG["heads"])
+        x = jnp.ones((b, d))
+        clean = jnp.zeros((b, CFG["max_seq"], kv))
+        dirty = clean.at[:, 5:].set(1e6)
+        xo1, _, _ = run_block(x, ws, clean, clean, 2)
+        xo2, _, _ = run_block(x, ws, dirty, dirty, 2)
+        np.testing.assert_allclose(np.asarray(xo1), np.asarray(xo2))
+
+    def test_deterministic(self):
+        ws = make_weights()
+        b, d = 2, CFG["d"]
+        kv = CFG["kv_heads"] * (d // CFG["heads"])
+        x = jnp.ones((b, d)) * 0.3
+        kc = jnp.zeros((b, CFG["max_seq"], kv))
+        a = run_block(x, ws, kc, kc, 0)[0]
+        bb = run_block(x, ws, kc, kc, 0)[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+class TestComponents:
+    def test_rmsnorm_unit_rms(self):
+        x = jnp.asarray([[3.0, 4.0, 0.0, 0.0]])
+        y = model.rmsnorm(x)
+        ms = float(jnp.mean(y * y))
+        assert abs(ms - 1.0) < 1e-4
+
+    def test_rope_identity_at_zero(self):
+        x = jnp.arange(1.0, 9.0)[None, :]
+        y = model.rope(x, 1, 8, jnp.asarray(0))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+    def test_rope_norm_preserving(self):
+        x = jnp.arange(1.0, 9.0)[None, :]
+        y = model.rope(x, 1, 8, jnp.asarray(5))
+        assert abs(float(jnp.linalg.norm(y)) - float(jnp.linalg.norm(x))) < 1e-4
+
+    def test_embed_gathers(self):
+        emb = jnp.arange(12.0).reshape(4, 3)
+        out = model.embed(jnp.asarray([2, 0]), emb)
+        np.testing.assert_array_equal(np.asarray(out), [[6, 7, 8], [0, 1, 2]])
+
+    def test_lm_head_shape(self):
+        ws = make_weights()
+        out = model.lm_head(jnp.ones((3, CFG["d"])), ws["head"])
+        assert out.shape == (3, CFG["vocab"])
+
+
+class TestDecodeStep:
+    def test_full_step_greedy_changes_with_token(self):
+        ws = make_weights()
+        d, kv = CFG["d"], CFG["kv_heads"] * (CFG["d"] // CFG["heads"])
+        params = {
+            "embed.tok": ws["emb"], "lm_head": ws["head"],
+            "n_heads": CFG["heads"], "n_kv_heads": CFG["kv_heads"],
+        }
+        for l in range(2):
+            for nm, key in [("q_proj", "q"), ("k_proj", "k"), ("v_proj", "v"),
+                            ("o_proj", "o"), ("gate_proj", "gate"),
+                            ("up_proj", "up"), ("down_proj", "down")]:
+                params[f"block.{l}.{nm}"] = ws[key]
+        kcs = [jnp.zeros((1, CFG["max_seq"], kv)) for _ in range(2)]
+        vcs = [jnp.zeros((1, CFG["max_seq"], kv)) for _ in range(2)]
+        l1, _, _ = model.decode_step(params, jnp.asarray([3]), kcs, vcs, jnp.asarray(0))
+        l2, _, _ = model.decode_step(params, jnp.asarray([9]), kcs, vcs, jnp.asarray(0))
+        assert l1.shape == (1, CFG["vocab"])
+        assert not np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestLowering:
+    def test_block_lowers_to_hlo_text(self):
+        # The aot.py path in miniature: block_forward -> stablehlo -> HLO text.
+        from compile.aot import to_hlo_text, spec
+        d, ff, ms = 16, 32, 8
+        kv = 8
+
+        def fn(x, q, k, v, o, g, u, dn, kc, vc, pos):
+            return model.block_forward(x, q, k, v, o, g, u, dn, kc, vc, pos, 2, 1)
+
+        lowered = jax.jit(fn).lower(
+            spec((1, d)), spec((d, d)), spec((d, kv)), spec((d, kv)), spec((d, d)),
+            spec((d, ff)), spec((d, ff)), spec((ff, d)),
+            spec((1, ms, kv)), spec((1, ms, kv)), spec((), jnp.int32),
+        )
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert len(text) > 1000

@@ -1,0 +1,119 @@
+"""Tests for the python-side DF11 reference encoder/decoder."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def gaussian_bits(n: int, seed: int, std: float = 0.02) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * std).astype(np.float32)
+    return (x.view(np.uint32) >> 16).astype(np.uint16)
+
+
+class TestPlanes:
+    def test_split_merge_roundtrip_all_patterns(self):
+        bits = np.arange(65536, dtype=np.uint16)
+        e, sm = ref.split_planes(bits)
+        assert np.array_equal(ref.merge_planes(e, sm), bits)
+
+    def test_known_pattern(self):
+        # 1.0bf16 = 0x3F80: sign 0, exponent 127, mantissa 0.
+        e, sm = ref.split_planes(np.array([0x3F80], dtype=np.uint16))
+        assert e[0] == 127
+        assert sm[0] == 0
+        # -1.5 = 0xBFC0: sign 1, exponent 127, mantissa 0x40.
+        e, sm = ref.split_planes(np.array([0xBFC0], dtype=np.uint16))
+        assert e[0] == 127
+        assert sm[0] == 0x80 | 0x40
+
+
+class TestHuffman:
+    def test_kraft_equality(self):
+        freqs = np.zeros(256, dtype=np.uint64)
+        for i, f in enumerate([45, 13, 12, 16, 9, 5]):
+            freqs[i] = f
+        lengths = ref.huffman_code_lengths(freqs)
+        kraft = sum(2.0 ** -int(l) for l in lengths if l > 0)
+        assert abs(kraft - 1.0) < 1e-12
+
+    def test_single_symbol(self):
+        freqs = np.zeros(256, dtype=np.uint64)
+        freqs[42] = 10
+        lengths = ref.huffman_code_lengths(freqs)
+        assert lengths[42] == 1
+        assert lengths.sum() == 1
+
+    def test_empty_rejected(self):
+        with pytest.raises(ValueError):
+            ref.huffman_code_lengths(np.zeros(256, dtype=np.uint64))
+
+    def test_canonical_codes_prefix_free(self):
+        freqs = np.zeros(256, dtype=np.uint64)
+        rng = np.random.default_rng(3)
+        for s in rng.choice(256, size=40, replace=False):
+            freqs[s] = int(rng.integers(1, 10_000))
+        lengths = ref.huffman_code_lengths(freqs)
+        codes = ref.canonical_codes(lengths)
+        items = list(codes.values())
+        for i, (b1, l1) in enumerate(items):
+            for b2, l2 in items[i + 1:]:
+                (sb, sl), (lb, ll) = ((b1, l1), (b2, l2)) if l1 <= l2 else ((b2, l2), (b1, l1))
+                assert (lb >> (ll - sl)) != sb, "prefix violation"
+
+
+class TestEncodeDecode:
+    def test_roundtrip_gaussian(self):
+        bits = gaussian_bits(10_000, 0)
+        enc = ref.encode(bits)
+        assert np.array_equal(ref.decode_reference(enc), bits)
+
+    def test_ratio_near_paper(self):
+        bits = gaussian_bits(200_000, 1)
+        enc = ref.encode(bits)
+        ratio = ref.compression_ratio(enc)
+        assert 0.60 < ratio < 0.80, ratio
+
+    def test_gaps_are_five_bit(self):
+        bits = gaussian_bits(20_000, 2)
+        enc = ref.encode(bits)
+        assert enc.gaps.max() < 32
+        assert enc.gaps.min() >= 0
+
+    def test_outpos_monotone_and_total(self):
+        bits = gaussian_bits(5_000, 3)
+        enc = ref.encode(bits)
+        assert np.all(np.diff(enc.chunk_out_pos) >= 0)
+
+    def test_special_values(self):
+        bits = gaussian_bits(1000, 4)
+        bits[0] = 0x7FC0  # NaN
+        bits[1] = 0x7F80  # +Inf
+        bits[2] = 0xFF80  # -Inf
+        bits[3] = 0x0000  # 0
+        bits[4] = 0x8000  # -0
+        bits[5] = 0x0001  # subnormal
+        enc = ref.encode(bits)
+        assert np.array_equal(ref.decode_reference(enc), bits)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=3000),
+        seed=st.integers(min_value=0, max_value=2**31),
+        chunk=st.sampled_from([2, 4, 8, 16]),
+    )
+    def test_roundtrip_hypothesis(self, n, seed, chunk):
+        rng = np.random.default_rng(seed)
+        bits = rng.integers(0, 65536, size=n, dtype=np.uint16)
+        enc = ref.encode(bits, bytes_per_chunk=chunk)
+        assert np.array_equal(ref.decode_reference(enc), bits)
+
+    def test_luts_stay_compact(self):
+        # Paper §2.3.1: k in 4..8 tables for LLM exponent distributions.
+        bits = gaussian_bits(500_000, 5)
+        enc = ref.encode(bits)
+        assert enc.luts.shape[0] <= 8
+        sram = enc.luts.shape[0] * 256 + 256  # paper's u8 layout equivalent
+        assert sram < 100 * 1024

@@ -1,0 +1,136 @@
+//! Figure 4: token-decoding throughput/latency, DF11 vs BF16+offload.
+//!
+//! Paper setting: the BF16 model does not fit the GPU, so layers are
+//! offloaded to CPU RAM and stream over PCIe every step; DF11 fits
+//! entirely on-device. Two row families here:
+//! * **measured** — the executable engine at reduced scale, all three
+//!   modes, real work + simulated PCIe time on the serving clock;
+//! * **estimated** — the paper's exact model/GPU pairs through the
+//!   device timing model.
+
+use dfloat11::bench_harness::{fmt, Table};
+use dfloat11::coordinator::{Engine, Request, SchedulerConfig, Server, WeightMode};
+use dfloat11::gpu_sim::{Device, TransferModel};
+use dfloat11::model::zoo;
+use dfloat11::offload::{place, throughput, PlacementMode};
+
+/// Measure the sequential DF11 decode rate (output bytes/s) on a
+/// representative tensor.
+fn measure_decode_rate() -> f64 {
+    use dfloat11::dfloat11::decompress::decompress_sequential_into;
+    use dfloat11::model::init::generate_weights;
+    use dfloat11::model::WeightSpec;
+    let spec = WeightSpec {
+        name: "calib".into(),
+        group: "calib".into(),
+        shape: [1, 1 << 20],
+        fan_in: 4096,
+    };
+    let w = generate_weights(&spec, 1);
+    let t = dfloat11::Df11Tensor::compress(&w).unwrap();
+    let mut out = vec![dfloat11::Bf16::from_bits(0); w.len()];
+    let t0 = std::time::Instant::now();
+    let iters = 5;
+    for _ in 0..iters {
+        decompress_sequential_into(&t, &mut out).unwrap();
+    }
+    (w.len() as f64 * 2.0 * iters as f64) / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("# Figure 4 — decoding throughput: DF11 vs BF16 + CPU offload\n");
+
+    // --- Measured at reduced scale ---
+    // Calibration: on the paper's testbed, on-GPU DF11 decompression
+    // runs ~8x faster than PCIe can deliver BF16 (200 GB/s vs 25 GB/s).
+    // Our substrate decodes on a CPU, so the simulated PCIe bandwidth is
+    // scaled to preserve that testbed ratio — otherwise the scaled-down
+    // workload would make transfers unrealistically free.
+    println!("## Measured (scaled Llama-8B/8, CPU engine + ratio-calibrated PCIe)\n");
+    let mut cfg = zoo::llama31_8b().scaled_down(8);
+    // Byte-level vocab so transformer blocks dominate the parameter
+    // budget, as they do at full scale.
+    cfg.vocab_size = 256;
+    let decode_rate = measure_decode_rate();
+    let calibrated = TransferModel {
+        bandwidth: decode_rate / 8.0,
+        latency: 10e-6,
+    };
+    println!(
+        "measured CPU decode rate {} -> simulated PCIe {}\n",
+        fmt::throughput_bps(decode_rate),
+        fmt::throughput_bps(calibrated.bandwidth)
+    );
+    let mut table = Table::new(&["batch", "mode", "tok/s", "speedup vs offload"]);
+    for batch in [1usize, 4, 8] {
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        for (label, mode) in [
+            (
+                "BF16+offload",
+                WeightMode::OffloadBf16 {
+                    resident_layers: 1,
+                    transfer: calibrated.clone(),
+                },
+            ),
+            ("DF11", WeightMode::Df11),
+        ] {
+            let engine = Engine::build(&cfg, 3, mode).unwrap();
+            let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
+            for i in 0..batch {
+                server.submit(Request::new(vec![(i % 60 + 1) as u32, 2], 16));
+            }
+            let report = server.drain().unwrap();
+            rows.push((label.to_string(), report.tokens_per_second()));
+        }
+        let offload_tps = rows[0].1;
+        for (label, tps) in rows {
+            table.row(&[
+                batch.to_string(),
+                label.clone(),
+                format!("{tps:.2}"),
+                format!("{:.2}x", tps / offload_tps),
+            ]);
+        }
+    }
+    table.print();
+
+    // --- Paper-scale estimates ---
+    println!("\n## Estimated at paper scale (device model)\n");
+    let cases = [
+        (zoo::llama33_70b(), Device::a100_80g()), // 141 GB on 80 GB
+        (zoo::qwq_32b(), Device::a100_40g()),     // 65 GB on 40 GB
+        (zoo::mistral_small3(), Device::a5000()), // 47 GB on 24 GB
+    ];
+    let mut table = Table::new(&[
+        "model", "device", "batch", "offload tok/s", "df11 tok/s", "speedup",
+    ]);
+    for (model, device) in cases {
+        let off = place(&model, &device, PlacementMode::Bf16Offload, 1 << 30);
+        // DF11 on the smallest device that fits it (paper uses larger
+        // GPUs / more GPUs when needed; speedup is against offload).
+        let df11_dev = if (model.bf16_bytes() as f64 * 0.679) < device.hbm_bytes as f64 * 0.9 {
+            device.clone()
+        } else {
+            Device::a100_80g()
+        };
+        let df11 = place(&model, &df11_dev, PlacementMode::Df11, 1 << 30);
+        for batch in [1u64, 8, 32] {
+            let t_off = throughput(&model, &device, &off, batch);
+            let t_df11 = throughput(&model, &df11_dev, &df11, batch);
+            table.row(&[
+                model.name.clone(),
+                device.name.to_string(),
+                batch.to_string(),
+                format!("{t_off:.2}"),
+                format!("{t_df11:.2}"),
+                format!("{:.1}x", t_df11 / t_off),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper: 2.31–46.24x higher throughput for DF11 over BF16+offload; \
+         the gap widens with the offloaded fraction ({} of PCIe per step).",
+        fmt::throughput_bps(25e9)
+    );
+}

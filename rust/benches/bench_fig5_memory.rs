@@ -1,0 +1,108 @@
+//! Figure 5: GPU memory vs generated tokens; OOM points.
+//!
+//! DF11's weight savings become KV-cache headroom: at batch 1, how many
+//! tokens fit before OOM? Uses the KV manager + HBM accountant with a
+//! PyTorch-like framework overhead model.
+
+use dfloat11::bench_harness::{fmt, Table};
+use dfloat11::gpu_sim::{Device, HbmAllocator, MemoryCategory};
+use dfloat11::kvcache::KvCacheManager;
+use dfloat11::model::zoo;
+use dfloat11::offload::DF11_RATIO;
+
+/// Framework overhead: CUDA context + allocator slack + activation
+/// buffers (the paper's HF/torch stack reserves several GB).
+fn overhead(_device: &Device, model_bytes: u64) -> u64 {
+    2 * (1 << 30) + model_bytes / 16
+}
+
+fn main() {
+    println!("# Figure 5 — memory growth with generated tokens (batch 1)\n");
+    // Model/GPU pairs where BF16 barely fits — the paper's setting.
+    let cases = [
+        (zoo::llama31_8b(), Device::a5000()),     // 16 GB on 24 GB
+        (zoo::qwen3_14b(), Device::a100_40g()),   // 29.5 GB on 40 GB
+        (zoo::mistral_small3(), Device::rtx8000()), // 47 GB on 48 GB
+        (zoo::qwq_32b(), Device::a100_80g()),     // 65.5 GB on 80 GB
+    ];
+
+    let mut table = Table::new(&[
+        "model",
+        "device",
+        "bf16 free",
+        "df11 free",
+        "bf16 max tokens",
+        "df11 max tokens",
+        "gain",
+    ]);
+    for (cfg, device) in &cases {
+        let mgr = KvCacheManager::new(cfg, 16);
+        let bf16_w = cfg.bf16_bytes();
+        let df11_w = (bf16_w as f64 * DF11_RATIO) as u64;
+        let free = |w: u64| {
+            device
+                .hbm_bytes
+                .saturating_sub(w)
+                .saturating_sub(overhead(device, w))
+        };
+        let (f_bf16, f_df11) = (free(bf16_w), free(df11_w));
+        let t_bf16 = mgr.max_tokens_within(f_bf16, 1);
+        let t_df11 = mgr.max_tokens_within(f_df11, 1);
+        table.row(&[
+            cfg.name.clone(),
+            device.name.to_string(),
+            fmt::bytes(f_bf16),
+            fmt::bytes(f_df11),
+            if t_bf16 == 0 { "O.O.M.".into() } else { t_bf16.to_string() },
+            t_df11.to_string(),
+            if t_bf16 == 0 {
+                "inf (bf16 OOM at load)".to_string()
+            } else {
+                format!("{:.2}x", t_df11 as f64 / t_bf16 as f64)
+            },
+        ]);
+    }
+    table.print();
+
+    // Live allocator run: memory as a function of token count for one
+    // pair (the Figure 5 curve, numerically).
+    println!("\n## Memory vs tokens, Llama-8B on A5000 (live allocator)\n");
+    let cfg = zoo::llama31_8b();
+    let device = Device::a5000();
+    let mut curve = Table::new(&["tokens", "bf16 used", "df11 used"]);
+    let run = |ratio: f64| -> Vec<(u64, u64)> {
+        let mut hbm = HbmAllocator::new(device.clone());
+        let w = (cfg.bf16_bytes() as f64 * ratio) as u64;
+        hbm.alloc(MemoryCategory::Weights, w).unwrap();
+        hbm.alloc(MemoryCategory::Overhead, overhead(&device, w)).unwrap();
+        let mut mgr = KvCacheManager::new(&cfg, 16);
+        mgr.add_sequence(1).unwrap();
+        let mut pts = Vec::new();
+        let mut tokens = 0u64;
+        loop {
+            pts.push((tokens, hbm.used()));
+            if mgr.extend(&mut hbm, 1, 4096).is_err() {
+                break;
+            }
+            tokens += 4096;
+        }
+        pts
+    };
+    let bf16_pts = run(1.0);
+    let df11_pts = run(DF11_RATIO);
+    let max_len = bf16_pts.len().max(df11_pts.len());
+    for i in (0..max_len).step_by(2) {
+        let b = bf16_pts.get(i);
+        let d = df11_pts.get(i);
+        curve.row(&[
+            format!("{}", i as u64 * 4096),
+            b.map(|(_, u)| fmt::bytes(*u)).unwrap_or_else(|| "O.O.M.".into()),
+            d.map(|(_, u)| fmt::bytes(*u)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    curve.print();
+    println!(
+        "\npaper: 5.70–14.86x more tokens before OOM; gain grows as BF16 \
+         weights approach HBM capacity (Mistral-Small-3-on-48GB row)."
+    );
+}

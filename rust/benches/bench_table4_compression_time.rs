@@ -1,0 +1,72 @@
+//! Table 4: compression time per transformer block (single thread).
+//!
+//! Measured at several scaled block sizes, then extrapolated by the
+//! measured bytes/s rate to the paper's per-block parameter counts.
+
+use dfloat11::bench_harness::{fmt, Bencher, Table};
+use dfloat11::model::init::generate_weights;
+use dfloat11::model::{zoo, WeightSpec};
+use dfloat11::Df11Tensor;
+
+/// Paper Table 4: (model, seconds per block, 1 CPU thread).
+const PAPER: &[(&str, f64)] = &[
+    ("Llama 3.1 8B Instruct", 191.0),
+    ("Llama 3.3 70B Instruct", 547.0),
+    ("Llama 3.1 405B Instruct", 2133.0),
+];
+
+fn main() {
+    println!("# Table 4 — compression time per transformer block\n");
+    let bench = Bencher::from_env();
+
+    // Measure compression rate on increasing tensor sizes.
+    let mut rate_table = Table::new(&["tensor elems", "compress time", "rate"]);
+    let mut best_rate = 0.0f64;
+    for log2 in [16u32, 18, 20, 22] {
+        let n = 1usize << log2;
+        let spec = WeightSpec {
+            name: format!("bench.{log2}"),
+            group: "bench".into(),
+            shape: [1, n],
+            fan_in: 4096,
+        };
+        let w = generate_weights(&spec, 5);
+        let r = bench.bench(&format!("compress 2^{log2}"), || {
+            Df11Tensor::compress(&w).unwrap()
+        });
+        let rate = (n as f64 * 2.0) / r.mean;
+        best_rate = best_rate.max(rate);
+        rate_table.row(&[
+            format!("2^{log2}"),
+            fmt::seconds(r.mean),
+            fmt::throughput_bps(rate),
+        ]);
+    }
+    rate_table.print();
+
+    // Extrapolate to the paper's block sizes.
+    println!("\n## Extrapolated per-block compression time (vs paper's 1-thread numbers)\n");
+    let mut table = Table::new(&[
+        "model",
+        "params/block",
+        "ours (est, 1 thread)",
+        "paper (1 thread)",
+    ]);
+    for (cfg, &(_, paper_s)) in [zoo::llama31_8b(), zoo::llama33_70b(), zoo::llama31_405b()]
+        .iter()
+        .zip(PAPER)
+    {
+        let bytes = cfg.params_per_block() as f64 * 2.0;
+        table.row(&[
+            cfg.name.clone(),
+            format!("{:.1}M", cfg.params_per_block() as f64 / 1e6),
+            format!("{:.0} s", bytes / best_rate),
+            format!("{paper_s:.0} s"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: compression is a one-time preprocessing cost that scales \
+         linearly with block size and parallelizes across blocks (paper Appendix F)."
+    );
+}

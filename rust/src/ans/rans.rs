@@ -1,0 +1,242 @@
+//! Byte-oriented rANS codec (Duda 2013).
+//!
+//! A single-state 32-bit rANS with 8-bit renormalization and a 12-bit
+//! probability model — the textbook configuration nvCOMP-style byte
+//! codecs use. Encoding runs over the data in reverse so the decoder
+//! streams forward.
+
+use crate::error::{Error, Result};
+
+/// Probability resolution in bits.
+const PROB_BITS: u32 = 12;
+/// Probability scale (all frequencies sum to this).
+const PROB_SCALE: u32 = 1 << PROB_BITS;
+/// Lower renormalization bound of the rANS state.
+const RANS_L: u32 = 1 << 23;
+
+/// A normalized byte-frequency model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RansModel {
+    /// Normalized frequencies, summing to `PROB_SCALE`.
+    freq: [u32; 256],
+    /// Exclusive cumulative frequencies.
+    cum: [u32; 257],
+    /// Slot -> symbol lookup (PROB_SCALE entries).
+    slot_to_symbol: Vec<u8>,
+}
+
+impl RansModel {
+    /// Build a model from raw data (frequency count + normalization).
+    pub fn from_data(data: &[u8]) -> RansModel {
+        let mut counts = [0u64; 256];
+        for &b in data {
+            counts[b as usize] += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    /// Build from precomputed counts.
+    pub fn from_counts(counts: &[u64; 256]) -> RansModel {
+        let total: u64 = counts.iter().sum::<u64>().max(1);
+        // Normalize to PROB_SCALE, keeping every present symbol >= 1.
+        let mut freq = [0u32; 256];
+        let mut assigned = 0u32;
+        for s in 0..256 {
+            if counts[s] > 0 {
+                let f = ((counts[s] as u128 * PROB_SCALE as u128) / total as u128) as u32;
+                freq[s] = f.max(1);
+                assigned += freq[s];
+            }
+        }
+        // Fix rounding drift by adjusting the most frequent symbol.
+        if assigned != PROB_SCALE {
+            let max_s = (0..256).max_by_key(|&s| freq[s]).unwrap();
+            let diff = PROB_SCALE as i64 - assigned as i64;
+            let nf = freq[max_s] as i64 + diff;
+            assert!(nf >= 1, "cannot normalize: too many rare symbols");
+            freq[max_s] = nf as u32;
+        }
+        let mut cum = [0u32; 257];
+        for s in 0..256 {
+            cum[s + 1] = cum[s] + freq[s];
+        }
+        let mut slot_to_symbol = vec![0u8; PROB_SCALE as usize];
+        for s in 0..256 {
+            for slot in cum[s]..cum[s + 1] {
+                slot_to_symbol[slot as usize] = s as u8;
+            }
+        }
+        RansModel {
+            freq,
+            cum,
+            slot_to_symbol,
+        }
+    }
+
+    /// Size of the serialized frequency table (256 u16 entries).
+    pub fn table_bytes(&self) -> u64 {
+        256 * 2
+    }
+
+    /// Frequency of a symbol (normalized).
+    pub fn freq(&self, s: u8) -> u32 {
+        self.freq[s as usize]
+    }
+}
+
+/// Encode a byte stream. Returns the rANS byte stream (decoder reads it
+/// front to back).
+pub fn rans_encode(model: &RansModel, data: &[u8]) -> Result<Vec<u8>> {
+    for &b in data {
+        if model.freq[b as usize] == 0 {
+            return Err(Error::InvalidArgument(format!(
+                "symbol {b} not in rANS model"
+            )));
+        }
+    }
+    let mut out: Vec<u8> = Vec::with_capacity(data.len());
+    let mut x: u32 = RANS_L;
+    for &b in data.iter().rev() {
+        let f = model.freq[b as usize];
+        let c = model.cum[b as usize];
+        // Renormalize: keep x < (RANS_L >> PROB_BITS << 8) * f.
+        let x_max = ((RANS_L >> PROB_BITS) << 8) * f;
+        while x >= x_max {
+            out.push((x & 0xFF) as u8);
+            x >>= 8;
+        }
+        x = ((x / f) << PROB_BITS) + (x % f) + c;
+    }
+    // Flush the final state (4 bytes, little-endian in reverse order).
+    for _ in 0..4 {
+        out.push((x & 0xFF) as u8);
+        x >>= 8;
+    }
+    out.reverse();
+    Ok(out)
+}
+
+/// Decode `n` bytes from an rANS stream.
+pub fn rans_decode(model: &RansModel, encoded: &[u8], n: usize) -> Result<Vec<u8>> {
+    if encoded.len() < 4 {
+        return Err(Error::corrupt("rANS stream shorter than state"));
+    }
+    let mut pos = 0usize;
+    let mut x: u32 = 0;
+    for _ in 0..4 {
+        x = (x << 8) | encoded[pos] as u32;
+        pos += 1;
+    }
+    let mask = PROB_SCALE - 1;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let slot = x & mask;
+        let s = model.slot_to_symbol[slot as usize];
+        let f = model.freq[s as usize];
+        let c = model.cum[s as usize];
+        x = f * (x >> PROB_BITS) + slot - c;
+        while x < RANS_L {
+            if pos >= encoded.len() {
+                return Err(Error::corrupt("rANS stream truncated"));
+            }
+            x = (x << 8) | encoded[pos] as u32;
+            pos += 1;
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_uniform_bytes() {
+        let mut rng = Rng::new(1);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u32() as u8).collect();
+        let model = RansModel::from_data(&data);
+        let enc = rans_encode(&model, &data).unwrap();
+        let dec = rans_decode(&model, &enc, data.len()).unwrap();
+        assert_eq!(dec, data);
+        // Uniform bytes are incompressible: encoded ≈ input size.
+        assert!(enc.len() as f64 > data.len() as f64 * 0.98);
+    }
+
+    #[test]
+    fn roundtrip_skewed_bytes() {
+        let mut rng = Rng::new(2);
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.6 {
+                    0
+                } else if r < 0.9 {
+                    1
+                } else {
+                    (rng.next_u32() % 8) as u8
+                }
+            })
+            .collect();
+        let model = RansModel::from_data(&data);
+        let enc = rans_encode(&model, &data).unwrap();
+        let dec = rans_decode(&model, &enc, data.len()).unwrap();
+        assert_eq!(dec, data);
+        // Entropy ~1.5 bits/byte => strong compression expected.
+        assert!(
+            (enc.len() as f64) < data.len() as f64 * 0.35,
+            "enc {} of {}",
+            enc.len(),
+            data.len()
+        );
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        let model = RansModel::from_data(&[7]);
+        let enc = rans_encode(&model, &[]).unwrap();
+        assert_eq!(rans_decode(&model, &enc, 0).unwrap(), Vec::<u8>::new());
+
+        let data = vec![7u8; 3];
+        let enc = rans_encode(&model, &data).unwrap();
+        assert_eq!(rans_decode(&model, &enc, 3).unwrap(), data);
+    }
+
+    #[test]
+    fn all_256_symbols() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let model = RansModel::from_data(&data);
+        let enc = rans_encode(&model, &data).unwrap();
+        assert_eq!(rans_decode(&model, &enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn unknown_symbol_rejected_at_encode() {
+        let model = RansModel::from_data(&[1, 1, 2]);
+        assert!(rans_encode(&model, &[3]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let mut rng = Rng::new(3);
+        let data: Vec<u8> = (0..1000).map(|_| (rng.next_u32() % 4) as u8).collect();
+        let model = RansModel::from_data(&data);
+        let enc = rans_encode(&model, &data).unwrap();
+        let cut = &enc[..2];
+        assert!(rans_decode(&model, cut, data.len()).is_err());
+    }
+
+    #[test]
+    fn model_normalization_sums_to_scale() {
+        let mut counts = [0u64; 256];
+        counts[0] = 1_000_000;
+        counts[1] = 1;
+        counts[200] = 3;
+        let m = RansModel::from_counts(&counts);
+        let total: u32 = (0..256).map(|s| m.freq(s as u8)).sum();
+        assert_eq!(total, PROB_SCALE);
+        assert!(m.freq(1) >= 1);
+        assert!(m.freq(200) >= 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! Mini-criterion: a small benchmarking harness.
+//!
+//! The vendored dependency set has no `criterion`, so the `cargo bench`
+//! targets use this harness: warmup, calibrated iteration counts,
+//! mean/median/p95 statistics, and Markdown table output so each bench
+//! binary prints rows directly comparable to the paper's tables/figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of benchmarking one closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Label for reporting.
+    pub name: String,
+    /// Number of measured iterations.
+    pub iters: u64,
+    /// Mean time per iteration, seconds.
+    pub mean: f64,
+    /// Median time per iteration, seconds.
+    pub median: f64,
+    /// 95th percentile, seconds.
+    pub p95: f64,
+    /// Minimum observed, seconds.
+    pub min: f64,
+}
+
+impl BenchResult {
+    /// Mean throughput for `units` work items per iteration.
+    pub fn throughput(&self, units: f64) -> f64 {
+        units / self.mean
+    }
+}
+
+/// Benchmark runner with warmup + calibration.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(150),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// A faster configuration for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(200),
+            warmup_time: Duration::from_millis(40),
+            max_iters: 1000,
+        }
+    }
+
+    /// Honour `DF11_BENCH_QUICK=1` for fast smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("DF11_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Measure `f`, returning iteration statistics. The closure should
+    /// perform one unit of work; its return value is black-boxed.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + rate estimation.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let target = ((self.measure_time.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(1, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target as usize);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        BenchResult {
+            name: name.to_string(),
+            iters: target,
+            mean,
+            median,
+            p95,
+            min: samples[0],
+        }
+    }
+}
+
+/// Markdown table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a Markdown table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Human formatting helpers shared by bench binaries.
+pub mod fmt {
+    /// Format seconds adaptively (s / ms / µs).
+    pub fn seconds(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.1} µs", s * 1e6)
+        }
+    }
+
+    /// Format bytes/second adaptively.
+    pub fn throughput_bps(bps: f64) -> String {
+        if bps >= 1e9 {
+            format!("{:.2} GB/s", bps / 1e9)
+        } else if bps >= 1e6 {
+            format!("{:.2} MB/s", bps / 1e6)
+        } else {
+            format!("{:.2} KB/s", bps / 1e3)
+        }
+    }
+
+    /// Format a byte count adaptively.
+    pub fn bytes(b: u64) -> String {
+        if b >= 1 << 30 {
+            format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+        } else if b >= 1 << 20 {
+            format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+        } else if b >= 1 << 10 {
+            format!("{:.2} KiB", b as f64 / 1024.0)
+        } else {
+            format!("{b} B")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 500,
+        };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean > 0.0);
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.p95 + 1e-12);
+        assert!(r.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["model", "ratio"]);
+        t.row(&["llama-8b".into(), "67.8%".into()]);
+        let s = t.render();
+        assert!(s.contains("| model"));
+        assert!(s.contains("| llama-8b"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt::seconds(2.0), "2.000 s");
+        assert_eq!(fmt::seconds(0.002), "2.000 ms");
+        assert!(fmt::seconds(2e-6).contains("µs"));
+        assert_eq!(fmt::throughput_bps(3e9), "3.00 GB/s");
+        assert_eq!(fmt::bytes(2048), "2.00 KiB");
+    }
+}

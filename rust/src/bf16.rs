@@ -1,0 +1,275 @@
+//! BFloat16 value handling.
+//!
+//! The paper's entire premise rests on the bit layout of BFloat16
+//! (Figure 1): 1 sign bit, 8 exponent bits, 7 mantissa bits, with the
+//! numeric value `(-1)^sign * 2^(exponent-127) * 1.mantissa`.
+//!
+//! DF11 splits each 16-bit weight into:
+//!   * the 8-bit exponent — entropy-coded (Huffman), and
+//!   * the 8-bit sign+mantissa byte — stored verbatim
+//!     (`PackedSignMantissa` in the paper, Figure 2).
+//!
+//! The `half` crate is not in the vendored dependency set, so this module
+//! implements the (small) required surface from scratch.
+
+/// A BFloat16 value as its raw 16-bit pattern.
+///
+/// All DF11 operations are defined on the bit pattern — compression is
+/// lossless at the *bit* level, so we never round-trip through arithmetic.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Bf16(pub u16);
+
+/// Bit width of the sign field.
+pub const SIGN_BITS: u32 = 1;
+/// Bit width of the exponent field.
+pub const EXPONENT_BITS: u32 = 8;
+/// Bit width of the mantissa field.
+pub const MANTISSA_BITS: u32 = 7;
+/// Exponent bias (shared with f32).
+pub const EXPONENT_BIAS: i32 = 127;
+
+impl Bf16 {
+    /// Construct from raw bits.
+    #[inline]
+    pub const fn from_bits(bits: u16) -> Self {
+        Bf16(bits)
+    }
+
+    /// The raw 16-bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Truncate an `f32` to BFloat16 (round-to-nearest-even on the
+    /// discarded 16 mantissa bits), matching the conversion used when
+    /// models are trained/stored in BF16.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        // Round to nearest even: add 0x7FFF + lsb of the kept part.
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7FFF + lsb);
+        // NaN must stay NaN: truncation of a NaN payload can produce Inf.
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040); // force a quiet NaN bit
+        }
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen to `f32` (exact — BF16 is a prefix of f32).
+    #[inline]
+    pub const fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// The sign bit (0 or 1).
+    #[inline]
+    pub const fn sign(self) -> u8 {
+        (self.0 >> 15) as u8
+    }
+
+    /// The raw 8-bit exponent field.
+    #[inline]
+    pub const fn exponent(self) -> u8 {
+        ((self.0 >> 7) & 0xFF) as u8
+    }
+
+    /// The raw 7-bit mantissa field.
+    #[inline]
+    pub const fn mantissa(self) -> u8 {
+        (self.0 & 0x7F) as u8
+    }
+
+    /// The sign+mantissa byte exactly as stored in `PackedSignMantissa`
+    /// (sign in bit 7, mantissa in bits 0..=6 — Algorithm 1 lines 33-35).
+    #[inline]
+    pub const fn sign_mantissa_byte(self) -> u8 {
+        (((self.0 >> 15) as u8) << 7) | ((self.0 & 0x7F) as u8)
+    }
+
+    /// Reassemble from the DF11 pair (exponent byte, sign+mantissa byte).
+    ///
+    /// This is Algorithm 1 line 36:
+    /// `(Sign << 8) | (Exponent << 7) | Mantissa`.
+    #[inline]
+    pub const fn from_parts(exponent: u8, sign_mantissa: u8) -> Self {
+        let sign = (sign_mantissa >> 7) as u16;
+        let mantissa = (sign_mantissa & 0x7F) as u16;
+        Bf16((sign << 15) | ((exponent as u16) << 7) | mantissa)
+    }
+
+    /// True if this is any NaN pattern.
+    #[inline]
+    pub const fn is_nan(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() != 0
+    }
+
+    /// True for +/- infinity.
+    #[inline]
+    pub const fn is_infinite(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() == 0
+    }
+
+    /// True for zero / subnormal (exponent field 0).
+    #[inline]
+    pub const fn is_subnormal_or_zero(self) -> bool {
+        self.exponent() == 0
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Bf16({:#06x} = {} [s={} e={} m={:#04x}])",
+            self.0,
+            self.to_f32(),
+            self.sign(),
+            self.exponent(),
+            self.mantissa()
+        )
+    }
+}
+
+impl std::fmt::Display for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Reinterpret a `&[u16]` of raw BF16 bit patterns as `&[Bf16]`.
+///
+/// `Bf16` is `repr`-compatible with `u16` (a single-field tuple struct),
+/// so this is a zero-copy view used by the hot decompression path.
+#[inline]
+pub fn bits_as_bf16(bits: &[u16]) -> &[Bf16] {
+    // SAFETY: Bf16 is a transparent wrapper over u16 in layout (single
+    // u16 field, no padding); alignment and size match.
+    unsafe { std::slice::from_raw_parts(bits.as_ptr() as *const Bf16, bits.len()) }
+}
+
+/// Split a tensor of BF16 values into DF11's two planes:
+/// the exponent byte stream and the packed sign+mantissa byte stream.
+pub fn split_planes(weights: &[Bf16]) -> (Vec<u8>, Vec<u8>) {
+    let mut exponents = Vec::with_capacity(weights.len());
+    let mut sign_mantissa = Vec::with_capacity(weights.len());
+    for w in weights {
+        exponents.push(w.exponent());
+        sign_mantissa.push(w.sign_mantissa_byte());
+    }
+    (exponents, sign_mantissa)
+}
+
+/// Inverse of [`split_planes`]: reassemble BF16 values from the planes.
+pub fn merge_planes(exponents: &[u8], sign_mantissa: &[u8]) -> Vec<Bf16> {
+    debug_assert_eq!(exponents.len(), sign_mantissa.len());
+    exponents
+        .iter()
+        .zip(sign_mantissa)
+        .map(|(&e, &sm)| Bf16::from_parts(e, sm))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_extraction_matches_layout() {
+        // 1.0f32 == 0x3F80 in bf16: sign 0, exponent 127, mantissa 0.
+        let one = Bf16::from_f32(1.0);
+        assert_eq!(one.to_bits(), 0x3F80);
+        assert_eq!(one.sign(), 0);
+        assert_eq!(one.exponent(), 127);
+        assert_eq!(one.mantissa(), 0);
+
+        let neg = Bf16::from_f32(-1.5);
+        assert_eq!(neg.sign(), 1);
+        assert_eq!(neg.exponent(), 127);
+        assert_eq!(neg.mantissa(), 0x40); // .5 => top mantissa bit
+    }
+
+    #[test]
+    fn from_parts_roundtrips_all_65536_patterns() {
+        for bits in 0..=u16::MAX {
+            let v = Bf16::from_bits(bits);
+            let rebuilt = Bf16::from_parts(v.exponent(), v.sign_mantissa_byte());
+            assert_eq!(rebuilt.to_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn f32_widening_is_exact() {
+        for bits in (0..=u16::MAX).step_by(7) {
+            let v = Bf16::from_bits(bits);
+            if v.is_nan() {
+                assert!(v.to_f32().is_nan());
+            } else {
+                assert_eq!(Bf16::from_f32(v.to_f32()).to_bits(), bits);
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-8 rounds down to 1.0 in bf16 (halfway, even).
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(x).to_bits(), 0x3F80);
+        // Slightly above halfway rounds up.
+        let x = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(x).to_bits(), 0x3F81);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        let v = Bf16::from_f32(f32::NAN);
+        assert!(v.is_nan());
+        // A NaN whose payload lives entirely in the low 16 bits must not
+        // become Inf after truncation.
+        let sneaky = f32::from_bits(0x7F80_0001);
+        assert!(sneaky.is_nan());
+        assert!(Bf16::from_f32(sneaky).is_nan());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Bf16::from_f32(f32::INFINITY).is_infinite());
+        assert!(Bf16::from_f32(0.0).is_subnormal_or_zero());
+        assert!(Bf16::from_bits(0x0001).is_subnormal_or_zero());
+        assert!(!Bf16::from_f32(1.0).is_nan());
+    }
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let ws: Vec<Bf16> = [0.0f32, 1.0, -2.5, 1e-20, 3e20, f32::INFINITY]
+            .iter()
+            .map(|&x| Bf16::from_f32(x))
+            .collect();
+        let (e, sm) = split_planes(&ws);
+        assert_eq!(e.len(), ws.len());
+        let back = merge_planes(&e, &sm);
+        assert_eq!(back, ws);
+    }
+
+    #[test]
+    fn bits_as_bf16_is_zero_copy_view() {
+        let raw: Vec<u16> = vec![0x3F80, 0xBFC0, 0x0000];
+        let view = bits_as_bf16(&raw);
+        assert_eq!(view.len(), 3);
+        assert_eq!(view[0], Bf16::from_f32(1.0));
+        assert_eq!(view[1], Bf16::from_f32(-1.5));
+    }
+}

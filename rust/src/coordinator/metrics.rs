@@ -1,0 +1,214 @@
+//! Latency/throughput accounting.
+//!
+//! Two clocks run side by side:
+//! * **measured** — wall-clock seconds actually spent on this CPU;
+//! * **simulated** — seconds charged by device models (PCIe transfers
+//!   for the offload baseline, analytic GPU estimates).
+//!
+//! Figure 6's latency breakdown and Figure 4's throughput comparison
+//! read these per-component accumulators.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Pipeline components for the Figure 6 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// Token embedding (gather + its decompression when DF11).
+    Embed,
+    /// DF11 decompression of block weights.
+    Decompress,
+    /// Host→device weight transfer (offload baseline).
+    Transfer,
+    /// Transformer block math.
+    BlockCompute,
+    /// Final norm + LM head.
+    LmHead,
+}
+
+impl Component {
+    /// Stable iteration order for reports.
+    pub fn all() -> [Component; 5] {
+        [
+            Component::Embed,
+            Component::Decompress,
+            Component::Transfer,
+            Component::BlockCompute,
+            Component::LmHead,
+        ]
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Embed => "embed",
+            Component::Decompress => "decompress",
+            Component::Transfer => "cpu->gpu transfer",
+            Component::BlockCompute => "block compute",
+            Component::LmHead => "lm head",
+        }
+    }
+}
+
+/// Per-component accumulated time.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    measured: HashMap<Component, f64>,
+    simulated: HashMap<Component, f64>,
+}
+
+impl Breakdown {
+    /// Add measured wall-clock seconds.
+    pub fn add_measured(&mut self, c: Component, seconds: f64) {
+        *self.measured.entry(c).or_insert(0.0) += seconds;
+    }
+
+    /// Add simulated device-model seconds.
+    pub fn add_simulated(&mut self, c: Component, seconds: f64) {
+        *self.simulated.entry(c).or_insert(0.0) += seconds;
+    }
+
+    /// Measured seconds for a component.
+    pub fn measured_seconds(&self, c: Component) -> f64 {
+        self.measured.get(&c).copied().unwrap_or(0.0)
+    }
+
+    /// Simulated seconds for a component.
+    pub fn simulated_seconds(&self, c: Component) -> f64 {
+        self.simulated.get(&c).copied().unwrap_or(0.0)
+    }
+
+    /// Total seconds (measured + simulated) across components.
+    pub fn total_seconds(&self) -> f64 {
+        Component::all()
+            .iter()
+            .map(|&c| self.measured_seconds(c) + self.simulated_seconds(c))
+            .sum()
+    }
+
+    /// Reset all counters.
+    pub fn clear(&mut self) {
+        self.measured.clear();
+        self.simulated.clear();
+    }
+
+    /// Difference vs another breakdown (self - other), per component.
+    pub fn delta(&self, other: &Breakdown) -> Vec<(Component, f64)> {
+        Component::all()
+            .iter()
+            .map(|&c| {
+                (
+                    c,
+                    self.measured_seconds(c) + self.simulated_seconds(c)
+                        - other.measured_seconds(c)
+                        - other.simulated_seconds(c),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Serving-level latency stats for a batch of request latencies.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    /// Individual request latencies, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    /// From raw samples.
+    pub fn new(mut samples: Vec<f64>) -> LatencyStats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyStats { samples }
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[idx]
+    }
+}
+
+/// A stopwatch that charges into a breakdown on drop.
+pub struct Timed<'a> {
+    breakdown: &'a mut Breakdown,
+    component: Component,
+    start: Instant,
+}
+
+impl<'a> Timed<'a> {
+    /// Start timing `component`.
+    pub fn start(breakdown: &'a mut Breakdown, component: Component) -> Timed<'a> {
+        Timed {
+            breakdown,
+            component,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for Timed<'_> {
+    fn drop(&mut self) {
+        self.breakdown
+            .add_measured(self.component, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::default();
+        b.add_measured(Component::Decompress, 0.5);
+        b.add_measured(Component::Decompress, 0.25);
+        b.add_simulated(Component::Transfer, 1.0);
+        assert_eq!(b.measured_seconds(Component::Decompress), 0.75);
+        assert_eq!(b.simulated_seconds(Component::Transfer), 1.0);
+        assert_eq!(b.total_seconds(), 1.75);
+        b.clear();
+        assert_eq!(b.total_seconds(), 0.0);
+    }
+
+    #[test]
+    fn delta_subtracts() {
+        let mut a = Breakdown::default();
+        a.add_measured(Component::Embed, 2.0);
+        let mut b = Breakdown::default();
+        b.add_measured(Component::Embed, 0.5);
+        let d = a.delta(&b);
+        let embed = d.iter().find(|(c, _)| *c == Component::Embed).unwrap();
+        assert!((embed.1 - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_stats_percentiles() {
+        let s = LatencyStats::new(vec![0.3, 0.1, 0.2, 0.4, 0.5]);
+        assert!((s.mean() - 0.3).abs() < 1e-12);
+        assert_eq!(s.percentile(0.0), 0.1);
+        assert_eq!(s.percentile(100.0), 0.5);
+        assert_eq!(s.percentile(50.0), 0.3);
+    }
+
+    #[test]
+    fn timed_guard_charges_on_drop() {
+        let mut b = Breakdown::default();
+        {
+            let _t = Timed::start(&mut b, Component::LmHead);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(b.measured_seconds(Component::LmHead) >= 0.001);
+    }
+}

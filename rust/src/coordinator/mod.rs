@@ -1,0 +1,26 @@
+//! The serving coordinator (L3): request queue, batcher, scheduler, and
+//! the block-level-decompression inference engine.
+//!
+//! Architecture (vLLM-router-style, scaled to this paper's needs):
+//!
+//! ```text
+//!  submit() ─► RequestQueue ─► Server::drain ─► static batches
+//!                                   │
+//!                                   ▼
+//!                         Engine::generate (prefill + decode)
+//!                         │  per block: DF11 batch-decompress → fwd
+//!                         ▼
+//!            BlockBackend (native Rust   |   PJRT / AOT JAX artifacts)
+//! ```
+
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::{BlockBackend, BlockWeightsF32, Engine, NativeBackend, WeightMode};
+pub use metrics::{Breakdown, Component, LatencyStats};
+pub use queue::RequestQueue;
+pub use request::{Request, Response};
+pub use scheduler::{SchedulerConfig, ServeReport, Server};

@@ -1,0 +1,52 @@
+//! Request/response types for the serving coordinator.
+
+/// A generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Unique id (assigned by the queue if 0).
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<u32>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival timestamp (seconds on the serving clock).
+    pub arrival: f64,
+}
+
+impl Request {
+    /// New request with defaults.
+    pub fn new(prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id: 0,
+            prompt,
+            max_new_tokens,
+            arrival: 0.0,
+        }
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Generated token ids.
+    pub tokens: Vec<u32>,
+    /// End-to-end latency (arrival -> completion), serving-clock seconds.
+    pub latency: f64,
+    /// Time spent queued before execution started.
+    pub queue_delay: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(vec![1, 2, 3], 16);
+        assert_eq!(r.id, 0);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 16);
+    }
+}

@@ -1,0 +1,285 @@
+//! DF11 compression: encoder + auxiliary-variable construction.
+//!
+//! Compression (a one-time, CPU-side preprocessing step — Table 4)
+//! produces everything the two-phase kernel needs:
+//!
+//! * the Huffman codebook over exponent values,
+//! * the bit-packed `EncodedExponent` stream,
+//! * the `PackedSignMantissa` plane,
+//! * the **gap array** (first-code bit offset per thread chunk, §2.3.2),
+//! * the **block output positions** (first element index per thread
+//!   block, §2.3.2).
+
+use crate::bf16::{split_planes, Bf16};
+use crate::error::{Error, Result};
+use crate::gpu_sim::KernelConfig;
+use crate::huffman::{encode_symbols, Codebook};
+
+/// Auxiliary variables for the two-phase kernel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelAux {
+    /// One entry per thread chunk; values in `[0, 31]` (5 bits).
+    pub gaps: Vec<u8>,
+    /// One entry per block plus a final total-count entry.
+    pub block_output_pos: Vec<u32>,
+    /// Number of thread chunks (gap entries).
+    pub num_chunks: usize,
+    /// Number of thread blocks.
+    pub num_blocks: usize,
+}
+
+/// Build the gap array and block output positions for a symbol stream.
+///
+/// Walks the would-be encoded bitstream (using codeword lengths only) and
+/// records, for every `n`-byte thread chunk, the offset of the first
+/// codeword starting inside it, and per `T`-thread block, the index of
+/// its first decoded element.
+pub fn build_kernel_aux(
+    codebook: &Codebook,
+    symbols: &[u8],
+    config: &KernelConfig,
+) -> Result<KernelAux> {
+    let n = config.bytes_per_thread;
+    let t_per_block = config.threads_per_block;
+    if n == 0 || t_per_block == 0 {
+        return Err(Error::InvalidArgument("zero kernel geometry".into()));
+    }
+    let chunk_bits = (n * 8) as u64;
+    let lengths = codebook.lengths();
+
+    // Total encoded bits.
+    let mut total_bits = 0u64;
+    for &s in symbols {
+        let l = lengths[s as usize];
+        if l == 0 {
+            return Err(Error::Huffman(format!("symbol {s} not in codebook")));
+        }
+        total_bits += l as u64;
+    }
+
+    // Chunks covering the stream, padded up to whole blocks.
+    let data_chunks = (total_bits.div_ceil(chunk_bits)).max(1) as usize;
+    let num_blocks = data_chunks.div_ceil(t_per_block);
+    let num_chunks = num_blocks * t_per_block;
+
+    let mut gaps = vec![0u8; num_chunks];
+    let mut counts = vec![0u32; num_chunks];
+
+    // Walk code starts; assign each chunk its first-start offset.
+    let mut bitpos = 0u64;
+    let mut next_chunk = 0usize;
+    for &s in symbols {
+        let start = bitpos;
+        while next_chunk < num_chunks && (next_chunk as u64) * chunk_bits <= start {
+            let gap = start - (next_chunk as u64) * chunk_bits;
+            debug_assert!(gap < 32, "gap {gap} must fit 5 bits (L <= 32)");
+            gaps[next_chunk] = gap as u8;
+            next_chunk += 1;
+        }
+        // The code belongs to the chunk containing its start bit.
+        let chunk = (start / chunk_bits) as usize;
+        counts[chunk] += 1;
+        bitpos += lengths[s as usize] as u64;
+    }
+    // Chunks with NO code start inside them: only possible at the stream
+    // tail (an interior chunk always receives the next code within 31
+    // bits of its start, since codes spill at most L-1 = 31 bits). Such
+    // a chunk may still overlap `bit_len` by up to 31 bits (the tail of
+    // the final code), so gap 0 would point a kernel thread at mid-code
+    // garbage. Set gap = 31: `chunk_start + 31 >= bit_len` always holds
+    // there (the spilling code began before the chunk and is <= 32 bits),
+    // so the kernel's `start >= chunk_end` guard skips the chunk. 31
+    // still fits the 5-bit gap encoding.
+    for g in gaps.iter_mut().skip(next_chunk) {
+        *g = 31;
+    }
+
+    // Block output positions: exclusive prefix sum over per-block sums,
+    // with the grand total appended (Algorithm 1 line 41 reads
+    // BlockOutputPos[b+1] to bound the coalesced write).
+    let total_elements: u64 = counts.iter().map(|&c| c as u64).sum();
+    if total_elements != symbols.len() as u64 {
+        return Err(Error::Huffman("internal: element count mismatch".into()));
+    }
+    if total_elements > u32::MAX as u64 {
+        return Err(Error::InvalidArgument(format!(
+            "tensor with {total_elements} elements exceeds u32 output positions; split it"
+        )));
+    }
+    let mut block_output_pos = Vec::with_capacity(num_blocks + 1);
+    let mut acc = 0u32;
+    for b in 0..num_blocks {
+        block_output_pos.push(acc);
+        let sum: u32 = counts[b * t_per_block..(b + 1) * t_per_block].iter().sum();
+        acc += sum;
+    }
+    block_output_pos.push(acc);
+
+    Ok(KernelAux {
+        gaps,
+        block_output_pos,
+        num_chunks,
+        num_blocks,
+    })
+}
+
+/// Full compression result for one tensor, before container assembly.
+#[derive(Clone, Debug)]
+pub struct CompressedParts {
+    /// The codebook (shipped as 256 length bytes).
+    pub codebook: Codebook,
+    /// Encoded exponent stream, zero-padded to whole blocks.
+    pub encoded: Vec<u8>,
+    /// Exact bit length of the valid stream.
+    pub bit_len: u64,
+    /// Sign+mantissa plane, one byte per element.
+    pub packed_sign_mantissa: Vec<u8>,
+    /// Kernel auxiliary variables.
+    pub aux: KernelAux,
+    /// Element count.
+    pub num_elements: usize,
+}
+
+/// Compress a BF16 weight slice into DF11 parts.
+pub fn compress_weights(weights: &[Bf16], config: &KernelConfig) -> Result<CompressedParts> {
+    if weights.is_empty() {
+        return Err(Error::InvalidArgument("empty tensor".into()));
+    }
+    let (exponents, packed_sign_mantissa) = split_planes(weights);
+    let mut freqs = [0u64; 256];
+    for &e in &exponents {
+        freqs[e as usize] += 1;
+    }
+    let codebook = Codebook::from_frequencies(&freqs)?;
+    let (mut encoded, bit_len) = encode_symbols(&codebook, &exponents)?;
+    let aux = build_kernel_aux(&codebook, &exponents, config)?;
+    // Pad the encoded stream to exactly the chunks the aux arrays cover.
+    let padded_len = aux.num_chunks * config.bytes_per_thread;
+    if encoded.len() > padded_len {
+        return Err(Error::Huffman("internal: padding shorter than stream".into()));
+    }
+    encoded.resize(padded_len, 0);
+    Ok(CompressedParts {
+        codebook,
+        encoded,
+        bit_len,
+        packed_sign_mantissa,
+        aux,
+        num_elements: weights.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn aux_dimensions_match_geometry() {
+        let ws = gaussian_weights(10_000, 1);
+        let cfg = KernelConfig {
+            threads_per_block: 32,
+            bytes_per_thread: 8,
+            parallelism: 1,
+        };
+        let parts = compress_weights(&ws, &cfg).unwrap();
+        assert_eq!(parts.aux.num_chunks, parts.aux.num_blocks * 32);
+        assert_eq!(parts.aux.gaps.len(), parts.aux.num_chunks);
+        assert_eq!(parts.aux.block_output_pos.len(), parts.aux.num_blocks + 1);
+        assert_eq!(parts.encoded.len(), parts.aux.num_chunks * 8);
+        assert_eq!(
+            *parts.aux.block_output_pos.last().unwrap() as usize,
+            ws.len()
+        );
+    }
+
+    #[test]
+    fn gaps_are_five_bit() {
+        let ws = gaussian_weights(50_000, 2);
+        let parts = compress_weights(&ws, &KernelConfig::default()).unwrap();
+        assert!(parts.aux.gaps.iter().all(|&g| g < 32));
+    }
+
+    #[test]
+    fn gaps_point_at_code_starts() {
+        // Decode from each gap position with the scalar decoder and check
+        // the first decoded symbol matches the stream at that element.
+        use crate::huffman::decode::decode_all_scalar;
+        let ws = gaussian_weights(5_000, 3);
+        let cfg = KernelConfig {
+            threads_per_block: 4,
+            bytes_per_thread: 4,
+            parallelism: 1,
+        };
+        let parts = compress_weights(&ws, &cfg).unwrap();
+        let (exponents, _) = crate::bf16::split_planes(&ws);
+        let all = decode_all_scalar(
+            parts.codebook.canonical(),
+            &parts.encoded,
+            parts.bit_len,
+        )
+        .unwrap();
+        assert_eq!(all, exponents);
+
+        // Element index at each chunk = prefix of counts; recompute and
+        // verify by decoding from (chunk_start + gap).
+        let chunk_bits = (cfg.bytes_per_thread * 8) as u64;
+        let mut elem_idx = 0usize;
+        let mut bitpos = 0u64;
+        for (c, &gap) in parts.aux.gaps.iter().enumerate() {
+            let chunk_start = c as u64 * chunk_bits;
+            if chunk_start + gap as u64 >= parts.bit_len {
+                break;
+            }
+            // Advance elem_idx to the first element starting >= chunk_start.
+            while bitpos < chunk_start {
+                bitpos += parts.codebook.lengths()[exponents[elem_idx] as usize] as u64;
+                elem_idx += 1;
+            }
+            assert_eq!(
+                bitpos - chunk_start,
+                gap as u64,
+                "chunk {c}: gap mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn block_positions_are_monotone() {
+        let ws = gaussian_weights(100_000, 4);
+        let parts = compress_weights(&ws, &KernelConfig::default()).unwrap();
+        for w in parts.aux.block_output_pos.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn empty_tensor_rejected() {
+        assert!(compress_weights(&[], &KernelConfig::default()).is_err());
+    }
+
+    #[test]
+    fn single_element_tensor() {
+        let ws = vec![Bf16::from_f32(1.5)];
+        let parts = compress_weights(&ws, &KernelConfig::default()).unwrap();
+        assert_eq!(parts.num_elements, 1);
+        assert_eq!(*parts.aux.block_output_pos.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn compression_is_deterministic() {
+        let ws = gaussian_weights(10_000, 5);
+        let a = compress_weights(&ws, &KernelConfig::default()).unwrap();
+        let b = compress_weights(&ws, &KernelConfig::default()).unwrap();
+        assert_eq!(a.encoded, b.encoded);
+        assert_eq!(a.bit_len, b.bit_len);
+        assert_eq!(a.aux, b.aux);
+    }
+}

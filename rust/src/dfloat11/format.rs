@@ -1,0 +1,409 @@
+//! The DF11 container types.
+
+use super::compress::{compress_weights, KernelAux};
+use super::stats::CompressionStats;
+use crate::bf16::Bf16;
+use crate::error::{Error, Result};
+use crate::gpu_sim::{DecompressKernel, KernelConfig, KernelInput, KernelStats};
+use super::decompress::FastTable;
+use crate::huffman::lut::HierarchicalLut;
+use crate::huffman::Codebook;
+use std::sync::OnceLock;
+
+/// One DF11-compressed tensor (Figure 2's layout plus §2.3.2's
+/// auxiliary variables).
+#[derive(Debug)]
+pub struct Df11Tensor {
+    /// Logical shape (row-major element count must equal `num_elements`).
+    shape: Vec<usize>,
+    /// Huffman codebook over exponent values.
+    codebook: Codebook,
+    /// `EncodedExponent`: bit-packed exponent codes, zero-padded to
+    /// whole kernel blocks.
+    encoded: Vec<u8>,
+    /// Exact bit length of the valid encoded stream.
+    bit_len: u64,
+    /// `PackedSignMantissa`: sign bit + 7 mantissa bits per element.
+    packed_sign_mantissa: Vec<u8>,
+    /// Kernel auxiliary variables.
+    aux: KernelAux,
+    /// Element count.
+    num_elements: usize,
+    /// Kernel geometry the aux variables were built for.
+    geometry: (usize, usize), // (threads_per_block, bytes_per_thread)
+    /// Lazily-built decode LUT hierarchy (rebuilt on load, not stored).
+    lut: OnceLock<HierarchicalLut>,
+    /// Lazily-built fast decode table for the sequential hot path.
+    fast: OnceLock<FastTable>,
+}
+
+impl Df11Tensor {
+    /// Compress a flat BF16 slice with size-adapted kernel geometry.
+    pub fn compress(weights: &[Bf16]) -> Result<Df11Tensor> {
+        Self::compress_shaped(
+            weights,
+            &[weights.len()],
+            &KernelConfig::for_elements(weights.len()),
+        )
+    }
+
+    /// Compress with explicit shape and kernel geometry.
+    pub fn compress_shaped(
+        weights: &[Bf16],
+        shape: &[usize],
+        config: &KernelConfig,
+    ) -> Result<Df11Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != weights.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "shape {shape:?} has {numel} elements but got {}",
+                weights.len()
+            )));
+        }
+        let parts = compress_weights(weights, config)?;
+        Ok(Df11Tensor {
+            shape: shape.to_vec(),
+            codebook: parts.codebook,
+            encoded: parts.encoded,
+            bit_len: parts.bit_len,
+            packed_sign_mantissa: parts.packed_sign_mantissa,
+            aux: parts.aux,
+            num_elements: parts.num_elements,
+            geometry: (config.threads_per_block, config.bytes_per_thread),
+            lut: OnceLock::new(),
+            fast: OnceLock::new(),
+        })
+    }
+
+    /// Construct from raw parts (deserialization path).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        shape: Vec<usize>,
+        codebook: Codebook,
+        encoded: Vec<u8>,
+        bit_len: u64,
+        packed_sign_mantissa: Vec<u8>,
+        aux: KernelAux,
+        num_elements: usize,
+        geometry: (usize, usize),
+    ) -> Df11Tensor {
+        Df11Tensor {
+            shape,
+            codebook,
+            encoded,
+            bit_len,
+            packed_sign_mantissa,
+            aux,
+            num_elements,
+            geometry,
+            lut: OnceLock::new(),
+            fast: OnceLock::new(),
+        }
+    }
+
+    /// Logical shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Element count.
+    pub fn num_elements(&self) -> usize {
+        self.num_elements
+    }
+
+    /// The codebook.
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    /// Kernel geometry `(threads_per_block, bytes_per_thread)`.
+    pub fn geometry(&self) -> (usize, usize) {
+        self.geometry
+    }
+
+    /// Exact valid bit length of the encoded stream.
+    pub fn bit_len(&self) -> u64 {
+        self.bit_len
+    }
+
+    /// Raw encoded stream (padded).
+    pub fn encoded(&self) -> &[u8] {
+        &self.encoded
+    }
+
+    /// Raw sign/mantissa plane.
+    pub fn packed_sign_mantissa(&self) -> &[u8] {
+        &self.packed_sign_mantissa
+    }
+
+    /// Auxiliary variables.
+    pub fn aux(&self) -> &KernelAux {
+        &self.aux
+    }
+
+    /// The decode LUT hierarchy (built on first use).
+    pub fn lut(&self) -> &HierarchicalLut {
+        self.lut
+            .get_or_init(|| HierarchicalLut::build(&self.codebook).expect("valid codebook"))
+    }
+
+    /// The 16-bit fast decode table (built on first use; see
+    /// [`super::decompress`]).
+    pub fn fast_table(&self) -> &FastTable {
+        self.fast.get_or_init(|| FastTable::build(self.lut()))
+    }
+
+    /// Compressed payload size in bytes as stored on device:
+    /// encoded stream + sign/mantissa plane + gap array (5-bit packed) +
+    /// block output positions + codebook lengths.
+    pub fn compressed_bytes(&self) -> u64 {
+        let gaps_packed = (self.aux.gaps.len() * 5).div_ceil(8) as u64;
+        self.encoded.len() as u64
+            + self.packed_sign_mantissa.len() as u64
+            + gaps_packed
+            + self.aux.block_output_pos.len() as u64 * 4
+            + 256
+    }
+
+    /// Original BF16 size in bytes.
+    pub fn original_bytes(&self) -> u64 {
+        self.num_elements as u64 * 2
+    }
+
+    /// Compression statistics (Table 1 columns).
+    pub fn stats(&self) -> CompressionStats {
+        CompressionStats::new(self.original_bytes(), self.compressed_bytes(), self.num_elements as u64)
+    }
+
+    /// Decompress to a fresh BF16 vector via the two-phase kernel.
+    pub fn decompress(&self) -> Result<Vec<Bf16>> {
+        let mut out = vec![Bf16::from_bits(0); self.num_elements];
+        self.decompress_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Decompress into a caller-provided buffer (the serving hot path —
+    /// buffers are reused across transformer blocks).
+    pub fn decompress_into(&self, out: &mut [Bf16]) -> Result<KernelStats> {
+        self.decompress_with(out, &self.default_config())
+    }
+
+    /// Decompress with an explicit executor configuration.
+    pub fn decompress_with(&self, out: &mut [Bf16], config: &KernelConfig) -> Result<KernelStats> {
+        if (config.threads_per_block, config.bytes_per_thread) != self.geometry {
+            return Err(Error::InvalidArgument(format!(
+                "kernel geometry {:?} does not match container geometry {:?}",
+                (config.threads_per_block, config.bytes_per_thread),
+                self.geometry
+            )));
+        }
+        let kernel = DecompressKernel::new(self.lut(), *config);
+        let input = KernelInput {
+            encoded: &self.encoded,
+            bit_len: self.bit_len,
+            gaps: &self.aux.gaps,
+            block_output_pos: &self.aux.block_output_pos,
+            packed_sign_mantissa: &self.packed_sign_mantissa,
+        };
+        kernel.run(&input, out)
+    }
+
+    /// The kernel config matching this container's geometry.
+    pub fn default_config(&self) -> KernelConfig {
+        KernelConfig {
+            threads_per_block: self.geometry.0,
+            bytes_per_thread: self.geometry.1,
+            ..KernelConfig::default()
+        }
+    }
+}
+
+/// A named group of tensors decompressed as one batch — the paper's
+/// transformer-block-level decompression unit (§2.3.3).
+#[derive(Debug)]
+pub struct TensorGroup {
+    /// Group name (e.g. `"block.7"`, `"embed"`, `"lm_head"`).
+    pub name: String,
+    /// (tensor name, tensor) pairs in forward-pass order.
+    pub tensors: Vec<(String, Df11Tensor)>,
+}
+
+impl TensorGroup {
+    /// Total elements across the group.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.num_elements()).sum()
+    }
+
+    /// Total compressed bytes.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.tensors.iter().map(|(_, t)| t.compressed_bytes()).sum()
+    }
+
+    /// Total original bytes.
+    pub fn original_bytes(&self) -> u64 {
+        self.tensors.iter().map(|(_, t)| t.original_bytes()).sum()
+    }
+
+    /// Batched decompression: all tensors in the group, one logical
+    /// launch (§2.3.3 — batching hides per-matrix underutilization).
+    pub fn decompress_all(&self) -> Result<Vec<(String, Vec<Bf16>)>> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        for (name, t) in &self.tensors {
+            out.push((name.clone(), t.decompress()?));
+        }
+        Ok(out)
+    }
+}
+
+/// A DF11-compressed model: tensor groups in forward order.
+#[derive(Debug, Default)]
+pub struct Df11Model {
+    /// Model identifier.
+    pub name: String,
+    /// Groups in forward-pass order (embed, block.0 .. block.N, lm_head).
+    pub groups: Vec<TensorGroup>,
+}
+
+impl Df11Model {
+    /// Empty model shell.
+    pub fn new(name: impl Into<String>) -> Df11Model {
+        Df11Model {
+            name: name.into(),
+            groups: Vec::new(),
+        }
+    }
+
+    /// Append a group.
+    pub fn push_group(&mut self, group: TensorGroup) {
+        self.groups.push(group);
+    }
+
+    /// Find a group by name.
+    pub fn group(&self, name: &str) -> Option<&TensorGroup> {
+        self.groups.iter().find(|g| g.name == name)
+    }
+
+    /// Total original BF16 bytes.
+    pub fn original_bytes(&self) -> u64 {
+        self.groups.iter().map(|g| g.original_bytes()).sum()
+    }
+
+    /// Total compressed bytes.
+    pub fn compressed_bytes(&self) -> u64 {
+        self.groups.iter().map(|g| g.compressed_bytes()).sum()
+    }
+
+    /// Total parameters.
+    pub fn num_elements(&self) -> u64 {
+        self.groups.iter().map(|g| g.num_elements() as u64).sum()
+    }
+
+    /// Model-level compression statistics (a Table 1 row).
+    pub fn stats(&self) -> CompressionStats {
+        CompressionStats::new(
+            self.original_bytes(),
+            self.compressed_bytes(),
+            self.num_elements(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn tensor_roundtrip_bit_exact() {
+        let ws = gaussian_weights(33_000, 1);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        assert_eq!(t.decompress().unwrap(), ws);
+    }
+
+    #[test]
+    fn compression_ratio_near_paper() {
+        // Table 1: ~67-70% of original size, ~10.8-11.2 effective bits.
+        let ws = gaussian_weights(400_000, 2);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let s = t.stats();
+        let ratio = s.ratio_percent();
+        assert!(
+            (60.0..75.0).contains(&ratio),
+            "ratio {ratio:.2}% out of the paper's band"
+        );
+        let bits = s.bits_per_weight();
+        assert!((9.5..12.0).contains(&bits), "{bits:.2} bits/weight");
+    }
+
+    #[test]
+    fn shaped_tensor_checks_element_count() {
+        let ws = gaussian_weights(64, 3);
+        assert!(
+            Df11Tensor::compress_shaped(&ws, &[8, 9], &KernelConfig::default()).is_err()
+        );
+        let t = Df11Tensor::compress_shaped(&ws, &[8, 8], &KernelConfig::default()).unwrap();
+        assert_eq!(t.shape(), &[8, 8]);
+    }
+
+    #[test]
+    fn decompress_into_wrong_size_fails() {
+        let ws = gaussian_weights(1000, 4);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut small = vec![Bf16::from_bits(0); 999];
+        assert!(t.decompress_into(&mut small).is_err());
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let ws = gaussian_weights(1000, 5);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut out = vec![Bf16::from_bits(0); 1000];
+        let bad = KernelConfig {
+            threads_per_block: 8,
+            bytes_per_thread: 2,
+            parallelism: 1,
+        };
+        assert!(t.decompress_with(&mut out, &bad).is_err());
+    }
+
+    #[test]
+    fn group_batched_decompression() {
+        let a = gaussian_weights(5000, 6);
+        let b = gaussian_weights(3000, 7);
+        let group = TensorGroup {
+            name: "block.0".into(),
+            tensors: vec![
+                ("q_proj".into(), Df11Tensor::compress(&a).unwrap()),
+                ("k_proj".into(), Df11Tensor::compress(&b).unwrap()),
+            ],
+        };
+        assert_eq!(group.num_elements(), 8000);
+        let out = group.decompress_all().unwrap();
+        assert_eq!(out[0].1, a);
+        assert_eq!(out[1].1, b);
+    }
+
+    #[test]
+    fn model_stats_aggregate() {
+        let mut m = Df11Model::new("test");
+        for i in 0..3 {
+            let ws = gaussian_weights(10_000, 10 + i);
+            m.push_group(TensorGroup {
+                name: format!("block.{i}"),
+                tensors: vec![("w".into(), Df11Tensor::compress(&ws).unwrap())],
+            });
+        }
+        assert_eq!(m.num_elements(), 30_000);
+        assert_eq!(m.original_bytes(), 60_000);
+        assert!(m.compressed_bytes() < m.original_bytes());
+        assert!(m.group("block.1").is_some());
+        assert!(m.group("block.9").is_none());
+    }
+}

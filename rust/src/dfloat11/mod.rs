@@ -1,0 +1,16 @@
+//! Dynamic-Length Float (DFloat11) — the paper's format, end to end.
+//!
+//! [`Df11Tensor`] is one compressed weight matrix: a Huffman codebook,
+//! the `EncodedExponent` bitstream, the `PackedSignMantissa` plane, and
+//! the kernel auxiliary variables (gap array + block output positions).
+//! [`Df11Model`] groups tensors by transformer block so decompression
+//! can be batched at block granularity (§2.3.3).
+
+pub mod compress;
+pub mod decompress;
+pub mod format;
+pub mod serial;
+pub mod stats;
+
+pub use format::{Df11Model, Df11Tensor, TensorGroup};
+pub use stats::CompressionStats;

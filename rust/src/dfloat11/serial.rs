@@ -1,0 +1,482 @@
+//! Binary (de)serialization of DF11 containers.
+//!
+//! A small, versioned, little-endian format. The gap array is stored
+//! 5-bit packed exactly as the paper accounts for it (§2.3.2: "each
+//! offset lies in [0, 31] and is stored using only 5 bits"); the decode
+//! LUTs are *not* stored — they are rebuilt from the 256 codebook length
+//! bytes on load.
+//!
+//! Layout (tensor):
+//! ```text
+//! magic  "DF11"            4 bytes
+//! version u32              currently 1
+//! ndim u32, dims u64[ndim]
+//! threads_per_block u32, bytes_per_thread u32
+//! num_elements u64, bit_len u64
+//! lengths u8[256]
+//! encoded: len u64 + bytes
+//! packed_sign_mantissa: len u64 + bytes
+//! gaps: count u64 + 5-bit packed bytes
+//! block_output_pos: count u64 + u32[count]
+//! crc32 of everything above
+//! ```
+
+use super::compress::KernelAux;
+use super::format::{Df11Model, Df11Tensor, TensorGroup};
+use crate::error::{Error, Result};
+use crate::huffman::Codebook;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"DF11";
+const MODEL_MAGIC: &[u8; 4] = b"DF1M";
+const VERSION: u32 = 1;
+
+/// Pack 5-bit gap values into bytes (LSB-first within the packed word).
+pub fn pack_gaps(gaps: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; (gaps.len() * 5).div_ceil(8)];
+    for (i, &g) in gaps.iter().enumerate() {
+        debug_assert!(g < 32);
+        let bit = i * 5;
+        let byte = bit / 8;
+        let off = bit % 8;
+        out[byte] |= g << off;
+        if off > 3 {
+            out[byte + 1] |= g >> (8 - off);
+        }
+    }
+    out
+}
+
+/// Unpack 5-bit gap values.
+pub fn unpack_gaps(packed: &[u8], count: usize) -> Result<Vec<u8>> {
+    if packed.len() < (count * 5).div_ceil(8) {
+        return Err(Error::container("gap array truncated"));
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let bit = i * 5;
+        let byte = bit / 8;
+        let off = bit % 8;
+        let mut v = packed[byte] >> off;
+        if off > 3 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & 0x1F);
+    }
+    Ok(out)
+}
+
+// --- low-level write helpers -------------------------------------------
+
+struct CrcWriter<W: Write> {
+    inner: W,
+    hasher: crc32fast::Hasher,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn new(inner: W) -> Self {
+        CrcWriter {
+            inner,
+            hasher: crc32fast::Hasher::new(),
+        }
+    }
+    fn crc(&self) -> u32 {
+        self.hasher.clone().finalize()
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hasher.update(&buf[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn w_bytes(w: &mut impl Write, b: &[u8]) -> Result<()> {
+    w_u64(w, b.len() as u64)?;
+    w.write_all(b)?;
+    Ok(())
+}
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn r_bytes(r: &mut impl Read, cap: u64) -> Result<Vec<u8>> {
+    let len = r_u64(r)?;
+    if len > cap {
+        return Err(Error::container(format!("field length {len} exceeds cap {cap}")));
+    }
+    let mut v = vec![0u8; len as usize];
+    r.read_exact(&mut v)?;
+    Ok(v)
+}
+
+/// Hard cap on any single serialized field (sanity against corruption).
+const FIELD_CAP: u64 = 1 << 40;
+
+/// Serialize one tensor.
+pub fn write_tensor(out: &mut impl Write, t: &Df11Tensor) -> Result<()> {
+    let mut w = CrcWriter::new(out);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    w_u32(&mut w, t.shape().len() as u32)?;
+    for &d in t.shape() {
+        w_u64(&mut w, d as u64)?;
+    }
+    let (tpb, bpt) = t.geometry();
+    w_u32(&mut w, tpb as u32)?;
+    w_u32(&mut w, bpt as u32)?;
+    w_u64(&mut w, t.num_elements() as u64)?;
+    w_u64(&mut w, t.bit_len())?;
+    w.write_all(t.codebook().lengths())?;
+    w_bytes(&mut w, t.encoded())?;
+    w_bytes(&mut w, t.packed_sign_mantissa())?;
+    w_u64(&mut w, t.aux().gaps.len() as u64)?;
+    w.write_all(&pack_gaps(&t.aux().gaps))?;
+    w_u64(&mut w, t.aux().block_output_pos.len() as u64)?;
+    for &p in &t.aux().block_output_pos {
+        w_u32(&mut w, p)?;
+    }
+    let crc = w.crc();
+    let inner = &mut w.inner;
+    inner.write_all(&crc.to_le_bytes())?;
+    Ok(())
+}
+
+/// Deserialize one tensor.
+pub fn read_tensor(r: &mut impl Read) -> Result<Df11Tensor> {
+    // Read everything through a buffering CRC pass: simplest is to
+    // re-hash fields as we parse.
+    let mut hasher = crc32fast::Hasher::new();
+    macro_rules! hashed {
+        ($bytes:expr) => {{
+            hasher.update($bytes);
+        }};
+    }
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    hashed!(&magic);
+    if &magic != MAGIC {
+        return Err(Error::container("bad magic"));
+    }
+    let version = r_u32(r)?;
+    hashed!(&version.to_le_bytes());
+    if version != VERSION {
+        return Err(Error::UnsupportedVersion(version, VERSION));
+    }
+    let ndim = r_u32(r)?;
+    hashed!(&ndim.to_le_bytes());
+    if ndim > 8 {
+        return Err(Error::container(format!("ndim {ndim} too large")));
+    }
+    let mut shape = Vec::with_capacity(ndim as usize);
+    for _ in 0..ndim {
+        let d = r_u64(r)?;
+        hashed!(&d.to_le_bytes());
+        shape.push(d as usize);
+    }
+    let tpb = r_u32(r)?;
+    hashed!(&tpb.to_le_bytes());
+    let bpt = r_u32(r)?;
+    hashed!(&bpt.to_le_bytes());
+    let num_elements = r_u64(r)?;
+    hashed!(&num_elements.to_le_bytes());
+    let bit_len = r_u64(r)?;
+    hashed!(&bit_len.to_le_bytes());
+
+    let mut lengths = [0u8; 256];
+    r.read_exact(&mut lengths)?;
+    hashed!(&lengths);
+    let codebook = Codebook::from_lengths(&lengths)?;
+
+    let encoded_len = r_u64(r)?;
+    hashed!(&encoded_len.to_le_bytes());
+    if encoded_len > FIELD_CAP {
+        return Err(Error::container("encoded stream too large"));
+    }
+    let mut encoded = vec![0u8; encoded_len as usize];
+    r.read_exact(&mut encoded)?;
+    hashed!(&encoded);
+
+    let sm_len = r_u64(r)?;
+    hashed!(&sm_len.to_le_bytes());
+    if sm_len != num_elements {
+        return Err(Error::container("sign/mantissa plane size mismatch"));
+    }
+    let mut packed_sm = vec![0u8; sm_len as usize];
+    r.read_exact(&mut packed_sm)?;
+    hashed!(&packed_sm);
+
+    let gap_count = r_u64(r)? as usize;
+    hashed!(&(gap_count as u64).to_le_bytes());
+    let packed_gap_bytes = (gap_count * 5).div_ceil(8);
+    if packed_gap_bytes as u64 > FIELD_CAP {
+        return Err(Error::container("gap array too large"));
+    }
+    let mut packed_gaps = vec![0u8; packed_gap_bytes];
+    r.read_exact(&mut packed_gaps)?;
+    hashed!(&packed_gaps);
+    let gaps = unpack_gaps(&packed_gaps, gap_count)?;
+
+    let bop_count = r_u64(r)? as usize;
+    hashed!(&(bop_count as u64).to_le_bytes());
+    if bop_count as u64 > FIELD_CAP / 4 {
+        return Err(Error::container("block positions too large"));
+    }
+    let mut block_output_pos = Vec::with_capacity(bop_count);
+    for _ in 0..bop_count {
+        let p = r_u32(r)?;
+        hashed!(&p.to_le_bytes());
+        block_output_pos.push(p);
+    }
+
+    let stored_crc = r_u32(r)?;
+    let computed = hasher.finalize();
+    if stored_crc != computed {
+        return Err(Error::container(format!(
+            "crc mismatch: stored {stored_crc:#010x}, computed {computed:#010x}"
+        )));
+    }
+
+    // Structural validation.
+    let numel: usize = shape.iter().product();
+    if numel as u64 != num_elements {
+        return Err(Error::container("shape does not match element count"));
+    }
+    if bop_count == 0 || *block_output_pos.last().unwrap() as u64 != num_elements {
+        return Err(Error::container("block output positions do not sum to elements"));
+    }
+    let num_blocks = bop_count - 1;
+    if gap_count != num_blocks * tpb as usize {
+        return Err(Error::container("gap count does not match geometry"));
+    }
+    if encoded.len() != gap_count * bpt as usize {
+        return Err(Error::container("encoded length does not match geometry"));
+    }
+
+    let aux = KernelAux {
+        gaps,
+        block_output_pos,
+        num_chunks: gap_count,
+        num_blocks,
+    };
+    Ok(Df11Tensor::from_parts(
+        shape,
+        codebook,
+        encoded,
+        bit_len,
+        packed_sm,
+        aux,
+        num_elements as usize,
+        (tpb as usize, bpt as usize),
+    ))
+}
+
+/// Serialize a model (groups of named tensors).
+pub fn write_model(out: &mut impl Write, m: &Df11Model) -> Result<()> {
+    out.write_all(MODEL_MAGIC)?;
+    w_u32(out, VERSION)?;
+    w_bytes(out, m.name.as_bytes())?;
+    w_u32(out, m.groups.len() as u32)?;
+    for g in &m.groups {
+        w_bytes(out, g.name.as_bytes())?;
+        w_u32(out, g.tensors.len() as u32)?;
+        for (name, t) in &g.tensors {
+            w_bytes(out, name.as_bytes())?;
+            write_tensor(out, t)?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a model.
+pub fn read_model(r: &mut impl Read) -> Result<Df11Model> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MODEL_MAGIC {
+        return Err(Error::container("bad model magic"));
+    }
+    let version = r_u32(r)?;
+    if version != VERSION {
+        return Err(Error::UnsupportedVersion(version, VERSION));
+    }
+    let name = String::from_utf8(r_bytes(r, 1 << 16)?)
+        .map_err(|_| Error::container("model name not utf8"))?;
+    let ngroups = r_u32(r)?;
+    if ngroups > 100_000 {
+        return Err(Error::container("too many groups"));
+    }
+    let mut model = Df11Model::new(name);
+    for _ in 0..ngroups {
+        let gname = String::from_utf8(r_bytes(r, 1 << 16)?)
+            .map_err(|_| Error::container("group name not utf8"))?;
+        let ntensors = r_u32(r)?;
+        if ntensors > 100_000 {
+            return Err(Error::container("too many tensors"));
+        }
+        let mut tensors = Vec::with_capacity(ntensors as usize);
+        for _ in 0..ntensors {
+            let tname = String::from_utf8(r_bytes(r, 1 << 16)?)
+                .map_err(|_| Error::container("tensor name not utf8"))?;
+            tensors.push((tname, read_tensor(r)?));
+        }
+        model.push_group(TensorGroup {
+            name: gname,
+            tensors,
+        });
+    }
+    Ok(model)
+}
+
+/// Save a model to a file.
+pub fn save_model(path: &std::path::Path, m: &Df11Model) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_model(&mut f, m)
+}
+
+/// Load a model from a file.
+pub fn load_model(path: &std::path::Path) -> Result<Df11Model> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_model(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Bf16;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn gap_packing_roundtrip() {
+        let gaps: Vec<u8> = (0..1000).map(|i| (i * 7 % 32) as u8).collect();
+        let packed = pack_gaps(&gaps);
+        assert_eq!(packed.len(), (1000 * 5usize).div_ceil(8));
+        assert_eq!(unpack_gaps(&packed, 1000).unwrap(), gaps);
+    }
+
+    #[test]
+    fn gap_packing_edge_counts() {
+        for n in [0usize, 1, 2, 7, 8, 9, 15, 16, 17] {
+            let gaps: Vec<u8> = (0..n).map(|i| (31 - i % 32) as u8).collect();
+            let packed = pack_gaps(&gaps);
+            assert_eq!(unpack_gaps(&packed, n).unwrap(), gaps, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tensor_serialization_roundtrip() {
+        let ws = gaussian_weights(12_345, 1);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        let t2 = read_tensor(&mut buf.as_slice()).unwrap();
+        assert_eq!(t2.decompress().unwrap(), ws);
+        assert_eq!(t2.shape(), t.shape());
+        assert_eq!(t2.bit_len(), t.bit_len());
+    }
+
+    #[test]
+    fn corruption_detected_by_crc() {
+        let ws = gaussian_weights(5000, 2);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        // Flip a byte somewhere in the middle of the payload.
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let ws = gaussian_weights(5000, 3);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        let cut = &buf[..buf.len() - 7];
+        assert!(read_tensor(&mut &cut[..]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE\x01\x00\x00\x00".to_vec();
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn model_serialization_roundtrip() {
+        let mut m = Df11Model::new("tiny-llama");
+        for b in 0..2 {
+            let tensors = vec![
+                (
+                    "q_proj".to_string(),
+                    Df11Tensor::compress(&gaussian_weights(4096, b)).unwrap(),
+                ),
+                (
+                    "up_proj".to_string(),
+                    Df11Tensor::compress(&gaussian_weights(8192, b + 10)).unwrap(),
+                ),
+            ];
+            m.push_group(crate::dfloat11::TensorGroup {
+                name: format!("block.{b}"),
+                tensors,
+            });
+        }
+        let mut buf = Vec::new();
+        write_model(&mut buf, &m).unwrap();
+        let m2 = read_model(&mut buf.as_slice()).unwrap();
+        assert_eq!(m2.name, "tiny-llama");
+        assert_eq!(m2.groups.len(), 2);
+        assert_eq!(m2.num_elements(), m.num_elements());
+        // Decompress one tensor to verify deep integrity.
+        let g = m2.group("block.1").unwrap();
+        assert_eq!(g.tensors[0].0, "q_proj");
+        assert_eq!(g.tensors[0].1.num_elements(), 4096);
+        g.tensors[0].1.decompress().unwrap();
+    }
+
+    #[test]
+    fn file_save_load() {
+        let dir = std::env::temp_dir().join("df11_serial_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.df11");
+        let mut m = Df11Model::new("disk-test");
+        m.push_group(crate::dfloat11::TensorGroup {
+            name: "embed".into(),
+            tensors: vec![(
+                "tok".into(),
+                Df11Tensor::compress(&gaussian_weights(1024, 42)).unwrap(),
+            )],
+        });
+        save_model(&path, &m).unwrap();
+        let m2 = load_model(&path).unwrap();
+        assert_eq!(m2.name, "disk-test");
+        std::fs::remove_file(&path).ok();
+    }
+}

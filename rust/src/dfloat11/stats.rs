@@ -1,0 +1,95 @@
+//! Compression statistics — the quantities Table 1 reports.
+
+/// Size accounting for a tensor or a whole model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionStats {
+    /// Original BF16 bytes.
+    pub original_bytes: u64,
+    /// DF11 compressed bytes (payload + auxiliary variables + codebook).
+    pub compressed_bytes: u64,
+    /// Parameter count.
+    pub num_elements: u64,
+}
+
+impl CompressionStats {
+    /// Build from raw sizes.
+    pub fn new(original_bytes: u64, compressed_bytes: u64, num_elements: u64) -> Self {
+        CompressionStats {
+            original_bytes,
+            compressed_bytes,
+            num_elements,
+        }
+    }
+
+    /// The paper's "Compression Ratio" column: compressed size as a
+    /// percentage of original (Table 1 reports ~67.6-69.5%).
+    pub fn ratio_percent(&self) -> f64 {
+        100.0 * self.compressed_bytes as f64 / self.original_bytes as f64
+    }
+
+    /// The paper's "Avg. Bit Width" column: effective bits per weight
+    /// (Table 1 reports ~10.8-11.1).
+    pub fn bits_per_weight(&self) -> f64 {
+        self.compressed_bytes as f64 * 8.0 / self.num_elements as f64
+    }
+
+    /// Bytes saved.
+    pub fn saved_bytes(&self) -> u64 {
+        self.original_bytes.saturating_sub(self.compressed_bytes)
+    }
+
+    /// Merge (accumulate across tensors).
+    pub fn merge(&self, other: &CompressionStats) -> CompressionStats {
+        CompressionStats {
+            original_bytes: self.original_bytes + other.original_bytes,
+            compressed_bytes: self.compressed_bytes + other.compressed_bytes,
+            num_elements: self.num_elements + other.num_elements,
+        }
+    }
+}
+
+impl std::fmt::Display for CompressionStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:.2} GB -> {:.2} GB ({:.2}%, {:.2} bits/weight)",
+            self.original_bytes as f64 / 1e9,
+            self.compressed_bytes as f64 / 1e9,
+            self.ratio_percent(),
+            self.bits_per_weight()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_bits() {
+        // 16 bits -> 11 bits: ratio 68.75%, 11 bits/weight.
+        let s = CompressionStats::new(2000, 1375, 1000);
+        assert!((s.ratio_percent() - 68.75).abs() < 1e-9);
+        assert!((s.bits_per_weight() - 11.0).abs() < 1e-9);
+        assert_eq!(s.saved_bytes(), 625);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = CompressionStats::new(100, 70, 50);
+        let b = CompressionStats::new(300, 210, 150);
+        let m = a.merge(&b);
+        assert_eq!(m.original_bytes, 400);
+        assert_eq!(m.compressed_bytes, 280);
+        assert_eq!(m.num_elements, 200);
+        assert!((m.ratio_percent() - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_format() {
+        let s = CompressionStats::new(16_060_000_000, 10_900_000_000, 8_030_000_000);
+        let str = s.to_string();
+        assert!(str.contains("16.06 GB"));
+        assert!(str.contains("10.90 GB"));
+    }
+}

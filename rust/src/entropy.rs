@@ -1,0 +1,280 @@
+//! Shannon-entropy and frequency analysis of BFloat16 components.
+//!
+//! Reproduces the paper's motivation study (Figure 1: component entropy;
+//! Figure 8: component value distributions; Figure 9: ranked exponent
+//! frequency). The key empirical fact DF11 exploits: the 8-bit exponent of
+//! LLM weights carries only ~2.6 bits of information, while sign and
+//! mantissa are near-uniform (incompressible).
+
+use crate::bf16::Bf16;
+
+/// Frequency histogram over byte-valued symbols (sign uses 2 bins,
+/// exponent and mantissa use 256/128 bins respectively).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// New histogram with `bins` bins.
+    pub fn new(bins: usize) -> Self {
+        Histogram {
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, symbol: usize) {
+        self.counts[symbol] += 1;
+        self.total += 1;
+    }
+
+    /// Merge another histogram into this one (same bin count required).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Raw counts.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Number of bins with at least one observation.
+    pub fn support_size(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Shannon entropy in bits (Eq. 2 in the paper).
+    pub fn entropy_bits(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        self.counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum()
+    }
+
+    /// Relative frequencies, same order as bins.
+    pub fn frequencies(&self) -> Vec<f64> {
+        let n = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// (symbol, count) pairs sorted by descending count — Figure 9's
+    /// ranked exponent frequency series.
+    pub fn ranked(&self) -> Vec<(usize, u64)> {
+        let mut v: Vec<(usize, u64)> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+}
+
+/// Entropy of the three BF16 components over a weight set (Figure 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComponentEntropy {
+    /// Entropy of the 1-bit sign field (≤ 1.0).
+    pub sign_bits: f64,
+    /// Entropy of the 8-bit exponent field (paper: ≈ 2.6).
+    pub exponent_bits: f64,
+    /// Entropy of the 7-bit mantissa field (paper: ≈ 7.0).
+    pub mantissa_bits: f64,
+}
+
+impl ComponentEntropy {
+    /// The information-optimal bits/weight if each component were coded
+    /// independently at its entropy: H(sign) + H(exp) + H(mantissa).
+    pub fn optimal_bits_per_weight(&self) -> f64 {
+        self.sign_bits + self.exponent_bits + self.mantissa_bits
+    }
+}
+
+/// Component-wise histograms for a stream of BF16 weights.
+#[derive(Clone, Debug)]
+pub struct ComponentHistograms {
+    /// 2 bins: sign.
+    pub sign: Histogram,
+    /// 256 bins: exponent byte.
+    pub exponent: Histogram,
+    /// 128 bins: mantissa.
+    pub mantissa: Histogram,
+}
+
+impl Default for ComponentHistograms {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComponentHistograms {
+    /// Empty histograms.
+    pub fn new() -> Self {
+        ComponentHistograms {
+            sign: Histogram::new(2),
+            exponent: Histogram::new(256),
+            mantissa: Histogram::new(128),
+        }
+    }
+
+    /// Record a batch of weights.
+    pub fn record_weights(&mut self, weights: &[Bf16]) {
+        for w in weights {
+            self.sign.record(w.sign() as usize);
+            self.exponent.record(w.exponent() as usize);
+            self.mantissa.record(w.mantissa() as usize);
+        }
+    }
+
+    /// Merge (for accumulating across layers / matrices).
+    pub fn merge(&mut self, other: &ComponentHistograms) {
+        self.sign.merge(&other.sign);
+        self.exponent.merge(&other.exponent);
+        self.mantissa.merge(&other.mantissa);
+    }
+
+    /// Figure-1 style entropy summary.
+    pub fn entropy(&self) -> ComponentEntropy {
+        ComponentEntropy {
+            sign_bits: self.sign.entropy_bits(),
+            exponent_bits: self.exponent.entropy_bits(),
+            mantissa_bits: self.mantissa.entropy_bits(),
+        }
+    }
+}
+
+/// Convenience: component entropies for a weight slice.
+pub fn component_entropy(weights: &[Bf16]) -> ComponentEntropy {
+    let mut h = ComponentHistograms::new();
+    h.record_weights(weights);
+    h.entropy()
+}
+
+/// Exponent-only histogram for a weight slice (codebook construction input).
+pub fn exponent_histogram(weights: &[Bf16]) -> Histogram {
+    let mut h = Histogram::new(256);
+    for w in weights {
+        h.record(w.exponent() as usize);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn entropy_of_uniform_is_log2_bins() {
+        let mut h = Histogram::new(8);
+        for s in 0..8 {
+            for _ in 0..100 {
+                h.record(s);
+            }
+        }
+        assert!((h.entropy_bits() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_of_constant_is_zero() {
+        let mut h = Histogram::new(256);
+        for _ in 0..1000 {
+            h.record(42);
+        }
+        assert_eq!(h.entropy_bits(), 0.0);
+        assert_eq!(h.support_size(), 1);
+    }
+
+    #[test]
+    fn entropy_of_empty_is_zero() {
+        assert_eq!(Histogram::new(4).entropy_bits(), 0.0);
+    }
+
+    #[test]
+    fn ranked_is_descending_and_complete() {
+        let mut h = Histogram::new(16);
+        for (s, n) in [(3usize, 50u64), (7, 20), (1, 80)] {
+            for _ in 0..n {
+                h.record(s);
+            }
+        }
+        let r = h.ranked();
+        assert_eq!(r, vec![(1, 80), (3, 50), (7, 20)]);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new(4);
+        a.record(0);
+        let mut b = Histogram::new(4);
+        b.record(0);
+        b.record(1);
+        a.merge(&b);
+        assert_eq!(a.counts(), &[2, 1, 0, 0]);
+        assert_eq!(a.total(), 3);
+    }
+
+    #[test]
+    fn gaussian_weights_have_low_exponent_entropy() {
+        // The paper's core empirical observation (Fig 1): Gaussian-ish LLM
+        // weights ⇒ exponent entropy ≈ 2.6 bits, mantissa ≈ 7, sign ≈ 1.
+        let mut rng = Rng::new(1234);
+        let mut xs = vec![0f32; 200_000];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        let ws: Vec<Bf16> = xs.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let e = component_entropy(&ws);
+        assert!(e.sign_bits > 0.999, "sign {}", e.sign_bits);
+        assert!(e.mantissa_bits > 6.9, "mantissa {}", e.mantissa_bits);
+        assert!(
+            e.exponent_bits > 2.0 && e.exponent_bits < 4.5,
+            "exponent {}",
+            e.exponent_bits
+        );
+        // Far fewer than 256 exponent values in use (paper: ~40).
+        let h = exponent_histogram(&ws);
+        assert!(h.support_size() < 64, "support {}", h.support_size());
+        // Effective optimal bits/weight ≈ 11-ish.
+        let opt = e.optimal_bits_per_weight();
+        assert!(opt > 9.5 && opt < 13.0, "optimal {opt}");
+    }
+
+    #[test]
+    fn component_histograms_merge() {
+        let mut rng = Rng::new(5);
+        let mut xs = vec![0f32; 1000];
+        rng.fill_gaussian_f32(&mut xs, 1.0);
+        let ws: Vec<Bf16> = xs.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let mut all = ComponentHistograms::new();
+        all.record_weights(&ws);
+        let mut a = ComponentHistograms::new();
+        a.record_weights(&ws[..500]);
+        let mut b = ComponentHistograms::new();
+        b.record_weights(&ws[500..]);
+        a.merge(&b);
+        assert_eq!(a.exponent.counts(), all.exponent.counts());
+        assert_eq!(a.sign.counts(), all.sign.counts());
+        assert_eq!(a.mantissa.counts(), all.mantissa.counts());
+    }
+}

@@ -1,0 +1,110 @@
+//! Error taxonomy for the DFloat11 library.
+//!
+//! Every fallible public API in the crate returns [`Result`] with
+//! [`Error`], so downstream users get a single error type to match on.
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors produced by the DFloat11 library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// The Huffman codebook could not be constructed (e.g. empty input).
+    #[error("huffman construction failed: {0}")]
+    Huffman(String),
+
+    /// A code length exceeded the supported maximum (32 bits).
+    #[error("code length {got} exceeds maximum {max}")]
+    CodeTooLong { got: u32, max: u32 },
+
+    /// An encoded bitstream was malformed or truncated.
+    #[error("corrupt DF11 stream: {0}")]
+    CorruptStream(String),
+
+    /// A serialized container failed validation.
+    #[error("invalid DF11 container: {0}")]
+    InvalidContainer(String),
+
+    /// The container was produced by an incompatible format version.
+    #[error("unsupported DF11 format version {0} (supported: {1})")]
+    UnsupportedVersion(u32, u32),
+
+    /// Device memory budget exhausted (simulated HBM OOM).
+    #[error("device out of memory: requested {requested} bytes, free {free} bytes on {device}")]
+    OutOfMemory {
+        requested: u64,
+        free: u64,
+        device: String,
+    },
+
+    /// KV cache budget exhausted for a sequence.
+    #[error("kv cache exhausted: {0}")]
+    KvCacheExhausted(String),
+
+    /// The PJRT runtime failed (artifact load, compile, or execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// A required AOT artifact is missing (run `make artifacts`).
+    #[error("missing artifact {path}; run `make artifacts` first")]
+    MissingArtifact { path: String },
+
+    /// Shape mismatch between artifact and model config.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// Coordinator-level scheduling error.
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    /// Invalid CLI or API argument.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand for corrupt-stream errors.
+    pub fn corrupt(msg: impl Into<String>) -> Self {
+        Error::CorruptStream(msg.into())
+    }
+
+    /// Shorthand for invalid-container errors.
+    pub fn container(msg: impl Into<String>) -> Self {
+        Error::InvalidContainer(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = Error::CodeTooLong { got: 40, max: 32 };
+        assert_eq!(e.to_string(), "code length 40 exceeds maximum 32");
+        let e = Error::OutOfMemory {
+            requested: 100,
+            free: 10,
+            device: "A100-40G".into(),
+        };
+        assert!(e.to_string().contains("A100-40G"));
+        assert!(e.to_string().contains("100"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn helpers_build_expected_variants() {
+        assert!(matches!(Error::corrupt("x"), Error::CorruptStream(_)));
+        assert!(matches!(Error::container("x"), Error::InvalidContainer(_)));
+    }
+}

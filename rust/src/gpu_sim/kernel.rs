@@ -1,0 +1,529 @@
+//! The two-phase DF11 decompression kernel (paper §2.3.2, Algorithm 1).
+//!
+//! This module executes Algorithm 1 **step for step** over simulated
+//! thread blocks:
+//!
+//! 1. the encoded exponent stream is divided into per-thread chunks of
+//!    `n` bytes (paper: n = 8);
+//! 2. a 5-bit **gap array** gives each thread the bit offset of the
+//!    first codeword starting inside its chunk;
+//! 3. **phase 1**: every thread decodes its chunk and only *counts*
+//!    elements;
+//! 4. threads in a block synchronize and run a **Blelloch exclusive
+//!    prefix sum** over the counts, offset by the block's entry in the
+//!    **block output positions** array;
+//! 5. **phase 2**: every thread re-decodes, now writing assembled BF16
+//!    values into an SRAM write buffer at its computed positions,
+//!    merging each exponent with its `PackedSignMantissa` byte
+//!    (Algorithm 1 lines 33-36);
+//! 6. the block issues one **coalesced write** of the buffer to HBM.
+//!
+//! Thread blocks are executed by a pool of OS threads; each simulated
+//! block's output range is disjoint, so blocks parallelize exactly like
+//! their CUDA counterparts.
+
+use super::prefix_sum::blelloch_exclusive_scan;
+use crate::bf16::Bf16;
+use crate::error::{Error, Result};
+use crate::huffman::lut::HierarchicalLut;
+use crate::huffman::BitReader;
+
+/// Kernel launch geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConfig {
+    /// Threads per block (paper's T; hundreds to thousands — §2.3.2).
+    pub threads_per_block: usize,
+    /// Encoded bytes per thread (paper's n = 8).
+    pub bytes_per_thread: usize,
+    /// Simulated-block executor parallelism (OS threads).
+    pub parallelism: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            threads_per_block: 256,
+            bytes_per_thread: 8,
+            parallelism: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Encoded bytes handled by one block (`n * T`).
+    pub fn bytes_per_block(&self) -> usize {
+        self.threads_per_block * self.bytes_per_thread
+    }
+
+    /// Geometry adapted to tensor size: small tensors use small blocks
+    /// so block padding does not swamp the payload (norm vectors and
+    /// tiny projections in scaled-down test models), large tensors use
+    /// the paper's T=256 / n=8.
+    pub fn for_elements(numel: usize) -> KernelConfig {
+        let threads_per_block = if numel < 4 * 1024 {
+            8
+        } else if numel < 64 * 1024 {
+            64
+        } else {
+            256
+        };
+        KernelConfig {
+            threads_per_block,
+            ..KernelConfig::default()
+        }
+    }
+}
+
+/// Everything the kernel needs, borrowed from a DF11 container.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelInput<'a> {
+    /// `EncodedExponent`, zero-padded to a whole number of blocks.
+    pub encoded: &'a [u8],
+    /// Exact bit length of the valid stream (excludes padding).
+    pub bit_len: u64,
+    /// Gap array: one entry per thread chunk, values in `[0, 31]`.
+    pub gaps: &'a [u8],
+    /// Block output positions; `len == num_blocks + 1` (the final entry
+    /// is the total element count, bounding the last coalesced write).
+    pub block_output_pos: &'a [u32],
+    /// `PackedSignMantissa`: one byte per weight.
+    pub packed_sign_mantissa: &'a [u8],
+}
+
+/// Execution statistics (SRAM accounting + sanity counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KernelStats {
+    /// Thread blocks launched.
+    pub blocks: usize,
+    /// Total elements decoded.
+    pub elements: usize,
+    /// Peak simulated SRAM usage per block, bytes (encoded chunk +
+    /// write buffer + LUTs + CodeLengths).
+    pub peak_sram_bytes: usize,
+    /// The paper's k: number of compact LUTs resident in SRAM.
+    pub num_luts: usize,
+}
+
+/// The two-phase decompression kernel.
+#[derive(Clone, Debug)]
+pub struct DecompressKernel<'l> {
+    lut: &'l HierarchicalLut,
+    config: KernelConfig,
+}
+
+impl<'l> DecompressKernel<'l> {
+    /// Kernel over a built LUT hierarchy.
+    pub fn new(lut: &'l HierarchicalLut, config: KernelConfig) -> Self {
+        DecompressKernel { lut, config }
+    }
+
+    /// Validate inputs against the launch geometry.
+    fn validate(&self, input: &KernelInput) -> Result<usize> {
+        let bpb = self.config.bytes_per_block();
+        if self.config.bytes_per_thread == 0 || self.config.threads_per_block == 0 {
+            return Err(Error::InvalidArgument("zero kernel geometry".into()));
+        }
+        if input.encoded.len() % bpb != 0 {
+            return Err(Error::corrupt(format!(
+                "encoded length {} not a multiple of block bytes {bpb}",
+                input.encoded.len()
+            )));
+        }
+        let blocks = input.encoded.len() / bpb;
+        let chunks = blocks * self.config.threads_per_block;
+        if input.gaps.len() != chunks {
+            return Err(Error::corrupt(format!(
+                "gap array has {} entries, expected {chunks}",
+                input.gaps.len()
+            )));
+        }
+        if input.block_output_pos.len() != blocks + 1 {
+            return Err(Error::corrupt(format!(
+                "block output positions has {} entries, expected {}",
+                input.block_output_pos.len(),
+                blocks + 1
+            )));
+        }
+        if input.bit_len > input.encoded.len() as u64 * 8 {
+            return Err(Error::corrupt("bit_len exceeds encoded buffer"));
+        }
+        for (i, &g) in input.gaps.iter().enumerate() {
+            if g >= 32 {
+                return Err(Error::corrupt(format!("gap[{i}] = {g} exceeds 5 bits")));
+            }
+        }
+        Ok(blocks)
+    }
+
+    /// Launch: decompress into `out` (must have exactly the total element
+    /// count, i.e. `block_output_pos[last]` entries).
+    pub fn run(&self, input: &KernelInput, out: &mut [Bf16]) -> Result<KernelStats> {
+        let blocks = self.validate(input)?;
+        let total = *input.block_output_pos.last().unwrap() as usize;
+        if out.len() != total {
+            return Err(Error::ShapeMismatch(format!(
+                "output has {} slots, container holds {total} elements",
+                out.len()
+            )));
+        }
+        if input.packed_sign_mantissa.len() != total {
+            return Err(Error::corrupt(format!(
+                "PackedSignMantissa has {} bytes, expected {total}",
+                input.packed_sign_mantissa.len()
+            )));
+        }
+
+        // Split the output into disjoint per-block windows, mirroring the
+        // coalesced HBM writes. Windows are contiguous and ordered, so we
+        // can peel them off with split_at_mut.
+        let mut windows: Vec<&mut [Bf16]> = Vec::with_capacity(blocks);
+        {
+            let mut rest = out;
+            for b in 0..blocks {
+                let lo = input.block_output_pos[b] as usize;
+                let hi = input.block_output_pos[b + 1] as usize;
+                if hi < lo || hi > total {
+                    return Err(Error::corrupt(format!(
+                        "block output positions not monotone at block {b}"
+                    )));
+                }
+                let (win, tail) = rest.split_at_mut(hi - lo);
+                windows.push(win);
+                rest = tail;
+            }
+        }
+
+        let sram_stats = std::sync::Mutex::new(KernelStats {
+            blocks,
+            elements: total,
+            peak_sram_bytes: 0,
+            num_luts: self.lut.num_tables(),
+        });
+
+        let par = self.config.parallelism.max(1);
+        if par == 1 || blocks <= 1 {
+            for (b, win) in windows.into_iter().enumerate() {
+                let sram = self.execute_block(b, input, win)?;
+                let mut s = sram_stats.lock().unwrap();
+                s.peak_sram_bytes = s.peak_sram_bytes.max(sram);
+            }
+        } else {
+            // Stripe blocks over a scoped thread pool.
+            let results: std::sync::Mutex<Vec<Result<usize>>> = std::sync::Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                let mut indexed: Vec<(usize, &mut [Bf16])> =
+                    windows.into_iter().enumerate().collect();
+                let per_worker = indexed.len().div_ceil(par);
+                while !indexed.is_empty() {
+                    let take = per_worker.min(indexed.len());
+                    let batch: Vec<(usize, &mut [Bf16])> =
+                        indexed.drain(..take).collect();
+                    let results = &results;
+                    handles.push(scope.spawn(move || {
+                        for (b, win) in batch {
+                            let r = self.execute_block(b, input, win);
+                            results.lock().unwrap().push(r);
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("kernel worker panicked");
+                }
+            });
+            let mut s = sram_stats.lock().unwrap();
+            for r in results.into_inner().unwrap() {
+                let sram = r?;
+                s.peak_sram_bytes = s.peak_sram_bytes.max(sram);
+            }
+        }
+
+        Ok(sram_stats.into_inner().unwrap())
+    }
+
+    /// Execute one thread block; returns simulated SRAM bytes used.
+    ///
+    /// `window` is the block's disjoint slice of the output, i.e.
+    /// `Outputs[BlockOutputPos[b] .. BlockOutputPos[b+1]]`.
+    fn execute_block(&self, b: usize, input: &KernelInput, window: &mut [Bf16]) -> Result<usize> {
+        let t_per_block = self.config.threads_per_block;
+        let n = self.config.bytes_per_thread;
+        let bpb = self.config.bytes_per_block();
+        let block_base_bit = (b * bpb) as u64 * 8;
+        let block_out_base = input.block_output_pos[b] as usize;
+
+        // --- Load EncodedExponent_b into SRAM (Algorithm 1 line 4). ---
+        // The simulation reads through the original buffer (the copy
+        // would model latency, not change results) but accounts for it.
+        // NOTE: codes may spill up to 31 bits past the block's last byte;
+        // like the CUDA kernel we read those bytes from global memory.
+
+        // --- Phase 1: count elements per thread (lines 9-21). ---
+        let mut num_elements = vec![0u32; t_per_block];
+        for t in 0..t_per_block {
+            let g = b * t_per_block + t;
+            let chunk_start = block_base_bit + (t * n) as u64 * 8;
+            let chunk_end = (chunk_start + (n as u64) * 8).min(input.bit_len);
+            let start = chunk_start + input.gaps[g] as u64;
+            if start >= chunk_end {
+                continue; // chunk fully past end of stream, or gap skips it
+            }
+            let mut reader = BitReader::at(input.encoded, start, input.bit_len);
+            while reader.position() < chunk_end {
+                let window32 = reader.peek(32);
+                let (_, len) = self.lut.lookup(window32)?;
+                reader.advance(len as u32);
+                num_elements[t] += 1;
+            }
+        }
+
+        // --- Barrier + Blelloch prefix sum (lines 22-23). ---
+        let thread_output_pos = blelloch_exclusive_scan(&num_elements);
+
+        // The block's element count must agree with the container's
+        // block output positions — a corrupted container fails loudly
+        // instead of writing out of bounds.
+        let counted: u32 = num_elements.iter().sum();
+        if counted as usize != window.len() {
+            return Err(Error::corrupt(format!(
+                "block {b} decoded {counted} elements but BlockOutputPos allots {}",
+                window.len()
+            )));
+        }
+
+        // --- Phase 2: decode again, write into the SRAM buffer
+        //     (lines 24-39). `window` plays the role of WriteBuffer; the
+        //     final coalesced HBM store (line 41) is the slice itself
+        //     being a view of Outputs. ---
+        for t in 0..t_per_block {
+            if num_elements[t] == 0 {
+                continue;
+            }
+            let g = b * t_per_block + t;
+            let chunk_start = block_base_bit + (t * n) as u64 * 8;
+            let chunk_end = (chunk_start + (n as u64) * 8).min(input.bit_len);
+            let start = chunk_start + input.gaps[g] as u64;
+            let mut reader = BitReader::at(input.encoded, start, input.bit_len);
+            let mut pos = thread_output_pos[t] as usize;
+            while reader.position() < chunk_end {
+                let window32 = reader.peek(32);
+                let (exponent, len) = self.lut.lookup(window32)?;
+                reader.advance(len as u32);
+                let global = block_out_base + pos;
+                let sm = input.packed_sign_mantissa[global];
+                window[pos] = Bf16::from_parts(exponent, sm);
+                pos += 1;
+            }
+        }
+
+        // SRAM accounting: encoded chunk + write buffer + LUTs + scan
+        // scratch (§2.3.1: (k+1)*256 bytes for tables).
+        let sram = bpb
+            + window.len() * 2
+            + (self.lut.num_tables() + 1) * 256
+            + t_per_block * 4;
+        Ok(sram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfloat11::compress::build_kernel_aux;
+    use crate::huffman::{encode_symbols, Codebook};
+    use crate::rng::Rng;
+
+    /// End-to-end helper: compress a weight set, run the kernel, compare.
+    fn roundtrip(weights: &[Bf16], config: KernelConfig) {
+        let (exponents, packed): (Vec<u8>, Vec<u8>) = crate::bf16::split_planes(weights);
+        let mut freqs = [0u64; 256];
+        for &e in &exponents {
+            freqs[e as usize] += 1;
+        }
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let (encoded, bit_len) = encode_symbols(&cb, &exponents).unwrap();
+        let aux = build_kernel_aux(&cb, &exponents, &config).unwrap();
+        let mut padded = encoded;
+        let bpb = config.bytes_per_block();
+        padded.resize(padded.len().div_ceil(bpb).max(1) * bpb, 0);
+
+        let lut = HierarchicalLut::build(&cb).unwrap();
+        let kernel = DecompressKernel::new(&lut, config);
+        let input = KernelInput {
+            encoded: &padded,
+            bit_len,
+            gaps: &aux.gaps,
+            block_output_pos: &aux.block_output_pos,
+            packed_sign_mantissa: &packed,
+        };
+        let mut out = vec![Bf16::from_bits(0); weights.len()];
+        let stats = kernel.run(&input, &mut out).unwrap();
+        assert_eq!(out, weights, "bit-exact roundtrip");
+        assert_eq!(stats.elements, weights.len());
+        assert!(stats.peak_sram_bytes > 0);
+    }
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn kernel_roundtrip_single_block() {
+        roundtrip(&gaussian_weights(500, 1), KernelConfig::default());
+    }
+
+    #[test]
+    fn kernel_roundtrip_many_blocks() {
+        roundtrip(&gaussian_weights(100_000, 2), KernelConfig::default());
+    }
+
+    #[test]
+    fn kernel_roundtrip_odd_sizes() {
+        for n in [1usize, 2, 3, 7, 63, 64, 65, 255, 256, 257, 4095, 4097] {
+            roundtrip(&gaussian_weights(n, n as u64), KernelConfig::default());
+        }
+    }
+
+    #[test]
+    fn kernel_roundtrip_small_geometry() {
+        // Tiny blocks exercise block/chunk boundaries heavily.
+        let config = KernelConfig {
+            threads_per_block: 4,
+            bytes_per_thread: 2,
+            parallelism: 2,
+        };
+        roundtrip(&gaussian_weights(10_000, 3), config);
+    }
+
+    #[test]
+    fn kernel_roundtrip_paper_geometry() {
+        // T=256, n=8 — the paper's configuration.
+        let config = KernelConfig {
+            threads_per_block: 256,
+            bytes_per_thread: 8,
+            parallelism: 1,
+        };
+        roundtrip(&gaussian_weights(300_000, 4), config);
+    }
+
+    #[test]
+    fn kernel_handles_special_values() {
+        let mut ws = gaussian_weights(5000, 5);
+        ws[17] = Bf16::from_f32(f32::INFINITY);
+        ws[18] = Bf16::from_f32(f32::NEG_INFINITY);
+        ws[19] = Bf16::from_f32(f32::NAN);
+        ws[20] = Bf16::from_f32(0.0);
+        ws[21] = Bf16::from_f32(-0.0);
+        ws[22] = Bf16::from_bits(0x0001); // subnormal
+        roundtrip(&ws, KernelConfig::default());
+    }
+
+    #[test]
+    fn kernel_rejects_bad_gap_array() {
+        let ws = gaussian_weights(1000, 6);
+        let (exponents, packed) = crate::bf16::split_planes(&ws);
+        let mut freqs = [0u64; 256];
+        for &e in &exponents {
+            freqs[e as usize] += 1;
+        }
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let config = KernelConfig::default();
+        let (encoded, bit_len) = encode_symbols(&cb, &exponents).unwrap();
+        let aux = build_kernel_aux(&cb, &exponents, &config).unwrap();
+        let mut padded = encoded;
+        let bpb = config.bytes_per_block();
+        padded.resize(padded.len().div_ceil(bpb).max(1) * bpb, 0);
+        let lut = HierarchicalLut::build(&cb).unwrap();
+        let kernel = DecompressKernel::new(&lut, config);
+
+        let mut bad_gaps = aux.gaps.clone();
+        bad_gaps[0] = 33; // > 5 bits
+        let input = KernelInput {
+            encoded: &padded,
+            bit_len,
+            gaps: &bad_gaps,
+            block_output_pos: &aux.block_output_pos,
+            packed_sign_mantissa: &packed,
+        };
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        assert!(kernel.run(&input, &mut out).is_err());
+    }
+
+    #[test]
+    fn kernel_detects_inconsistent_block_positions() {
+        let ws = gaussian_weights(2000, 7);
+        let (exponents, packed) = crate::bf16::split_planes(&ws);
+        let mut freqs = [0u64; 256];
+        for &e in &exponents {
+            freqs[e as usize] += 1;
+        }
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let config = KernelConfig {
+            threads_per_block: 8,
+            bytes_per_thread: 8,
+            parallelism: 1,
+        };
+        let (encoded, bit_len) = encode_symbols(&cb, &exponents).unwrap();
+        let aux = build_kernel_aux(&cb, &exponents, &config).unwrap();
+        let mut padded = encoded;
+        let bpb = config.bytes_per_block();
+        padded.resize(padded.len().div_ceil(bpb).max(1) * bpb, 0);
+        let lut = HierarchicalLut::build(&cb).unwrap();
+        let kernel = DecompressKernel::new(&lut, config);
+
+        let mut bad_pos = aux.block_output_pos.clone();
+        if bad_pos.len() > 2 {
+            bad_pos[1] += 1; // shift a block boundary
+            let input = KernelInput {
+                encoded: &padded,
+                bit_len,
+                gaps: &aux.gaps,
+                block_output_pos: &bad_pos,
+                packed_sign_mantissa: &packed,
+            };
+            let mut out = vec![Bf16::from_bits(0); ws.len()];
+            assert!(kernel.run(&input, &mut out).is_err());
+        }
+    }
+
+    #[test]
+    fn sram_usage_within_paper_budget() {
+        // With T=256, n=8, realistic exponent distributions must fit the
+        // ~100KB/block budget the paper states (§2.1).
+        let ws = gaussian_weights(200_000, 8);
+        let (exponents, packed) = crate::bf16::split_planes(&ws);
+        let mut freqs = [0u64; 256];
+        for &e in &exponents {
+            freqs[e as usize] += 1;
+        }
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let config = KernelConfig::default();
+        let (encoded, bit_len) = encode_symbols(&cb, &exponents).unwrap();
+        let aux = build_kernel_aux(&cb, &exponents, &config).unwrap();
+        let mut padded = encoded;
+        let bpb = config.bytes_per_block();
+        padded.resize(padded.len().div_ceil(bpb).max(1) * bpb, 0);
+        let lut = HierarchicalLut::build(&cb).unwrap();
+        let kernel = DecompressKernel::new(&lut, config);
+        let input = KernelInput {
+            encoded: &padded,
+            bit_len,
+            gaps: &aux.gaps,
+            block_output_pos: &aux.block_output_pos,
+            packed_sign_mantissa: &packed,
+        };
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        let stats = kernel.run(&input, &mut out).unwrap();
+        assert!(
+            stats.peak_sram_bytes < 100 * 1024,
+            "SRAM {} exceeds 100KB budget",
+            stats.peak_sram_bytes
+        );
+        assert!(stats.num_luts <= 8, "k = {} (paper: 4..8)", stats.num_luts);
+    }
+}

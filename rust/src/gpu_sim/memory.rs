@@ -1,0 +1,208 @@
+//! HBM allocator / memory accountant.
+//!
+//! Drives the memory experiments: Figure 5 (GPU memory vs generated
+//! tokens, OOM point), Table 3 (peak memory for diffusion models) and
+//! the 405B single-node feasibility check. Allocation is bookkeeping
+//! only — no real buffers are held for paper-scale models.
+
+use super::Device;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// What an allocation is for — reported in breakdowns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemoryCategory {
+    /// Model weights (BF16 or DF11 compressed).
+    Weights,
+    /// DF11 auxiliary variables (gaps, block output positions, LUTs).
+    Auxiliary,
+    /// KV cache pages.
+    KvCache,
+    /// Activation / workspace buffers (incl. the decompression target).
+    Workspace,
+    /// Framework overhead (allocator slack, CUDA context analog).
+    Overhead,
+}
+
+impl MemoryCategory {
+    /// All categories, for stable iteration in reports.
+    pub fn all() -> [MemoryCategory; 5] {
+        [
+            MemoryCategory::Weights,
+            MemoryCategory::Auxiliary,
+            MemoryCategory::KvCache,
+            MemoryCategory::Workspace,
+            MemoryCategory::Overhead,
+        ]
+    }
+}
+
+/// An allocation handle (opaque id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AllocId(u64);
+
+/// Simulated HBM allocator for one device.
+#[derive(Debug)]
+pub struct HbmAllocator {
+    device: Device,
+    next_id: u64,
+    live: HashMap<AllocId, (MemoryCategory, u64)>,
+    used: u64,
+    peak: u64,
+}
+
+impl HbmAllocator {
+    /// Allocator over a device's full HBM.
+    pub fn new(device: Device) -> Self {
+        HbmAllocator {
+            device,
+            next_id: 0,
+            live: HashMap::new(),
+            used: 0,
+            peak: 0,
+        }
+    }
+
+    /// The device this allocator models.
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// Allocate `bytes` under `category`; errors with the paper-visible
+    /// OOM condition when the budget is exceeded.
+    pub fn alloc(&mut self, category: MemoryCategory, bytes: u64) -> Result<AllocId> {
+        let free = self.device.hbm_bytes - self.used;
+        if bytes > free {
+            return Err(Error::OutOfMemory {
+                requested: bytes,
+                free,
+                device: self.device.name.to_string(),
+            });
+        }
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.live.insert(id, (category, bytes));
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(id)
+    }
+
+    /// Free an allocation. Unknown ids are an invariant violation.
+    pub fn free(&mut self, id: AllocId) -> Result<()> {
+        match self.live.remove(&id) {
+            Some((_, bytes)) => {
+                self.used -= bytes;
+                Ok(())
+            }
+            None => Err(Error::InvalidArgument(format!("unknown alloc id {id:?}"))),
+        }
+    }
+
+    /// Bytes currently allocated.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// High-water mark since construction.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Bytes free.
+    pub fn free_bytes(&self) -> u64 {
+        self.device.hbm_bytes - self.used
+    }
+
+    /// Usage broken down by category.
+    pub fn breakdown(&self) -> HashMap<MemoryCategory, u64> {
+        let mut m = HashMap::new();
+        for &(cat, bytes) in self.live.values() {
+            *m.entry(cat).or_insert(0) += bytes;
+        }
+        m
+    }
+
+    /// Whether an allocation of `bytes` would fit right now.
+    pub fn would_fit(&self, bytes: u64) -> bool {
+        bytes <= self.free_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_device() -> Device {
+        Device {
+            name: "TINY",
+            hbm_bytes: 1000,
+            hbm_bw: 1e9,
+            sram_per_block: 1024,
+            sm_count: 1,
+            pcie_bw: 1e8,
+            pcie_latency: 1e-6,
+            bf16_flops: 1e9,
+        }
+    }
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut a = HbmAllocator::new(tiny_device());
+        let id1 = a.alloc(MemoryCategory::Weights, 600).unwrap();
+        assert_eq!(a.used(), 600);
+        let id2 = a.alloc(MemoryCategory::KvCache, 300).unwrap();
+        assert_eq!(a.used(), 900);
+        assert_eq!(a.peak(), 900);
+        a.free(id1).unwrap();
+        assert_eq!(a.used(), 300);
+        assert_eq!(a.peak(), 900); // peak is sticky
+        a.free(id2).unwrap();
+        assert_eq!(a.used(), 0);
+    }
+
+    #[test]
+    fn oom_is_detected_with_details() {
+        let mut a = HbmAllocator::new(tiny_device());
+        a.alloc(MemoryCategory::Weights, 900).unwrap();
+        match a.alloc(MemoryCategory::KvCache, 200) {
+            Err(Error::OutOfMemory {
+                requested, free, ..
+            }) => {
+                assert_eq!(requested, 200);
+                assert_eq!(free, 100);
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+        // The failed alloc must not corrupt accounting.
+        assert_eq!(a.used(), 900);
+        assert!(a.would_fit(100));
+        assert!(!a.would_fit(101));
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut a = HbmAllocator::new(tiny_device());
+        let id = a.alloc(MemoryCategory::Workspace, 10).unwrap();
+        a.free(id).unwrap();
+        assert!(a.free(id).is_err());
+    }
+
+    #[test]
+    fn breakdown_by_category() {
+        let mut a = HbmAllocator::new(tiny_device());
+        a.alloc(MemoryCategory::Weights, 500).unwrap();
+        a.alloc(MemoryCategory::Weights, 100).unwrap();
+        a.alloc(MemoryCategory::Auxiliary, 50).unwrap();
+        let b = a.breakdown();
+        assert_eq!(b[&MemoryCategory::Weights], 600);
+        assert_eq!(b[&MemoryCategory::Auxiliary], 50);
+        assert!(!b.contains_key(&MemoryCategory::KvCache));
+    }
+
+    #[test]
+    fn exact_fit_allowed() {
+        let mut a = HbmAllocator::new(tiny_device());
+        assert!(a.alloc(MemoryCategory::Weights, 1000).is_ok());
+        assert_eq!(a.free_bytes(), 0);
+    }
+}

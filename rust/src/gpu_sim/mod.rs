@@ -1,0 +1,164 @@
+//! GPU device simulation substrate.
+//!
+//! The paper's testbed is NVIDIA GPUs (A100/A5000/RTX 8000 — Table 5).
+//! This environment has none, so per the reproduction rules we build the
+//! closest synthetic equivalent that exercises the same code paths:
+//!
+//! * [`kernel`] — executes the paper's **Algorithm 1 verbatim** (two
+//!   phases, gap array, Blelloch intra-block scan, SRAM write buffer,
+//!   coalesced final store) over simulated thread blocks. The *work* is
+//!   real; only the silicon is simulated.
+//! * [`memory`] — an HBM allocator/accountant for the memory experiments
+//!   (Figure 5, Table 3).
+//! * [`transfer`] — host↔device PCIe transfer model (the CPU-offloading
+//!   baseline's bottleneck, Figures 4/6/7).
+//! * [`timing`] — analytical timing for paper-scale estimates where
+//!   wall-clock measurement on CPU would be meaningless.
+//! * [`prefix_sum`] — Blelloch scan, shared with the kernel.
+
+pub mod kernel;
+pub mod memory;
+pub mod prefix_sum;
+pub mod timing;
+pub mod transfer;
+
+pub use kernel::{DecompressKernel, KernelConfig, KernelInput, KernelStats};
+pub use memory::{HbmAllocator, MemoryCategory};
+pub use transfer::TransferModel;
+
+/// Static description of a simulated GPU device.
+///
+/// Numbers are public vendor specs; PCIe figures are effective (measured
+/// -style) rather than theoretical peak.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Device {
+    /// Human-readable name (matches the paper's Table 5 hardware).
+    pub name: &'static str,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM bandwidth in bytes/second.
+    pub hbm_bw: f64,
+    /// Shared memory (SRAM) available per thread block, bytes (§2.1:
+    /// "typically up to 100 KB per block").
+    pub sram_per_block: u64,
+    /// Number of streaming multiprocessors.
+    pub sm_count: u32,
+    /// Effective host→device PCIe bandwidth, bytes/second.
+    pub pcie_bw: f64,
+    /// PCIe latency per transfer, seconds.
+    pub pcie_latency: f64,
+    /// Peak BF16 compute, FLOP/s (for matmul-time estimates).
+    pub bf16_flops: f64,
+}
+
+impl Device {
+    /// NVIDIA A100 40GB (paper Server 2).
+    pub fn a100_40g() -> Device {
+        Device {
+            name: "A100-40G",
+            hbm_bytes: 40 * (1 << 30),
+            hbm_bw: 1555e9,
+            sram_per_block: 100 * 1024,
+            sm_count: 108,
+            pcie_bw: 25e9, // PCIe 4.0 x16 effective
+            pcie_latency: 10e-6,
+            bf16_flops: 312e12,
+        }
+    }
+
+    /// NVIDIA A100 80GB (DGX node GPU for the 405B experiment).
+    pub fn a100_80g() -> Device {
+        Device {
+            name: "A100-80G",
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 2039e9,
+            sram_per_block: 100 * 1024,
+            sm_count: 108,
+            pcie_bw: 25e9,
+            pcie_latency: 10e-6,
+            bf16_flops: 312e12,
+        }
+    }
+
+    /// NVIDIA RTX A5000 24GB (paper Server 1).
+    pub fn a5000() -> Device {
+        Device {
+            name: "A5000",
+            hbm_bytes: 24 * (1 << 30),
+            hbm_bw: 768e9,
+            sram_per_block: 100 * 1024,
+            sm_count: 64,
+            pcie_bw: 25e9,
+            pcie_latency: 10e-6,
+            bf16_flops: 111e12, // fp16/bf16 tensor
+        }
+    }
+
+    /// NVIDIA Quadro RTX 8000 48GB (paper Server 3).
+    pub fn rtx8000() -> Device {
+        Device {
+            name: "RTX8000",
+            hbm_bytes: 48 * (1 << 30),
+            hbm_bw: 672e9,
+            sram_per_block: 96 * 1024,
+            sm_count: 72,
+            pcie_bw: 12e9, // PCIe 3.0 x16 effective
+            pcie_latency: 10e-6,
+            bf16_flops: 130e12, // fp16 tensor (no bf16; modelled as fp16)
+        }
+    }
+
+    /// NVIDIA H100 80GB (for forward-looking estimates).
+    pub fn h100() -> Device {
+        Device {
+            name: "H100-80G",
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 3350e9,
+            sram_per_block: 227 * 1024,
+            sm_count: 132,
+            pcie_bw: 50e9,
+            pcie_latency: 10e-6,
+            bf16_flops: 990e12,
+        }
+    }
+
+    /// All presets (bench sweeps).
+    pub fn presets() -> Vec<Device> {
+        vec![
+            Device::a5000(),
+            Device::a100_40g(),
+            Device::a100_80g(),
+            Device::rtx8000(),
+            Device::h100(),
+        ]
+    }
+
+    /// Preset by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Device> {
+        Device::presets()
+            .into_iter()
+            .find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        for d in Device::presets() {
+            assert!(d.hbm_bytes >= 24 * (1 << 30), "{}", d.name);
+            assert!(d.hbm_bw > d.pcie_bw * 10.0, "{}: HBM must dwarf PCIe", d.name);
+            assert!(d.sram_per_block >= 90 * 1024);
+            assert!(d.sm_count >= 64);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("a100-40g").unwrap().name, "A100-40G");
+        assert_eq!(Device::by_name("H100-80G").unwrap().name, "H100-80G");
+        assert!(Device::by_name("TPUv4").is_none());
+    }
+}

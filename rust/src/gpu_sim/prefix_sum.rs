@@ -1,0 +1,134 @@
+//! Blelloch work-efficient exclusive prefix sum.
+//!
+//! Algorithm 1 uses an intra-block prefix sum over per-thread element
+//! counts to derive each thread's output position (line 23, citing
+//! Blelloch 1989 — paper ref [3]). We implement the actual two-sweep
+//! (up-sweep / down-sweep) algorithm over a power-of-two padded array,
+//! exactly as a CUDA block would run it in shared memory, rather than a
+//! serial scan — the simulation is supposed to exercise the same
+//! dataflow the paper's kernel does.
+
+/// Exclusive prefix sum via Blelloch's two-sweep algorithm.
+///
+/// Returns a vector `out` with `out[i] = sum(xs[..i])`; `out[0] == 0`.
+pub fn blelloch_exclusive_scan(xs: &[u32]) -> Vec<u32> {
+    let n = xs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Pad to the next power of two (shared-memory arrays in the kernel
+    // are sized this way too).
+    let m = n.next_power_of_two();
+    let mut a = vec![0u32; m];
+    a[..n].copy_from_slice(xs);
+
+    // Up-sweep (reduce): build partial sums in place.
+    let mut d = 1;
+    while d < m {
+        let stride = d * 2;
+        // In CUDA this loop is the parallel thread set; iteration order
+        // within a level does not matter (disjoint index pairs).
+        let mut i = stride - 1;
+        while i < m {
+            a[i] = a[i].wrapping_add(a[i - d]);
+            i += stride;
+        }
+        d = stride;
+    }
+
+    // Down-sweep: set root to zero, then swap-and-add downwards.
+    a[m - 1] = 0;
+    let mut d = m / 2;
+    while d >= 1 {
+        let stride = d * 2;
+        let mut i = stride - 1;
+        while i < m {
+            let t = a[i - d];
+            a[i - d] = a[i];
+            a[i] = a[i].wrapping_add(t);
+            i += stride;
+        }
+        d /= 2;
+    }
+
+    a.truncate(n);
+    a
+}
+
+/// Serial exclusive scan — the oracle the Blelloch implementation is
+/// verified against, and the fallback for tiny inputs.
+pub fn serial_exclusive_scan(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0u32;
+    for &x in xs {
+        out.push(acc);
+        acc = acc.wrapping_add(x);
+    }
+    out
+}
+
+/// Inclusive variant (used by the container builder for block output
+/// positions across blocks).
+pub fn serial_inclusive_scan_u64(xs: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0u64;
+    for &x in xs {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_serial_on_small_inputs() {
+        for n in 0..33 {
+            let xs: Vec<u32> = (0..n).map(|i| (i * 7 + 3) as u32 % 11).collect();
+            assert_eq!(blelloch_exclusive_scan(&xs), serial_exclusive_scan(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_serial_on_random_inputs() {
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let n = 1 + rng.next_index(2000);
+            let xs: Vec<u32> = (0..n).map(|_| rng.next_u32() % 1000).collect();
+            assert_eq!(blelloch_exclusive_scan(&xs), serial_exclusive_scan(&xs));
+        }
+    }
+
+    #[test]
+    fn exclusive_first_element_is_zero() {
+        let xs = vec![5, 1, 2];
+        let s = blelloch_exclusive_scan(&xs);
+        assert_eq!(s, vec![0, 5, 6]);
+    }
+
+    #[test]
+    fn power_of_two_sizes() {
+        for exp in 0..12 {
+            let n = 1usize << exp;
+            let xs: Vec<u32> = vec![1; n];
+            let s = blelloch_exclusive_scan(&xs);
+            assert_eq!(s, (0..n as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn inclusive_u64() {
+        assert_eq!(serial_inclusive_scan_u64(&[1, 2, 3]), vec![1, 3, 6]);
+        assert!(serial_inclusive_scan_u64(&[]).is_empty());
+    }
+
+    #[test]
+    fn wrapping_behaviour_matches() {
+        // Overflow must wrap identically in both implementations.
+        let xs = vec![u32::MAX, 1, u32::MAX, 7];
+        assert_eq!(blelloch_exclusive_scan(&xs), serial_exclusive_scan(&xs));
+    }
+}

@@ -1,0 +1,152 @@
+//! Analytical timing model for paper-scale estimates.
+//!
+//! Wall-clock on this CPU box says nothing about A100 behaviour, so the
+//! paper-scale rows of each experiment are produced by a calibrated
+//! roofline-style model over [`super::Device`]:
+//!
+//! * **DF11 decompression** — the kernel is memory-bound at large sizes
+//!   (reads ~11 bits + writes 16 bits per element) but LUT-lookup-bound
+//!   at small sizes; modelled as max(bandwidth term, SM-occupancy term)
+//!   with a size-dependent utilization ramp (this reproduces the rising
+//!   throughput curves in Figure 7).
+//! * **Matmul** — standard compute/memory roofline for BF16 GEMM.
+//! * **Offload step** — PCIe transfer of the offloaded layer weights
+//!   (dominates everything; Figure 4's gap).
+
+use super::{Device, TransferModel};
+
+/// Decode-rate constant: decoded elements per second per SM at full
+/// occupancy. Calibrated so A100-40G peaks near the paper's ~200 GB/s
+/// decompression throughput (Figure 7, fourth panel).
+const DECODE_ELEMS_PER_SM_PER_SEC: f64 = 1.0e9;
+
+/// Fraction of HBM bandwidth achievable by the decompression kernel's
+/// mixed read/write pattern.
+const DECODE_HBM_EFFICIENCY: f64 = 0.55;
+
+/// Analytical timing for a device.
+#[derive(Clone, Debug)]
+pub struct TimingModel {
+    device: Device,
+}
+
+impl TimingModel {
+    /// Model for a device preset.
+    pub fn new(device: Device) -> Self {
+        TimingModel { device }
+    }
+
+    /// The device being modelled.
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    /// Utilization ramp: small problems underutilize the GPU (the effect
+    /// §2.3.3 exploits by batching block decompression). `work_items` is
+    /// the number of independent thread blocks the launch produces.
+    fn occupancy(&self, work_items: u64) -> f64 {
+        // Full utilization needs ~8 resident blocks per SM.
+        let saturating = self.device.sm_count as u64 * 8;
+        (work_items as f64 / saturating as f64).min(1.0).max(0.01)
+    }
+
+    /// Seconds to decompress `elements` DF11 weights on-device.
+    ///
+    /// `bytes_in` is the compressed size (EncodedExponent +
+    /// PackedSignMantissa + aux), `elements * 2` the BF16 bytes written.
+    pub fn df11_decompress_time(&self, elements: u64, bytes_in: u64, blocks: u64) -> f64 {
+        let occ = self.occupancy(blocks);
+        // Compute term: LUT lookups + bit arithmetic per element, twice
+        // (two phases), scaled by occupancy.
+        let compute = elements as f64
+            / (DECODE_ELEMS_PER_SM_PER_SEC * self.device.sm_count as f64 * occ);
+        // Memory term: read compressed once per phase (the re-read hits
+        // SRAM, so count once), write BF16 once.
+        let bytes_moved = bytes_in as f64 + elements as f64 * 2.0;
+        let memory = bytes_moved / (self.device.hbm_bw * DECODE_HBM_EFFICIENCY * occ);
+        compute.max(memory)
+    }
+
+    /// Effective decompression throughput (output BF16 bytes / second) —
+    /// the quantity Figure 7 plots.
+    pub fn df11_decompress_throughput(&self, elements: u64, bytes_in: u64, blocks: u64) -> f64 {
+        let t = self.df11_decompress_time(elements, bytes_in, blocks);
+        (elements as f64 * 2.0) / t
+    }
+
+    /// Seconds for a BF16 GEMM of `m×k · k×n` on-device (roofline).
+    pub fn matmul_time(&self, m: u64, k: u64, n: u64) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let bytes = 2.0 * (m * k + k * n + m * n) as f64;
+        let compute = flops / self.device.bf16_flops;
+        let memory = bytes / self.device.hbm_bw;
+        compute.max(memory)
+    }
+
+    /// Seconds to fetch `bytes` of offloaded weights from host RAM.
+    pub fn offload_fetch_time(&self, bytes: u64) -> f64 {
+        TransferModel::for_device(&self.device).transfer_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompress_beats_pcie_at_scale() {
+        // The paper's core efficiency claim (Fig 7): on-GPU DF11
+        // decompression is far faster than shipping BF16 over PCIe.
+        let t = TimingModel::new(Device::a100_40g());
+        let elements = 128 * 1024 * 1024u64; // a big lm_head slice
+        let comp_bytes = elements * 11 / 8;
+        let blocks = elements / (256 * 8); // T=256 threads, n=8 bytes
+        let decompress = t.df11_decompress_time(elements, comp_bytes, blocks);
+        let transfer = t.offload_fetch_time(elements * 2);
+        assert!(
+            transfer / decompress > 5.0,
+            "expected >5x gap, got {:.1}",
+            transfer / decompress
+        );
+    }
+
+    #[test]
+    fn throughput_rises_with_size() {
+        // Figure 7's shape: throughput improves with matrix size.
+        let t = TimingModel::new(Device::a100_40g());
+        let small = t.df11_decompress_throughput(1 << 16, (1 << 16) * 11 / 8, 32);
+        let large = t.df11_decompress_throughput(1 << 28, (1u64 << 28) * 11 / 8, 1 << 17);
+        assert!(large > small * 3.0, "small {small:.3e} large {large:.3e}");
+    }
+
+    #[test]
+    fn a100_peak_near_paper_figure() {
+        // Paper Fig 7 reports up to ~200 GB/s on A100-40G.
+        let t = TimingModel::new(Device::a100_40g());
+        let elements = 1u64 << 28;
+        let thpt = t.df11_decompress_throughput(elements, elements * 11 / 8, 1 << 17);
+        assert!(
+            (100e9..500e9).contains(&thpt),
+            "A100 decompress throughput {thpt:.3e} out of calibration band"
+        );
+    }
+
+    #[test]
+    fn matmul_roofline_crossover() {
+        let t = TimingModel::new(Device::a100_40g());
+        // Tiny GEMV is memory-bound; big square GEMM is compute-bound.
+        let gemv = t.matmul_time(1, 4096, 4096);
+        let mem_bound = 2.0 * (4096.0 * 4096.0) * 2.0 / 1555e9;
+        assert!(gemv >= mem_bound * 0.5);
+        let gemm = t.matmul_time(8192, 8192, 8192);
+        let compute_bound = 2.0 * 8192f64.powi(3) / 312e12;
+        assert!((gemm - compute_bound).abs() / compute_bound < 0.5);
+    }
+
+    #[test]
+    fn occupancy_clamps() {
+        let t = TimingModel::new(Device::a100_40g());
+        assert!(t.occupancy(0) >= 0.01);
+        assert_eq!(t.occupancy(u64::MAX), 1.0);
+    }
+}

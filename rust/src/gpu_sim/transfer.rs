@@ -1,0 +1,100 @@
+//! Host↔device transfer model (the CPU-offloading bottleneck).
+//!
+//! The paper's headline comparison (Figure 4; also Figures 6/7) pits
+//! DF11's on-GPU decompression against moving uncompressed BF16 weights
+//! over PCIe every forward pass. The transfer time model is the standard
+//! latency + size/bandwidth affine model; an optional *measured* mode
+//! actually copies bytes through a rate-limited memcpy so the simulated
+//! baseline performs real work in end-to-end runs.
+
+use super::Device;
+
+/// PCIe transfer model for one device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransferModel {
+    /// Effective bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Fixed per-transfer latency, seconds.
+    pub latency: f64,
+}
+
+impl TransferModel {
+    /// Model from a device preset.
+    pub fn for_device(device: &Device) -> Self {
+        TransferModel {
+            bandwidth: device.pcie_bw,
+            latency: device.pcie_latency,
+        }
+    }
+
+    /// Modelled seconds to move `bytes` host→device.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Modelled throughput (bytes/s) for a transfer of `bytes`, i.e.
+    /// bytes / transfer_time — approaches `bandwidth` for large sizes
+    /// (this produces Figure 7's rising CPU→GPU curves).
+    pub fn effective_throughput(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.transfer_time(bytes)
+    }
+
+    /// Perform a *real* copy of `src` into a fresh buffer, then return
+    /// the modelled time for the same number of bytes. End-to-end runs
+    /// use this so the offload baseline does genuine memory traffic
+    /// (keeping CPU caches honest) while timing stays calibrated to the
+    /// modelled device.
+    pub fn execute_copy(&self, src: &[u8]) -> (Vec<u8>, f64) {
+        let dst = src.to_vec();
+        (dst, self.transfer_time(src.len() as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TransferModel {
+        TransferModel {
+            bandwidth: 25e9,
+            latency: 10e-6,
+        }
+    }
+
+    #[test]
+    fn affine_time_model() {
+        let m = model();
+        let t0 = m.transfer_time(0);
+        assert!((t0 - 10e-6).abs() < 1e-12);
+        let t1 = m.transfer_time(25_000_000_000);
+        assert!((t1 - 1.0 - 10e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_saturates_at_bandwidth() {
+        let m = model();
+        let small = m.effective_throughput(4 * 1024);
+        let large = m.effective_throughput(1 << 30);
+        assert!(small < large);
+        assert!(large < m.bandwidth);
+        assert!(large > 0.95 * m.bandwidth);
+        // Small transfers are latency-dominated: far below peak.
+        assert!(small < 0.05 * m.bandwidth);
+    }
+
+    #[test]
+    fn execute_copy_copies() {
+        let m = model();
+        let src: Vec<u8> = (0..=255).collect();
+        let (dst, t) = m.execute_copy(&src);
+        assert_eq!(dst, src);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn device_presets_wire_through() {
+        let d = Device::a100_40g();
+        let m = TransferModel::for_device(&d);
+        assert_eq!(m.bandwidth, d.pcie_bw);
+    }
+}

@@ -1,0 +1,245 @@
+//! Canonical Huffman code assignment.
+//!
+//! Given only code *lengths*, canonical assignment fixes the actual bit
+//! patterns: symbols are sorted by (length, symbol value) and codes are
+//! assigned in increasing numeric order, left-aligned in the bitstream.
+//! This means a DF11 container only needs to ship 256 length bytes —
+//! the decoder rebuilds identical codes and LUTs on load.
+
+use crate::error::{Error, Result};
+
+/// A single codeword: `len` low bits of `bits`, emitted MSB-first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Codeword {
+    /// Code bits, right-aligned (the code occupies the low `len` bits).
+    pub bits: u32,
+    /// Code length in bits (1..=32).
+    pub len: u8,
+}
+
+/// Canonical code table for byte symbols.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CanonicalCode {
+    /// Per-symbol codewords; `len == 0` means the symbol is unused.
+    words: Vec<Codeword>, // 256 entries
+    /// Symbols ordered by (length, symbol) — canonical order.
+    canonical_order: Vec<u8>,
+}
+
+impl CanonicalCode {
+    /// Assign canonical codes from per-symbol lengths.
+    ///
+    /// Validates the Kraft inequality: over-subscribed lengths (sum of
+    /// 2^-len > 1) cannot form a prefix code and are rejected.
+    pub fn from_lengths(lengths: &[u8; 256]) -> Result<CanonicalCode> {
+        let mut order: Vec<u8> = (0..=255u8).filter(|&s| lengths[s as usize] > 0).collect();
+        if order.is_empty() {
+            return Err(Error::Huffman("no coded symbols".into()));
+        }
+        order.sort_by_key(|&s| (lengths[s as usize], s));
+
+        // Kraft check in fixed point: sum of 2^(64-len) must be <= 2^64.
+        let mut kraft: u128 = 0;
+        for &s in &order {
+            kraft += 1u128 << (64 - lengths[s as usize] as u32);
+        }
+        if kraft > 1u128 << 64 {
+            return Err(Error::Huffman(
+                "lengths violate the Kraft inequality (not a prefix code)".into(),
+            ));
+        }
+
+        let mut words = vec![Codeword { bits: 0, len: 0 }; 256];
+        let mut code: u64 = 0;
+        let mut prev_len: u8 = 0;
+        for &s in &order {
+            let len = lengths[s as usize];
+            if prev_len > 0 {
+                code = (code + 1) << (len - prev_len);
+            }
+            prev_len = len;
+            if len > 32 {
+                return Err(Error::CodeTooLong {
+                    got: len as u32,
+                    max: 32,
+                });
+            }
+            if code >> len != 0 {
+                return Err(Error::Huffman("canonical code overflow".into()));
+            }
+            words[s as usize] = Codeword {
+                bits: code as u32,
+                len,
+            };
+        }
+        Ok(CanonicalCode {
+            words,
+            canonical_order: order,
+        })
+    }
+
+    /// Codeword for `symbol` (None if unused).
+    #[inline]
+    pub fn codeword(&self, symbol: u8) -> Option<Codeword> {
+        let w = self.words[symbol as usize];
+        if w.len == 0 {
+            None
+        } else {
+            Some(w)
+        }
+    }
+
+    /// All 256 codeword slots (unused symbols have `len == 0`).
+    pub fn words(&self) -> &[Codeword] {
+        &self.words
+    }
+
+    /// Symbols in canonical (length, value) order.
+    pub fn canonical_order(&self) -> &[u8] {
+        &self.canonical_order
+    }
+
+    /// The code as a (prefix-free) mapping, for exhaustive checks.
+    pub fn as_pairs(&self) -> Vec<(u8, Codeword)> {
+        self.canonical_order
+            .iter()
+            .map(|&s| (s, self.words[s as usize]))
+            .collect()
+    }
+}
+
+/// Exhaustively verify the prefix-free property of a code table.
+///
+/// O(n²) over used symbols (n <= 256) — test/validation use only.
+pub fn is_prefix_free(code: &CanonicalCode) -> bool {
+    let pairs = code.as_pairs();
+    for (i, &(_, a)) in pairs.iter().enumerate() {
+        for &(_, b) in pairs.iter().skip(i + 1) {
+            let (short, long) = if a.len <= b.len { (a, b) } else { (b, a) };
+            let shifted = long.bits >> (long.len - short.len);
+            if shifted == short.bits {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::tree::code_lengths;
+
+    fn lengths_of(pairs: &[(usize, u64)]) -> [u8; 256] {
+        let mut f = [0u64; 256];
+        for &(s, c) in pairs {
+            f[s] = c;
+        }
+        code_lengths(&f).unwrap()
+    }
+
+    #[test]
+    fn canonical_codes_are_sorted_and_prefix_free() {
+        let lengths = lengths_of(&[(0, 45), (1, 13), (2, 12), (3, 16), (4, 9), (5, 5)]);
+        let code = CanonicalCode::from_lengths(&lengths).unwrap();
+        assert!(is_prefix_free(&code));
+        // Canonical property: codes of equal length increase with symbol.
+        let pairs = code.as_pairs();
+        for w in pairs.windows(2) {
+            let (s0, c0) = w[0];
+            let (s1, c1) = w[1];
+            assert!(c0.len <= c1.len);
+            if c0.len == c1.len {
+                assert!(s0 < s1);
+                assert_eq!(c0.bits + 1, c1.bits);
+            }
+        }
+    }
+
+    #[test]
+    fn known_canonical_assignment() {
+        // Lengths A:1 B:3 C:3 D:3 E:4 F:4 (Appendix I example).
+        let mut lengths = [0u8; 256];
+        lengths[b'A' as usize] = 1;
+        lengths[b'B' as usize] = 3;
+        lengths[b'C' as usize] = 3;
+        lengths[b'D' as usize] = 3;
+        lengths[b'E' as usize] = 4;
+        lengths[b'F' as usize] = 4;
+        let code = CanonicalCode::from_lengths(&lengths).unwrap();
+        assert_eq!(code.codeword(b'A').unwrap(), Codeword { bits: 0b0, len: 1 });
+        assert_eq!(
+            code.codeword(b'B').unwrap(),
+            Codeword {
+                bits: 0b100,
+                len: 3
+            }
+        );
+        assert_eq!(
+            code.codeword(b'C').unwrap(),
+            Codeword {
+                bits: 0b101,
+                len: 3
+            }
+        );
+        assert_eq!(
+            code.codeword(b'D').unwrap(),
+            Codeword {
+                bits: 0b110,
+                len: 3
+            }
+        );
+        assert_eq!(
+            code.codeword(b'E').unwrap(),
+            Codeword {
+                bits: 0b1110,
+                len: 4
+            }
+        );
+        assert_eq!(
+            code.codeword(b'F').unwrap(),
+            Codeword {
+                bits: 0b1111,
+                len: 4
+            }
+        );
+        assert!(is_prefix_free(&code));
+    }
+
+    #[test]
+    fn oversubscribed_lengths_rejected() {
+        let mut lengths = [0u8; 256];
+        lengths[0] = 1;
+        lengths[1] = 1;
+        lengths[2] = 1; // 3 codes of length 1: kraft = 1.5 > 1
+        assert!(CanonicalCode::from_lengths(&lengths).is_err());
+    }
+
+    #[test]
+    fn undersubscribed_lengths_allowed() {
+        // Kraft < 1 (incomplete code) is wasteful but valid — happens for
+        // the single-symbol case (one length-1 code).
+        let mut lengths = [0u8; 256];
+        lengths[9] = 1;
+        let code = CanonicalCode::from_lengths(&lengths).unwrap();
+        assert_eq!(code.codeword(9).unwrap().len, 1);
+    }
+
+    #[test]
+    fn unused_symbols_have_no_codeword() {
+        let lengths = lengths_of(&[(3, 5), (4, 5)]);
+        let code = CanonicalCode::from_lengths(&lengths).unwrap();
+        assert!(code.codeword(3).is_some());
+        assert!(code.codeword(200).is_none());
+    }
+
+    #[test]
+    fn all_256_symbols_codeable() {
+        let mut f = [1u64; 256];
+        f[0] = 1000;
+        let lengths = code_lengths(&f).unwrap();
+        let code = CanonicalCode::from_lengths(&lengths).unwrap();
+        assert!(is_prefix_free(&code));
+        assert_eq!(code.canonical_order().len(), 256);
+    }
+}

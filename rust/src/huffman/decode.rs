@@ -1,0 +1,295 @@
+//! Bit readers and reference Huffman decoders.
+//!
+//! Two reference decode paths live here:
+//! * a scalar codeword-matching decoder (slow, trivially correct) used as
+//!   the oracle in tests, and
+//! * the hierarchical-LUT decoder loop shared with the GPU-kernel
+//!   simulation ([`crate::gpu_sim::kernel`]) — Appendix I's procedure.
+//!
+//! The production hot path (two-phase, parallel, gap arrays) is in
+//! `gpu_sim::kernel`; it reuses [`LutDecoder`] for the inner loop.
+
+use super::lut::HierarchicalLut;
+use super::{CanonicalCode, Codebook};
+use crate::error::{Error, Result};
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    /// Current bit position from the start of `bytes`.
+    pos: u64,
+    /// Total valid bits (excludes byte-padding).
+    len_bits: u64,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `bytes`, with `len_bits` valid bits.
+    pub fn new(bytes: &'a [u8], len_bits: u64) -> Self {
+        debug_assert!(len_bits <= bytes.len() as u64 * 8);
+        BitReader {
+            bytes,
+            pos: 0,
+            len_bits,
+        }
+    }
+
+    /// Reader positioned at an arbitrary starting bit (gap-array entry).
+    pub fn at(bytes: &'a [u8], start_bit: u64, len_bits: u64) -> Self {
+        let mut r = Self::new(bytes, len_bits);
+        r.pos = start_bit;
+        r
+    }
+
+    /// Current bit position.
+    #[inline]
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+
+    /// Remaining valid bits.
+    #[inline]
+    pub fn remaining(&self) -> u64 {
+        self.len_bits.saturating_sub(self.pos)
+    }
+
+    /// True once all valid bits are consumed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.len_bits
+    }
+
+    /// Peek up to 32 bits, left-aligned into the *high* bits of the
+    /// return value's low `n` bits; bits past the end read as 0.
+    ///
+    /// This is the "read the next L bits" primitive from Appendix I.
+    #[inline]
+    pub fn peek(&self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        let byte = (self.pos / 8) as usize;
+        let bit = (self.pos % 8) as u32;
+        // Gather up to 8 bytes so a 32-bit window at any alignment fits.
+        let mut window: u64 = 0;
+        for i in 0..5usize {
+            let b = self.bytes.get(byte + i).copied().unwrap_or(0);
+            window = (window << 8) | b as u64;
+        }
+        // `window` holds 40 bits starting at byte boundary; drop `bit`
+        // leading bits, keep n.
+        ((window << (24 + bit)) >> (64 - n)) as u32
+    }
+
+    /// Advance `n` bits.
+    #[inline]
+    pub fn advance(&mut self, n: u32) {
+        self.pos += n as u64;
+    }
+
+    /// Read (peek + advance) `n` bits.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u32 {
+        let v = self.peek(n);
+        self.advance(n);
+        v
+    }
+}
+
+/// Scalar oracle decoder: match codewords by linear scan.
+///
+/// O(symbols * used_codes) — test oracle only.
+pub fn decode_one_scalar(code: &CanonicalCode, reader: &mut BitReader) -> Result<u8> {
+    // Try code lengths in increasing order; for each, compare against all
+    // codewords of that length.
+    for len in 1..=32u8 {
+        if (len as u64) > reader.remaining() + 32 {
+            break;
+        }
+        let window = reader.peek(len as u32);
+        for &s in code.canonical_order() {
+            let w = code.words()[s as usize];
+            if w.len == len && w.bits == window {
+                reader.advance(len as u32);
+                return Ok(s);
+            }
+        }
+    }
+    Err(Error::corrupt(format!(
+        "no codeword matches at bit {}",
+        reader.position()
+    )))
+}
+
+/// Decode an entire stream with the scalar oracle.
+pub fn decode_all_scalar(code: &CanonicalCode, bytes: &[u8], len_bits: u64) -> Result<Vec<u8>> {
+    let mut r = BitReader::new(bytes, len_bits);
+    let mut out = Vec::new();
+    while !r.is_empty() {
+        out.push(decode_one_scalar(code, &mut r)?);
+    }
+    Ok(out)
+}
+
+/// Hierarchical-LUT decoder state (Appendix I.2 / Algorithm 1 inner loop).
+///
+/// Wraps the LUT tables and provides the byte-at-a-time decode step:
+/// read a byte window, look it up; entries >= [`super::lut::POINTER_BASE`]
+/// chain to the next LUT in the hierarchy.
+#[derive(Clone, Debug)]
+pub struct LutDecoder<'l> {
+    lut: &'l HierarchicalLut,
+}
+
+impl<'l> LutDecoder<'l> {
+    /// Decoder over a built LUT hierarchy.
+    pub fn new(lut: &'l HierarchicalLut) -> Self {
+        LutDecoder { lut }
+    }
+
+    /// Decode one symbol from the reader. Returns the symbol and advances
+    /// the reader by the symbol's code length.
+    #[inline]
+    pub fn decode_one(&self, reader: &mut BitReader) -> Result<u8> {
+        // Peek a full 32-bit window (max code length) once, then walk the
+        // LUT hierarchy byte by byte — Algorithm 1 lines 12-19.
+        let window = reader.peek(32);
+        let (symbol, len) = self.lut.lookup(window)?;
+        if (len as u64) > reader.remaining() {
+            return Err(Error::corrupt(format!(
+                "codeword of length {len} overruns stream at bit {}",
+                reader.position()
+            )));
+        }
+        reader.advance(len as u32);
+        Ok(symbol)
+    }
+}
+
+/// Decode a whole stream with the hierarchical-LUT decoder.
+pub fn decode_all(codebook: &Codebook, bytes: &[u8], len_bits: u64) -> Result<Vec<u8>> {
+    let lut = HierarchicalLut::build(codebook)?;
+    let dec = LutDecoder::new(&lut);
+    let mut r = BitReader::new(bytes, len_bits);
+    let mut out = Vec::new();
+    while !r.is_empty() {
+        out.push(dec.decode_one(&mut r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::encode::encode_symbols;
+    use crate::huffman::Codebook;
+    use crate::rng::Rng;
+
+    fn codebook_for(symbols: &[u8]) -> Codebook {
+        let mut freqs = [0u64; 256];
+        for &s in symbols {
+            freqs[s as usize] += 1;
+        }
+        Codebook::from_frequencies(&freqs).unwrap()
+    }
+
+    #[test]
+    fn bitreader_peek_matches_writer() {
+        let mut w = super::super::encode::BitWriter::new();
+        w.push(0b1011, 4);
+        w.push(0xFF, 8);
+        w.push(0b0, 1);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(r.read(4), 0b1011);
+        assert_eq!(r.read(8), 0xFF);
+        assert_eq!(r.read(1), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn bitreader_peek_past_end_is_zero() {
+        let bytes = [0xFFu8];
+        let r = BitReader::new(&bytes, 8);
+        // Peeking 32 bits with only 8 available zero-fills.
+        assert_eq!(r.peek(32), 0xFF00_0000);
+    }
+
+    #[test]
+    fn bitreader_peek_32_at_odd_alignment() {
+        let bytes = [0xDE, 0xAD, 0xBE, 0xEF, 0x12, 0x34];
+        let mut r = BitReader::new(&bytes, 48);
+        r.advance(4);
+        // Stream from bit 4: 0xEADBEEF1...
+        assert_eq!(r.peek(32), 0xEADB_EEF1);
+    }
+
+    #[test]
+    fn bitreader_at_gap_offset() {
+        let bytes = [0b1010_1010, 0b0101_0101];
+        let r = BitReader::at(&bytes, 3, 16);
+        assert_eq!(r.position(), 3);
+        assert_eq!(r.peek(4), 0b0101);
+    }
+
+    #[test]
+    fn scalar_roundtrip_small() {
+        let syms = vec![5u8, 5, 5, 9, 9, 17, 5, 9, 5, 17, 200];
+        let cb = codebook_for(&syms);
+        let (bytes, bits) = encode_symbols(&cb, &syms).unwrap();
+        let decoded = decode_all_scalar(cb.canonical(), &bytes, bits).unwrap();
+        assert_eq!(decoded, syms);
+    }
+
+    #[test]
+    fn lut_roundtrip_small() {
+        let syms = vec![5u8, 5, 5, 9, 9, 17, 5, 9, 5, 17, 200];
+        let cb = codebook_for(&syms);
+        let (bytes, bits) = encode_symbols(&cb, &syms).unwrap();
+        let decoded = decode_all(&cb, &bytes, bits).unwrap();
+        assert_eq!(decoded, syms);
+    }
+
+    #[test]
+    fn lut_and_scalar_agree_on_random_streams() {
+        let mut rng = Rng::new(2024);
+        for trial in 0..20 {
+            // Random alphabet size and skew per trial.
+            let alpha = 2 + rng.next_index(60);
+            let n = 100 + rng.next_index(2000);
+            let mut syms = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Zipf-ish skew: bias toward low indices.
+                let r = rng.next_f64();
+                let idx = ((alpha as f64).powf(r) - 1.0) as usize % alpha;
+                syms.push((100 + idx) as u8);
+            }
+            let cb = codebook_for(&syms);
+            let (bytes, bits) = encode_symbols(&cb, &syms).unwrap();
+            let a = decode_all_scalar(cb.canonical(), &bytes, bits).unwrap();
+            let b = decode_all(&cb, &bytes, bits).unwrap();
+            assert_eq!(a, syms, "scalar trial {trial}");
+            assert_eq!(b, syms, "lut trial {trial}");
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_detected() {
+        // A stream cut mid-codeword must not decode cleanly.
+        let syms = vec![1u8, 2, 3, 4, 1, 1, 1, 2];
+        let cb = codebook_for(&syms);
+        let (bytes, bits) = encode_symbols(&cb, &syms).unwrap();
+        // Claim one extra bit beyond the real stream: the trailing padding
+        // either fails to decode or decodes to a spurious symbol, but must
+        // never panic.
+        let _ = decode_all(&cb, &bytes, bits + 1);
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let syms = vec![7u8; 100];
+        let cb = codebook_for(&syms);
+        let (bytes, bits) = encode_symbols(&cb, &syms).unwrap();
+        assert_eq!(bits, 100); // 1-bit code
+        let decoded = decode_all(&cb, &bytes, bits).unwrap();
+        assert_eq!(decoded, syms);
+    }
+}

@@ -1,0 +1,196 @@
+//! MSB-first bit-packing encoder for Huffman symbol streams.
+//!
+//! Produces the `EncodedExponent` byte array of the DF11 container
+//! (Figure 2): codewords are concatenated most-significant-bit first, so
+//! the decoder can peek "the next L bits" as a left-aligned window — the
+//! access pattern both the LUT decoder (§2.3.1) and the GPU kernel
+//! (Algorithm 1) rely on.
+
+use super::Codebook;
+use crate::error::{Error, Result};
+
+/// An MSB-first bit writer over a growable byte buffer.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits currently staged in the low `acc_bits` bits of `acc`
+    /// (always < 8 after `push`).
+    acc: u64,
+    acc_bits: u32,
+    /// Total bits written (exact stream length, excluding padding).
+    total_bits: u64,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Writer with byte capacity pre-reserved.
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter {
+            buf: Vec::with_capacity(bytes),
+            ..Self::default()
+        }
+    }
+
+    /// Append the low `len` bits of `bits`, MSB-first.
+    #[inline]
+    pub fn push(&mut self, bits: u32, len: u8) {
+        debug_assert!(len <= 32);
+        debug_assert!(len == 32 || bits >> len == 0, "stray high bits");
+        // Stage into a 64-bit accumulator (max 7 leftover + 32 new = 39
+        // bits), then flush whole bytes MSB-first.
+        self.acc = (self.acc << len) | bits as u64;
+        self.acc_bits += len as u32;
+        while self.acc_bits >= 8 {
+            self.acc_bits -= 8;
+            self.buf.push((self.acc >> self.acc_bits) as u8);
+        }
+        // Mask the leftover to keep the accumulator small.
+        self.acc &= (1u64 << self.acc_bits) - 1;
+        self.total_bits += len as u64;
+    }
+
+    /// Exact number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Finish: pad the final partial byte with zero bits and return
+    /// `(bytes, exact_bit_len)`.
+    pub fn finish(mut self) -> (Vec<u8>, u64) {
+        if self.acc_bits > 0 {
+            self.buf.push((self.acc << (8 - self.acc_bits)) as u8);
+        }
+        (self.buf, self.total_bits)
+    }
+
+    /// Finish and additionally zero-pad the byte buffer to a multiple of
+    /// `align` bytes (the GPU kernel wants whole thread-chunks).
+    pub fn finish_aligned(self, align: usize) -> (Vec<u8>, u64) {
+        let (mut bytes, bits) = self.finish();
+        if align > 0 {
+            let rem = bytes.len() % align;
+            if rem != 0 {
+                bytes.resize(bytes.len() + (align - rem), 0);
+            }
+        }
+        (bytes, bits)
+    }
+}
+
+/// Encode a symbol stream with a codebook; returns `(bytes, exact_bits)`.
+///
+/// Errors if any symbol has no codeword (frequency table mismatch).
+pub fn encode_symbols(codebook: &Codebook, symbols: &[u8]) -> Result<(Vec<u8>, u64)> {
+    // Estimate capacity from expected length to avoid reallocation churn.
+    let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+    let words = codebook.canonical().words();
+    for &s in symbols {
+        let cw = words[s as usize];
+        if cw.len == 0 {
+            return Err(Error::Huffman(format!(
+                "symbol {s} has no codeword (not in frequency table)"
+            )));
+        }
+        w.push(cw.bits, cw.len);
+    }
+    Ok(w.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::Codebook;
+
+    #[test]
+    fn bitwriter_packs_msb_first() {
+        let mut w = BitWriter::new();
+        w.push(0b1, 1);
+        w.push(0b01, 2);
+        w.push(0b10110, 5);
+        // Stream: 1 01 10110 -> byte 0b10110110
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 8);
+        assert_eq!(bytes, vec![0b1011_0110]);
+    }
+
+    #[test]
+    fn bitwriter_pads_with_zeros() {
+        let mut w = BitWriter::new();
+        w.push(0b111, 3);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 3);
+        assert_eq!(bytes, vec![0b1110_0000]);
+    }
+
+    #[test]
+    fn bitwriter_spans_byte_boundaries() {
+        let mut w = BitWriter::new();
+        w.push(0x5A5A5, 20); // 0101 1010 0101 1010 0101
+        w.push(0xF, 4);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 24);
+        assert_eq!(bytes, vec![0x5A, 0x5A, 0x5F]);
+    }
+
+    #[test]
+    fn bitwriter_32bit_codes() {
+        let mut w = BitWriter::new();
+        w.push(0xDEAD_BEEF, 32);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 32);
+        assert_eq!(bytes, vec![0xDE, 0xAD, 0xBE, 0xEF]);
+    }
+
+    #[test]
+    fn finish_aligned_pads_to_chunk() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        let (bytes, bits) = w.finish_aligned(8);
+        assert_eq!(bits, 3);
+        assert_eq!(bytes.len(), 8);
+        assert_eq!(bytes[0], 0b1010_0000);
+        assert!(bytes[1..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn encode_symbols_roundtrip_bit_length() {
+        let mut freqs = [0u64; 256];
+        freqs[10] = 4;
+        freqs[11] = 2;
+        freqs[12] = 1;
+        freqs[13] = 1;
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let syms = [10u8, 10, 11, 12, 13, 10, 11, 10];
+        let (_, bits) = encode_symbols(&cb, &syms).unwrap();
+        let expected: u64 = syms
+            .iter()
+            .map(|&s| cb.lengths()[s as usize] as u64)
+            .sum();
+        assert_eq!(bits, expected);
+        assert_eq!(bits, cb.encoded_bits(&freqs));
+    }
+
+    #[test]
+    fn encode_unknown_symbol_errors() {
+        let mut freqs = [0u64; 256];
+        freqs[1] = 1;
+        freqs[2] = 1;
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        assert!(encode_symbols(&cb, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let mut freqs = [0u64; 256];
+        freqs[0] = 1;
+        freqs[1] = 1;
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let (bytes, bits) = encode_symbols(&cb, &[]).unwrap();
+        assert!(bytes.is_empty());
+        assert_eq!(bits, 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Huffman entropy coding for BF16 exponents (paper §2.1, §2.3).
+//!
+//! DF11 builds a Huffman code over the 256 possible exponent byte values,
+//! assigns dynamic-length codes by frequency, and bit-packs the encoded
+//! exponents (`EncodedExponent` in Figure 2). Decoding on the accelerator
+//! uses compact hierarchical lookup tables (§2.3.1, [`lut`]).
+//!
+//! Submodules:
+//! * [`tree`] — code-length computation (heap Huffman + package-merge
+//!   length-limiting to the paper's max L = 32);
+//! * [`canonical`] — canonical code assignment from lengths;
+//! * [`encode`] — MSB-first bit-packing encoder;
+//! * [`lut`] — hierarchical 256-entry LUT construction (§2.3.1);
+//! * [`decode`] — bit readers and the scalar/LUT reference decoders.
+
+pub mod canonical;
+pub mod decode;
+pub mod encode;
+pub mod lut;
+pub mod tree;
+
+pub use canonical::{CanonicalCode, Codeword};
+pub use decode::{decode_all, BitReader};
+pub use encode::{encode_symbols, BitWriter};
+pub use lut::{HierarchicalLut, LutEntry, LUT_SIZE, POINTER_BASE};
+pub use tree::{code_lengths, code_lengths_limited};
+
+use crate::error::{Error, Result};
+
+/// Maximum supported Huffman code length in bits.
+///
+/// The paper observes L in 24–32 for LLM exponent distributions and the
+/// 5-bit gap array entries (§2.3.2) require offsets in `[0, 31]`, hence 32.
+pub const MAX_CODE_LEN: u32 = 32;
+
+/// A complete Huffman codebook over byte symbols (0..=255).
+///
+/// This is the unit shipped inside a DF11 container: enough to rebuild
+/// the encoder table, the canonical decode tables, and the hierarchical
+/// LUTs on load.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Codebook {
+    /// Code length per symbol; 0 = symbol does not occur.
+    lengths: [u8; 256],
+    /// Canonical codes (valid where `lengths[s] > 0`).
+    code: CanonicalCode,
+}
+
+impl Codebook {
+    /// Build a codebook from symbol frequencies, limiting code lengths to
+    /// [`MAX_CODE_LEN`] via package-merge when the unconstrained Huffman
+    /// tree exceeds it.
+    pub fn from_frequencies(freqs: &[u64; 256]) -> Result<Codebook> {
+        let lengths = code_lengths_limited(freqs, MAX_CODE_LEN)?;
+        let code = CanonicalCode::from_lengths(&lengths)?;
+        Ok(Codebook { lengths, code })
+    }
+
+    /// Rebuild from stored lengths (container load path).
+    pub fn from_lengths(lengths: &[u8; 256]) -> Result<Codebook> {
+        for &l in lengths.iter() {
+            if l as u32 > MAX_CODE_LEN {
+                return Err(Error::CodeTooLong {
+                    got: l as u32,
+                    max: MAX_CODE_LEN,
+                });
+            }
+        }
+        let code = CanonicalCode::from_lengths(lengths)?;
+        Ok(Codebook {
+            lengths: *lengths,
+            code,
+        })
+    }
+
+    /// Code length per symbol (0 = unused).
+    pub fn lengths(&self) -> &[u8; 256] {
+        &self.lengths
+    }
+
+    /// The canonical code assignment.
+    pub fn canonical(&self) -> &CanonicalCode {
+        &self.code
+    }
+
+    /// Codeword for a symbol, if the symbol is in the codebook.
+    pub fn codeword(&self, symbol: u8) -> Option<Codeword> {
+        self.code.codeword(symbol)
+    }
+
+    /// Number of distinct symbols with codes.
+    pub fn num_symbols(&self) -> usize {
+        self.lengths.iter().filter(|&&l| l > 0).count()
+    }
+
+    /// Longest code length in bits (the paper's `L`).
+    pub fn max_len(&self) -> u32 {
+        self.lengths.iter().copied().max().unwrap_or(0) as u32
+    }
+
+    /// Expected code length in bits under the given frequencies — the
+    /// achieved bits/exponent, compared against entropy in Table 1's
+    /// "Avg. Bit Width" (= 8 sign/mantissa bits + this).
+    pub fn expected_length_bits(&self, freqs: &[u64; 256]) -> f64 {
+        let total: u64 = freqs.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for s in 0..256 {
+            if freqs[s] > 0 {
+                acc += freqs[s] as f64 * self.lengths[s] as f64;
+            }
+        }
+        acc / total as f64
+    }
+
+    /// Exact encoded size in bits for a symbol stream described by freqs.
+    pub fn encoded_bits(&self, freqs: &[u64; 256]) -> u64 {
+        (0..256)
+            .map(|s| freqs[s] * self.lengths[s] as u64)
+            .sum()
+    }
+
+    /// Verify the Kraft inequality holds with equality for non-trivial
+    /// codebooks (complete prefix code) or at most 1 in general.
+    pub fn kraft_sum(&self) -> f64 {
+        self.lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freq_from_pairs(pairs: &[(u8, u64)]) -> [u64; 256] {
+        let mut f = [0u64; 256];
+        for &(s, c) in pairs {
+            f[s as usize] = c;
+        }
+        f
+    }
+
+    #[test]
+    fn codebook_from_skewed_frequencies() {
+        let freqs = freq_from_pairs(&[(120, 1000), (121, 500), (122, 250), (123, 125), (124, 60)]);
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        assert_eq!(cb.num_symbols(), 5);
+        // Most frequent symbol gets the shortest code.
+        let l120 = cb.lengths()[120];
+        for s in 121..=124u8 {
+            assert!(cb.lengths()[s as usize] >= l120);
+        }
+        // Prefix code is complete.
+        assert!((cb.kraft_sum() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_symbol_codebook() {
+        let freqs = freq_from_pairs(&[(42, 10)]);
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        assert_eq!(cb.num_symbols(), 1);
+        // A lone symbol still needs a 1-bit code so the stream advances.
+        assert_eq!(cb.lengths()[42], 1);
+    }
+
+    #[test]
+    fn empty_frequencies_error() {
+        let freqs = [0u64; 256];
+        assert!(Codebook::from_frequencies(&freqs).is_err());
+    }
+
+    #[test]
+    fn expected_length_beats_fixed_8bit_on_skewed_data() {
+        // Geometric-ish distribution like Figure 9.
+        let mut freqs = [0u64; 256];
+        for i in 0..40u32 {
+            freqs[(100 + i) as usize] = 1u64 << (40 - i).min(50);
+        }
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let avg = cb.expected_length_bits(&freqs);
+        assert!(avg < 3.5, "avg {avg} should be near entropy, far below 8");
+    }
+
+    #[test]
+    fn from_lengths_roundtrip() {
+        let freqs = freq_from_pairs(&[(1, 7), (2, 3), (3, 3), (4, 1)]);
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let cb2 = Codebook::from_lengths(cb.lengths()).unwrap();
+        assert_eq!(cb, cb2);
+    }
+
+    #[test]
+    fn from_lengths_rejects_overlong() {
+        let mut lengths = [0u8; 256];
+        lengths[0] = 33;
+        lengths[1] = 33;
+        assert!(matches!(
+            Codebook::from_lengths(&lengths),
+            Err(Error::CodeTooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn encoded_bits_matches_expected_length() {
+        let freqs = freq_from_pairs(&[(10, 6), (11, 2), (12, 1), (13, 1)]);
+        let cb = Codebook::from_frequencies(&freqs).unwrap();
+        let total: u64 = freqs.iter().sum();
+        let bits = cb.encoded_bits(&freqs);
+        let avg = cb.expected_length_bits(&freqs);
+        assert!((bits as f64 - avg * total as f64).abs() < 1e-9);
+    }
+}

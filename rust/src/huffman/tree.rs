@@ -1,0 +1,312 @@
+//! Huffman code-length computation.
+//!
+//! Two algorithms:
+//! * [`code_lengths`] — classic heap-based Huffman tree (provably optimal
+//!   for the frequency distribution, Huffman 1952 — paper ref [24]);
+//! * [`code_lengths_limited`] — package-merge (Larmore–Hirschberg), used
+//!   when the optimal tree would exceed the maximum code length the DF11
+//!   auxiliary variables support (L = 32, because gap-array entries are
+//!   5-bit offsets in `[0, 31]`, paper §2.3.2).
+//!
+//! Only code *lengths* are produced here; actual bit patterns are assigned
+//! canonically in [`super::canonical`] so the decoder tables can be
+//! rebuilt from lengths alone.
+
+use crate::error::{Error, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Compute optimal (unrestricted) Huffman code lengths for byte symbols.
+///
+/// Returns `lengths[s] == 0` for symbols with zero frequency. A single
+/// distinct symbol is assigned length 1 (a zero-length code could not
+/// advance the bitstream).
+pub fn code_lengths(freqs: &[u64; 256]) -> Result<[u8; 256]> {
+    let symbols: Vec<usize> = (0..256).filter(|&s| freqs[s] > 0).collect();
+    if symbols.is_empty() {
+        return Err(Error::Huffman("no symbols with non-zero frequency".into()));
+    }
+    let mut lengths = [0u8; 256];
+    if symbols.len() == 1 {
+        lengths[symbols[0]] = 1;
+        return Ok(lengths);
+    }
+
+    // Internal tree representation: nodes[i] = (freq, parent). Leaves come
+    // first (one per used symbol), internal nodes are appended.
+    #[derive(Clone, Copy)]
+    struct Node {
+        parent: usize, // usize::MAX while unset
+    }
+    let n_leaves = symbols.len();
+    let mut nodes: Vec<Node> = vec![Node { parent: usize::MAX }; n_leaves];
+
+    // Min-heap of (freq, node_index). Tie-break on node index for
+    // deterministic trees (important: codebooks must be reproducible).
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = symbols
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Reverse((freqs[s], i)))
+        .collect();
+
+    while heap.len() > 1 {
+        let Reverse((fa, a)) = heap.pop().unwrap();
+        let Reverse((fb, b)) = heap.pop().unwrap();
+        let parent = nodes.len();
+        nodes.push(Node { parent: usize::MAX });
+        nodes[a].parent = parent;
+        nodes[b].parent = parent;
+        heap.push(Reverse((fa.saturating_add(fb), parent)));
+    }
+
+    // Depth of each leaf = code length.
+    for (i, &s) in symbols.iter().enumerate() {
+        let mut depth = 0u32;
+        let mut cur = i;
+        while nodes[cur].parent != usize::MAX {
+            cur = nodes[cur].parent;
+            depth += 1;
+        }
+        if depth > 255 {
+            return Err(Error::Huffman("tree depth overflow".into()));
+        }
+        lengths[s] = depth as u8;
+    }
+    Ok(lengths)
+}
+
+/// Compute length-limited Huffman code lengths via package-merge.
+///
+/// Produces the optimal prefix code subject to `max(length) <= max_len`.
+/// Falls back to the classic algorithm's result when it already fits.
+pub fn code_lengths_limited(freqs: &[u64; 256], max_len: u32) -> Result<[u8; 256]> {
+    let unrestricted = code_lengths(freqs)?;
+    let worst = unrestricted.iter().copied().max().unwrap() as u32;
+    if worst <= max_len {
+        return Ok(unrestricted);
+    }
+    package_merge(freqs, max_len)
+}
+
+/// Package-merge algorithm (Larmore & Hirschberg 1990).
+///
+/// Computes optimal length-limited code lengths. Runs in
+/// O(max_len * n log n) for n used symbols — n <= 256 here, so cost is
+/// negligible; this is a one-time compression-side step (Table 4).
+fn package_merge(freqs: &[u64; 256], max_len: u32) -> Result<[u8; 256]> {
+    let symbols: Vec<usize> = (0..256).filter(|&s| freqs[s] > 0).collect();
+    let n = symbols.len();
+    if n == 0 {
+        return Err(Error::Huffman("no symbols".into()));
+    }
+    let mut lengths = [0u8; 256];
+    if n == 1 {
+        lengths[symbols[0]] = 1;
+        return Ok(lengths);
+    }
+    if (1u64 << max_len.min(63)) < n as u64 {
+        return Err(Error::Huffman(format!(
+            "cannot code {n} symbols within {max_len} bits"
+        )));
+    }
+
+    // An item is either an original symbol (leaf) or a package of two
+    // items from the previous level. We track, per item, how many times
+    // each symbol appears inside it, compactly as a list of symbol ids.
+    #[derive(Clone)]
+    struct Item {
+        weight: u128,
+        // Indices into `symbols` contained in this item (with multiplicity
+        // folded into per-symbol counters at selection time).
+        content: Vec<u16>,
+    }
+
+    let leaves: Vec<Item> = symbols
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Item {
+            weight: freqs[s] as u128,
+            content: vec![i as u16],
+        })
+        .collect();
+
+    // Level 1 (deepest) starts with just the leaves; each subsequent level
+    // merges pairs from below and re-adds the leaves.
+    let mut level: Vec<Item> = leaves.clone();
+    level.sort_by_key(|it| it.weight);
+
+    for _ in 1..max_len {
+        // Package: combine adjacent pairs.
+        let mut packaged: Vec<Item> = Vec::with_capacity(level.len() / 2 + n);
+        let mut i = 0;
+        while i + 1 < level.len() {
+            let mut content = level[i].content.clone();
+            content.extend_from_slice(&level[i + 1].content);
+            packaged.push(Item {
+                weight: level[i].weight + level[i + 1].weight,
+                content,
+            });
+            i += 2;
+        }
+        // Merge with fresh leaves.
+        packaged.extend(leaves.iter().cloned());
+        packaged.sort_by_key(|it| it.weight);
+        level = packaged;
+    }
+
+    // Select the 2n-2 cheapest items at the top level; each appearance of
+    // a symbol adds one to its code length.
+    let mut counts = vec![0u32; n];
+    for item in level.iter().take(2 * n - 2) {
+        for &ci in &item.content {
+            counts[ci as usize] += 1;
+        }
+    }
+
+    for (i, &s) in symbols.iter().enumerate() {
+        if counts[i] == 0 || counts[i] > max_len {
+            return Err(Error::Huffman(format!(
+                "package-merge produced invalid length {} for symbol {s}",
+                counts[i]
+            )));
+        }
+        lengths[s] = counts[i] as u8;
+    }
+    Ok(lengths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freqs(pairs: &[(usize, u64)]) -> [u64; 256] {
+        let mut f = [0u64; 256];
+        for &(s, c) in pairs {
+            f[s] = c;
+        }
+        f
+    }
+
+    fn kraft(lengths: &[u8; 256]) -> f64 {
+        lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum()
+    }
+
+    fn avg_len(freqs: &[u64; 256], lengths: &[u8; 256]) -> f64 {
+        let total: u64 = freqs.iter().sum();
+        let bits: u64 = (0..256).map(|s| freqs[s] * lengths[s] as u64).sum();
+        bits as f64 / total as f64
+    }
+
+    #[test]
+    fn textbook_example() {
+        // Classic example: frequencies 45,13,12,16,9,5 -> lengths 1,3,3,3,4,4.
+        let f = freqs(&[(0, 45), (1, 13), (2, 12), (3, 16), (4, 9), (5, 5)]);
+        let l = code_lengths(&f).unwrap();
+        assert_eq!(l[0], 1);
+        assert_eq!(l[3], 3);
+        assert_eq!(l[1], 3);
+        assert_eq!(l[2], 3);
+        assert_eq!(l[4], 4);
+        assert_eq!(l[5], 4);
+        assert!((kraft(&l) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_frequencies_give_balanced_code() {
+        let f = freqs(&[(0, 1), (1, 1), (2, 1), (3, 1)]);
+        let l = code_lengths(&f).unwrap();
+        for s in 0..4 {
+            assert_eq!(l[s], 2);
+        }
+    }
+
+    #[test]
+    fn two_symbols() {
+        let f = freqs(&[(7, 1_000_000), (9, 1)]);
+        let l = code_lengths(&f).unwrap();
+        assert_eq!(l[7], 1);
+        assert_eq!(l[9], 1);
+    }
+
+    #[test]
+    fn fibonacci_frequencies_need_limiting() {
+        // Fibonacci frequencies make maximally deep Huffman trees.
+        let mut f = [0u64; 256];
+        let (mut a, mut b) = (1u64, 1u64);
+        for s in 0..40 {
+            f[s] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let unl = code_lengths(&f).unwrap();
+        assert!(unl.iter().copied().max().unwrap() > 32);
+
+        let lim = code_lengths_limited(&f, 32).unwrap();
+        let worst = lim.iter().copied().max().unwrap();
+        assert!(worst as u32 <= 32, "worst {worst}");
+        assert!((kraft(&lim) - 1.0).abs() < 1e-9, "kraft {}", kraft(&lim));
+        // Limited code can't beat the optimal one.
+        assert!(avg_len(&f, &lim) >= avg_len(&f, &unl) - 1e-12);
+        // ...but should be close.
+        assert!(avg_len(&f, &lim) < avg_len(&f, &unl) + 0.2);
+    }
+
+    #[test]
+    fn package_merge_matches_huffman_when_unconstrained() {
+        let f = freqs(&[(0, 45), (1, 13), (2, 12), (3, 16), (4, 9), (5, 5)]);
+        let h = code_lengths(&f).unwrap();
+        let pm = package_merge(&f, 16).unwrap();
+        // Lengths multiset must match (codes may differ, cost must not).
+        assert!((avg_len(&f, &h) - avg_len(&f, &pm)).abs() < 1e-12);
+        assert!((kraft(&pm) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn limited_to_exactly_log2_n() {
+        // 8 symbols, max_len 3 forces the balanced code.
+        let f = freqs(&[
+            (0, 100),
+            (1, 50),
+            (2, 25),
+            (3, 12),
+            (4, 6),
+            (5, 3),
+            (6, 2),
+            (7, 1),
+        ]);
+        let l = code_lengths_limited(&f, 3).unwrap();
+        for s in 0..8 {
+            assert_eq!(l[s], 3, "symbol {s}");
+        }
+    }
+
+    #[test]
+    fn impossible_limit_errors() {
+        let f = freqs(&[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]);
+        assert!(code_lengths_limited(&f, 2).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let f = freqs(&[(10, 5), (20, 5), (30, 5), (40, 5), (50, 3)]);
+        let a = code_lengths(&f).unwrap();
+        let b = code_lengths(&f).unwrap();
+        assert_eq!(a[..], b[..]);
+    }
+
+    #[test]
+    fn full_256_symbol_alphabet() {
+        let mut f = [0u64; 256];
+        for (s, item) in f.iter_mut().enumerate() {
+            *item = (s as u64 % 7) + 1;
+        }
+        let l = code_lengths(&f).unwrap();
+        assert!((kraft(&l) - 1.0).abs() < 1e-9);
+        assert!(l.iter().all(|&x| x > 0));
+    }
+}

@@ -1,0 +1,45 @@
+//! # DFloat11 — lossless LLM compression for efficient inference
+//!
+//! A reproduction of *"70% Size, 100% Accuracy: Lossless LLM Compression
+//! for Efficient GPU Inference via Dynamic-Length Float (DFloat11)"*
+//! (NeurIPS 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! DFloat11 compresses BFloat16 model weights to ~11 effective bits
+//! (~70% of original size) with **bit-for-bit identical** outputs, by
+//! Huffman-coding the low-entropy exponent field and keeping sign and
+//! mantissa verbatim. The decompression hot path follows the paper's
+//! hardware-aware design: hierarchical 256-entry lookup tables, a
+//! two-phase kernel with gap arrays + block output positions, and
+//! transformer-block-level batched decompression.
+//!
+//! ## Layer map
+//! * **L3 (this crate)** — compression/decompression library, serving
+//!   coordinator (router, batcher, KV cache, scheduler), device and
+//!   transfer simulators, baselines (rANS, CPU offload, zlib/zstd).
+//! * **L2 (python/compile/model.py)** — Llama-style transformer in JAX,
+//!   AOT-lowered to HLO text artifacts executed by [`runtime`] via PJRT.
+//! * **L1 (python/compile/kernels/)** — Pallas decompression kernel
+//!   (interpret mode), validated against a pure-jnp oracle.
+
+pub mod ans;
+pub mod bench_harness;
+pub mod bf16;
+pub mod cli;
+pub mod coordinator;
+pub mod dfloat11;
+pub mod entropy;
+pub mod error;
+pub mod gpu_sim;
+pub mod huffman;
+pub mod kvcache;
+pub mod model;
+pub mod multi_gpu;
+pub mod offload;
+pub mod nn;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+
+pub use bf16::Bf16;
+pub use dfloat11::{Df11Model, Df11Tensor};
+pub use error::{Error, Result};

@@ -1,0 +1,238 @@
+//! `dfloat11` — the leader binary: compress, inspect, serve, estimate.
+//!
+//! Subcommands:
+//!   compress   generate a synthetic model, compress to DF11, save
+//!   inspect    print compression stats + entropy analysis for a model
+//!   serve      run the serving coordinator on a synthetic workload
+//!   estimate   paper-scale placement / throughput estimates (no weights)
+//!   decode     roundtrip-check a saved .df11 file
+//!
+//! Examples:
+//!   dfloat11 compress --scale 8 --out /tmp/model.df11
+//!   dfloat11 serve --requests 16 --batch 4 --mode df11
+//!   dfloat11 estimate --model llama31-405b --gpus 8 --device a100-80g
+
+use dfloat11::bench_harness::fmt;
+use dfloat11::cli::Args;
+use dfloat11::coordinator::{Engine, Request, SchedulerConfig, Server, WeightMode};
+use dfloat11::dfloat11::serial;
+use dfloat11::entropy::ComponentHistograms;
+use dfloat11::error::{Error, Result};
+use dfloat11::gpu_sim::Device;
+use dfloat11::model::init::generate_model_weights;
+use dfloat11::model::{zoo, ModelConfig};
+use dfloat11::multi_gpu::{min_gpus, plan_layer_sharding, ShardFormat};
+use dfloat11::{Df11Model, Df11Tensor};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: dfloat11 <compress|inspect|serve|estimate|decode> [options]\n\
+         \n\
+         compress  --scale N --seed S --out PATH     synthesize + compress\n\
+         inspect   --in PATH                          stats for a .df11 file\n\
+         serve     --requests N --batch B --mode bf16|df11|offload\n\
+         estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
+         decode    --in PATH                          roundtrip-check a .df11 file"
+    );
+    std::process::exit(2);
+}
+
+fn zoo_by_name(name: &str) -> Option<ModelConfig> {
+    let n = name.to_ascii_lowercase();
+    Some(match n.as_str() {
+        "llama31-8b" => zoo::llama31_8b(),
+        "llama33-70b" => zoo::llama33_70b(),
+        "llama31-405b" => zoo::llama31_405b(),
+        "qwen3-14b" => zoo::qwen3_14b(),
+        "qwq-32b" => zoo::qwq_32b(),
+        "mistral-nemo" => zoo::mistral_nemo(),
+        "mistral-small3" => zoo::mistral_small3(),
+        "phi4" => zoo::phi4_reasoning(),
+        "tiny-100m" => ModelConfig::tiny_100m(),
+        _ => return None,
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let scale = args.get_parse_or("scale", 8usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let out = args.get_or("out", "/tmp/model.df11");
+    let base = args.get_or("model", "llama31-8b");
+    let cfg = zoo_by_name(&base)
+        .ok_or_else(|| Error::InvalidArgument(format!("unknown model {base}")))?
+        .scaled_down(scale);
+    println!("model: {} ({} params)", cfg.name, cfg.num_params());
+
+    let t0 = std::time::Instant::now();
+    let mut model = Df11Model::new(cfg.name.clone());
+    let mut groups: Vec<(String, Vec<(String, Df11Tensor)>)> = Vec::new();
+    for (spec, w) in generate_model_weights(&cfg, seed) {
+        let t = Df11Tensor::compress_shaped(
+            &w,
+            &[spec.shape[0], spec.shape[1]],
+            &dfloat11::gpu_sim::KernelConfig::for_elements(w.len()),
+        )?;
+        match groups.iter_mut().find(|(g, _)| *g == spec.group) {
+            Some((_, ts)) => ts.push((spec.name, t)),
+            None => groups.push((spec.group, vec![(spec.name, t)])),
+        }
+    }
+    for (name, tensors) in groups {
+        model.push_group(dfloat11::dfloat11::TensorGroup { name, tensors });
+    }
+    let stats = model.stats();
+    println!("compressed in {:.2}s: {stats}", t0.elapsed().as_secs_f64());
+    serial::save_model(std::path::Path::new(&out), &model)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .ok_or_else(|| Error::InvalidArgument("--in required".into()))?;
+    let model = serial::load_model(std::path::Path::new(path))?;
+    println!("model: {}", model.name);
+    println!("groups: {}", model.groups.len());
+    println!("stats: {}", model.stats());
+    let mut hist = ComponentHistograms::new();
+    for g in &model.groups {
+        for (name, t) in &g.tensors {
+            let w = t.decompress()?;
+            hist.record_weights(&w);
+            let s = t.stats();
+            println!(
+                "  {name:<28} {:>10} elems  ratio {:>6.2}%  {:>5.2} bits/w",
+                t.num_elements(),
+                s.ratio_percent(),
+                s.bits_per_weight()
+            );
+        }
+    }
+    let e = hist.entropy();
+    println!(
+        "entropy: sign {:.3}  exponent {:.3}  mantissa {:.3} bits (paper Fig 1: ~1 / ~2.6 / ~7)",
+        e.sign_bits, e.exponent_bits, e.mantissa_bits
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_parse_or("requests", 8usize)?;
+    let batch = args.get_parse_or("batch", 4usize)?;
+    let new_tokens = args.get_parse_or("tokens", 8usize)?;
+    let scale = args.get_parse_or("scale", 24usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let mode = match args.get_or("mode", "df11").as_str() {
+        "bf16" => WeightMode::Bf16Resident,
+        "df11" => WeightMode::Df11,
+        "offload" => WeightMode::OffloadBf16 {
+            resident_layers: 1,
+            transfer: dfloat11::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
+        },
+        other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
+    };
+    let cfg = zoo_by_name(&args.get_or("model", "llama31-8b"))
+        .ok_or_else(|| Error::InvalidArgument("unknown model".into()))?
+        .scaled_down(scale);
+    println!(
+        "serving {} ({} params, mode {:?}, batch {batch})",
+        cfg.name,
+        cfg.num_params(),
+        args.get_or("mode", "df11")
+    );
+    let engine = Engine::build(&cfg, seed, mode)?;
+    let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
+    for i in 0..requests {
+        let prompt: Vec<u32> = (0..4).map(|t| ((i * 7 + t) % 60 + 1) as u32).collect();
+        server.submit(Request::new(prompt, new_tokens));
+    }
+    let report = server.drain()?;
+    println!(
+        "served {} requests, {} tokens in {} -> {:.2} tok/s; p50 {} p95 {}",
+        report.responses.len(),
+        report.total_tokens,
+        fmt::seconds(report.total_seconds),
+        report.tokens_per_second(),
+        fmt::seconds(report.latency.percentile(50.0)),
+        fmt::seconds(report.latency.percentile(95.0)),
+    );
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "llama31-405b");
+    let cfg = zoo_by_name(&model)
+        .ok_or_else(|| Error::InvalidArgument(format!("unknown model {model}")))?;
+    let device = Device::by_name(&args.get_or("device", "a100-80g"))
+        .ok_or_else(|| Error::InvalidArgument("unknown device".into()))?;
+    let gpus = args.get_parse_or("gpus", 8usize)?;
+    let format = match args.get_or("format", "df11").as_str() {
+        "bf16" => ShardFormat::Bf16,
+        "df11" => ShardFormat::Df11,
+        other => return Err(Error::InvalidArgument(format!("unknown format {other}"))),
+    };
+    let plan = plan_layer_sharding(&cfg, &device, gpus, format)?;
+    println!(
+        "{} on {}x{} [{format:?}]: {} per GPU (max {}), feasible: {}",
+        cfg.name,
+        gpus,
+        device.name,
+        fmt::bytes(plan.bytes_per_gpu.iter().sum::<u64>() / gpus as u64),
+        fmt::bytes(*plan.bytes_per_gpu.iter().max().unwrap()),
+        plan.feasible
+    );
+    println!(
+        "min GPUs: bf16 {}, df11 {}",
+        min_gpus(&cfg, &device, ShardFormat::Bf16),
+        min_gpus(&cfg, &device, ShardFormat::Df11)
+    );
+    if plan.feasible {
+        for batch in [1u64, 8, 32] {
+            println!(
+                "  batch {batch:>3}: est {:.2} tok/s",
+                dfloat11::multi_gpu::throughput(&cfg, &plan, batch)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .ok_or_else(|| Error::InvalidArgument("--in required".into()))?;
+    let model = serial::load_model(std::path::Path::new(path))?;
+    let mut elems = 0u64;
+    let t0 = std::time::Instant::now();
+    for g in &model.groups {
+        for (_, t) in &g.tensors {
+            let w = t.decompress()?;
+            elems += w.len() as u64;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "decoded {elems} weights in {:.3}s ({})",
+        dt,
+        fmt::throughput_bps(elems as f64 * 2.0 / dt)
+    );
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional(0).unwrap_or("").to_string();
+    let result = match cmd.as_str() {
+        "compress" => cmd_compress(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "estimate" => cmd_estimate(&args),
+        "decode" => cmd_decode(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Diffusion-transformer (DiT) configurations for Table 3.
+//!
+//! The paper compresses the transformer blocks of Stable Diffusion 3.5
+//! Large and FLUX.1 and reports peak memory and 1024×1024 generation
+//! time on an A5000. We model the MMDiT architecture's two block kinds:
+//! **dual-stream** (joint) blocks carry separate image/text projections;
+//! **single-stream** blocks carry one fused set. The generation loop (a
+//! fixed number of denoising steps, each a full transformer forward) is
+//! simulated over the timing model.
+
+use super::WeightSpec;
+
+/// A DiT-style transformer stack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DiffusionConfig {
+    /// Model name (Table 3 row).
+    pub name: String,
+    /// Hidden width of the transformer blocks.
+    pub d_model: usize,
+    /// Dual-stream (joint image+text) blocks.
+    pub n_dual_blocks: usize,
+    /// Single-stream blocks.
+    pub n_single_blocks: usize,
+    /// MLP expansion width.
+    pub d_ff: usize,
+    /// Extra (non-transformer) BF16 bytes: VAE, embedders — kept
+    /// uncompressed like the paper (text encoders assumed offloaded).
+    pub uncompressed_bytes: u64,
+    /// Denoising steps for the Table 3 generation workload.
+    pub denoise_steps: usize,
+    /// Latent sequence length for a 1024x1024 image.
+    pub latent_tokens: usize,
+}
+
+impl DiffusionConfig {
+    /// Stable Diffusion 3.5 Large (8B MMDiT: 38 joint blocks, d=2432).
+    pub fn sd35_large() -> DiffusionConfig {
+        DiffusionConfig {
+            name: "Stable Diffusion 3.5 Large".into(),
+            d_model: 2432,
+            n_dual_blocks: 38,
+            n_single_blocks: 0,
+            d_ff: 4 * 2432,
+            uncompressed_bytes: 168 * 1024 * 1024,
+            denoise_steps: 28,
+            latent_tokens: 4096,
+        }
+    }
+
+    /// FLUX.1 dev (12B rectified-flow DiT: 19 dual + 38 single, d=3072).
+    pub fn flux1_dev() -> DiffusionConfig {
+        DiffusionConfig {
+            name: "FLUX.1 dev".into(),
+            d_model: 3072,
+            n_dual_blocks: 19,
+            n_single_blocks: 38,
+            d_ff: 4 * 3072,
+            uncompressed_bytes: 168 * 1024 * 1024,
+            denoise_steps: 50,
+            latent_tokens: 4096,
+        }
+    }
+
+    /// FLUX.1 schnell (same architecture, fewer steps).
+    pub fn flux1_schnell() -> DiffusionConfig {
+        DiffusionConfig {
+            name: "FLUX.1 schnell".into(),
+            denoise_steps: 4,
+            ..Self::flux1_dev()
+        }
+    }
+
+    /// Total transformer blocks (the decompression batching unit).
+    pub fn n_blocks(&self) -> usize {
+        self.n_dual_blocks + self.n_single_blocks
+    }
+
+    /// Compressible weight inventory (transformer blocks only — §3.1:
+    /// "all weight matrices in the transformer blocks of DMs").
+    pub fn weight_inventory(&self) -> Vec<WeightSpec> {
+        let d = self.d_model;
+        let mut specs = Vec::new();
+        let mk = |g: &str, name: &str, shape: [usize; 2], fan_in: usize| WeightSpec {
+            name: format!("{g}.{name}"),
+            group: g.to_string(),
+            shape,
+            fan_in,
+        };
+        for b in 0..self.n_dual_blocks {
+            let g = format!("dual_block.{b}");
+            // Two streams (image + text), each with attention + MLP +
+            // adaLN modulation.
+            for stream in ["img", "txt"] {
+                specs.push(mk(&g, &format!("{stream}.q_proj"), [d, d], d));
+                specs.push(mk(&g, &format!("{stream}.k_proj"), [d, d], d));
+                specs.push(mk(&g, &format!("{stream}.v_proj"), [d, d], d));
+                specs.push(mk(&g, &format!("{stream}.o_proj"), [d, d], d));
+                specs.push(mk(&g, &format!("{stream}.mlp_in"), [d, self.d_ff], d));
+                specs.push(mk(
+                    &g,
+                    &format!("{stream}.mlp_out"),
+                    [self.d_ff, d],
+                    self.d_ff,
+                ));
+                specs.push(mk(&g, &format!("{stream}.ada_ln"), [d, 6 * d], d));
+            }
+        }
+        for b in 0..self.n_single_blocks {
+            let g = format!("single_block.{b}");
+            specs.push(mk(&g, "q_proj", [d, d], d));
+            specs.push(mk(&g, "k_proj", [d, d], d));
+            specs.push(mk(&g, "v_proj", [d, d], d));
+            specs.push(mk(&g, "o_proj", [d, d], d));
+            specs.push(mk(&g, "mlp_in", [d, self.d_ff], d));
+            specs.push(mk(&g, "mlp_out", [self.d_ff, d], self.d_ff));
+            specs.push(mk(&g, "ada_ln", [d, 6 * d], d));
+        }
+        specs
+    }
+
+    /// Compressible parameters.
+    pub fn num_params(&self) -> u64 {
+        self.weight_inventory()
+            .iter()
+            .map(|s| s.numel() as u64)
+            .sum()
+    }
+
+    /// BF16 bytes of the compressible part.
+    pub fn bf16_bytes(&self) -> u64 {
+        self.num_params() * 2
+    }
+
+    /// Total BF16 model bytes (compressible + uncompressed parts).
+    pub fn total_bf16_bytes(&self) -> u64 {
+        self.bf16_bytes() + self.uncompressed_bytes
+    }
+
+    /// FLOPs for one denoising step (all blocks, attention + MLP over
+    /// the latent sequence).
+    pub fn flops_per_step(&self) -> f64 {
+        let d = self.d_model as f64;
+        let t = self.latent_tokens as f64;
+        let per_block_linear = 2.0 * t * d * (4.0 * d + 2.0 * self.d_ff as f64 + 6.0 * d);
+        let per_block_attn = 2.0 * 2.0 * t * t * d;
+        // Dual blocks do roughly twice the linear work.
+        (2.0 * per_block_linear + per_block_attn) * self.n_dual_blocks as f64
+            + (per_block_linear + per_block_attn) * self.n_single_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sd35_size_near_table3() {
+        // Paper Table 1: SD3.5-L original 16.29 GB.
+        let c = DiffusionConfig::sd35_large();
+        let gb = c.total_bf16_bytes() as f64 / 1e9;
+        assert!(
+            (14.0..18.5).contains(&gb),
+            "SD3.5 inventory {gb:.2} GB vs paper 16.29 GB"
+        );
+    }
+
+    #[test]
+    fn flux_size_near_table1() {
+        // Paper Table 1: FLUX.1 dev original 23.80 GB.
+        let c = DiffusionConfig::flux1_dev();
+        let gb = c.total_bf16_bytes() as f64 / 1e9;
+        assert!(
+            (20.0..28.0).contains(&gb),
+            "FLUX inventory {gb:.2} GB vs paper 23.8 GB"
+        );
+    }
+
+    #[test]
+    fn schnell_differs_only_in_steps() {
+        let dev = DiffusionConfig::flux1_dev();
+        let schnell = DiffusionConfig::flux1_schnell();
+        assert_eq!(dev.num_params(), schnell.num_params());
+        assert!(schnell.denoise_steps < dev.denoise_steps);
+    }
+
+    #[test]
+    fn inventory_groups_match_block_count() {
+        let c = DiffusionConfig::flux1_dev();
+        let groups: std::collections::HashSet<_> = c
+            .weight_inventory()
+            .into_iter()
+            .map(|s| s.group)
+            .collect();
+        assert_eq!(groups.len(), c.n_blocks());
+    }
+
+    #[test]
+    fn flops_positive_and_scale_with_blocks() {
+        let c = DiffusionConfig::sd35_large();
+        let f = c.flops_per_step();
+        assert!(f > 1e12, "{f:.3e}");
+        let mut bigger = c.clone();
+        bigger.n_dual_blocks *= 2;
+        assert!(bigger.flops_per_step() > 1.9 * f);
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic BF16 weight generation.
+//!
+//! We cannot download the paper's checkpoints, so weights are generated
+//! with the fan-in-scaled Gaussian statistics trained transformers
+//! exhibit. What matters for DF11 is the *exponent distribution*, and a
+//! Gaussian matches the paper's measurements (Figures 1/8/9): a sharply
+//! peaked, geometric-tailed exponent histogram with ~2.6 bits of entropy
+//! and only ~40 of 256 values populated, uniform-ish mantissa/sign.
+//! `entropy::tests::gaussian_weights_have_low_exponent_entropy` and the
+//! Figure 1/8/9 benches verify this correspondence quantitatively.
+
+use super::{ModelConfig, WeightSpec};
+use crate::bf16::Bf16;
+use crate::rng::Rng;
+
+/// Deterministic per-tensor seed derived from the model seed and name.
+fn tensor_seed(model_seed: u64, name: &str) -> u64 {
+    // FNV-1a over the name, mixed with the model seed.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ model_seed.rotate_left(17)
+}
+
+/// Generate one weight matrix for a spec.
+///
+/// Std dev is fan-in scaled (`1/sqrt(fan_in)`) like trained transformer
+/// projections; embeddings use the conventional 0.02.
+pub fn generate_weights(spec: &WeightSpec, model_seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(tensor_seed(model_seed, &spec.name));
+    let std = if spec.group == "embed" {
+        0.02
+    } else {
+        1.0 / (spec.fan_in as f64).sqrt()
+    };
+    let n = spec.numel();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Bf16::from_f32((rng.next_gaussian() * std) as f32));
+    }
+    out
+}
+
+/// Generate all weights for a model config, in inventory order.
+/// Memory: materializes everything — use only for executable-scale
+/// configs (~100M params ≈ 200 MB).
+pub fn generate_model_weights(
+    config: &ModelConfig,
+    model_seed: u64,
+) -> Vec<(WeightSpec, Vec<Bf16>)> {
+    config
+        .weight_inventory()
+        .into_iter()
+        .map(|spec| {
+            let w = generate_weights(&spec, model_seed);
+            (spec, w)
+        })
+        .collect()
+}
+
+/// Sampled weight statistics for paper-scale models: generates
+/// `sample_elems` weights per distinct matrix *kind* and measures the
+/// DF11-relevant statistics without materializing the model.
+pub struct SampledModelStats {
+    /// Measured exponent entropy (bits).
+    pub exponent_entropy: f64,
+    /// Measured DF11 compression ratio on the samples (percent).
+    pub ratio_percent: f64,
+    /// Effective bits per weight on the samples.
+    pub bits_per_weight: f64,
+}
+
+/// Estimate DF11 statistics for a (possibly huge) config by sampling.
+pub fn sample_model_stats(
+    config: &ModelConfig,
+    sample_elems: usize,
+    model_seed: u64,
+) -> crate::error::Result<SampledModelStats> {
+    use crate::dfloat11::Df11Tensor;
+    use crate::entropy::ComponentHistograms;
+
+    // One representative spec per (group kind, fan_in) signature.
+    let inv = config.weight_inventory();
+    let mut kinds: Vec<&WeightSpec> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for s in &inv {
+        let kind = (
+            s.name.rsplit('.').next().unwrap().to_string(),
+            s.fan_in,
+        );
+        if seen.insert(kind) {
+            kinds.push(s);
+        }
+    }
+
+    let mut hist = ComponentHistograms::new();
+    let mut original = 0u64;
+    let mut compressed = 0u64;
+    let mut elements = 0u64;
+    for spec in kinds {
+        // Small samples overstate the ratio (container overhead and
+        // block padding amortize over size), so take a meaningful slice
+        // per kind.
+        let per = sample_elems.max(16_384).min(spec.numel());
+        let sample_spec = WeightSpec {
+            name: spec.name.clone(),
+            group: spec.group.clone(),
+            shape: [1, per],
+            fan_in: spec.fan_in,
+        };
+        let w = generate_weights(&sample_spec, model_seed);
+        hist.record_weights(&w);
+        let t = Df11Tensor::compress(&w)?;
+        // Weight the sample by how many parameters this kind represents.
+        let kind_total: u64 = inv
+            .iter()
+            .filter(|s| {
+                s.name.rsplit('.').next() == spec.name.rsplit('.').next()
+                    && s.fan_in == spec.fan_in
+            })
+            .map(|s| s.numel() as u64)
+            .sum();
+        let scale = kind_total as f64 / per as f64;
+        original += (t.original_bytes() as f64 * scale) as u64;
+        compressed += (t.compressed_bytes() as f64 * scale) as u64;
+        elements += kind_total;
+    }
+    Ok(SampledModelStats {
+        exponent_entropy: hist.entropy().exponent_bits,
+        ratio_percent: 100.0 * compressed as f64 / original as f64,
+        bits_per_weight: compressed as f64 * 8.0 / elements as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::component_entropy;
+
+    #[test]
+    fn generation_is_deterministic_and_name_dependent() {
+        let spec_a = WeightSpec {
+            name: "block.0.q_proj".into(),
+            group: "block.0".into(),
+            shape: [16, 16],
+            fan_in: 16,
+        };
+        let spec_b = WeightSpec {
+            name: "block.0.k_proj".into(),
+            ..spec_a.clone()
+        };
+        let w1 = generate_weights(&spec_a, 42);
+        let w2 = generate_weights(&spec_a, 42);
+        let w3 = generate_weights(&spec_b, 42);
+        let w4 = generate_weights(&spec_a, 43);
+        assert_eq!(w1, w2);
+        assert_ne!(w1, w3);
+        assert_ne!(w1, w4);
+    }
+
+    #[test]
+    fn generated_weights_match_paper_statistics() {
+        // The premise of the substitution: synthetic exponent entropy in
+        // the paper's measured band (~2.6 bits), narrow support.
+        let spec = WeightSpec {
+            name: "block.0.up_proj".into(),
+            group: "block.0".into(),
+            shape: [512, 512],
+            fan_in: 512,
+        };
+        let w = generate_weights(&spec, 7);
+        let e = component_entropy(&w);
+        assert!(
+            (2.0..3.5).contains(&e.exponent_bits),
+            "exponent entropy {:.2}",
+            e.exponent_bits
+        );
+        assert!(e.mantissa_bits > 6.9);
+        assert!(e.sign_bits > 0.999);
+    }
+
+    #[test]
+    fn full_tiny_model_generates() {
+        let cfg = ModelConfig::test_tiny();
+        let ws = generate_model_weights(&cfg, 1);
+        assert_eq!(ws.len(), cfg.weight_inventory().len());
+        let total: usize = ws.iter().map(|(_, w)| w.len()).sum();
+        assert_eq!(total as u64, cfg.num_params());
+    }
+
+    #[test]
+    fn sampled_stats_in_paper_band() {
+        // Table 1: ratio 67.6-69.5%, 10.8-11.1 bits. Synthetic weights
+        // land close (we accept a slightly wider band).
+        let cfg = super::super::zoo::llama31_8b();
+        let s = sample_model_stats(&cfg, 64 * 1024, 3).unwrap();
+        assert!(
+            (63.0..74.0).contains(&s.ratio_percent),
+            "ratio {:.2}%",
+            s.ratio_percent
+        );
+        assert!(
+            (10.0..12.0).contains(&s.bits_per_weight),
+            "{:.2} bits",
+            s.bits_per_weight
+        );
+        assert!((2.0..3.5).contains(&s.exponent_entropy));
+    }
+}

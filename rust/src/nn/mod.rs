@@ -1,0 +1,187 @@
+//! Minimal f32 neural-net math for the native compute backend.
+//!
+//! The serving engine's reference backend runs the Llama-style forward
+//! pass in plain Rust. The PJRT backend (AOT JAX artifacts) computes the
+//! same functions; this module is the always-available fallback and the
+//! numerical cross-check. Weights arrive as BF16 (decompressed DF11 or
+//! resident BF16) and are widened to f32 — BF16→f32 widening is exact,
+//! so DF11-vs-BF16 bit-equality is preserved through this path.
+
+use crate::bf16::Bf16;
+
+/// Widen a BF16 slice to f32 (exact).
+pub fn bf16_to_f32(src: &[Bf16]) -> Vec<f32> {
+    src.iter().map(|w| w.to_f32()).collect()
+}
+
+/// `y = x · W` where `x` is `(m, k)` row-major and `W` is `(k, n)`.
+///
+/// Simple ikj-blocked loop: k-major inner accumulation into the output
+/// row keeps this cache-friendly without a BLAS dependency.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// RMSNorm with unit gain (freshly-initialized models use γ = 1).
+pub fn rmsnorm(x: &mut [f32], d: usize, eps: f32) {
+    for row in x.chunks_exact_mut(d) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let scale = 1.0 / (ms + eps).sqrt();
+        for v in row {
+            *v *= scale;
+        }
+    }
+}
+
+/// In-place numerically-stable softmax over the last axis.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x {
+        *v *= inv;
+    }
+}
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotary position embedding applied in-place to a `(heads, head_dim)`
+/// flattened q or k row for absolute position `pos`.
+pub fn rope(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f32) {
+    debug_assert_eq!(x.len(), n_heads * head_dim);
+    let half = head_dim / 2;
+    for h in 0..n_heads {
+        let row = &mut x[h * head_dim..(h + 1) * head_dim];
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(2.0 * i as f32 / head_dim as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (row[i], row[i + half]);
+            row[i] = a * cos - b * sin;
+            row[i + half] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Argmax index (greedy sampling).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Log-softmax value of index `t` (for NLL / perplexity).
+pub fn log_softmax_at(logits: &[f32], t: usize) -> f32 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+    logits[t] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        // x(2x3) * I(3x3) = x
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut w = vec![0.0; 9];
+        for i in 0..3 {
+            w[i * 3 + i] = 1.0;
+        }
+        let mut out = vec![0.0; 6];
+        matmul(&x, &w, 2, 3, 3, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] * [[1,1],[1,1]] = [[3,3],[7,7]]
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 1.0, 1.0, 1.0];
+        let mut out = vec![0.0; 4];
+        matmul(&x, &w, 2, 2, 2, &mut out);
+        assert_eq!(out, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let mut x = vec![3.0, 4.0, 0.0, 0.0];
+        rmsnorm(&mut x, 4, 1e-6);
+        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x[3] > 0.99);
+    }
+
+    #[test]
+    fn silu_known_points() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.731_058_6).abs() < 1e-5);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let base: Vec<f32> = (0..8).map(|i| i as f32 + 1.0).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        rope(&mut a, 1, 8, 3, 10000.0);
+        rope(&mut b, 1, 8, 4, 10000.0);
+        let norm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm(&a) - norm(&base)).abs() < 1e-4);
+        assert_ne!(a, b);
+        // Position 0 is the identity.
+        let mut c = base.clone();
+        rope(&mut c, 1, 8, 0, 10000.0);
+        assert_eq!(c, base);
+    }
+
+    #[test]
+    fn argmax_and_log_softmax() {
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        assert_eq!(argmax(&logits), 1);
+        let lp = log_softmax_at(&logits, 1);
+        assert!(lp < 0.0 && lp > -1.0);
+        // Probabilities across all indices sum to 1.
+        let sum: f32 = (0..4).map(|t| log_softmax_at(&logits, t).exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,191 @@
+//! A small property-testing driver.
+//!
+//! `proptest` is not in the vendored dependency set, so invariant tests
+//! use this driver: deterministic PRNG-generated cases, a configurable
+//! case count (`DF11_PROPTEST_CASES`), and on failure a replayable seed
+//! in the panic message. Shrinking is approximated by retrying the
+//! failing generator with progressively smaller size hints.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed (each case derives `seed + case_index`).
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("DF11_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config {
+            cases,
+            seed: 0xDF11_0000_0000_0001,
+            max_size: 4096,
+        }
+    }
+}
+
+/// A generation context handed to property closures.
+pub struct Gen<'a> {
+    /// The PRNG for this case.
+    pub rng: &'a mut Rng,
+    /// Size hint for this case (grows with the case index).
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_index(hi - lo + 1)
+    }
+
+    /// A vector of `len` values from `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self.rng)).collect()
+    }
+
+    /// Random bytes of the given length.
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        self.vec_of(len, |r| r.next_u32() as u8)
+    }
+
+    /// A size-scaled length in `[1, size]`.
+    pub fn len(&mut self) -> usize {
+        1 + self.rng.next_index(self.size.max(1))
+    }
+}
+
+/// Run a property over `config.cases` random cases.
+///
+/// The closure returns `Err(reason)` (or panics) to fail; the harness
+/// re-raises with the case seed so failures are replayable with
+/// [`check_one`].
+pub fn check(name: &str, config: Config, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64);
+        // Ramp the size hint: early cases are small (fast failure on
+        // trivial bugs), later cases stress harder.
+        let size = ((config.max_size as u64 * (case as u64 + 1)) / config.cases as u64)
+            .max(1) as usize;
+        if let Err(reason) = run_case(case_seed, size, &mut prop) {
+            // Crude shrink: retry with smaller sizes to report the
+            // smallest size that still fails.
+            let mut smallest = (size, reason.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                if let Err(r) = run_case(case_seed, s, &mut prop) {
+                    smallest = (s, r);
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Run one case with an explicit seed/size (replay helper).
+pub fn check_one(
+    seed: u64,
+    size: usize,
+    prop: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    run_case(seed, size, prop)
+}
+
+fn run_case(
+    seed: u64,
+    size: usize,
+    prop: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let mut g = Gen {
+        rng: &mut rng,
+        size,
+    };
+    prop(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "always-true",
+            Config {
+                cases: 10,
+                ..Config::default()
+            },
+            |g| {
+                count += 1;
+                let v = g.bytes(g.size.min(16));
+                if v.len() <= 16 {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-false",
+            Config {
+                cases: 3,
+                ..Config::default()
+            },
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut collect = |g: &mut Gen| -> Result<(), String> {
+            let v = g.bytes(8);
+            Err(format!("{v:?}"))
+        };
+        let a = check_one(42, 16, &mut collect).unwrap_err();
+        let b = check_one(42, 16, &mut collect).unwrap_err();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn size_ramp_reaches_max() {
+        let mut max_seen = 0usize;
+        check(
+            "size-ramp",
+            Config {
+                cases: 8,
+                seed: 1,
+                max_size: 64,
+            },
+            |g| {
+                max_seen = max_seen.max(g.size);
+                Ok(())
+            },
+        );
+        assert_eq!(max_seen, 64);
+    }
+}

@@ -1,0 +1,270 @@
+//! Artifact metadata + the PJRT-backed compute backend.
+
+use super::{literal_f32, literal_scalar_i32, literal_to_f32, Runtime};
+use crate::coordinator::{BlockBackend, BlockWeightsF32};
+use crate::error::{Error, Result};
+use crate::model::ModelConfig;
+use std::path::Path;
+
+/// Metadata recorded by `python/compile/aot.py` in `meta.json`.
+///
+/// Parsed with a purpose-built scanner (no serde in the vendored set);
+/// the file is machine-generated with known structure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub batch_sizes: Vec<usize>,
+    /// DF11 demo-kernel metadata, if the artifact was built.
+    pub df11_demo: Option<Df11DemoMeta>,
+}
+
+/// Shapes of the df11_decode demo artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Df11DemoMeta {
+    pub num_elements: usize,
+    pub num_chunks: usize,
+    pub encoded_len: usize,
+    pub num_luts: usize,
+    pub bit_len: u64,
+    pub bytes_per_chunk: usize,
+    pub seed: u64,
+}
+
+/// Extract `"key": <integer>` from a JSON blob (first occurrence after
+/// `anchor`, or anywhere if anchor is empty).
+fn json_uint(text: &str, key: &str, anchor: &str) -> Result<u64> {
+    let hay = if anchor.is_empty() {
+        text
+    } else {
+        let at = text
+            .find(anchor)
+            .ok_or_else(|| Error::container(format!("meta.json missing section {anchor}")))?;
+        &text[at..]
+    };
+    let pat = format!("\"{key}\"");
+    let at = hay
+        .find(&pat)
+        .ok_or_else(|| Error::container(format!("meta.json missing key {key}")))?;
+    let rest = &hay[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':').ok_or_else(|| {
+        Error::container(format!("meta.json malformed at key {key}"))
+    })?;
+    let digits: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits
+        .parse()
+        .map_err(|_| Error::container(format!("meta.json bad integer for {key}")))
+}
+
+impl ArtifactMeta {
+    /// Load from `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        if !path.exists() {
+            return Err(Error::MissingArtifact {
+                path: path.display().to_string(),
+            });
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let batch_sizes = {
+            let at = text
+                .find("\"batch_sizes\"")
+                .ok_or_else(|| Error::container("meta.json missing batch_sizes"))?;
+            let open = text[at..]
+                .find('[')
+                .ok_or_else(|| Error::container("batch_sizes not a list"))?;
+            let close = text[at + open..]
+                .find(']')
+                .ok_or_else(|| Error::container("batch_sizes unterminated"))?;
+            text[at + open + 1..at + open + close]
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect()
+        };
+        let df11_demo = if text.contains("\"df11_decode\":") && text.contains("\"num_elements\"") {
+            Some(Df11DemoMeta {
+                num_elements: json_uint(&text, "num_elements", "\"df11_decode\": {")? as usize,
+                num_chunks: json_uint(&text, "num_chunks", "\"df11_decode\": {")? as usize,
+                encoded_len: json_uint(&text, "encoded_len", "\"df11_decode\": {")? as usize,
+                num_luts: json_uint(&text, "num_luts", "\"df11_decode\": {")? as usize,
+                bit_len: json_uint(&text, "bit_len", "\"df11_decode\": {")?,
+                bytes_per_chunk: json_uint(&text, "bytes_per_chunk", "\"df11_decode\": {")?
+                    as usize,
+                seed: json_uint(&text, "seed", "\"df11_decode\": {")?,
+            })
+        } else {
+            None
+        };
+        Ok(ArtifactMeta {
+            vocab_size: json_uint(&text, "vocab_size", "")? as usize,
+            d_model: json_uint(&text, "d_model", "")? as usize,
+            n_layers: json_uint(&text, "n_layers", "")? as usize,
+            n_heads: json_uint(&text, "n_heads", "")? as usize,
+            n_kv_heads: json_uint(&text, "n_kv_heads", "")? as usize,
+            d_ff: json_uint(&text, "d_ff", "")? as usize,
+            max_seq_len: json_uint(&text, "max_seq_len", "")? as usize,
+            batch_sizes,
+            df11_demo,
+        })
+    }
+
+    /// Check a model config matches the lowered shapes.
+    pub fn check_config(&self, cfg: &ModelConfig) -> Result<()> {
+        let ok = cfg.vocab_size == self.vocab_size
+            && cfg.d_model == self.d_model
+            && cfg.n_layers == self.n_layers
+            && cfg.n_heads == self.n_heads
+            && cfg.n_kv_heads == self.n_kv_heads
+            && cfg.d_ff == self.d_ff
+            && cfg.max_seq_len == self.max_seq_len;
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::ShapeMismatch(format!(
+                "model config {:?} does not match artifacts (lowered for {}d/{}L/v{})",
+                cfg.name, self.d_model, self.n_layers, self.vocab_size
+            )))
+        }
+    }
+}
+
+/// PJRT-backed [`BlockBackend`]: runs the AOT JAX block/lm_head graphs.
+pub struct XlaBackend {
+    runtime: Runtime,
+    meta: ArtifactMeta,
+}
+
+impl XlaBackend {
+    /// Open the artifact directory and boot the PJRT client.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        let runtime = Runtime::cpu(artifact_dir.as_ref())?;
+        let meta = ArtifactMeta::load(artifact_dir.as_ref())?;
+        Ok(XlaBackend { runtime, meta })
+    }
+
+    /// Artifact metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// The underlying runtime.
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn artifact_for_batch(&self, prefix: &str, batch: usize) -> Result<String> {
+        if !self.meta.batch_sizes.contains(&batch) {
+            return Err(Error::ShapeMismatch(format!(
+                "no {prefix} artifact for batch {batch} (available: {:?}); \
+                 re-run `make artifacts` with this batch size",
+                self.meta.batch_sizes
+            )));
+        }
+        Ok(format!("{prefix}_b{batch}"))
+    }
+}
+
+impl BlockBackend for XlaBackend {
+    fn block_forward(
+        &mut self,
+        cfg: &ModelConfig,
+        x: &mut [f32],
+        w: &BlockWeightsF32,
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        batch: usize,
+        pos: usize,
+    ) -> Result<()> {
+        self.meta.check_config(cfg)?;
+        let name = self.artifact_for_batch("block_fwd", batch)?;
+        let d = cfg.d_model as i64;
+        let kv = cfg.kv_dim() as i64;
+        let ff = cfg.d_ff as i64;
+        let ms = cfg.max_seq_len as i64;
+        let b = batch as i64;
+        let inputs = [
+            literal_f32(x, &[b, d])?,
+            literal_f32(&w.q, &[d, d])?,
+            literal_f32(&w.k, &[d, kv])?,
+            literal_f32(&w.v, &[d, kv])?,
+            literal_f32(&w.o, &[d, d])?,
+            literal_f32(&w.gate, &[d, ff])?,
+            literal_f32(&w.up, &[d, ff])?,
+            literal_f32(&w.down, &[ff, d])?,
+            literal_f32(k_cache, &[b, ms, kv])?,
+            literal_f32(v_cache, &[b, ms, kv])?,
+            literal_scalar_i32(pos as i32),
+        ];
+        let out = self.runtime.run(&name, &inputs)?;
+        if out.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "block_fwd returned {} outputs, expected 3",
+                out.len()
+            )));
+        }
+        x.copy_from_slice(&literal_to_f32(&out[0])?);
+        k_cache.copy_from_slice(&literal_to_f32(&out[1])?);
+        v_cache.copy_from_slice(&literal_to_f32(&out[2])?);
+        Ok(())
+    }
+
+    fn lm_head(
+        &mut self,
+        cfg: &ModelConfig,
+        x: &[f32],
+        w: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        self.meta.check_config(cfg)?;
+        let name = self.artifact_for_batch("lm_head", batch)?;
+        let d = cfg.d_model as i64;
+        let v = cfg.vocab_size as i64;
+        let out = self.runtime.run(
+            &name,
+            &[literal_f32(x, &[batch as i64, d])?, literal_f32(w, &[d, v])?],
+        )?;
+        literal_to_f32(&out[0])
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_uint_scanner() {
+        let text = r#"{"a": 12, "nested": {"b": 34, "c": 56}, "d": 78}"#;
+        assert_eq!(json_uint(text, "a", "").unwrap(), 12);
+        assert_eq!(json_uint(text, "b", "\"nested\"").unwrap(), 34);
+        assert_eq!(json_uint(text, "d", "").unwrap(), 78);
+        assert!(json_uint(text, "zz", "").is_err());
+    }
+
+    #[test]
+    fn meta_loads_when_artifacts_exist() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.d_model, 768);
+        assert_eq!(meta.n_layers, 12);
+        assert!(meta.batch_sizes.contains(&1));
+        // The lowered config must equal the Rust-side tiny_100m config.
+        let cfg = crate::model::ModelConfig::tiny_100m();
+        meta.check_config(&cfg).unwrap();
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end tests over the PJRT runtime + AOT artifacts.
+//!
+//! Gated on `artifacts/meta.json` (run `make artifacts` first); the
+//! Makefile's `test` target guarantees the ordering. Each test boots a
+//! real PJRT CPU client and executes the JAX-lowered graphs.
+
+use dfloat11::coordinator::{Engine, NativeBackend, WeightMode};
+use dfloat11::model::ModelConfig;
+use dfloat11::runtime::{ArtifactMeta, XlaBackend};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+/// The XLA backend and the native backend agree numerically on the full
+/// 100M model's decode step (same weights, same tokens).
+#[test]
+fn xla_and_native_backends_agree() {
+    let Some(dir) = artifact_dir() else { return };
+    let cfg = ModelConfig::tiny_100m();
+    ArtifactMeta::load(&dir).unwrap().check_config(&cfg).unwrap();
+
+    let mut native = Engine::build_with_backend(
+        &cfg,
+        123,
+        WeightMode::Bf16Resident,
+        Box::new(NativeBackend),
+    )
+    .unwrap();
+    let mut xla = Engine::build_with_backend(
+        &cfg,
+        123,
+        WeightMode::Bf16Resident,
+        Box::new(XlaBackend::open(&dir).unwrap()),
+    )
+    .unwrap();
+
+    native.reset(2);
+    xla.reset(2);
+    let tokens = [10u32, 200];
+    let ln = native.step(&tokens).unwrap();
+    let lx = xla.step(&tokens).unwrap();
+    assert_eq!(ln.len(), lx.len());
+    let mut max_rel = 0f32;
+    for (a, b) in ln.iter().zip(&lx) {
+        let rel = (a - b).abs() / a.abs().max(1e-3);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(
+        max_rel < 2e-2,
+        "native vs xla logits diverge: max rel err {max_rel}"
+    );
+    // Greedy decisions agree.
+    let v = cfg.vocab_size;
+    for b in 0..2 {
+        let an = dfloat11::nn::argmax(&ln[b * v..(b + 1) * v]);
+        let ax = dfloat11::nn::argmax(&lx[b * v..(b + 1) * v]);
+        assert_eq!(an, ax, "greedy token differs on backend");
+    }
+}
+
+/// DF11 vs BF16 through the *PJRT* backend: logits bitwise identical.
+/// (The losslessness claim on the real artifact execution path.)
+#[test]
+fn df11_lossless_on_pjrt_path() {
+    let Some(dir) = artifact_dir() else { return };
+    let cfg = ModelConfig::tiny_100m();
+    let mut bf16 = Engine::build_with_backend(
+        &cfg,
+        7,
+        WeightMode::Bf16Resident,
+        Box::new(XlaBackend::open(&dir).unwrap()),
+    )
+    .unwrap();
+    let mut df11 = Engine::build_with_backend(
+        &cfg,
+        7,
+        WeightMode::Df11,
+        Box::new(XlaBackend::open(&dir).unwrap()),
+    )
+    .unwrap();
+    bf16.reset(1);
+    df11.reset(1);
+    let lb = bf16.step(&[42]).unwrap();
+    let ld = df11.step(&[42]).unwrap();
+    assert_eq!(lb, ld, "DF11 must be bit-identical to BF16 through PJRT");
+}
+
+/// Unsupported batch sizes are rejected with a helpful error.
+#[test]
+fn unsupported_batch_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let cfg = ModelConfig::tiny_100m();
+    let mut e = Engine::build_with_backend(
+        &cfg,
+        1,
+        WeightMode::Bf16Resident,
+        Box::new(XlaBackend::open(&dir).unwrap()),
+    )
+    .unwrap();
+    e.reset(3); // artifacts exist for 1, 2, 4, 8
+    let err = e.step(&[1, 2, 3]).unwrap_err().to_string();
+    assert!(err.contains("batch 3"), "unhelpful error: {err}");
+}
+
+/// Wrong model config against the artifacts is rejected.
+#[test]
+fn config_mismatch_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let meta = ArtifactMeta::load(&dir).unwrap();
+    let mut cfg = ModelConfig::tiny_100m();
+    cfg.d_model *= 2;
+    assert!(meta.check_config(&cfg).is_err());
+}

@@ -1,0 +1,161 @@
+//! Cross-module integration tests: compress -> serialize -> load ->
+//! serve -> verify, all through public APIs only.
+
+use dfloat11::coordinator::{Engine, Request, SchedulerConfig, Server, WeightMode};
+use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::dfloat11::serial;
+use dfloat11::gpu_sim::{Device, TransferModel};
+use dfloat11::model::corpus::{corpus_split, word_level_perplexity};
+use dfloat11::model::init::generate_model_weights;
+use dfloat11::model::ModelConfig;
+use dfloat11::{Bf16, Df11Model, Df11Tensor};
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "itest".into(),
+        vocab_size: 96,
+        d_model: 48,
+        n_layers: 3,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 96,
+        max_seq_len: 96,
+        tie_embeddings: false,
+    }
+}
+
+/// Full pipeline: generate -> compress every tensor -> serialize the
+/// model -> reload -> decompress -> bit-compare against the originals.
+#[test]
+fn compress_serialize_reload_roundtrip() {
+    let cfg = small_cfg();
+    let raw = generate_model_weights(&cfg, 77);
+    let mut model = Df11Model::new("itest");
+    let mut originals = Vec::new();
+    for (spec, w) in raw {
+        let t = Df11Tensor::compress(&w).unwrap();
+        originals.push((spec.name.clone(), w));
+        model.push_group(dfloat11::dfloat11::TensorGroup {
+            name: spec.name.clone(),
+            tensors: vec![(spec.name, t)],
+        });
+    }
+    let mut buf = Vec::new();
+    serial::write_model(&mut buf, &model).unwrap();
+    let reloaded = serial::read_model(&mut buf.as_slice()).unwrap();
+    assert_eq!(reloaded.num_elements(), model.num_elements());
+    for (name, w) in &originals {
+        let g = reloaded.group(name).unwrap();
+        let restored = g.tensors[0].1.decompress().unwrap();
+        assert_eq!(&restored, w, "{name}");
+        // The optimized sequential decoder agrees too.
+        assert_eq!(&decompress_sequential(&g.tensors[0].1).unwrap(), w);
+    }
+}
+
+/// Serving: all three weight modes produce token-identical outputs on
+/// the same workload (Table 2's losslessness, through the whole stack).
+#[test]
+fn three_modes_serve_identically() {
+    let cfg = small_cfg();
+    let workload: Vec<Request> = (0..5)
+        .map(|i| Request::new(vec![(i * 13 % 90 + 1) as u32, 2, 3], 6))
+        .collect();
+    let mut outputs = Vec::new();
+    for mode in [
+        WeightMode::Bf16Resident,
+        WeightMode::Df11,
+        WeightMode::OffloadBf16 {
+            resident_layers: 1,
+            transfer: TransferModel::for_device(&Device::a100_40g()),
+        },
+    ] {
+        let engine = Engine::build(&cfg, 5, mode).unwrap();
+        let mut server = Server::new(engine, SchedulerConfig { max_batch: 2 });
+        for r in workload.clone() {
+            server.submit(r);
+        }
+        let report = server.drain().unwrap();
+        outputs.push(
+            report
+                .responses
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(outputs[0], outputs[1], "df11 == bf16");
+    assert_eq!(outputs[0], outputs[2], "offload == bf16");
+}
+
+/// Perplexity on the synthetic corpus is finite and exactly equal
+/// between BF16 and DF11 (Table 2's perplexity columns).
+#[test]
+fn perplexity_identical_across_modes() {
+    let cfg = small_cfg();
+    let (_, eval) = corpus_split(600, 3);
+    let eval: Vec<u32> = eval.into_iter().map(|t| t % cfg.vocab_size as u32).collect();
+    let mut ppl = Vec::new();
+    for mode in [WeightMode::Bf16Resident, WeightMode::Df11] {
+        let mut e = Engine::build(&cfg, 6, mode).unwrap();
+        let nll = e.nll_nats(&eval).unwrap();
+        ppl.push(word_level_perplexity(nll, &eval));
+    }
+    assert!(ppl[0].is_finite() && ppl[0] > 1.0);
+    assert_eq!(ppl[0], ppl[1], "word-level perplexity must match exactly");
+}
+
+/// Engines with different seeds produce different weights (sanity that
+/// losslessness checks aren't comparing constants).
+#[test]
+fn different_seeds_differ() {
+    let cfg = small_cfg();
+    let mut a = Engine::build(&cfg, 1, WeightMode::Bf16Resident).unwrap();
+    let mut b = Engine::build(&cfg, 2, WeightMode::Bf16Resident).unwrap();
+    let out_a = a.generate(&[vec![1, 2, 3]], 8).unwrap();
+    let out_b = b.generate(&[vec![1, 2, 3]], 8).unwrap();
+    assert_ne!(out_a, out_b);
+}
+
+/// Special values (NaN/Inf/subnormal/zero) survive the full container
+/// path inside a model tensor.
+#[test]
+fn special_values_survive_model_path() {
+    let mut w: Vec<Bf16> = (0..5000)
+        .map(|i| Bf16::from_f32((i as f32 - 2500.0) * 1e-4))
+        .collect();
+    w[0] = Bf16::from_f32(f32::NAN);
+    w[1] = Bf16::from_f32(f32::INFINITY);
+    w[2] = Bf16::from_f32(f32::NEG_INFINITY);
+    w[3] = Bf16::from_bits(0x0001);
+    w[4] = Bf16::from_bits(0x8000); // -0.0
+    let t = Df11Tensor::compress(&w).unwrap();
+    let mut buf = Vec::new();
+    serial::write_tensor(&mut buf, &t).unwrap();
+    let t2 = serial::read_tensor(&mut buf.as_slice()).unwrap();
+    assert_eq!(t2.decompress().unwrap(), w);
+}
+
+/// The whole-model compression ratio at realistic matrix sizes lands in
+/// the paper's Table 1 band.
+#[test]
+fn model_ratio_in_table1_band() {
+    let cfg = ModelConfig {
+        name: "ratio-test".into(),
+        vocab_size: 512,
+        d_model: 256,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: 512,
+        max_seq_len: 64,
+        tie_embeddings: false,
+    };
+    let engine = Engine::build(&cfg, 9, WeightMode::Df11).unwrap();
+    let bf16_bytes = cfg.bf16_bytes();
+    let ratio = 100.0 * engine.resident_weight_bytes() as f64 / bf16_bytes as f64;
+    assert!(
+        (64.0..76.0).contains(&ratio),
+        "model ratio {ratio:.2}% outside the plausible Table 1 band"
+    );
+}

@@ -1,0 +1,218 @@
+//! Property-based tests over the crate's core invariants, driven by
+//! `proptest_lite` (the vendored set has no proptest).
+
+use dfloat11::bf16::{merge_planes, split_planes, Bf16};
+use dfloat11::coordinator::{Request, RequestQueue};
+use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::dfloat11::serial::{pack_gaps, unpack_gaps};
+use dfloat11::dfloat11::Df11Tensor;
+use dfloat11::gpu_sim::prefix_sum::{blelloch_exclusive_scan, serial_exclusive_scan};
+use dfloat11::gpu_sim::KernelConfig;
+use dfloat11::huffman::canonical::is_prefix_free;
+use dfloat11::huffman::{decode_all, encode_symbols, Codebook};
+use dfloat11::proptest_lite::{check, Config};
+use dfloat11::rng::Rng;
+
+fn cfg(cases: u32, max_size: usize) -> Config {
+    Config {
+        cases,
+        max_size,
+        ..Config::default()
+    }
+}
+
+/// Arbitrary BF16 tensors — including NaN/Inf patterns — roundtrip
+/// bit-exactly through compress + both decoders.
+#[test]
+fn prop_df11_roundtrip_arbitrary_bits() {
+    check("df11-roundtrip", cfg(40, 20_000), |g| {
+        let n = g.len();
+        let ws: Vec<Bf16> = g.vec_of(n, |r| Bf16::from_bits(r.next_u32() as u16));
+        let t = Df11Tensor::compress(&ws).map_err(|e| e.to_string())?;
+        let kernel = t.decompress().map_err(|e| e.to_string())?;
+        if kernel != ws {
+            return Err(format!("kernel mismatch at n={n}"));
+        }
+        let seq = decompress_sequential(&t).map_err(|e| e.to_string())?;
+        if seq != ws {
+            return Err(format!("sequential mismatch at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+/// Gaussian tensors (realistic exponent skew) roundtrip across random
+/// kernel geometries.
+#[test]
+fn prop_df11_roundtrip_random_geometry() {
+    check("df11-geometry", cfg(30, 30_000), |g| {
+        let n = g.len().max(8);
+        let t_per_block = [4usize, 8, 32, 256][g.usize_in(0, 3)];
+        let n_bytes = [2usize, 4, 8, 16][g.usize_in(0, 3)];
+        let mut rng = Rng::new(g.rng.next_u64());
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        let ws: Vec<Bf16> = xs.into_iter().map(Bf16::from_f32).collect();
+        let config = KernelConfig {
+            threads_per_block: t_per_block,
+            bytes_per_thread: n_bytes,
+            parallelism: 1 + g.usize_in(0, 2),
+        };
+        let t = Df11Tensor::compress_shaped(&ws, &[n], &config).map_err(|e| e.to_string())?;
+        let mut out = vec![Bf16::from_bits(0); n];
+        t.decompress_with(&mut out, &config)
+            .map_err(|e| e.to_string())?;
+        if out != ws {
+            return Err(format!("mismatch T={t_per_block} n={n_bytes} len={n}"));
+        }
+        Ok(())
+    });
+}
+
+/// Huffman codebooks from arbitrary frequency tables are prefix-free,
+/// Kraft-tight, and decode what they encode.
+#[test]
+fn prop_huffman_prefix_free_and_roundtrip() {
+    check("huffman-prefix-free", cfg(60, 2000), |g| {
+        let alphabet = 1 + g.usize_in(0, 255);
+        let n = g.len();
+        let syms: Vec<u8> = g.vec_of(n, |r| (r.next_index(alphabet)) as u8);
+        let mut freqs = [0u64; 256];
+        for &s in &syms {
+            freqs[s as usize] += 1;
+        }
+        let cb = Codebook::from_frequencies(&freqs).map_err(|e| e.to_string())?;
+        if !is_prefix_free(cb.canonical()) {
+            return Err("not prefix free".into());
+        }
+        if cb.kraft_sum() > 1.0 + 1e-9 {
+            return Err(format!("kraft {} > 1", cb.kraft_sum()));
+        }
+        let (bytes, bits) = encode_symbols(&cb, &syms).map_err(|e| e.to_string())?;
+        let back = decode_all(&cb, &bytes, bits).map_err(|e| e.to_string())?;
+        if back != syms {
+            return Err("decode mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// The Blelloch scan equals the serial scan for arbitrary inputs.
+#[test]
+fn prop_blelloch_equals_serial() {
+    check("blelloch", cfg(80, 3000), |g| {
+        let n = g.usize_in(0, g.size);
+        let xs: Vec<u32> = g.vec_of(n, |r| r.next_u32());
+        if blelloch_exclusive_scan(&xs) != serial_exclusive_scan(&xs) {
+            return Err(format!("scan mismatch at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+/// BF16 plane split/merge is the identity for arbitrary bit patterns.
+#[test]
+fn prop_plane_split_merge_identity() {
+    check("planes", cfg(50, 5000), |g| {
+        let n = g.len();
+        let ws: Vec<Bf16> = g.vec_of(n, |r| Bf16::from_bits(r.next_u32() as u16));
+        let (e, sm) = split_planes(&ws);
+        if merge_planes(&e, &sm) != ws {
+            return Err("plane roundtrip broke".into());
+        }
+        Ok(())
+    });
+}
+
+/// 5-bit gap packing roundtrips for arbitrary gap arrays.
+#[test]
+fn prop_gap_packing_roundtrip() {
+    check("gap-pack", cfg(60, 4000), |g| {
+        let n = g.usize_in(0, g.size);
+        let gaps: Vec<u8> = g.vec_of(n, |r| (r.next_index(32)) as u8);
+        let packed = pack_gaps(&gaps);
+        let back = unpack_gaps(&packed, n).map_err(|e| e.to_string())?;
+        if back != gaps {
+            return Err("gap roundtrip broke".into());
+        }
+        Ok(())
+    });
+}
+
+/// Queue invariants: FIFO order preserved, head always scheduled, no
+/// request lost or duplicated under random batch sizes.
+#[test]
+fn prop_queue_never_starves_or_duplicates() {
+    check("queue", cfg(50, 200), |g| {
+        let mut q = RequestQueue::new();
+        let n = g.usize_in(1, g.size.max(2));
+        for i in 0..n {
+            q.push(Request::new(vec![i as u32], 1), i as f64);
+        }
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            let head = q.queued_ids()[0];
+            let batch = q.next_batch(1 + g.usize_in(0, 7));
+            if batch.is_empty() {
+                return Err("empty batch with non-empty queue".into());
+            }
+            if batch[0].id != head {
+                return Err("head was starved".into());
+            }
+            seen.extend(batch.into_iter().map(|r| r.id));
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != n || seen.len() != n {
+            return Err(format!("lost/duplicated: {} of {n}", seen.len()));
+        }
+        if !seen.windows(2).all(|w| w[0] < w[1]) {
+            return Err("FIFO order violated".into());
+        }
+        Ok(())
+    });
+}
+
+/// Compressed size is always within sane bounds: never larger than
+/// ~original + overhead, never below the entropy bound.
+#[test]
+fn prop_compressed_size_bounds() {
+    check("size-bounds", cfg(30, 60_000), |g| {
+        let n = g.len().max(1000);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.05);
+        let ws: Vec<Bf16> = xs.into_iter().map(Bf16::from_f32).collect();
+        let t = Df11Tensor::compress(&ws).map_err(|e| e.to_string())?;
+        let entropy = dfloat11::entropy::component_entropy(&ws);
+        let lower = (entropy.exponent_bits * n as f64 / 8.0) as u64 + n as u64; // exp + sm planes
+        let upper = (n as u64) * 2 + 8192 + n as u64 / 4; // original + overhead
+        let c = t.compressed_bytes();
+        if c < lower {
+            return Err(format!("compressed {c} below entropy bound {lower}"));
+        }
+        if c > upper {
+            return Err(format!("compressed {c} above upper bound {upper}"));
+        }
+        Ok(())
+    });
+}
+
+/// rANS roundtrips arbitrary byte streams.
+#[test]
+fn prop_rans_roundtrip() {
+    check("rans", cfg(40, 10_000), |g| {
+        let n = g.len();
+        let skew = g.usize_in(1, 8);
+        let data: Vec<u8> = g.vec_of(n, |r| (r.next_index(1 << skew)) as u8);
+        let model = dfloat11::ans::RansModel::from_data(&data);
+        let enc = dfloat11::ans::rans_encode(&model, &data).map_err(|e| e.to_string())?;
+        let dec =
+            dfloat11::ans::rans_decode(&model, &enc, data.len()).map_err(|e| e.to_string())?;
+        if dec != data {
+            return Err("rans roundtrip broke".into());
+        }
+        Ok(())
+    });
+}
