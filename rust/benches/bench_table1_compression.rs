@@ -6,14 +6,14 @@
 //! * **sampled** — the paper-scale config's statistics, measured on
 //!   weighted per-kind weight samples (no 800 GB materialization).
 //!
-//! Also prints the classical lossless baselines the related work
-//! (ZipNN) compares against: zlib and zstd on the same bytes.
+//! Also prints the in-tree classical baseline (rANS, nvCOMP-style) on
+//! the same bytes. zlib/zstd are not in the vendored dependency set, so
+//! the ZipNN-style general-codec comparison uses rANS alone.
 
 use dfloat11::bench_harness::{Bencher, Table};
 use dfloat11::model::init::{generate_model_weights, sample_model_stats};
 use dfloat11::model::zoo;
 use dfloat11::Df11Tensor;
-use std::io::Write;
 
 /// Paper Table 1 reference values: (name, ratio %, bits/weight).
 const PAPER: &[(&str, f64, f64)] = &[
@@ -94,32 +94,6 @@ fn main() {
         dfloat11::bench_harness::fmt::seconds(r.mean),
     ]);
 
-    let zlib_len = {
-        let mut enc =
-            flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
-        enc.write_all(&bytes).unwrap();
-        enc.finish().unwrap().len()
-    };
-    let r = bench.bench("zlib", || {
-        let mut enc =
-            flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
-        enc.write_all(&bytes).unwrap();
-        enc.finish().unwrap().len()
-    });
-    b.row(&[
-        "zlib".into(),
-        format!("{:.2}", 100.0 * zlib_len as f64 / bytes.len() as f64),
-        dfloat11::bench_harness::fmt::seconds(r.mean),
-    ]);
-
-    let zstd_len = zstd::bulk::compress(&bytes, 3).unwrap().len();
-    let r = bench.bench("zstd", || zstd::bulk::compress(&bytes, 3).unwrap().len());
-    b.row(&[
-        "zstd-3".into(),
-        format!("{:.2}", 100.0 * zstd_len as f64 / bytes.len() as f64),
-        dfloat11::bench_harness::fmt::seconds(r.mean),
-    ]);
-
     let (model, enc) = dfloat11::ans::compress_bf16_generic(w).unwrap();
     b.row(&[
         "rANS (nvCOMP-style)".into(),
@@ -130,5 +104,8 @@ fn main() {
         "-".into(),
     ]);
     b.print();
-    println!("\npaper: DF11 ~68% vs nvCOMP ANS ~79%; generic codecs do not exploit the exponent/mantissa split.");
+    println!(
+        "\npaper: DF11 ~68% vs nvCOMP ANS ~79%; generic codecs do not exploit \
+         the exponent/mantissa split."
+    );
 }

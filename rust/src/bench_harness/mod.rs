@@ -188,6 +188,12 @@ pub mod fmt {
         }
     }
 
+    /// Format a two-phase timing split as `"p1 + p2"` — used by the
+    /// decompression-pipeline rows (phase 1 counting vs phase 2 decode).
+    pub fn phase_split(phase1_s: f64, phase2_s: f64) -> String {
+        format!("{} + {}", seconds(phase1_s), seconds(phase2_s))
+    }
+
     /// Format a byte count adaptively.
     pub fn bytes(b: u64) -> String {
         if b >= 1 << 30 {
@@ -244,5 +250,6 @@ mod tests {
         assert!(fmt::seconds(2e-6).contains("µs"));
         assert_eq!(fmt::throughput_bps(3e9), "3.00 GB/s");
         assert_eq!(fmt::bytes(2048), "2.00 KiB");
+        assert_eq!(fmt::phase_split(0.002, 2.0), "2.000 ms + 2.000 s");
     }
 }

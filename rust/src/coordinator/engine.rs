@@ -229,9 +229,24 @@ pub struct Engine {
     v_cache: Vec<Vec<f32>>,
     batch: usize,
     pos: usize,
+    /// Worker threads for the parallel decompression pipeline
+    /// (1 = sequential decoder).
+    decode_threads: usize,
     /// Latency accounting (Figure 6's breakdown).
     pub breakdown: Breakdown,
 }
+
+/// Default decompression pool width: one worker per available core.
+fn default_decode_threads() -> usize {
+    crate::dfloat11::parallel::auto_threads()
+}
+
+/// Tensors below this element count decode sequentially even when a
+/// worker pool is configured: the parallel pipeline spawns scoped
+/// threads per call (not a persistent pool), and two spawn/join rounds
+/// cost tens of microseconds — about what the sequential decoder needs
+/// for ~64k elements — so smaller tensors lose by going parallel.
+const PARALLEL_MIN_ELEMENTS: usize = 64 * 1024;
 
 impl Engine {
     /// Build an engine with synthetic weights for `config`.
@@ -271,7 +286,8 @@ impl Engine {
                 let mut groups: Vec<(String, Vec<(String, Df11Tensor)>)> = Vec::new();
                 for (spec, w) in raw {
                     let kcfg = KernelConfig::for_elements(w.len());
-                    let t = Df11Tensor::compress_shaped(&w, &[spec.shape[0], spec.shape[1]], &kcfg)?;
+                    let t =
+                        Df11Tensor::compress_shaped(&w, &[spec.shape[0], spec.shape[1]], &kcfg)?;
                     match groups.iter_mut().find(|(g, _)| *g == spec.group) {
                         Some((_, ts)) => ts.push((spec.name, t)),
                         None => groups.push((spec.group, vec![(spec.name, t)])),
@@ -298,6 +314,7 @@ impl Engine {
             v_cache: Vec::new(),
             batch: 0,
             pos: 0,
+            decode_threads: default_decode_threads(),
             breakdown: Breakdown::default(),
         })
     }
@@ -305,6 +322,21 @@ impl Engine {
     /// Model config.
     pub fn config(&self) -> &ModelConfig {
         &self.config
+    }
+
+    /// Set the decompression worker-thread count (the serve `--threads`
+    /// knob). `0` restores the auto default (one worker per core).
+    pub fn set_decode_threads(&mut self, threads: usize) {
+        self.decode_threads = if threads == 0 {
+            default_decode_threads()
+        } else {
+            threads
+        };
+    }
+
+    /// Current decompression worker-thread count.
+    pub fn decode_threads(&self) -> usize {
+        self.decode_threads
     }
 
     /// Device-resident weight bytes for this mode (drives the memory
@@ -342,51 +374,14 @@ impl Engine {
         self.pos
     }
 
-    /// Fetch (and account) one weight matrix as f32.
-    fn fetch(&mut self, name: &str) -> Result<Vec<f32>> {
-        match &self.store {
-            Store::Bf16(map) => {
-                let w = map
-                    .get(name)
-                    .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
-                Ok(nn::bf16_to_f32(w))
-            }
-            Store::Df11 { model, index } => {
-                let &(gi, ti) = index
-                    .get(name)
-                    .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
-                let t0 = Instant::now();
-                // Production hot path: the optimized sequential decoder
-                // (the Algorithm-1-faithful two-phase kernel lives in
-                // gpu_sim and is exercised by tests/benches).
-                let w = crate::dfloat11::decompress::decompress_sequential(
-                    &model.groups[gi].tensors[ti].1,
-                )?;
-                self.breakdown
-                    .add_measured(Component::Decompress, t0.elapsed().as_secs_f64());
-                Ok(nn::bf16_to_f32(&w))
-            }
-            Store::Offload {
-                host,
-                resident_layers,
-                transfer,
-            } => {
-                let w = host
-                    .get(name)
-                    .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
-                if !resident_group(name, *resident_layers) {
-                    // Pay the PCIe cost: model the time, do a real copy.
-                    let bytes = w.len() as u64 * 2;
-                    let sim = transfer.transfer_time(bytes);
-                    self.breakdown.add_simulated(Component::Transfer, sim);
-                }
-                Ok(nn::bf16_to_f32(w))
-            }
-        }
-    }
-
     /// One decode step: `tokens` has `batch` entries; returns logits
     /// `(batch, vocab)` and advances the position.
+    ///
+    /// Transformer blocks run through a double-buffered pipeline: block
+    /// `i+1`'s weights are fetched (decompressed via the parallel
+    /// two-phase pipeline, or transferred for the offload baseline) on
+    /// a prefetch worker while block `i` computes, hiding decompression
+    /// latency behind block math.
     pub fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
         if tokens.len() != self.batch {
             return Err(Error::InvalidArgument(format!(
@@ -399,10 +394,14 @@ impl Engine {
             return Err(Error::InvalidArgument("call reset(batch) first".into()));
         }
         let d = self.config.d_model;
+        let threads = self.decode_threads;
 
-        // Embedding gather.
+        // Embedding fetch + gather. The fetch cost is charged to
+        // Decompress/Transfer by `charge`, so the Embed timer starts
+        // after it — components must not double-count seconds.
+        let (embed, cost) = fetch_weights(&self.store, "embed.tok", threads)?;
+        cost.charge(&mut self.breakdown);
         let t0 = Instant::now();
-        let embed = self.fetch("embed.tok")?;
         let mut x = vec![0.0f32; self.batch * d];
         for (b, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
@@ -414,30 +413,43 @@ impl Engine {
         self.breakdown
             .add_measured(Component::Embed, t0.elapsed().as_secs_f64());
 
-        // Transformer blocks, block-batched decompression (§2.3.3).
-        for l in 0..self.config.n_layers {
-            let g = format!("block.{l}");
-            let w = BlockWeightsF32 {
-                q: self.fetch(&format!("{g}.q_proj"))?,
-                k: self.fetch(&format!("{g}.k_proj"))?,
-                v: self.fetch(&format!("{g}.v_proj"))?,
-                o: self.fetch(&format!("{g}.o_proj"))?,
-                gate: self.fetch(&format!("{g}.gate_proj"))?,
-                up: self.fetch(&format!("{g}.up_proj"))?,
-                down: self.fetch(&format!("{g}.down_proj"))?,
-            };
-            let t0 = Instant::now();
-            let (kc, vc) = (&mut self.k_cache[l], &mut self.v_cache[l]);
-            self.backend
-                .block_forward(&self.config, &mut x, &w, kc, vc, self.batch, self.pos)?;
-            self.breakdown
-                .add_measured(Component::BlockCompute, t0.elapsed().as_secs_f64());
-            // `w` drops here — the decompressed BF16 matrix is discarded
-            // immediately after use, as in the paper.
-        }
+        // Transformer blocks, block-batched decompression (§2.3.3),
+        // prefetched one block ahead on a scoped worker.
+        let n_layers = self.config.n_layers;
+        let config = &self.config;
+        let store = &self.store;
+        let backend = &mut self.backend;
+        let k_cache = &mut self.k_cache;
+        let v_cache = &mut self.v_cache;
+        let breakdown = &mut self.breakdown;
+        let batch = self.batch;
+        let pos = self.pos;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut pending = Some(scope.spawn(move || fetch_block(store, 0, threads)));
+            for l in 0..n_layers {
+                let joined = pending
+                    .take()
+                    .expect("prefetch pipeline primed")
+                    .join()
+                    .map_err(|_| Error::Runtime("block prefetch worker panicked".into()))?;
+                let (w, cost) = joined?;
+                if l + 1 < n_layers {
+                    pending = Some(scope.spawn(move || fetch_block(store, l + 1, threads)));
+                }
+                cost.charge(breakdown);
+                let t0 = Instant::now();
+                let (kc, vc) = (&mut k_cache[l], &mut v_cache[l]);
+                backend.block_forward(config, &mut x, &w, kc, vc, batch, pos)?;
+                breakdown.add_measured(Component::BlockCompute, t0.elapsed().as_secs_f64());
+                // `w` drops here — the decompressed BF16 matrix is
+                // discarded immediately after use, as in the paper.
+            }
+            Ok(())
+        })?;
 
         // LM head.
-        let wl = self.fetch("lm_head")?;
+        let (wl, cost) = fetch_weights(&self.store, "lm_head", threads)?;
+        cost.charge(&mut self.breakdown);
         let t0 = Instant::now();
         let logits = self.backend.lm_head(&self.config, &x, &wl, self.batch)?;
         self.breakdown
@@ -450,7 +462,11 @@ impl Engine {
     /// Greedy generation with static batching. Prompts are right-padded
     /// to a common length; returns `max_new_tokens` generated ids per
     /// sequence.
-    pub fn generate(&mut self, prompts: &[Vec<u32>], max_new_tokens: usize) -> Result<Vec<Vec<u32>>> {
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<u32>],
+        max_new_tokens: usize,
+    ) -> Result<Vec<Vec<u32>>> {
         let batch = prompts.len();
         if batch == 0 {
             return Ok(Vec::new());
@@ -502,6 +518,121 @@ impl Engine {
         }
         Ok(total)
     }
+}
+
+/// Cost accounting for one weight fetch (decompression wall time,
+/// per-phase sub-timings, simulated PCIe transfer), charged into the
+/// breakdown by the caller — fetches may run on a prefetch worker that
+/// has no access to the engine's accumulators.
+#[derive(Clone, Copy, Debug, Default)]
+struct FetchCost {
+    decompress: f64,
+    phase1: f64,
+    phase2: f64,
+    transfer_sim: f64,
+}
+
+impl FetchCost {
+    fn merge(&mut self, other: &FetchCost) {
+        self.decompress += other.decompress;
+        self.phase1 += other.phase1;
+        self.phase2 += other.phase2;
+        self.transfer_sim += other.transfer_sim;
+    }
+
+    fn charge(&self, breakdown: &mut Breakdown) {
+        if self.decompress > 0.0 {
+            breakdown.add_measured(Component::Decompress, self.decompress);
+        }
+        if self.phase1 > 0.0 {
+            breakdown.add_measured(Component::DecompressPhase1, self.phase1);
+        }
+        if self.phase2 > 0.0 {
+            breakdown.add_measured(Component::DecompressPhase2, self.phase2);
+        }
+        if self.transfer_sim > 0.0 {
+            breakdown.add_simulated(Component::Transfer, self.transfer_sim);
+        }
+    }
+}
+
+/// Fetch one weight matrix as f32. Free function (not a method) so the
+/// block-prefetch worker can run it without borrowing the engine.
+fn fetch_weights(store: &Store, name: &str, threads: usize) -> Result<(Vec<f32>, FetchCost)> {
+    match store {
+        Store::Bf16(map) => {
+            let w = map
+                .get(name)
+                .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
+            Ok((nn::bf16_to_f32(w), FetchCost::default()))
+        }
+        Store::Df11 { model, index } => {
+            let &(gi, ti) = index
+                .get(name)
+                .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
+            let tensor = &model.groups[gi].tensors[ti].1;
+            let t0 = Instant::now();
+            let mut cost = FetchCost::default();
+            // Production hot path: the parallel two-phase pipeline for
+            // large tensors when a pool is configured, else the
+            // optimized sequential decoder (the Algorithm-1-faithful
+            // kernel simulation lives in gpu_sim and is exercised by
+            // tests/benches).
+            let w = if threads > 1 && tensor.num_elements() >= PARALLEL_MIN_ELEMENTS {
+                let mut out = vec![Bf16::from_bits(0); tensor.num_elements()];
+                let stats =
+                    crate::dfloat11::parallel::decompress_parallel_into(tensor, &mut out, threads)?;
+                cost.phase1 = stats.phase1_seconds;
+                cost.phase2 = stats.phase2_seconds;
+                out
+            } else {
+                crate::dfloat11::decompress::decompress_sequential(tensor)?
+            };
+            cost.decompress = t0.elapsed().as_secs_f64();
+            Ok((nn::bf16_to_f32(&w), cost))
+        }
+        Store::Offload {
+            host,
+            resident_layers,
+            transfer,
+        } => {
+            let w = host
+                .get(name)
+                .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
+            let mut cost = FetchCost::default();
+            if !resident_group(name, *resident_layers) {
+                // Pay the PCIe cost on the simulated clock.
+                cost.transfer_sim = transfer.transfer_time(w.len() as u64 * 2);
+            }
+            Ok((nn::bf16_to_f32(w), cost))
+        }
+    }
+}
+
+/// Fetch all seven matrices of one transformer block — the prefetch
+/// unit, decompressed as one batch (§2.3.3).
+fn fetch_block(
+    store: &Store,
+    layer: usize,
+    threads: usize,
+) -> Result<(BlockWeightsF32, FetchCost)> {
+    let g = format!("block.{layer}");
+    let mut cost = FetchCost::default();
+    let mut get = |suffix: &str| -> Result<Vec<f32>> {
+        let (w, c) = fetch_weights(store, &format!("{g}.{suffix}"), threads)?;
+        cost.merge(&c);
+        Ok(w)
+    };
+    let weights = BlockWeightsF32 {
+        q: get("q_proj")?,
+        k: get("k_proj")?,
+        v: get("v_proj")?,
+        o: get("o_proj")?,
+        gate: get("gate_proj")?,
+        up: get("up_proj")?,
+        down: get("down_proj")?,
+    };
+    Ok((weights, cost))
 }
 
 /// Offload policy: embed/lm_head and the first `resident_layers` blocks
@@ -620,6 +751,55 @@ mod tests {
         assert!(df.breakdown.measured_seconds(Component::BlockCompute) > 0.0);
         assert!(df.breakdown.measured_seconds(Component::Embed) > 0.0);
         assert!(df.breakdown.measured_seconds(Component::LmHead) > 0.0);
+    }
+
+    /// A config whose larger tensors clear [`PARALLEL_MIN_ELEMENTS`]
+    /// (q/o 64k, gate/up/down/embed/lm_head 128k), so the parallel
+    /// pipeline genuinely runs in the fetch path.
+    fn mid() -> ModelConfig {
+        ModelConfig {
+            name: "mid-parallel".into(),
+            vocab_size: 512,
+            d_model: 256,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 512,
+            max_seq_len: 64,
+            tie_embeddings: false,
+        }
+    }
+
+    #[test]
+    fn decode_thread_count_is_output_invariant() {
+        // The parallel pipeline and the sequential decoder must produce
+        // bit-identical weights, hence bit-identical logits, regardless
+        // of pool width or prefetch interleaving.
+        let cfg = mid();
+        let prompts = vec![vec![3u32, 4, 5], vec![6u32]];
+        let mut outs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut e = Engine::build(&cfg, 21, WeightMode::Df11).unwrap();
+            e.set_decode_threads(threads);
+            assert_eq!(e.decode_threads(), threads);
+            outs.push(e.generate(&prompts, 6).unwrap());
+        }
+        assert_eq!(outs[0], outs[1], "1 vs 2 threads");
+        assert_eq!(outs[0], outs[2], "1 vs 8 threads");
+    }
+
+    #[test]
+    fn parallel_pipeline_reports_phase_timings() {
+        let cfg = mid();
+        let mut df = Engine::build(&cfg, 22, WeightMode::Df11).unwrap();
+        df.set_decode_threads(2);
+        df.reset(1);
+        df.step(&[1]).unwrap();
+        assert!(df.breakdown.measured_seconds(Component::Decompress) > 0.0);
+        assert!(df.breakdown.measured_seconds(Component::DecompressPhase2) > 0.0);
+        // Zero restores the per-core default.
+        df.set_decode_threads(0);
+        assert!(df.decode_threads() >= 1);
     }
 
     #[test]

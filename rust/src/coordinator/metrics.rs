@@ -14,10 +14,17 @@ use std::time::Instant;
 /// Pipeline components for the Figure 6 breakdown.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Component {
-    /// Token embedding (gather + its decompression when DF11).
+    /// Token embedding gather (its decompression, when DF11, is
+    /// charged to [`Component::Decompress`]).
     Embed,
     /// DF11 decompression of block weights.
     Decompress,
+    /// Phase 1 of the parallel decompression pipeline (chunk code
+    /// counting + prefix sum). Sub-timing of [`Component::Decompress`].
+    DecompressPhase1,
+    /// Phase 2 of the parallel decompression pipeline (fan-out decode +
+    /// merge + store). Sub-timing of [`Component::Decompress`].
+    DecompressPhase2,
     /// Host→device weight transfer (offload baseline).
     Transfer,
     /// Transformer block math.
@@ -27,7 +34,14 @@ pub enum Component {
 }
 
 impl Component {
-    /// Stable iteration order for reports.
+    /// Stable iteration order for reports — the *top-level* components.
+    /// Phase sub-timings (accessible via [`Component::phases`]) are
+    /// excluded so summing `all()` never double-counts decompression.
+    ///
+    /// Components are per-activity accumulators: with block-level
+    /// prefetch, decompression runs concurrently with block compute, so
+    /// the sum over `all()` can exceed wall-clock step time — that gap
+    /// is exactly the latency prefetch hides.
     pub fn all() -> [Component; 5] {
         [
             Component::Embed,
@@ -38,11 +52,20 @@ impl Component {
         ]
     }
 
+    /// The decompression-phase sub-timings (subsets of
+    /// [`Component::Decompress`] wall time, recorded by the parallel
+    /// pipeline only).
+    pub fn phases() -> [Component; 2] {
+        [Component::DecompressPhase1, Component::DecompressPhase2]
+    }
+
     /// Display label.
     pub fn label(&self) -> &'static str {
         match self {
             Component::Embed => "embed",
             Component::Decompress => "decompress",
+            Component::DecompressPhase1 => "decompress/phase1",
+            Component::DecompressPhase2 => "decompress/phase2",
             Component::Transfer => "cpu->gpu transfer",
             Component::BlockCompute => "block compute",
             Component::LmHead => "lm head",
@@ -191,6 +214,22 @@ mod tests {
         let d = a.delta(&b);
         let embed = d.iter().find(|(c, _)| *c == Component::Embed).unwrap();
         assert!((embed.1 - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_subtimings_do_not_inflate_totals() {
+        let mut b = Breakdown::default();
+        b.add_measured(Component::Decompress, 1.0);
+        b.add_measured(Component::DecompressPhase1, 0.4);
+        b.add_measured(Component::DecompressPhase2, 0.6);
+        // Phases are sub-timings of Decompress, so the top-level total
+        // counts the 1.0 s once.
+        assert_eq!(b.total_seconds(), 1.0);
+        assert_eq!(b.measured_seconds(Component::DecompressPhase1), 0.4);
+        assert_eq!(b.measured_seconds(Component::DecompressPhase2), 0.6);
+        assert!(Component::phases()
+            .iter()
+            .all(|c| !Component::all().contains(c)));
     }
 
     #[test]

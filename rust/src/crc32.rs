@@ -1,0 +1,107 @@
+//! CRC-32 (IEEE 802.3) — the container checksum.
+//!
+//! The vendored dependency set has no `crc32fast`, so this module
+//! carries a small table-driven implementation of the same reflected
+//! CRC-32 (polynomial `0xEDB88320`, init/final XOR `0xFFFF_FFFF`). The
+//! streaming [`Hasher`] mirrors the `crc32fast::Hasher` surface used by
+//! the serializer: `new` / `update` / `finalize`, plus `Clone` for
+//! mid-stream snapshots.
+
+/// Lookup table for one byte of input, built at compile time.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC-32 hasher.
+#[derive(Clone, Debug, Default)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    /// Fresh hasher.
+    pub fn new() -> Hasher {
+        Hasher { state: 0 }
+    }
+
+    /// Feed bytes.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = !self.state;
+        for &b in bytes {
+            crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = !crc;
+    }
+
+    /// The CRC of everything fed so far.
+    pub fn finalize(&self) -> u32 {
+        self.state
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn clone_snapshots_state() {
+        let mut h = Hasher::new();
+        h.update(b"prefix");
+        let snap = h.clone();
+        h.update(b"suffix");
+        assert_eq!(snap.finalize(), crc32(b"prefix"));
+        assert_eq!(h.finalize(), crc32(b"prefixsuffix"));
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let mut data = vec![0u8; 64];
+        let base = crc32(&data);
+        data[40] ^= 0x10;
+        assert_ne!(crc32(&data), base);
+    }
+}

@@ -172,7 +172,11 @@ impl Df11Tensor {
 
     /// Compression statistics (Table 1 columns).
     pub fn stats(&self) -> CompressionStats {
-        CompressionStats::new(self.original_bytes(), self.compressed_bytes(), self.num_elements as u64)
+        CompressionStats::new(
+            self.original_bytes(),
+            self.compressed_bytes(),
+            self.num_elements as u64,
+        )
     }
 
     /// Decompress to a fresh BF16 vector via the two-phase kernel.
@@ -206,6 +210,13 @@ impl Df11Tensor {
             packed_sign_mantissa: &self.packed_sign_mantissa,
         };
         kernel.run(&input, out)
+    }
+
+    /// Decompress via the CPU two-phase parallel pipeline (phase 1
+    /// chunk counting + prefix sum, phase 2 fan-out — see
+    /// [`super::parallel`]) on `threads` workers.
+    pub fn decompress_parallel(&self, threads: usize) -> Result<Vec<Bf16>> {
+        super::parallel::decompress_parallel(self, threads)
     }
 
     /// The kernel config matching this container's geometry.
@@ -250,6 +261,18 @@ impl TensorGroup {
         let mut out = Vec::with_capacity(self.tensors.len());
         for (name, t) in &self.tensors {
             out.push((name.clone(), t.decompress()?));
+        }
+        Ok(out)
+    }
+
+    /// Batched decompression through the parallel two-phase pipeline:
+    /// each tensor's chunks fan out over a `threads`-wide pool. A
+    /// convenience for offline consumers (CLI, benches); the serving
+    /// engine fetches per-tensor via its own prefetch path.
+    pub fn decompress_all_parallel(&self, threads: usize) -> Result<Vec<(String, Vec<Bf16>)>> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        for (name, t) in &self.tensors {
+            out.push((name.clone(), t.decompress_parallel(threads)?));
         }
         Ok(out)
     }
@@ -388,6 +411,9 @@ mod tests {
         let out = group.decompress_all().unwrap();
         assert_eq!(out[0].1, a);
         assert_eq!(out[1].1, b);
+        // The parallel batched path is bit-identical.
+        let par = group.decompress_all_parallel(4).unwrap();
+        assert_eq!(par, out);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 pub mod compress;
 pub mod decompress;
 pub mod format;
+pub mod parallel;
 pub mod serial;
 pub mod stats;
 
 pub use format::{Df11Model, Df11Tensor, TensorGroup};
+pub use parallel::{decompress_parallel, decompress_parallel_into, ParallelStats};
 pub use stats::CompressionStats;

@@ -1,0 +1,589 @@
+//! Multi-threaded two-phase decompression (the paper's kernel on CPU
+//! threads).
+//!
+//! [`crate::gpu_sim::kernel`] executes Algorithm 1 with block/thread
+//! fidelity; [`super::decompress`] is the fastest *single-stream*
+//! decoder. This module is the *parallel throughput* artifact: it runs
+//! the same two phases as the CUDA kernel, but fans the work out over a
+//! pool of OS threads so decode throughput scales with cores:
+//!
+//! 1. **phase 1** — every thread-chunk of the encoded stream (the same
+//!    `n`-byte chunks the gap array indexes) is scanned to *count* the
+//!    codewords starting inside it; chunks are striped over the worker
+//!    pool;
+//! 2. the per-chunk counts go through the **Blelloch exclusive scan**
+//!    ([`crate::gpu_sim::prefix_sum`]) to produce each chunk's output
+//!    position, cross-checked against the container's block output
+//!    positions;
+//! 3. **phase 2** — workers re-decode their chunks, writing assembled
+//!    BF16 values into disjoint slices of one preallocated output
+//!    buffer.
+//!
+//! Both phases decode with the sequential hot path's machinery (64-bit
+//! bit-buffer + multi-symbol [`FastTable`] windows, hierarchical-LUT
+//! fallback for long codes), so per-thread speed matches the sequential
+//! decoder and the output is **bit-for-bit identical** to
+//! [`super::decompress::decompress_sequential`] — enforced by the
+//! property suite and the CI losslessness gate.
+
+use super::decompress::FastTable;
+use super::format::Df11Tensor;
+use crate::bf16::Bf16;
+use crate::error::{Error, Result};
+use crate::gpu_sim::prefix_sum::blelloch_exclusive_scan;
+use crate::huffman::lut::HierarchicalLut;
+use std::time::Instant;
+
+/// Per-phase execution statistics for one parallel decompression.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ParallelStats {
+    /// Worker threads actually used (capped at the chunk count).
+    pub threads: usize,
+    /// Thread chunks processed.
+    pub chunks: usize,
+    /// Elements decoded.
+    pub elements: usize,
+    /// Wall seconds in phase 1 (chunk code counting).
+    pub phase1_seconds: f64,
+    /// Wall seconds in phase 2 (parallel decode + merge + store).
+    pub phase2_seconds: f64,
+}
+
+/// Parallel two-phase decompression into a fresh buffer.
+pub fn decompress_parallel(tensor: &Df11Tensor, threads: usize) -> Result<Vec<Bf16>> {
+    let mut out = vec![Bf16::from_bits(0); tensor.num_elements()];
+    decompress_parallel_into(tensor, &mut out, threads)?;
+    Ok(out)
+}
+
+/// One worker per available core — the `--threads 0` auto default,
+/// shared by the serving engine and the CLI.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Hard cap on spawned workers: beyond any real host's core count,
+/// extra workers only add spawn overhead (chunks are striped, so fewer
+/// workers than chunks is always valid).
+const MAX_WORKERS: usize = 64;
+
+/// Minimum elements per worker: below this, a worker's decode takes
+/// about as long as spawning it, so the pool width degrades toward 1
+/// for small tensors regardless of the request.
+const MIN_ELEMENTS_PER_WORKER: usize = 1024;
+
+/// Parallel two-phase decompression into a caller buffer.
+///
+/// `threads` is the requested worker width; `0` selects one worker
+/// per core ([`auto_threads`]). The width is clamped to `[1, chunks]`,
+/// to [`MAX_WORKERS`], and so each worker gets at least
+/// [`MIN_ELEMENTS_PER_WORKER`] elements. With an effective width of 1
+/// the pipeline still runs both phases (useful for equivalence
+/// testing). Workers are **scoped threads spawned per call**, not a
+/// persistent pool — cheap relative to decoding large tensors, but
+/// callers with many tiny tensors should prefer the sequential
+/// decoder (the serving engine applies exactly that cutoff).
+pub fn decompress_parallel_into(
+    tensor: &Df11Tensor,
+    out: &mut [Bf16],
+    threads: usize,
+) -> Result<ParallelStats> {
+    if out.len() != tensor.num_elements() {
+        return Err(Error::ShapeMismatch(format!(
+            "output {} != elements {}",
+            out.len(),
+            tensor.num_elements()
+        )));
+    }
+    let lut = tensor.lut();
+    let fast = tensor.fast_table();
+    let aux = tensor.aux();
+    let encoded = tensor.encoded();
+    let bit_len = tensor.bit_len();
+    let sm = tensor.packed_sign_mantissa();
+    let (threads_per_block, bytes_per_thread) = tensor.geometry();
+    let gaps = &aux.gaps;
+    let num_chunks = gaps.len();
+    if num_chunks == 0 {
+        if out.is_empty() {
+            return Ok(ParallelStats::default());
+        }
+        return Err(Error::corrupt("container has elements but no chunks"));
+    }
+    let chunk_bits = (bytes_per_thread * 8) as u64;
+    let threads = match threads {
+        0 => auto_threads(),
+        n => n,
+    };
+    let max_by_size = (out.len() / MIN_ELEMENTS_PER_WORKER).max(1);
+    let width = threads.clamp(1, num_chunks).min(MAX_WORKERS);
+    let requested = width.min(max_by_size);
+    let chunks_per_worker = num_chunks.div_ceil(requested);
+    // Striping can need fewer workers than requested (9 chunks at 4
+    // requested stripe as 3+3+3); report what actually runs.
+    let workers = num_chunks.div_ceil(chunks_per_worker);
+
+    // --- Phase 1: count codewords per chunk, striped over the pool. ---
+    let t0 = Instant::now();
+    let mut counts = vec![0u32; num_chunks];
+    {
+        let mut stripes: Vec<(usize, &mut [u32])> = Vec::with_capacity(workers);
+        let mut rest: &mut [u32] = &mut counts;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = chunks_per_worker.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            stripes.push((base, head));
+            base += take;
+            rest = tail;
+        }
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(stripes.len());
+            for (base, stripe) in stripes {
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (j, slot) in stripe.iter_mut().enumerate() {
+                        let c = base + j;
+                        if let Some((start, end)) = chunk_span(c, chunk_bits, gaps[c], bit_len) {
+                            *slot = count_chunk(encoded, lut, fast, start, end)?;
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| Error::Runtime("phase 1 worker panicked".into()))??;
+            }
+            Ok(())
+        })?;
+    }
+    let phase1_seconds = t0.elapsed().as_secs_f64();
+
+    // --- Barrier: exclusive prefix sum of counts -> output positions
+    //     (Algorithm 1 line 23, lifted from block to tensor scope). ---
+    let positions = blelloch_exclusive_scan(&counts);
+    let total: u64 = counts.iter().map(|&c| c as u64).sum();
+    if total != out.len() as u64 {
+        return Err(Error::corrupt(format!(
+            "phase 1 counted {total} elements, container holds {}",
+            out.len()
+        )));
+    }
+    // The container's auxiliary variables must agree with the discovered
+    // positions at every block boundary — a corrupted stream fails here
+    // instead of writing misaligned output.
+    for (b, &p) in aux.block_output_pos.iter().take(aux.num_blocks).enumerate() {
+        if positions[b * threads_per_block] != p {
+            return Err(Error::corrupt(format!(
+                "phase 1 position disagrees with BlockOutputPos at block {b}"
+            )));
+        }
+    }
+
+    // --- Phase 2: decode chunks into disjoint output windows. ---
+    let t1 = Instant::now();
+    {
+        struct Job<'j> {
+            lo: usize,
+            hi: usize,
+            out: &'j mut [Bf16],
+            sm: &'j [u8],
+        }
+        let mut jobs: Vec<Job> = Vec::with_capacity(workers);
+        let mut rest_out: &mut [Bf16] = out;
+        let mut consumed = 0usize;
+        let mut lo = 0usize;
+        while lo < num_chunks {
+            let hi = (lo + chunks_per_worker).min(num_chunks);
+            let end_pos = if hi == num_chunks {
+                total as usize
+            } else {
+                positions[hi] as usize
+            };
+            let (head, tail) = rest_out.split_at_mut(end_pos - consumed);
+            jobs.push(Job {
+                lo,
+                hi,
+                out: head,
+                sm: &sm[consumed..end_pos],
+            });
+            rest_out = tail;
+            consumed = end_pos;
+            lo = hi;
+        }
+        let counts = &counts;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let Job { lo, hi, out, sm } = job;
+                    let mut off = 0usize;
+                    for c in lo..hi {
+                        let cnt = counts[c] as usize;
+                        if cnt == 0 {
+                            continue;
+                        }
+                        let (start, end) = chunk_span(c, chunk_bits, gaps[c], bit_len)
+                            .ok_or_else(|| Error::corrupt("counted chunk has empty span"))?;
+                        decode_chunk(
+                            encoded,
+                            lut,
+                            fast,
+                            start,
+                            end,
+                            &sm[off..off + cnt],
+                            &mut out[off..off + cnt],
+                        )?;
+                        off += cnt;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| Error::Runtime("phase 2 worker panicked".into()))??;
+            }
+            Ok(())
+        })?;
+    }
+    let phase2_seconds = t1.elapsed().as_secs_f64();
+
+    Ok(ParallelStats {
+        threads: workers,
+        chunks: num_chunks,
+        elements: out.len(),
+        phase1_seconds,
+        phase2_seconds,
+    })
+}
+
+/// The decodable bit range of chunk `c`: from its gap-adjusted first
+/// code start to the chunk end (capped at the stream's valid length).
+/// `None` when no code starts inside the chunk (stream-tail padding).
+#[inline]
+fn chunk_span(c: usize, chunk_bits: u64, gap: u8, bit_len: u64) -> Option<(u64, u64)> {
+    let chunk_start = c as u64 * chunk_bits;
+    let chunk_end = (chunk_start + chunk_bits).min(bit_len);
+    let start = chunk_start + gap as u64;
+    if start >= chunk_end {
+        None
+    } else {
+        Some((start, chunk_end))
+    }
+}
+
+/// Bit cursor positioned at an arbitrary start bit: a left-aligned
+/// 64-bit buffer (same discipline as the sequential decoder), plus the
+/// next byte to load.
+#[inline]
+fn cursor_at(encoded: &[u8], start: u64) -> (u64, u32, usize) {
+    let mut byte_pos = (start / 8) as usize;
+    let mut bitbuf = 0u64;
+    let mut bits = 0u32;
+    while bits <= 56 && byte_pos < encoded.len() {
+        bitbuf |= (encoded[byte_pos] as u64) << (56 - bits);
+        byte_pos += 1;
+        bits += 8;
+    }
+    let skip = (start % 8) as u32;
+    bitbuf <<= skip;
+    bits = bits.saturating_sub(skip);
+    (bitbuf, bits, byte_pos)
+}
+
+/// Refill the bit buffer: splice 32 bits when a whole word is
+/// available, dribble bytes near the buffer end.
+#[inline]
+fn refill(encoded: &[u8], bitbuf: &mut u64, bits: &mut u32, byte_pos: &mut usize) {
+    if *bits > 32 {
+        return;
+    }
+    if *byte_pos + 4 <= encoded.len() {
+        let word = u32::from_be_bytes([
+            encoded[*byte_pos],
+            encoded[*byte_pos + 1],
+            encoded[*byte_pos + 2],
+            encoded[*byte_pos + 3],
+        ]);
+        *bitbuf |= (word as u64) << (32 - *bits);
+        *byte_pos += 4;
+        *bits += 32;
+    } else {
+        while *bits <= 56 && *byte_pos < encoded.len() {
+            *bitbuf |= (encoded[*byte_pos] as u64) << (56 - *bits);
+            *byte_pos += 1;
+            *bits += 8;
+        }
+    }
+}
+
+/// Phase 1 inner loop: count the codewords starting in `[start, end)`.
+fn count_chunk(
+    encoded: &[u8],
+    lut: &HierarchicalLut,
+    fast: &FastTable,
+    start: u64,
+    end: u64,
+) -> Result<u32> {
+    let (mut bitbuf, mut bits, mut byte_pos) = cursor_at(encoded, start);
+    let mut pos = start;
+    let mut n = 0u32;
+    while pos < end {
+        refill(encoded, &mut bitbuf, &mut bits, &mut byte_pos);
+        let window16 = (bitbuf >> 48) as u16;
+        let e = fast.lookup_multi(window16);
+        if e != 0 {
+            let used = e & 0x1F;
+            // All codes in the window start before `end` only when the
+            // whole batch fits; a straddling batch falls through to the
+            // one-symbol path so chunk ownership stays exact.
+            if pos + used <= end {
+                n += ((e >> 5) & 0x7) as u32;
+                bitbuf <<= used;
+                bits = bits.wrapping_sub(used as u32);
+                pos += used;
+                continue;
+            }
+        }
+        let (_, len) = match fast.lookup(window16) {
+            Some(hit) => hit,
+            None => lut.lookup((bitbuf >> 32) as u32)?,
+        };
+        n += 1;
+        bitbuf <<= len as u32;
+        bits = bits.wrapping_sub(len as u32);
+        pos += len as u64;
+    }
+    Ok(n)
+}
+
+/// Phase 2 inner loop: decode the codewords starting in `[start, end)`
+/// into `out`, merging each exponent with its sign/mantissa byte
+/// (Algorithm 1 lines 33-36). `out`/`sm` are the chunk's exact windows.
+fn decode_chunk(
+    encoded: &[u8],
+    lut: &HierarchicalLut,
+    fast: &FastTable,
+    start: u64,
+    end: u64,
+    sm: &[u8],
+    out: &mut [Bf16],
+) -> Result<()> {
+    let (mut bitbuf, mut bits, mut byte_pos) = cursor_at(encoded, start);
+    let mut pos = start;
+    let mut i = 0usize;
+    let total = out.len();
+    while pos < end {
+        refill(encoded, &mut bitbuf, &mut bits, &mut byte_pos);
+        let window16 = (bitbuf >> 48) as u16;
+        if i + 5 <= total {
+            let e = fast.lookup_multi(window16);
+            if e != 0 {
+                let used = e & 0x1F;
+                if pos + used <= end {
+                    // Unconditional 5-wide store; slots past `count` are
+                    // overwritten by later iterations (i + 5 <= total).
+                    let mut se = e >> 8;
+                    for k in 0..5 {
+                        out[i + k] = Bf16::from_parts(se as u8, sm[i + k]);
+                        se >>= 8;
+                    }
+                    i += ((e >> 5) & 0x7) as usize;
+                    bitbuf <<= used;
+                    bits = bits.wrapping_sub(used as u32);
+                    pos += used;
+                    continue;
+                }
+            }
+        }
+        let (symbol, len) = match fast.lookup(window16) {
+            Some(hit) => hit,
+            None => lut.lookup((bitbuf >> 32) as u32)?,
+        };
+        if i >= total {
+            return Err(Error::corrupt("phase 2 decoded more elements than phase 1 counted"));
+        }
+        out[i] = Bf16::from_parts(symbol, sm[i]);
+        i += 1;
+        bitbuf <<= len as u32;
+        bits = bits.wrapping_sub(len as u32);
+        pos += len as u64;
+    }
+    if i != total {
+        return Err(Error::corrupt(format!(
+            "chunk decoded {i} elements, phase 1 counted {total}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfloat11::decompress::decompress_sequential;
+    use crate::gpu_sim::KernelConfig;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_across_sizes_and_threads() {
+        for n in [1usize, 7, 100, 4096, 50_000] {
+            let ws = gaussian_weights(n, n as u64);
+            let t = Df11Tensor::compress(&ws).unwrap();
+            let seq = decompress_sequential(&t).unwrap();
+            assert_eq!(seq, ws);
+            for threads in [1usize, 2, 3, 8] {
+                let par = decompress_parallel(&t, threads).unwrap();
+                assert_eq!(par, seq, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_across_geometries() {
+        let ws = gaussian_weights(20_000, 5);
+        for (tpb, bpt) in [(4usize, 2usize), (8, 4), (64, 8), (256, 16)] {
+            let config = KernelConfig {
+                threads_per_block: tpb,
+                bytes_per_thread: bpt,
+                parallelism: 1,
+            };
+            let t = Df11Tensor::compress_shaped(&ws, &[ws.len()], &config).unwrap();
+            let par = decompress_parallel(&t, 4).unwrap();
+            assert_eq!(par, ws, "T={tpb} n={bpt}");
+        }
+    }
+
+    #[test]
+    fn stats_report_phases_and_clamped_threads() {
+        let ws = gaussian_weights(100_000, 9);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        let stats = decompress_parallel_into(&t, &mut out, 4).unwrap();
+        assert_eq!(out, ws);
+        assert_eq!(stats.elements, ws.len());
+        assert_eq!(stats.chunks, t.aux().gaps.len());
+        assert!(stats.threads >= 1 && stats.threads <= 4);
+        assert!(stats.phase1_seconds >= 0.0);
+        assert!(stats.phase2_seconds > 0.0);
+        // A tiny tensor has fewer chunks than requested threads.
+        let tiny = Df11Tensor::compress(&gaussian_weights(4, 1)).unwrap();
+        let mut out = vec![Bf16::from_bits(0); 4];
+        let stats = decompress_parallel_into(&tiny, &mut out, 64).unwrap();
+        assert!(stats.threads <= tiny.aux().gaps.len());
+    }
+
+    #[test]
+    fn special_values_roundtrip_in_parallel() {
+        let mut ws = gaussian_weights(3000, 11);
+        ws[0] = Bf16::from_f32(f32::NAN);
+        ws[1] = Bf16::from_f32(f32::INFINITY);
+        ws[2] = Bf16::from_f32(f32::NEG_INFINITY);
+        ws[3] = Bf16::from_bits(0x0001);
+        ws[4] = Bf16::from_bits(0x8000);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        assert_eq!(decompress_parallel(&t, 8).unwrap(), ws);
+    }
+
+    #[test]
+    fn wrong_output_size_rejected() {
+        let ws = gaussian_weights(100, 12);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let mut out = vec![Bf16::from_bits(0); 99];
+        assert!(decompress_parallel_into(&t, &mut out, 2).is_err());
+    }
+
+    #[test]
+    fn max_length_32bit_codes_straddle_chunks() {
+        use crate::dfloat11::compress::build_kernel_aux;
+        use crate::gpu_sim::KernelConfig;
+        use crate::huffman::{encode_symbols, Codebook};
+
+        // Kraft-complete lengths 1..=32 plus a second 32: the paper's
+        // maximum code length L = 32, wider than both the 16-bit fast
+        // table and a whole 2-byte chunk, so a single code can span
+        // three chunks and leave interior chunks with no code start.
+        let mut lengths = [0u8; 256];
+        for (i, l) in lengths.iter_mut().take(31).enumerate() {
+            *l = i as u8 + 1;
+        }
+        lengths[31] = 32;
+        lengths[32] = 32;
+        let cb = Codebook::from_lengths(&lengths).unwrap();
+        assert_eq!(cb.max_len(), 32);
+
+        // A stream mixing the deepest codes with shallow ones.
+        let mut rng = Rng::new(99);
+        let symbols: Vec<u8> = (0..4000usize)
+            .map(|i| match i % 7 {
+                0 => 31,
+                1 => 32,
+                2 => 30,
+                _ => rng.next_index(8) as u8,
+            })
+            .collect();
+        let sm: Vec<u8> = (0..symbols.len()).map(|i| (i * 37 % 256) as u8).collect();
+        let config = KernelConfig {
+            threads_per_block: 4,
+            bytes_per_thread: 2,
+            parallelism: 1,
+        };
+        let (mut encoded, bit_len) = encode_symbols(&cb, &symbols).unwrap();
+        let aux = build_kernel_aux(&cb, &symbols, &config).unwrap();
+        encoded.resize(aux.num_chunks * config.bytes_per_thread, 0);
+        let t = Df11Tensor::from_parts(
+            vec![symbols.len()],
+            cb,
+            encoded,
+            bit_len,
+            sm.clone(),
+            aux,
+            symbols.len(),
+            (config.threads_per_block, config.bytes_per_thread),
+        );
+        let expected = crate::bf16::merge_planes(&symbols, &sm);
+        assert_eq!(decompress_sequential(&t).unwrap(), expected);
+        assert_eq!(t.decompress().unwrap(), expected, "kernel path");
+        for threads in [1usize, 2, 5, 8] {
+            assert_eq!(decompress_parallel(&t, threads).unwrap(), expected, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn corrupt_gap_never_panics_or_overruns() {
+        // Poisoning gaps shifts phase 1 onto mid-code garbage. Like the
+        // simulated kernel, detection is best-effort (LUT miss, count
+        // mismatch, or the BlockOutputPos cross-check) — the hard
+        // guarantee is no panic and no out-of-bounds write.
+        let ws = gaussian_weights(50_000, 13);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        for c in [0usize, 3, 17] {
+            let mut bad = t.aux().clone();
+            if c >= bad.gaps.len() {
+                continue;
+            }
+            bad.gaps[c] = (bad.gaps[c] + 7) % 32;
+            let t2 = Df11Tensor::from_parts(
+                t.shape().to_vec(),
+                t.codebook().clone(),
+                t.encoded().to_vec(),
+                t.bit_len(),
+                t.packed_sign_mantissa().to_vec(),
+                bad,
+                t.num_elements(),
+                t.geometry(),
+            );
+            if let Ok(out) = decompress_parallel(&t2, 4) {
+                assert_eq!(out.len(), ws.len());
+            }
+        }
+    }
+}

@@ -70,14 +70,14 @@ pub fn unpack_gaps(packed: &[u8], count: usize) -> Result<Vec<u8>> {
 
 struct CrcWriter<W: Write> {
     inner: W,
-    hasher: crc32fast::Hasher,
+    hasher: crate::crc32::Hasher,
 }
 
 impl<W: Write> CrcWriter<W> {
     fn new(inner: W) -> Self {
         CrcWriter {
             inner,
-            hasher: crc32fast::Hasher::new(),
+            hasher: crate::crc32::Hasher::new(),
         }
     }
     fn crc(&self) -> u32 {
@@ -165,7 +165,7 @@ pub fn write_tensor(out: &mut impl Write, t: &Df11Tensor) -> Result<()> {
 pub fn read_tensor(r: &mut impl Read) -> Result<Df11Tensor> {
     // Read everything through a buffering CRC pass: simplest is to
     // re-hash fields as we parse.
-    let mut hasher = crc32fast::Hasher::new();
+    let mut hasher = crate::crc32::Hasher::new();
     macro_rules! hashed {
         ($bytes:expr) => {{
             hasher.update($bytes);

@@ -2,35 +2,31 @@
 //!
 //! Every fallible public API in the crate returns [`Result`] with
 //! [`Error`], so downstream users get a single error type to match on.
+//! `Display`/`std::error::Error` are implemented by hand — the vendored
+//! dependency set has no `thiserror`.
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All errors produced by the DFloat11 library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// The Huffman codebook could not be constructed (e.g. empty input).
-    #[error("huffman construction failed: {0}")]
     Huffman(String),
 
     /// A code length exceeded the supported maximum (32 bits).
-    #[error("code length {got} exceeds maximum {max}")]
     CodeTooLong { got: u32, max: u32 },
 
     /// An encoded bitstream was malformed or truncated.
-    #[error("corrupt DF11 stream: {0}")]
     CorruptStream(String),
 
     /// A serialized container failed validation.
-    #[error("invalid DF11 container: {0}")]
     InvalidContainer(String),
 
     /// The container was produced by an incompatible format version.
-    #[error("unsupported DF11 format version {0} (supported: {1})")]
     UnsupportedVersion(u32, u32),
 
     /// Device memory budget exhausted (simulated HBM OOM).
-    #[error("device out of memory: requested {requested} bytes, free {free} bytes on {device}")]
     OutOfMemory {
         requested: u64,
         free: u64,
@@ -38,32 +34,74 @@ pub enum Error {
     },
 
     /// KV cache budget exhausted for a sequence.
-    #[error("kv cache exhausted: {0}")]
     KvCacheExhausted(String),
 
     /// The PJRT runtime failed (artifact load, compile, or execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// A required AOT artifact is missing (run `make artifacts`).
-    #[error("missing artifact {path}; run `make artifacts` first")]
     MissingArtifact { path: String },
 
     /// Shape mismatch between artifact and model config.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     /// Coordinator-level scheduling error.
-    #[error("scheduler error: {0}")]
     Scheduler(String),
 
     /// Invalid CLI or API argument.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Huffman(m) => write!(f, "huffman construction failed: {m}"),
+            Error::CodeTooLong { got, max } => {
+                write!(f, "code length {got} exceeds maximum {max}")
+            }
+            Error::CorruptStream(m) => write!(f, "corrupt DF11 stream: {m}"),
+            Error::InvalidContainer(m) => write!(f, "invalid DF11 container: {m}"),
+            Error::UnsupportedVersion(got, supported) => write!(
+                f,
+                "unsupported DF11 format version {got} (supported: {supported})"
+            ),
+            Error::OutOfMemory {
+                requested,
+                free,
+                device,
+            } => write!(
+                f,
+                "device out of memory: requested {requested} bytes, free {free} bytes on {device}"
+            ),
+            Error::KvCacheExhausted(m) => write!(f, "kv cache exhausted: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::MissingArtifact { path } => {
+                write!(f, "missing artifact {path}; run `make artifacts` first")
+            }
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -100,6 +138,14 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::corrupt("x")).is_none());
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod bench_harness;
 pub mod bf16;
 pub mod cli;
 pub mod coordinator;
+pub mod crc32;
 pub mod dfloat11;
 pub mod entropy;
 pub mod error;
@@ -34,10 +35,11 @@ pub mod huffman;
 pub mod kvcache;
 pub mod model;
 pub mod multi_gpu;
-pub mod offload;
 pub mod nn;
+pub mod offload;
 pub mod proptest_lite;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 
 pub use bf16::Bf16;

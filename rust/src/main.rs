@@ -14,7 +14,7 @@
 
 use dfloat11::bench_harness::fmt;
 use dfloat11::cli::Args;
-use dfloat11::coordinator::{Engine, Request, SchedulerConfig, Server, WeightMode};
+use dfloat11::coordinator::{Component, Engine, Request, SchedulerConfig, Server, WeightMode};
 use dfloat11::dfloat11::serial;
 use dfloat11::entropy::ComponentHistograms;
 use dfloat11::error::{Error, Result};
@@ -31,8 +31,10 @@ fn usage() -> ! {
          compress  --scale N --seed S --out PATH     synthesize + compress\n\
          inspect   --in PATH                          stats for a .df11 file\n\
          serve     --requests N --batch B --mode bf16|df11|offload\n\
+                   --threads T   decompression worker threads (0 = one per core);\n\
+                                 block i+1 is decompressed while block i computes\n\
          estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
-         decode    --in PATH                          roundtrip-check a .df11 file"
+         decode    --in PATH [--threads T]            roundtrip-check a .df11 file"
     );
     std::process::exit(2);
 }
@@ -123,6 +125,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let new_tokens = args.get_parse_or("tokens", 8usize)?;
     let scale = args.get_parse_or("scale", 24usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
+    let threads = args.get_parse_or("threads", 0usize)?;
     let mode = match args.get_or("mode", "df11").as_str() {
         "bf16" => WeightMode::Bf16Resident,
         "df11" => WeightMode::Df11,
@@ -135,13 +138,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = zoo_by_name(&args.get_or("model", "llama31-8b"))
         .ok_or_else(|| Error::InvalidArgument("unknown model".into()))?
         .scaled_down(scale);
+    let mut engine = Engine::build(&cfg, seed, mode)?;
+    engine.set_decode_threads(threads);
     println!(
-        "serving {} ({} params, mode {:?}, batch {batch})",
+        "serving {} ({} params, mode {:?}, batch {batch}, {} decode threads)",
         cfg.name,
         cfg.num_params(),
-        args.get_or("mode", "df11")
+        args.get_or("mode", "df11"),
+        engine.decode_threads()
     );
-    let engine = Engine::build(&cfg, seed, mode)?;
     let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
     for i in 0..requests {
         let prompt: Vec<u32> = (0..4).map(|t| ((i * 7 + t) % 60 + 1) as u32).collect();
@@ -157,6 +162,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt::seconds(report.latency.percentile(50.0)),
         fmt::seconds(report.latency.percentile(95.0)),
     );
+    let bd = &server.engine().breakdown;
+    let decompress = bd.measured_seconds(Component::Decompress);
+    if decompress > 0.0 {
+        let phases: Vec<String> = Component::phases()
+            .iter()
+            .map(|&c| format!("{} {}", c.label(), fmt::seconds(bd.measured_seconds(c))))
+            .collect();
+        println!("decompress total {} ({})", fmt::seconds(decompress), phases.join(", "));
+    }
     Ok(())
 }
 
@@ -202,18 +216,22 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let path = args
         .get("in")
         .ok_or_else(|| Error::InvalidArgument("--in required".into()))?;
+    let threads = match args.get_parse_or("threads", 0usize)? {
+        0 => dfloat11::dfloat11::parallel::auto_threads(),
+        n => n,
+    };
     let model = serial::load_model(std::path::Path::new(path))?;
     let mut elems = 0u64;
     let t0 = std::time::Instant::now();
     for g in &model.groups {
         for (_, t) in &g.tensors {
-            let w = t.decompress()?;
+            let w = t.decompress_parallel(threads)?;
             elems += w.len() as u64;
         }
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "decoded {elems} weights in {:.3}s ({})",
+        "decoded {elems} weights in {:.3}s on {threads} threads ({})",
         dt,
         fmt::throughput_bps(elems as f64 * 2.0 / dt)
     );

@@ -1,8 +1,10 @@
 //! End-to-end tests over the PJRT runtime + AOT artifacts.
 //!
-//! Gated on `artifacts/meta.json` (run `make artifacts` first); the
-//! Makefile's `test` target guarantees the ordering. Each test boots a
-//! real PJRT CPU client and executes the JAX-lowered graphs.
+//! Compiled only with `--features pjrt` (the runtime needs the vendored
+//! `xla` bindings), then further gated on `artifacts/meta.json` (run
+//! `make artifacts` first). Each test boots a real PJRT CPU client and
+//! executes the JAX-lowered graphs.
+#![cfg(feature = "pjrt")]
 
 use dfloat11::coordinator::{Engine, NativeBackend, WeightMode};
 use dfloat11::model::ModelConfig;

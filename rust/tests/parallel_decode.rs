@@ -1,0 +1,162 @@
+//! Edge-case coverage for the parallel two-phase decompression
+//! pipeline, through public APIs only: degenerate tensors, chunk/thread
+//! geometry corners, and sequential-equivalence at every pool width.
+
+use dfloat11::bf16::Bf16;
+use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::dfloat11::parallel::{decompress_parallel, decompress_parallel_into};
+use dfloat11::gpu_sim::KernelConfig;
+use dfloat11::rng::Rng;
+use dfloat11::Df11Tensor;
+
+fn gaussian(n: usize, seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    xs.into_iter().map(Bf16::from_f32).collect()
+}
+
+/// Empty tensors are rejected at compression (the container format has
+/// no empty representation), so the parallel pipeline never sees one —
+/// both entry points agree on the contract.
+#[test]
+fn empty_tensor_rejected_at_compression() {
+    assert!(Df11Tensor::compress(&[]).is_err());
+    // And an output-size mismatch against a real container is an error,
+    // not a truncated decode.
+    let t = Df11Tensor::compress(&gaussian(64, 1)).unwrap();
+    let mut empty: Vec<Bf16> = Vec::new();
+    assert!(decompress_parallel_into(&t, &mut empty, 4).is_err());
+}
+
+/// A tensor whose whole stream fits in one data chunk (remaining chunks
+/// are tail padding with the gap-31 sentinel) decodes correctly at any
+/// pool width.
+#[test]
+fn single_data_chunk() {
+    // ~10 elements at ~3 bits/exponent ≈ 30 bits — far below one
+    // 8-byte chunk.
+    let ws = gaussian(10, 2);
+    let config = KernelConfig {
+        threads_per_block: 4,
+        bytes_per_thread: 8,
+        parallelism: 1,
+    };
+    let t = Df11Tensor::compress_shaped(&ws, &[ws.len()], &config).unwrap();
+    let seq = decompress_sequential(&t).unwrap();
+    assert_eq!(seq, ws);
+    for threads in [1usize, 2, 4, 16] {
+        assert_eq!(decompress_parallel(&t, threads).unwrap(), seq, "threads={threads}");
+    }
+}
+
+/// Single-element tensor: the smallest legal container.
+#[test]
+fn single_element_tensor() {
+    let ws = vec![Bf16::from_f32(-0.375)];
+    let t = Df11Tensor::compress(&ws).unwrap();
+    for threads in [1usize, 2, 8] {
+        assert_eq!(decompress_parallel(&t, threads).unwrap(), ws);
+    }
+}
+
+/// Chunk counts that do not divide evenly by the worker count: the
+/// last worker gets a short stripe, and stripes wider than the chunk
+/// count clamp down.
+#[test]
+fn chunk_count_not_divisible_by_threads() {
+    let ws = gaussian(30_000, 3);
+    let config = KernelConfig {
+        threads_per_block: 8,
+        bytes_per_thread: 4,
+        parallelism: 1,
+    };
+    let t = Df11Tensor::compress_shaped(&ws, &[ws.len()], &config).unwrap();
+    let chunks = t.aux().gaps.len();
+    let seq = decompress_sequential(&t).unwrap();
+    for threads in [3usize, 5, 7, 11, 13, chunks - 1, chunks, chunks + 5] {
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        let stats = decompress_parallel_into(&t, &mut out, threads).unwrap();
+        assert_eq!(out, seq, "threads={threads}");
+        assert!(stats.threads <= threads.max(1));
+        assert!(stats.threads <= chunks);
+        assert_eq!(stats.chunks, chunks);
+    }
+}
+
+/// One-thread parallel execution still runs the full two-phase
+/// pipeline and must equal the sequential decoder bit-for-bit.
+#[test]
+fn one_thread_parallel_equals_sequential() {
+    for n in [1usize, 13, 257, 20_000] {
+        let ws = gaussian(n, 100 + n as u64);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let seq = decompress_sequential(&t).unwrap();
+        let mut out = vec![Bf16::from_bits(0); n];
+        let stats = decompress_parallel_into(&t, &mut out, 1).unwrap();
+        assert_eq!(out, seq, "n={n}");
+        assert_eq!(stats.threads, 1);
+    }
+}
+
+/// Codes wider than a whole chunk: exact power-of-two frequencies give
+/// code lengths 1..=18 (two 18-bit codes) — longer than both the
+/// 16-bit fast-table window and a whole 2-byte chunk, so codes straddle
+/// chunk boundaries and some interior chunks contain no code start at
+/// all (gap sentinel pointing past the chunk end). The parallel
+/// pipeline must reproduce the sequential decode exactly.
+#[test]
+fn long_codes_straddling_chunk_boundaries() {
+    let mut exps = Vec::with_capacity(1 << 18);
+    for i in 0..18u32 {
+        let sym = 60 + i as u8;
+        for _ in 0..(1usize << (17 - i)) {
+            exps.push(sym);
+        }
+    }
+    exps.push(90); // the second deepest singleton, completing the tree
+    // Interleave so deep codes appear throughout the stream.
+    let mut rng = Rng::new(7);
+    for i in (1..exps.len()).rev() {
+        exps.swap(i, rng.next_index(i + 1));
+    }
+    let ws: Vec<Bf16> = exps
+        .iter()
+        .enumerate()
+        .map(|(i, &e)| Bf16::from_parts(e, (i * 131 % 256) as u8))
+        .collect();
+    let config = KernelConfig {
+        threads_per_block: 4,
+        bytes_per_thread: 2,
+        parallelism: 1,
+    };
+    let t = Df11Tensor::compress_shaped(&ws, &[ws.len()], &config).unwrap();
+    assert!(
+        t.codebook().max_len() > 16,
+        "expected codes longer than a 16-bit chunk, got L={}",
+        t.codebook().max_len()
+    );
+    let seq = decompress_sequential(&t).unwrap();
+    assert_eq!(seq, ws);
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(decompress_parallel(&t, threads).unwrap(), seq, "threads={threads}");
+    }
+}
+
+/// The serving-grade geometry (paper T=256, n=8) at a realistic tensor
+/// size, swept across pool widths.
+#[test]
+fn paper_geometry_thread_sweep() {
+    let ws = gaussian(300_000, 4);
+    let config = KernelConfig {
+        threads_per_block: 256,
+        bytes_per_thread: 8,
+        parallelism: 1,
+    };
+    let t = Df11Tensor::compress_shaped(&ws, &[ws.len()], &config).unwrap();
+    let seq = decompress_sequential(&t).unwrap();
+    assert_eq!(seq, ws);
+    for threads in [1usize, 2, 4, 8] {
+        assert_eq!(decompress_parallel(&t, threads).unwrap(), seq, "threads={threads}");
+    }
+}

@@ -4,6 +4,7 @@
 use dfloat11::bf16::{merge_planes, split_planes, Bf16};
 use dfloat11::coordinator::{Request, RequestQueue};
 use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::dfloat11::parallel::decompress_parallel;
 use dfloat11::dfloat11::serial::{pack_gaps, unpack_gaps};
 use dfloat11::dfloat11::Df11Tensor;
 use dfloat11::gpu_sim::prefix_sum::{blelloch_exclusive_scan, serial_exclusive_scan};
@@ -36,6 +37,37 @@ fn prop_df11_roundtrip_arbitrary_bits() {
         let seq = decompress_sequential(&t).map_err(|e| e.to_string())?;
         if seq != ws {
             return Err(format!("sequential mismatch at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+/// The parallel two-phase pipeline is bit-identical to the sequential
+/// decoder for arbitrary bit patterns, kernel geometries, and thread
+/// counts — the `seq == parallel` losslessness gate run by CI.
+#[test]
+fn prop_parallel_equals_sequential() {
+    check("df11-seq-parallel-equivalence", cfg(30, 20_000), |g| {
+        let n = g.len();
+        let ws: Vec<Bf16> = g.vec_of(n, |r| Bf16::from_bits(r.next_u32() as u16));
+        let t_per_block = [4usize, 8, 64, 256][g.usize_in(0, 3)];
+        let n_bytes = [2usize, 4, 8, 16][g.usize_in(0, 3)];
+        let config = KernelConfig {
+            threads_per_block: t_per_block,
+            bytes_per_thread: n_bytes,
+            parallelism: 1,
+        };
+        let t = Df11Tensor::compress_shaped(&ws, &[n], &config).map_err(|e| e.to_string())?;
+        let seq = decompress_sequential(&t).map_err(|e| e.to_string())?;
+        if seq != ws {
+            return Err(format!("sequential mismatch at n={n}"));
+        }
+        let threads = 1 + g.usize_in(0, 7);
+        let par = decompress_parallel(&t, threads).map_err(|e| e.to_string())?;
+        if par != seq {
+            return Err(format!(
+                "parallel != sequential (threads={threads}, T={t_per_block}, n={n_bytes}, len={n})"
+            ));
         }
         Ok(())
     });
