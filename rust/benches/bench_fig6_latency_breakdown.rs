@@ -6,10 +6,16 @@
 //! curve.
 
 use dfloat11::bench_harness::{fmt, Table};
+use dfloat11::bf16::Bf16;
 use dfloat11::coordinator::{Component, Engine, WeightMode};
+use dfloat11::dfloat11::decompress::{decompress_sequential, decompress_sequential_into};
 use dfloat11::gpu_sim::Device;
+use dfloat11::model::init::generate_model_weights;
 use dfloat11::model::zoo;
 use dfloat11::offload::{place, step_latency, PlacementMode};
+use dfloat11::Df11Tensor;
+use std::hint::black_box;
+use std::time::Instant;
 
 fn main() {
     println!("# Figure 6 — latency breakdown vs batch size (Llama 3.1 8B)\n");
@@ -79,5 +85,76 @@ fn main() {
     println!(
         "\npaper shape: decompression cost is batch-invariant; the DF11/BF16 \
          ratio decays monotonically toward 1 as batch grows. Preserved."
+    );
+
+    // --- Scratch-buffer reuse vs fresh allocation (per-block fetch) ---
+    // The serving engine decompresses every transformer block into a
+    // pooled scratch (BF16 staging + widened f32) instead of allocating
+    // fresh Vecs per fetch. Measure one block's seven matrices both ways.
+    println!("\n## Scratch-buffer reuse vs fresh allocation (per-block fetch)\n");
+    let cfg = zoo::llama31_8b().scaled_down(16);
+    let block: Vec<Df11Tensor> = generate_model_weights(&cfg, 11)
+        .into_iter()
+        .filter(|(spec, _)| spec.group == "block.0")
+        .map(|(spec, w)| {
+            Df11Tensor::compress_shaped(
+                &w,
+                &[spec.shape[0], spec.shape[1]],
+                &dfloat11::gpu_sim::KernelConfig::for_elements(w.len()),
+            )
+            .unwrap()
+        })
+        .collect();
+    let iters = if std::env::var("DF11_BENCH_QUICK").is_ok() {
+        5usize
+    } else {
+        30
+    };
+
+    // Fresh-alloc path (the pre-pool engine): the same sequential
+    // decoder, but a new Vec<Bf16> + Vec<f32> for every matrix of every
+    // fetch — so the delta below isolates allocation, not decoder choice.
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for t in &block {
+            let w = decompress_sequential(t).unwrap();
+            let f: Vec<f32> = w.iter().map(|b| b.to_f32()).collect();
+            black_box(f.last().copied());
+        }
+    }
+    let fresh = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // Pooled path: one BF16 staging buffer and one f32 buffer per slot,
+    // resized (never reallocated once warm) across fetches.
+    let mut staging: Vec<Bf16> = Vec::new();
+    let mut widened: Vec<Vec<f32>> = (0..block.len()).map(|_| Vec::new()).collect();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for (t, out) in block.iter().zip(widened.iter_mut()) {
+            staging.resize(t.num_elements(), Bf16::from_bits(0));
+            decompress_sequential_into(t, &mut staging).unwrap();
+            out.clear();
+            out.extend(staging.iter().map(|b| b.to_f32()));
+            black_box(out.last().copied());
+        }
+    }
+    let reused = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let mut table = Table::new(&["path", "per-block fetch", "allocs/fetch"]);
+    table.row(&[
+        "fresh Vec per fetch".into(),
+        fmt::seconds(fresh),
+        format!("{}", block.len() * 2),
+    ]);
+    table.row(&[
+        "pooled scratch (engine)".into(),
+        fmt::seconds(reused),
+        "0 (steady state)".into(),
+    ]);
+    table.print();
+    println!(
+        "\nscratch reuse: {:.2}x vs fresh allocation over {} matrices/block",
+        fresh / reused,
+        block.len()
     );
 }

@@ -22,17 +22,25 @@ use crate::error::Result;
 
 /// Compress a BF16 tensor the "generic ANS" way: treat the raw bytes as
 /// one stream (as nvCOMP does), no format-aware splitting.
+///
+/// Thin shim kept for the existing benches; prefer
+/// [`crate::codec::RansCodec`] through the unified [`crate::codec::Codec`]
+/// API.
 pub fn compress_bf16_generic(weights: &[Bf16]) -> Result<(RansModel, Vec<u8>)> {
-    let mut bytes = Vec::with_capacity(weights.len() * 2);
-    for w in weights {
-        bytes.extend_from_slice(&w.to_bits().to_le_bytes());
+    use crate::codec::{Codec, CompressedTensor, RansCodec};
+    match RansCodec.compress(weights)? {
+        CompressedTensor::Rans(t) => Ok((t.model, t.encoded)),
+        _ => unreachable!("RansCodec produces rANS parts"),
     }
-    let model = RansModel::from_data(&bytes);
-    let encoded = rans_encode(&model, &bytes)?;
-    Ok((model, encoded))
 }
 
 /// Decompress the generic ANS stream back to BF16.
+///
+/// Thin shim kept for the existing benches; prefer
+/// [`crate::codec::RansCodec`] through the unified [`crate::codec::Codec`]
+/// API. Decodes in place (no model/stream copies) — the same bytes →
+/// BF16 assembly [`crate::codec::CompressedTensor::decompress_into`]
+/// performs for rANS payloads.
 pub fn decompress_bf16_generic(
     model: &RansModel,
     encoded: &[u8],

@@ -35,6 +35,24 @@ impl RansModel {
         Self::from_counts(&counts)
     }
 
+    /// Rebuild from a stored normalized frequency table (the container
+    /// load path — the table must sum to exactly `PROB_SCALE`).
+    pub fn from_normalized(freq: [u32; 256]) -> Result<RansModel> {
+        let total: u64 = freq.iter().map(|&f| f as u64).sum();
+        if total != PROB_SCALE as u64 {
+            return Err(Error::container(format!(
+                "rANS frequency table sums to {total}, expected {PROB_SCALE}"
+            )));
+        }
+        Ok(Self::finish(freq))
+    }
+
+    /// The normalized frequency table (sums to `PROB_SCALE`) — the unit
+    /// serialized into containers, 256 u16 entries.
+    pub fn normalized(&self) -> &[u32; 256] {
+        &self.freq
+    }
+
     /// Build from precomputed counts.
     pub fn from_counts(counts: &[u64; 256]) -> RansModel {
         let total: u64 = counts.iter().sum::<u64>().max(1);
@@ -56,6 +74,12 @@ impl RansModel {
             assert!(nf >= 1, "cannot normalize: too many rare symbols");
             freq[max_s] = nf as u32;
         }
+        Self::finish(freq)
+    }
+
+    /// Derive the cumulative table and slot lookup from a normalized
+    /// frequency table.
+    fn finish(freq: [u32; 256]) -> RansModel {
         let mut cum = [0u32; 257];
         for s in 0..256 {
             cum[s + 1] = cum[s] + freq[s];
@@ -225,6 +249,20 @@ mod tests {
         let enc = rans_encode(&model, &data).unwrap();
         let cut = &enc[..2];
         assert!(rans_decode(&model, cut, data.len()).is_err());
+    }
+
+    #[test]
+    fn normalized_table_roundtrip() {
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 17) as u8).collect();
+        let m = RansModel::from_data(&data);
+        let m2 = RansModel::from_normalized(*m.normalized()).unwrap();
+        assert_eq!(m, m2);
+        let enc = rans_encode(&m, &data).unwrap();
+        assert_eq!(rans_decode(&m2, &enc, data.len()).unwrap(), data);
+        // A table that does not sum to PROB_SCALE is rejected.
+        let mut bad = *m.normalized();
+        bad[0] += 1;
+        assert!(RansModel::from_normalized(bad).is_err());
     }
 
     #[test]

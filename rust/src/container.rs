@@ -1,0 +1,900 @@
+//! The on-disk `.df11` container: versioned, block-indexed, streamable.
+//!
+//! The paper's deployment story (§2.3, Table 2) needs a compressed
+//! artifact that can be stored, validated, and decompressed
+//! block-by-block at serve time. This module is that artifact — a
+//! chd-rs-style indexed container with per-block CRCs:
+//!
+//! ```text
+//! ┌──────────────────────── header ────────────────────────┐
+//! │ magic "DF1C"                                   4 bytes │
+//! │ version u32                                    (= 2)   │
+//! │ model name                          len u64 + bytes    │
+//! │ entry count u32                                        │
+//! │ index entry × count:                                   │
+//! │   group name, tensor name           len u64 + bytes    │
+//! │   codec id u8       (0 raw-bf16, 1 df11, 2 rans)       │
+//! │   ndim u32, dims u64[ndim]                             │
+//! │   num_elements u64                                     │
+//! │   payload offset u64 (absolute), payload len u64       │
+//! │   payload crc32 u32                                    │
+//! │ header crc32 u32    (over every header byte above)     │
+//! ├──────────────────────── payloads ──────────────────────┤
+//! │ block payload × count, at the indexed offsets:         │
+//! │   df11: the `serial::write_tensor` frame (canonical    │
+//! │         Huffman code-length table — LUTs are rebuilt   │
+//! │         on load — encoded stream, sign/mantissa plane, │
+//! │         5-bit-packed gaps, block output positions)     │
+//! │   rans: normalized freq table u16[256] + byte stream   │
+//! │   raw:  BF16 bits u16[num_elements], little-endian     │
+//! └────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! [`ContainerReader`] seeks per block, so groups stream one
+//! [`TensorGroup`]-worth at a time — in any order — without loading the
+//! whole file; every payload is CRC-checked before it is parsed.
+//! Version 1 was the legacy flat `DF1M` stream in
+//! [`crate::dfloat11::serial`] (no index, no streaming); this indexed
+//! layout is version 2.
+
+use crate::bf16::Bf16;
+use crate::codec::{CodecId, CompressedRef, CompressedTensor, DecodeOpts, RansTensor, RawTensor};
+use crate::crc32::Hasher;
+use crate::dfloat11::stats::CompressionStats;
+use crate::dfloat11::{serial, Df11Model};
+use crate::error::{Error, Result};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Container magic.
+pub const CONTAINER_MAGIC: &[u8; 4] = b"DF1C";
+/// Current container format version.
+pub const CONTAINER_VERSION: u32 = 2;
+
+/// Hard cap on names, entry counts, and single payloads (sanity against
+/// corrupted headers).
+const NAME_CAP: u64 = 1 << 16;
+const ENTRY_CAP: u32 = 1_000_000;
+const PAYLOAD_CAP: u64 = 1 << 40;
+
+// --- little-endian helpers with EOF mapped to typed errors -------------
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w_u64(w, s.len() as u64)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::container(format!("{what} truncated"))
+        } else {
+            Error::Io(e)
+        }
+    })
+}
+
+fn r_u32(r: &mut impl Read, h: &mut Hasher, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact_or(r, &mut b, what)?;
+    h.update(&b);
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read, h: &mut Hasher, what: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact_or(r, &mut b, what)?;
+    h.update(&b);
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_str(r: &mut impl Read, h: &mut Hasher, what: &str) -> Result<String> {
+    let len = r_u64(r, h, what)?;
+    if len > NAME_CAP {
+        return Err(Error::container(format!("{what} length {len} exceeds cap")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    read_exact_or(r, &mut buf, what)?;
+    h.update(&buf);
+    String::from_utf8(buf).map_err(|_| Error::container(format!("{what} not utf8")))
+}
+
+/// CRC-tracking writer (header and payload checksums).
+struct CrcWriter<W: Write> {
+    inner: W,
+    hasher: Hasher,
+    written: u64,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn new(inner: W) -> Self {
+        CrcWriter {
+            inner,
+            hasher: Hasher::new(),
+            written: 0,
+        }
+    }
+
+    fn crc(&self) -> u32 {
+        self.hasher.clone().finalize()
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hasher.update(&buf[..n]);
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Byte sink that only counts and hashes (the writer's measuring pass).
+#[derive(Default)]
+struct CountingWriter {
+    len: u64,
+    hasher: Hasher,
+}
+
+impl Write for CountingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.hasher.update(buf);
+        self.len += buf.len() as u64;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One block-index entry (header metadata for one tensor payload).
+#[derive(Clone, Debug)]
+pub struct IndexEntry {
+    /// Group name (the §2.3.3 decompression batch: `embed`, `block.N`,
+    /// `lm_head`).
+    pub group: String,
+    /// Tensor name (dotted, e.g. `block.3.q_proj`).
+    pub name: String,
+    /// Stored codec byte (parse with [`IndexEntry::codec`]; kept raw so
+    /// an unknown codec surfaces as a typed error only when the block is
+    /// actually read).
+    pub codec_id: u8,
+    /// Logical shape.
+    pub shape: Vec<usize>,
+    /// Element count (shape product).
+    pub num_elements: u64,
+    /// Absolute file offset of the payload.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// CRC-32 of the payload bytes.
+    pub crc32: u32,
+}
+
+impl IndexEntry {
+    /// The codec that produced this block.
+    pub fn codec(&self) -> Result<CodecId> {
+        CodecId::from_u8(self.codec_id)
+    }
+}
+
+/// What a writer queues for one entry: a typed tensor view, or opaque
+/// bytes under an arbitrary codec id (forward-compat tooling + tests).
+enum Pending<'a> {
+    Tensor(CompressedRef<'a>),
+    Opaque {
+        codec_id: u8,
+        shape: Vec<usize>,
+        bytes: &'a [u8],
+    },
+}
+
+/// Summary returned by [`ContainerWriter::write_to`].
+#[derive(Clone, Copy, Debug)]
+pub struct ContainerSummary {
+    /// Header bytes (index + magic + CRC).
+    pub header_bytes: u64,
+    /// Total payload bytes.
+    pub payload_bytes: u64,
+    /// Tensor count.
+    pub tensors: usize,
+}
+
+impl ContainerSummary {
+    /// Total file size.
+    pub fn total_bytes(&self) -> u64 {
+        self.header_bytes + self.payload_bytes
+    }
+}
+
+/// Builds a `.df11` container from compressed tensors.
+///
+/// The writer borrows the tensors (compression output is typically
+/// large) and serializes in two passes: a measuring pass that sizes and
+/// checksums every payload so the header index can be written first,
+/// then the real streaming write. Nothing is buffered whole.
+pub struct ContainerWriter<'a> {
+    model_name: String,
+    entries: Vec<(String, String, Pending<'a>)>,
+}
+
+impl<'a> ContainerWriter<'a> {
+    /// Empty container for `model_name`.
+    pub fn new(model_name: impl Into<String>) -> ContainerWriter<'a> {
+        ContainerWriter {
+            model_name: model_name.into(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Queue one tensor under `group`/`name` (order is preserved and
+    /// becomes the streaming order).
+    pub fn push(&mut self, group: &str, name: &str, tensor: CompressedRef<'a>) {
+        self.entries
+            .push((group.to_string(), name.to_string(), Pending::Tensor(tensor)));
+    }
+
+    /// Queue an opaque payload under a raw codec id. Exists for
+    /// forward-compat tooling and the unknown-codec test path; readers
+    /// fail with [`Error::UnknownCodec`] when the block is read.
+    #[doc(hidden)]
+    pub fn push_opaque(
+        &mut self,
+        group: &str,
+        name: &str,
+        codec_id: u8,
+        shape: Vec<usize>,
+        bytes: &'a [u8],
+    ) {
+        self.entries.push((
+            group.to_string(),
+            name.to_string(),
+            Pending::Opaque {
+                codec_id,
+                shape,
+                bytes,
+            },
+        ));
+    }
+
+    fn entry_meta(&self, pending: &Pending<'a>) -> (u8, Vec<usize>, u64) {
+        match pending {
+            Pending::Tensor(t) => (
+                t.codec_id().as_u8(),
+                t.shape().to_vec(),
+                t.num_elements() as u64,
+            ),
+            Pending::Opaque {
+                codec_id, shape, ..
+            } => {
+                let numel: usize = shape.iter().product();
+                (*codec_id, shape.clone(), numel as u64)
+            }
+        }
+    }
+
+    /// Serialize the header (without its trailing CRC). `payloads` holds
+    /// each entry's measured `(len, crc)`; `base` is the absolute offset
+    /// of the first payload (0 during the measuring pass — offsets are
+    /// fixed-width, so the header size does not depend on their values).
+    fn write_header(&self, w: &mut impl Write, payloads: &[(u64, u32)], base: u64) -> Result<()> {
+        w.write_all(CONTAINER_MAGIC)?;
+        w_u32(w, CONTAINER_VERSION)?;
+        w_str(w, &self.model_name)?;
+        w_u32(w, self.entries.len() as u32)?;
+        let mut offset = base;
+        for ((group, name, pending), &(len, crc)) in self.entries.iter().zip(payloads) {
+            let (codec_id, shape, num_elements) = self.entry_meta(pending);
+            w_str(w, group)?;
+            w_str(w, name)?;
+            w.write_all(&[codec_id])?;
+            w_u32(w, shape.len() as u32)?;
+            for &d in &shape {
+                w_u64(w, d as u64)?;
+            }
+            w_u64(w, num_elements)?;
+            w_u64(w, offset)?;
+            w_u64(w, len)?;
+            w_u32(w, crc)?;
+            offset += len;
+        }
+        Ok(())
+    }
+
+    /// Write the container to `path`.
+    pub fn write_to(&self, path: &Path) -> Result<ContainerSummary> {
+        // Refuse to produce a file the reader would reject: enforce the
+        // same caps `ContainerReader::open` applies, at write time.
+        if self.entries.len() as u64 > ENTRY_CAP as u64 {
+            return Err(Error::InvalidArgument(format!(
+                "{} tensors exceeds the container entry cap",
+                self.entries.len()
+            )));
+        }
+        if self.model_name.len() as u64 > NAME_CAP {
+            return Err(Error::InvalidArgument("model name too long".into()));
+        }
+        for (group, name, pending) in &self.entries {
+            if group.len() as u64 > NAME_CAP || name.len() as u64 > NAME_CAP {
+                return Err(Error::InvalidArgument(format!(
+                    "tensor {name}: group/tensor name too long"
+                )));
+            }
+            let (_, shape, _) = self.entry_meta(pending);
+            if shape.len() > 8 {
+                return Err(Error::InvalidArgument(format!(
+                    "tensor {name}: ndim {} exceeds 8",
+                    shape.len()
+                )));
+            }
+            if shape
+                .iter()
+                .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+                .filter(|&n| n <= PAYLOAD_CAP)
+                .is_none()
+            {
+                return Err(Error::InvalidArgument(format!(
+                    "tensor {name}: shape {shape:?} overflows"
+                )));
+            }
+        }
+        // Pass 1: measure + checksum every payload.
+        let mut payloads = Vec::with_capacity(self.entries.len());
+        for (_, _, pending) in &self.entries {
+            let mut counter = CountingWriter::default();
+            write_payload(&mut counter, pending)?;
+            payloads.push((counter.len, counter.hasher.finalize()));
+        }
+        // Header size (offset values are fixed-width, so measuring with
+        // base 0 yields the real size), plus 4 bytes of header CRC.
+        let mut counter = CountingWriter::default();
+        self.write_header(&mut counter, &payloads, 0)?;
+        let header_bytes = counter.len + 4;
+
+        // Pass 2: stream everything to disk.
+        let file = std::fs::File::create(path)?;
+        let mut out = BufWriter::new(file);
+        let mut header = CrcWriter::new(&mut out);
+        self.write_header(&mut header, &payloads, header_bytes)?;
+        let crc = header.crc();
+        out.write_all(&crc.to_le_bytes())?;
+        let mut payload_bytes = 0u64;
+        for ((_, _, pending), &(len, crc)) in self.entries.iter().zip(&payloads) {
+            let mut w = CrcWriter::new(&mut out);
+            write_payload(&mut w, pending)?;
+            debug_assert_eq!(w.written, len, "payload length drifted between passes");
+            debug_assert_eq!(w.crc(), crc, "payload crc drifted between passes");
+            payload_bytes += len;
+        }
+        out.flush()?;
+        Ok(ContainerSummary {
+            header_bytes,
+            payload_bytes,
+            tensors: self.entries.len(),
+        })
+    }
+}
+
+/// Serialize one block payload.
+fn write_payload(w: &mut impl Write, pending: &Pending<'_>) -> Result<()> {
+    match pending {
+        Pending::Tensor(CompressedRef::Df11(t)) => serial::write_tensor(w, t),
+        Pending::Tensor(CompressedRef::Rans(t)) => {
+            for &f in t.model.normalized() {
+                w.write_all(&(f as u16).to_le_bytes())?;
+            }
+            w_u64(w, t.encoded.len() as u64)?;
+            w.write_all(&t.encoded)?;
+            Ok(())
+        }
+        Pending::Tensor(CompressedRef::RawBf16(t)) => {
+            for &b in &t.bits {
+                w.write_all(&b.to_le_bytes())?;
+            }
+            Ok(())
+        }
+        Pending::Opaque { bytes, .. } => {
+            w.write_all(bytes)?;
+            Ok(())
+        }
+    }
+}
+
+/// Parse one block payload according to its index entry.
+fn read_payload(entry: &IndexEntry, bytes: &[u8]) -> Result<CompressedTensor> {
+    match entry.codec()? {
+        CodecId::Df11 => {
+            let mut r: &[u8] = bytes;
+            let t = serial::read_tensor(&mut r)?;
+            if !r.is_empty() {
+                return Err(Error::container(format!(
+                    "tensor {}: {} trailing payload bytes",
+                    entry.name,
+                    r.len()
+                )));
+            }
+            if t.num_elements() as u64 != entry.num_elements {
+                return Err(Error::container(format!(
+                    "tensor {}: payload has {} elements, index says {}",
+                    entry.name,
+                    t.num_elements(),
+                    entry.num_elements
+                )));
+            }
+            Ok(CompressedTensor::Df11(t))
+        }
+        CodecId::Rans => {
+            let mut r: &[u8] = bytes;
+            let mut freq = [0u32; 256];
+            let mut fb = [0u8; 2];
+            for f in freq.iter_mut() {
+                read_exact_or(&mut r, &mut fb, "rANS frequency table")?;
+                *f = u16::from_le_bytes(fb) as u32;
+            }
+            let mut lb = [0u8; 8];
+            read_exact_or(&mut r, &mut lb, "rANS stream length")?;
+            let len = u64::from_le_bytes(lb);
+            if len != r.len() as u64 {
+                return Err(Error::container(format!(
+                    "tensor {}: rANS stream length {len} does not match payload",
+                    entry.name
+                )));
+            }
+            let model = crate::ans::RansModel::from_normalized(freq)?;
+            Ok(CompressedTensor::Rans(RansTensor {
+                shape: entry.shape.clone(),
+                num_elements: entry.num_elements as usize,
+                model,
+                encoded: r.to_vec(),
+            }))
+        }
+        CodecId::RawBf16 => {
+            if bytes.len() as u64 != entry.num_elements * 2 {
+                return Err(Error::container(format!(
+                    "tensor {}: raw payload is {} bytes for {} elements",
+                    entry.name,
+                    bytes.len(),
+                    entry.num_elements
+                )));
+            }
+            let bits = bytes
+                .chunks_exact(2)
+                .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                .collect();
+            Ok(CompressedTensor::RawBf16(RawTensor {
+                shape: entry.shape.clone(),
+                bits,
+            }))
+        }
+    }
+}
+
+/// One group read back from a container: the streaming unit.
+#[derive(Debug)]
+pub struct ContainerGroup {
+    /// Group name.
+    pub name: String,
+    /// `(tensor name, parts)` in stored order.
+    pub tensors: Vec<(String, CompressedTensor)>,
+}
+
+impl ContainerGroup {
+    /// Decompress every tensor in the group (block-batched, §2.3.3).
+    pub fn decompress_all(&self, opts: &DecodeOpts) -> Result<Vec<(String, Vec<Bf16>)>> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        for (name, t) in &self.tensors {
+            out.push((name.clone(), t.decompress(opts)?));
+        }
+        Ok(out)
+    }
+
+    /// Total elements across the group.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.num_elements()).sum()
+    }
+}
+
+/// Streaming reader over a `.df11` container.
+///
+/// `open` loads and validates only the header; each block payload is
+/// read (and CRC-checked) on demand with a seek, so groups can be
+/// fetched in any order without loading the whole file.
+pub struct ContainerReader {
+    file: Mutex<BufReader<std::fs::File>>,
+    model_name: String,
+    version: u32,
+    entries: Vec<IndexEntry>,
+    /// Distinct group names in index order.
+    group_names: Vec<String>,
+}
+
+impl std::fmt::Debug for ContainerReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ContainerReader({}, {} tensors)",
+            self.model_name,
+            self.entries.len()
+        )
+    }
+}
+
+impl ContainerReader {
+    /// Open a container and validate its header.
+    pub fn open(path: &Path) -> Result<ContainerReader> {
+        let file = std::fs::File::open(path)?;
+        let mut r = BufReader::new(file);
+        let mut h = Hasher::new();
+
+        let mut magic = [0u8; 4];
+        read_exact_or(&mut r, &mut magic, "container header")?;
+        h.update(&magic);
+        if &magic != CONTAINER_MAGIC {
+            if &magic == b"DF1M" {
+                return Err(Error::container(
+                    "legacy flat DF1M model stream (format v1); this reader wants the \
+                     indexed DF1C v2 container — load it with dfloat11::serial::load_model \
+                     or re-run `compress`",
+                ));
+            }
+            return Err(Error::container("bad container magic"));
+        }
+        // Version is checked before the CRC so a reader from another
+        // era reports the version gap, not a checksum mismatch.
+        let version = r_u32(&mut r, &mut h, "container header")?;
+        if version != CONTAINER_VERSION {
+            return Err(Error::UnsupportedVersion(version, CONTAINER_VERSION));
+        }
+        let model_name = r_str(&mut r, &mut h, "model name")?;
+        let count = r_u32(&mut r, &mut h, "entry count")?;
+        if count > ENTRY_CAP {
+            return Err(Error::container(format!("{count} index entries exceeds cap")));
+        }
+        let mut entries = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let group = r_str(&mut r, &mut h, "group name")?;
+            let name = r_str(&mut r, &mut h, "tensor name")?;
+            let mut codec = [0u8; 1];
+            read_exact_or(&mut r, &mut codec, "index entry")?;
+            h.update(&codec);
+            let ndim = r_u32(&mut r, &mut h, "index entry")?;
+            if ndim > 8 {
+                return Err(Error::container(format!("ndim {ndim} too large")));
+            }
+            let mut shape = Vec::with_capacity(ndim as usize);
+            for _ in 0..ndim {
+                shape.push(r_u64(&mut r, &mut h, "index entry")? as usize);
+            }
+            let num_elements = r_u64(&mut r, &mut h, "index entry")?;
+            let offset = r_u64(&mut r, &mut h, "index entry")?;
+            let len = r_u64(&mut r, &mut h, "index entry")?;
+            if len > PAYLOAD_CAP {
+                return Err(Error::container(format!(
+                    "payload length {len} exceeds cap"
+                )));
+            }
+            let crc32 = r_u32(&mut r, &mut h, "index entry")?;
+            // Checked product: a crafted header must fail typed, not
+            // overflow-panic (debug) or wrap past the consistency check
+            // (release).
+            let numel = shape
+                .iter()
+                .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+                .filter(|&n| n <= PAYLOAD_CAP)
+                .ok_or_else(|| {
+                    Error::container(format!("tensor {name}: shape {shape:?} overflows"))
+                })?;
+            if numel != num_elements {
+                return Err(Error::container(format!(
+                    "tensor {name}: shape {shape:?} does not match {num_elements} elements"
+                )));
+            }
+            entries.push(IndexEntry {
+                group,
+                name,
+                codec_id: codec[0],
+                shape,
+                num_elements,
+                offset,
+                len,
+                crc32,
+            });
+        }
+        let computed = h.finalize();
+        let mut crc = [0u8; 4];
+        read_exact_or(&mut r, &mut crc, "header crc")?;
+        let stored = u32::from_le_bytes(crc);
+        if stored != computed {
+            return Err(Error::container(format!(
+                "header crc mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            )));
+        }
+
+        let mut group_names: Vec<String> = Vec::new();
+        for e in &entries {
+            if !group_names.iter().any(|g| *g == e.group) {
+                group_names.push(e.group.clone());
+            }
+        }
+        Ok(ContainerReader {
+            file: Mutex::new(r),
+            model_name,
+            version,
+            entries,
+            group_names,
+        })
+    }
+
+    /// Model identifier stored in the header.
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    /// Container format version.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// The block index.
+    pub fn entries(&self) -> &[IndexEntry] {
+        &self.entries
+    }
+
+    /// Distinct group names in stored order.
+    pub fn group_names(&self) -> &[String] {
+        &self.group_names
+    }
+
+    /// Index of the entry for tensor `name`, if present.
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// Total elements across all blocks.
+    pub fn total_elements(&self) -> u64 {
+        self.entries.iter().map(|e| e.num_elements).sum()
+    }
+
+    /// Container-level compression statistics (payload bytes vs BF16).
+    pub fn stats(&self) -> CompressionStats {
+        let original = self.total_elements() * 2;
+        let compressed = self.entries.iter().map(|e| e.len).sum();
+        CompressionStats::new(original, compressed, self.total_elements())
+    }
+
+    /// Read and parse one block payload by index (CRC-checked).
+    pub fn read_tensor_at(&self, idx: usize) -> Result<CompressedTensor> {
+        let entry = self
+            .entries
+            .get(idx)
+            .ok_or_else(|| Error::InvalidArgument(format!("no index entry {idx}")))?;
+        let mut buf = vec![0u8; entry.len as usize];
+        {
+            let mut f = self
+                .file
+                .lock()
+                .map_err(|_| Error::Runtime("container reader lock poisoned".into()))?;
+            f.seek(SeekFrom::Start(entry.offset))?;
+            read_exact_or(
+                &mut *f,
+                &mut buf,
+                &format!("payload for tensor {}", entry.name),
+            )?;
+        }
+        let computed = crate::crc32::crc32(&buf);
+        if computed != entry.crc32 {
+            return Err(Error::container(format!(
+                "payload crc mismatch for tensor {}: stored {:#010x}, computed {computed:#010x}",
+                entry.name, entry.crc32
+            )));
+        }
+        read_payload(entry, &buf)
+    }
+
+    /// Read one tensor by dotted name.
+    pub fn read_tensor(&self, name: &str) -> Result<CompressedTensor> {
+        let idx = self
+            .find(name)
+            .ok_or_else(|| Error::InvalidArgument(format!("no tensor {name} in container")))?;
+        self.read_tensor_at(idx)
+    }
+
+    /// Read one whole group (seeks as needed — out-of-order reads are
+    /// fine).
+    pub fn read_group(&self, group: &str) -> Result<ContainerGroup> {
+        let idxs: Vec<usize> = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.group == group)
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.is_empty() {
+            return Err(Error::InvalidArgument(format!(
+                "no group {group} in container"
+            )));
+        }
+        let mut tensors = Vec::with_capacity(idxs.len());
+        for i in idxs {
+            tensors.push((self.entries[i].name.clone(), self.read_tensor_at(i)?));
+        }
+        Ok(ContainerGroup {
+            name: group.to_string(),
+            tensors,
+        })
+    }
+
+    /// Stream groups one at a time in stored order.
+    pub fn groups(&self) -> impl Iterator<Item = Result<ContainerGroup>> + '_ {
+        self.group_names.iter().map(move |g| self.read_group(g))
+    }
+}
+
+/// Write a whole [`Df11Model`] as a container (groups in model order).
+pub fn write_df11_model(path: &Path, model: &Df11Model) -> Result<ContainerSummary> {
+    let mut w = ContainerWriter::new(model.name.clone());
+    for g in &model.groups {
+        for (name, t) in &g.tensors {
+            w.push(&g.name, name, CompressedRef::Df11(t));
+        }
+    }
+    w.write_to(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{all_codecs, Codec};
+    use crate::dfloat11::{Df11Tensor, TensorGroup};
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("df11_container_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}_{}.df11", std::process::id()))
+    }
+
+    #[test]
+    fn container_roundtrips_all_codecs() {
+        let ws = gaussian_weights(6_000, 1);
+        let parts: Vec<_> = all_codecs()
+            .iter()
+            .map(|c| (c.name(), c.compress(&ws).unwrap()))
+            .collect();
+        let mut writer = ContainerWriter::new("unit");
+        for (name, t) in &parts {
+            writer.push("g", name, t.view());
+        }
+        let path = temp_path("all_codecs");
+        let summary = writer.write_to(&path).unwrap();
+        assert_eq!(summary.tensors, 3);
+        assert_eq!(
+            summary.total_bytes(),
+            std::fs::metadata(&path).unwrap().len()
+        );
+
+        let reader = ContainerReader::open(&path).unwrap();
+        assert_eq!(reader.model_name(), "unit");
+        assert_eq!(reader.version(), CONTAINER_VERSION);
+        assert_eq!(reader.entries().len(), 3);
+        let group = reader.read_group("g").unwrap();
+        for (name, t) in &group.tensors {
+            let got = t.decompress(&DecodeOpts::default()).unwrap();
+            assert_eq!(&got, &ws, "codec {name}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_df11_model_and_stream_groups() {
+        let mut m = Df11Model::new("stream-test");
+        for b in 0..3 {
+            m.push_group(TensorGroup {
+                name: format!("block.{b}"),
+                tensors: vec![(
+                    format!("block.{b}.w"),
+                    Df11Tensor::compress(&gaussian_weights(2_000 + b as usize * 100, b)).unwrap(),
+                )],
+            });
+        }
+        let path = temp_path("model");
+        write_df11_model(&path, &m).unwrap();
+        let reader = ContainerReader::open(&path).unwrap();
+        assert_eq!(reader.group_names().len(), 3);
+        assert_eq!(reader.total_elements(), m.num_elements());
+        let mut seen = 0;
+        for g in reader.groups() {
+            let g = g.unwrap();
+            assert_eq!(g.tensors.len(), 1);
+            seen += 1;
+        }
+        assert_eq!(seen, 3);
+        // Out-of-order single-group read.
+        let g2 = reader.read_group("block.2").unwrap();
+        let expect = m.group("block.2").unwrap().tensors[0].1.decompress().unwrap();
+        assert_eq!(
+            g2.tensors[0].1.decompress(&DecodeOpts::default()).unwrap(),
+            expect
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn payload_corruption_fails_validation() {
+        let ws = gaussian_weights(3_000, 7);
+        let t = crate::codec::Df11Codec::default().compress(&ws).unwrap();
+        let mut writer = ContainerWriter::new("corrupt");
+        writer.push("g", "t", t.view());
+        let path = temp_path("corrupt");
+        let summary = writer.write_to(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = summary.header_bytes as usize + bytes[summary.header_bytes as usize..].len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let reader = ContainerReader::open(&path).unwrap();
+        let err = reader.read_group("g").unwrap_err();
+        assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_corruption_fails_validation() {
+        let ws = gaussian_weights(500, 8);
+        let t = crate::codec::RawBf16Codec.compress(&ws).unwrap();
+        let mut writer = ContainerWriter::new("hdr");
+        writer.push("g", "t", t.view());
+        let path = temp_path("hdr");
+        writer.write_to(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a model-name byte (offset 16 = magic + version + name len).
+        bytes[16] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            ContainerReader::open(&path),
+            Err(Error::InvalidContainer(_))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_codec_is_typed_and_lazy() {
+        let payload = vec![0xABu8; 64];
+        let mut writer = ContainerWriter::new("opaque");
+        writer.push_opaque("g", "t", 0x7F, vec![32], &payload);
+        let path = temp_path("opaque");
+        writer.write_to(&path).unwrap();
+        // The header parses (codec ids are opaque until a block is read)…
+        let reader = ContainerReader::open(&path).unwrap();
+        assert_eq!(reader.entries()[0].codec_id, 0x7F);
+        // …and reading the block reports the unknown codec.
+        assert!(matches!(
+            reader.read_group("g"),
+            Err(Error::UnknownCodec(0x7F))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+}

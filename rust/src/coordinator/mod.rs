@@ -19,7 +19,10 @@ pub mod queue;
 pub mod request;
 pub mod scheduler;
 
-pub use engine::{BlockBackend, BlockWeightsF32, Engine, NativeBackend, WeightMode};
+pub use engine::{
+    Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource, Df11Source, Engine,
+    FetchCost, NativeBackend, OffloadSource, ScratchPool, WeightMode, WeightSource,
+};
 pub use metrics::{Breakdown, Component, LatencyStats};
 pub use queue::RequestQueue;
 pub use request::{Request, Response};

@@ -296,6 +296,32 @@ impl Df11Model {
         }
     }
 
+    /// Compress a full set of generated weights into grouped DF11
+    /// tensors (embed, `block.N`, lm_head — the §2.3.3 batching unit),
+    /// with size-adapted kernel geometry per tensor. Shared by the
+    /// serving engine's in-memory build and the CLI `compress` path.
+    pub fn compress_from_weights(
+        name: impl Into<String>,
+        weights: Vec<(crate::model::WeightSpec, Vec<Bf16>)>,
+    ) -> Result<Df11Model> {
+        let mut model = Df11Model::new(name);
+        for (spec, w) in weights {
+            let t = Df11Tensor::compress_shaped(
+                &w,
+                &[spec.shape[0], spec.shape[1]],
+                &KernelConfig::for_elements(w.len()),
+            )?;
+            match model.groups.iter_mut().find(|g| g.name == spec.group) {
+                Some(g) => g.tensors.push((spec.name, t)),
+                None => model.push_group(TensorGroup {
+                    name: spec.group,
+                    tensors: vec![(spec.name, t)],
+                }),
+            }
+        }
+        Ok(model)
+    }
+
     /// Append a group.
     pub fn push_group(&mut self, group: TensorGroup) {
         self.groups.push(group);

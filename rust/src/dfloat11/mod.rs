@@ -5,6 +5,12 @@
 //! the kernel auxiliary variables (gap array + block output positions).
 //! [`Df11Model`] groups tensors by transformer block so decompression
 //! can be batched at block granularity (§2.3.3).
+//!
+//! The free functions here ([`compress::compress_weights`],
+//! [`decompress::decompress_sequential`], …) are the low-level DF11
+//! machinery; the unified entry point shared with the other codecs is
+//! [`crate::codec::Df11Codec`], and the on-disk format is the indexed
+//! container in [`crate::container`].
 
 pub mod compress;
 pub mod decompress;

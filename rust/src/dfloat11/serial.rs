@@ -1,10 +1,17 @@
-//! Binary (de)serialization of DF11 containers.
+//! Binary (de)serialization of DF11 tensor frames.
 //!
 //! A small, versioned, little-endian format. The gap array is stored
 //! 5-bit packed exactly as the paper accounts for it (§2.3.2: "each
 //! offset lies in [0, 31] and is stored using only 5 bits"); the decode
 //! LUTs are *not* stored — they are rebuilt from the 256 codebook length
 //! bytes on load.
+//!
+//! [`write_tensor`]/[`read_tensor`] are the per-tensor frame the
+//! block-indexed `.df11` container ([`crate::container`]) embeds as its
+//! DF11 payloads. The flat model stream ([`write_model`]/[`read_model`],
+//! magic `DF1M`) is the **legacy v1** on-disk format — no index, no
+//! streaming — superseded by the container and kept only for old files
+//! and tests.
 //!
 //! Layout (tensor):
 //! ```text

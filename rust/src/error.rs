@@ -26,6 +26,9 @@ pub enum Error {
     /// The container was produced by an incompatible format version.
     UnsupportedVersion(u32, u32),
 
+    /// A container block names a codec this build does not know.
+    UnknownCodec(u8),
+
     /// Device memory budget exhausted (simulated HBM OOM).
     OutOfMemory {
         requested: u64,
@@ -68,6 +71,7 @@ impl std::fmt::Display for Error {
                 f,
                 "unsupported DF11 format version {got} (supported: {supported})"
             ),
+            Error::UnknownCodec(id) => write!(f, "unknown codec id {id:#04x}"),
             Error::OutOfMemory {
                 requested,
                 free,
@@ -152,5 +156,10 @@ mod tests {
     fn helpers_build_expected_variants() {
         assert!(matches!(Error::corrupt("x"), Error::CorruptStream(_)));
         assert!(matches!(Error::container("x"), Error::InvalidContainer(_)));
+    }
+
+    #[test]
+    fn unknown_codec_displays_hex_id() {
+        assert_eq!(Error::UnknownCodec(0x7F).to_string(), "unknown codec id 0x7f");
     }
 }

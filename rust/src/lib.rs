@@ -25,6 +25,8 @@ pub mod ans;
 pub mod bench_harness;
 pub mod bf16;
 pub mod cli;
+pub mod codec;
+pub mod container;
 pub mod coordinator;
 pub mod crc32;
 pub mod dfloat11;
@@ -43,5 +45,8 @@ pub mod rng;
 pub mod runtime;
 
 pub use bf16::Bf16;
+pub use codec::{Codec, CodecId, CompressedTensor, DecodeOpts};
+pub use container::{ContainerReader, ContainerWriter};
+pub use dfloat11::parallel::auto_threads;
 pub use dfloat11::{Df11Model, Df11Tensor};
 pub use error::{Error, Result};

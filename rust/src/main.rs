@@ -1,40 +1,49 @@
 //! `dfloat11` — the leader binary: compress, inspect, serve, estimate.
 //!
 //! Subcommands:
-//!   compress   generate a synthetic model, compress to DF11, save
-//!   inspect    print compression stats + entropy analysis for a model
+//!   compress   generate a synthetic model, compress to a .df11 container
+//!   inspect    stream a .df11 container: per-block stats + entropy
 //!   serve      run the serving coordinator on a synthetic workload
 //!   estimate   paper-scale placement / throughput estimates (no weights)
-//!   decode     roundtrip-check a saved .df11 file
+//!   decode     decompress every block of a .df11 container (optionally
+//!              verifying bit-identity against regenerated weights)
 //!
 //! Examples:
-//!   dfloat11 compress --scale 8 --out /tmp/model.df11
+//!   dfloat11 compress --model tiny-100m --out /tmp/t.df11
+//!   dfloat11 inspect /tmp/t.df11
 //!   dfloat11 serve --requests 16 --batch 4 --mode df11
+//!   dfloat11 serve --requests 4 --from /tmp/t.df11 --model tiny-100m
+//!   dfloat11 decode --in /tmp/t.df11 --verify --model tiny-100m
 //!   dfloat11 estimate --model llama31-405b --gpus 8 --device a100-80g
 
 use dfloat11::bench_harness::fmt;
 use dfloat11::cli::Args;
+use dfloat11::codec::{codec_by_name, CompressedTensor, DecodeOpts};
+use dfloat11::container::{ContainerReader, ContainerWriter};
 use dfloat11::coordinator::{Component, Engine, Request, SchedulerConfig, Server, WeightMode};
-use dfloat11::dfloat11::serial;
 use dfloat11::entropy::ComponentHistograms;
 use dfloat11::error::{Error, Result};
 use dfloat11::gpu_sim::Device;
 use dfloat11::model::init::generate_model_weights;
 use dfloat11::model::{zoo, ModelConfig};
 use dfloat11::multi_gpu::{min_gpus, plan_layer_sharding, ShardFormat};
-use dfloat11::{Df11Model, Df11Tensor};
+use std::path::Path;
 
 fn usage() -> ! {
     eprintln!(
         "usage: dfloat11 <compress|inspect|serve|estimate|decode> [options]\n\
          \n\
-         compress  --scale N --seed S --out PATH     synthesize + compress\n\
-         inspect   --in PATH                          stats for a .df11 file\n\
+         compress  --model NAME --scale N --seed S --codec df11|rans|raw\n\
+                   --out PATH                         synthesize + compress to a container\n\
+         inspect   PATH | --in PATH                   stats for a .df11 container\n\
          serve     --requests N --batch B --mode bf16|df11|offload\n\
                    --threads T   decompression worker threads (0 = one per core);\n\
                                  block i+1 is decompressed while block i computes\n\
+                   --from PATH   serve weights out of a .df11 container\n\
+                                 (pass the matching --model/--scale)\n\
          estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
-         decode    --in PATH [--threads T]            roundtrip-check a .df11 file"
+         decode    --in PATH [--threads T] [--verify]  decode a .df11 container;\n\
+                   --verify checks bit-identity vs --model/--scale/--seed"
     );
     std::process::exit(2);
 }
@@ -55,56 +64,78 @@ fn zoo_by_name(name: &str) -> Option<ModelConfig> {
     })
 }
 
+/// The scaled-down model config shared by compress/serve/decode.
+fn scaled_config(args: &Args, default_scale: usize) -> Result<ModelConfig> {
+    let scale = args.get_parse_or("scale", default_scale)?;
+    let base = args.get_or("model", "llama31-8b");
+    Ok(zoo_by_name(&base)
+        .ok_or_else(|| Error::InvalidArgument(format!("unknown model {base}")))?
+        .scaled_down(scale))
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
-    let scale = args.get_parse_or("scale", 8usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
     let out = args.get_or("out", "/tmp/model.df11");
-    let base = args.get_or("model", "llama31-8b");
-    let cfg = zoo_by_name(&base)
-        .ok_or_else(|| Error::InvalidArgument(format!("unknown model {base}")))?
-        .scaled_down(scale);
-    println!("model: {} ({} params)", cfg.name, cfg.num_params());
+    let cfg = scaled_config(args, 8)?;
+    let codec = codec_by_name(&args.get_or("codec", "df11"), DecodeOpts::default())?;
+    println!(
+        "model: {} ({} params), codec {}",
+        cfg.name,
+        cfg.num_params(),
+        codec.name()
+    );
 
     let t0 = std::time::Instant::now();
-    let mut model = Df11Model::new(cfg.name.clone());
-    let mut groups: Vec<(String, Vec<(String, Df11Tensor)>)> = Vec::new();
+    let mut parts: Vec<(String, String, CompressedTensor)> = Vec::new();
     for (spec, w) in generate_model_weights(&cfg, seed) {
-        let t = Df11Tensor::compress_shaped(
-            &w,
-            &[spec.shape[0], spec.shape[1]],
-            &dfloat11::gpu_sim::KernelConfig::for_elements(w.len()),
-        )?;
-        match groups.iter_mut().find(|(g, _)| *g == spec.group) {
-            Some((_, ts)) => ts.push((spec.name, t)),
-            None => groups.push((spec.group, vec![(spec.name, t)])),
-        }
+        let t = codec.compress_shaped(&w, &[spec.shape[0], spec.shape[1]])?;
+        parts.push((spec.group, spec.name, t));
     }
-    for (name, tensors) in groups {
-        model.push_group(dfloat11::dfloat11::TensorGroup { name, tensors });
+    let mut stats = dfloat11::dfloat11::CompressionStats::new(0, 0, 0);
+    let mut writer = ContainerWriter::new(cfg.name.clone());
+    for (group, name, t) in &parts {
+        stats = stats.merge(&t.stats());
+        writer.push(group, name, t.view());
     }
-    let stats = model.stats();
+    let summary = writer.write_to(Path::new(&out))?;
     println!("compressed in {:.2}s: {stats}", t0.elapsed().as_secs_f64());
-    serial::save_model(std::path::Path::new(&out), &model)?;
-    println!("saved {out}");
+    println!(
+        "saved {out}: {} tensors, {} header + {} payload",
+        summary.tensors,
+        fmt::bytes(summary.header_bytes),
+        fmt::bytes(summary.payload_bytes)
+    );
     Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args
         .get("in")
-        .ok_or_else(|| Error::InvalidArgument("--in required".into()))?;
-    let model = serial::load_model(std::path::Path::new(path))?;
-    println!("model: {}", model.name);
-    println!("groups: {}", model.groups.len());
-    println!("stats: {}", model.stats());
+        .or_else(|| args.positional(1))
+        .ok_or_else(|| Error::InvalidArgument("pass a path or --in PATH".into()))?;
+    let reader = ContainerReader::open(Path::new(path))?;
+    println!(
+        "container: {} (format v{})",
+        reader.model_name(),
+        reader.version()
+    );
+    println!(
+        "groups: {}  tensors: {}",
+        reader.group_names().len(),
+        reader.entries().len()
+    );
+    println!("stats: {}", reader.stats());
     let mut hist = ComponentHistograms::new();
-    for g in &model.groups {
-        for (name, t) in &g.tensors {
-            let w = t.decompress()?;
+    // Stream one group at a time — never the whole file.
+    for group in reader.groups() {
+        let group = group?;
+        for (name, t) in &group.tensors {
+            let w = t.decompress(&DecodeOpts::default())?;
             hist.record_weights(&w);
             let s = t.stats();
             println!(
-                "  {name:<28} {:>10} elems  ratio {:>6.2}%  {:>5.2} bits/w",
+                "  {name:<28} {:>9} {:>10} elems  ratio {:>6.2}%  {:>5.2} bits/w",
+                t.codec_id().label(),
                 t.num_elements(),
                 s.ratio_percent(),
                 s.bits_per_weight()
@@ -123,28 +154,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_parse_or("requests", 8usize)?;
     let batch = args.get_parse_or("batch", 4usize)?;
     let new_tokens = args.get_parse_or("tokens", 8usize)?;
-    let scale = args.get_parse_or("scale", 24usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
     let threads = args.get_parse_or("threads", 0usize)?;
-    let mode = match args.get_or("mode", "df11").as_str() {
-        "bf16" => WeightMode::Bf16Resident,
-        "df11" => WeightMode::Df11,
-        "offload" => WeightMode::OffloadBf16 {
-            resident_layers: 1,
-            transfer: dfloat11::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
-        },
-        other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
+    let cfg = scaled_config(args, 24)?;
+    let mut engine = if let Some(from) = args.get("from") {
+        // Serve straight out of a .df11 container (streamed, CRC-checked,
+        // decompressed into the engine's reusable scratch pool). The
+        // container fixes the weights, so --mode/--seed would be silently
+        // meaningless — reject the conflict instead.
+        if args.get("mode").is_some() || args.get("seed").is_some() {
+            return Err(Error::InvalidArgument(
+                "--from serves the container's weights; it cannot be combined \
+                 with --mode or --seed"
+                    .into(),
+            ));
+        }
+        Engine::build_from_container(&cfg, Path::new(from))?
+    } else {
+        let mode = match args.get_or("mode", "df11").as_str() {
+            "bf16" => WeightMode::Bf16Resident,
+            "df11" => WeightMode::Df11,
+            "offload" => WeightMode::OffloadBf16 {
+                resident_layers: 1,
+                transfer: dfloat11::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
+            },
+            other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
+        };
+        Engine::build(&cfg, seed, mode)?
     };
-    let cfg = zoo_by_name(&args.get_or("model", "llama31-8b"))
-        .ok_or_else(|| Error::InvalidArgument("unknown model".into()))?
-        .scaled_down(scale);
-    let mut engine = Engine::build(&cfg, seed, mode)?;
     engine.set_decode_threads(threads);
     println!(
-        "serving {} ({} params, mode {:?}, batch {batch}, {} decode threads)",
+        "serving {} ({} params, source {}, batch {batch}, {} decode threads)",
         cfg.name,
         cfg.num_params(),
-        args.get_or("mode", "df11"),
+        engine.source().source_name(),
         engine.decode_threads()
     );
     let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
@@ -169,7 +212,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .iter()
             .map(|&c| format!("{} {}", c.label(), fmt::seconds(bd.measured_seconds(c))))
             .collect();
-        println!("decompress total {} ({})", fmt::seconds(decompress), phases.join(", "));
+        println!(
+            "decompress total {} ({})",
+            fmt::seconds(decompress),
+            phases.join(", ")
+        );
     }
     Ok(())
 }
@@ -215,18 +262,52 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 fn cmd_decode(args: &Args) -> Result<()> {
     let path = args
         .get("in")
-        .ok_or_else(|| Error::InvalidArgument("--in required".into()))?;
+        .or_else(|| args.positional(1))
+        .ok_or_else(|| Error::InvalidArgument("pass a path or --in PATH".into()))?;
     let threads = match args.get_parse_or("threads", 0usize)? {
-        0 => dfloat11::dfloat11::parallel::auto_threads(),
+        0 => dfloat11::auto_threads(),
         n => n,
     };
-    let model = serial::load_model(std::path::Path::new(path))?;
+    let opts = DecodeOpts { threads };
+    let reader = ContainerReader::open(Path::new(path))?;
+    let verify = args.flag("verify");
+    // Regenerate the source weights when verifying bit-identity.
+    let expected: Option<std::collections::HashMap<String, Vec<dfloat11::Bf16>>> = if verify {
+        let seed = args.get_parse_or("seed", 42u64)?;
+        let cfg = scaled_config(args, 8)?;
+        Some(
+            generate_model_weights(&cfg, seed)
+                .into_iter()
+                .map(|(s, w)| (s.name, w))
+                .collect(),
+        )
+    } else {
+        None
+    };
+
     let mut elems = 0u64;
+    let mut verified = 0usize;
     let t0 = std::time::Instant::now();
-    for g in &model.groups {
-        for (_, t) in &g.tensors {
-            let w = t.decompress_parallel(threads)?;
+    for group in reader.groups() {
+        let group = group?;
+        for (name, t) in &group.tensors {
+            let w = t.decompress(&opts)?;
             elems += w.len() as u64;
+            if let Some(expected) = &expected {
+                let want = expected.get(name).ok_or_else(|| {
+                    Error::InvalidArgument(format!(
+                        "container tensor {name} not in the regenerated model \
+                         (check --model/--scale/--seed)"
+                    ))
+                })?;
+                if &w != want {
+                    return Err(Error::InvalidContainer(format!(
+                        "tensor {name} decoded losslessly by CRC but differs \
+                         from the regenerated weights"
+                    )));
+                }
+                verified += 1;
+            }
         }
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -235,6 +316,9 @@ fn cmd_decode(args: &Args) -> Result<()> {
         dt,
         fmt::throughput_bps(elems as f64 * 2.0 / dt)
     );
+    if verify {
+        println!("verified {verified} tensors bit-identical to the source weights");
+    }
     Ok(())
 }
 

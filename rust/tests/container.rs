@@ -1,0 +1,203 @@
+//! Integration tests for the `.df11` container: streaming reads in any
+//! order, and typed errors for truncation, unknown codecs, version
+//! mismatches, and checksum corruption.
+
+use dfloat11::bf16::Bf16;
+use dfloat11::codec::{all_codecs, Codec, DecodeOpts, Df11Codec, RansCodec, RawBf16Codec};
+use dfloat11::container::{
+    write_df11_model, ContainerReader, ContainerWriter, CONTAINER_VERSION,
+};
+use dfloat11::dfloat11::{Df11Model, Df11Tensor, TensorGroup};
+use dfloat11::error::Error;
+use dfloat11::rng::Rng;
+use std::path::PathBuf;
+
+fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    xs.into_iter().map(Bf16::from_f32).collect()
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("df11_container_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.df11", std::process::id()))
+}
+
+/// A 4-group model container: embed, block.0, block.1, lm_head.
+fn write_grouped(tag: &str) -> (PathBuf, Df11Model) {
+    let mut m = Df11Model::new("grouped");
+    for (g, n, seed) in [
+        ("embed", 1500usize, 1u64),
+        ("block.0", 2000, 2),
+        ("block.1", 2500, 3),
+        ("lm_head", 1800, 4),
+    ] {
+        m.push_group(TensorGroup {
+            name: g.to_string(),
+            tensors: vec![(
+                format!("{g}.w"),
+                Df11Tensor::compress(&gaussian_weights(n, seed)).unwrap(),
+            )],
+        });
+    }
+    let path = temp_path(tag);
+    write_df11_model(&path, &m).unwrap();
+    (path, m)
+}
+
+#[test]
+fn groups_stream_out_of_order() {
+    let (path, model) = write_grouped("ooo");
+    let reader = ContainerReader::open(&path).unwrap();
+    let names: Vec<&str> = reader.group_names().iter().map(|s| s.as_str()).collect();
+    assert_eq!(names, vec!["embed", "block.0", "block.1", "lm_head"]);
+    // Read groups in scrambled order — the reader seeks per block.
+    for g in ["lm_head", "block.0", "embed", "block.1"] {
+        let group = reader.read_group(g).unwrap();
+        let expect = model.group(g).unwrap().tensors[0].1.decompress().unwrap();
+        assert_eq!(
+            group.tensors[0].1.decompress(&DecodeOpts::default()).unwrap(),
+            expect,
+            "group {g}"
+        );
+    }
+    // Re-reading an already-streamed group still works.
+    assert!(reader.read_group("embed").is_ok());
+    // A missing group is a typed error.
+    assert!(matches!(
+        reader.read_group("block.7"),
+        Err(Error::InvalidArgument(_))
+    ));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn single_tensor_reads_by_name() {
+    let (path, model) = write_grouped("byname");
+    let reader = ContainerReader::open(&path).unwrap();
+    let t = reader.read_tensor("block.1.w").unwrap();
+    let expect = model.group("block.1").unwrap().tensors[0].1.decompress().unwrap();
+    assert_eq!(t.decompress(&DecodeOpts::default()).unwrap(), expect);
+    assert!(reader.read_tensor("nope").is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_payload_is_a_typed_error() {
+    let (path, _) = write_grouped("trunc_payload");
+    let bytes = std::fs::read(&path).unwrap();
+    // Cut into the last payload: the header still parses, streaming the
+    // last group fails with a typed container error.
+    std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    assert!(reader.read_group("embed").is_ok());
+    let err = reader.read_group("lm_head").unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_header_is_a_typed_error() {
+    let (path, _) = write_grouped("trunc_header");
+    let bytes = std::fs::read(&path).unwrap();
+    // Cut mid-header (the header of a 4-tensor index is > 40 bytes).
+    std::fs::write(&path, &bytes[..40]).unwrap();
+    let err = ContainerReader::open(&path).unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_codec_id_is_a_typed_error() {
+    let good = RawBf16Codec.compress(&gaussian_weights(64, 9)).unwrap();
+    let opaque = vec![0x5Au8; 128];
+    let mut writer = ContainerWriter::new("future");
+    writer.push("g", "ok", good.view());
+    writer.push_opaque("g", "future_block", 0x7F, vec![64], &opaque);
+    let path = temp_path("unknown_codec");
+    writer.write_to(&path).unwrap();
+    // The index itself parses — codec ids are validated lazily so old
+    // readers can still inspect (and partially serve) newer files.
+    let reader = ContainerReader::open(&path).unwrap();
+    assert_eq!(reader.entries().len(), 2);
+    assert!(matches!(
+        reader.read_group("g"),
+        Err(Error::UnknownCodec(0x7F))
+    ));
+    // The known tensor is still readable on its own.
+    assert!(reader.read_tensor("ok").is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn version_mismatch_is_a_typed_error() {
+    let (path, _) = write_grouped("version");
+    let mut bytes = std::fs::read(&path).unwrap();
+    // The version field sits right after the 4-byte magic.
+    bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    match ContainerReader::open(&path) {
+        Err(Error::UnsupportedVersion(got, supported)) => {
+            assert_eq!(got, 99);
+            assert_eq!(supported, CONTAINER_VERSION);
+        }
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn payload_crc_corruption_is_validation_not_panic() {
+    let ws = gaussian_weights(5_000, 11);
+    let mut writer = ContainerWriter::new("crc");
+    let df11 = Df11Codec::default().compress(&ws).unwrap();
+    let rans = RansCodec.compress(&ws).unwrap();
+    writer.push("g", "df11", df11.view());
+    writer.push("g", "rans", rans.view());
+    let path = temp_path("crc");
+    let summary = writer.write_to(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip one bit in the first payload byte.
+    let pos = summary.header_bytes as usize;
+    bytes[pos] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let err = reader.read_tensor("df11").unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    // The untouched block still reads and roundtrips.
+    let t = reader.read_tensor("rans").unwrap();
+    assert_eq!(t.decompress(&DecodeOpts::default()).unwrap(), ws);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mixed_codec_container_roundtrips() {
+    let ws = gaussian_weights(3_000, 12);
+    let mut writer = ContainerWriter::new("mixed");
+    let parts: Vec<_> = all_codecs()
+        .iter()
+        .map(|c| (c.name(), c.compress(&ws).unwrap()))
+        .collect();
+    for (name, p) in &parts {
+        writer.push("g", name, p.view());
+    }
+    let path = temp_path("mixed");
+    writer.write_to(&path).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let group = reader.read_group("g").unwrap();
+    assert_eq!(group.tensors.len(), 3);
+    for (name, t) in &group.tensors {
+        assert_eq!(
+            t.decompress(&DecodeOpts { threads: 2 }).unwrap(),
+            ws,
+            "codec {name}"
+        );
+    }
+    // Index metadata reflects the codec mix.
+    let ids: Vec<u8> = reader.entries().iter().map(|e| e.codec_id).collect();
+    assert_eq!(ids.len(), 3);
+    assert!(ids.contains(&0) && ids.contains(&1) && ids.contains(&2));
+    std::fs::remove_file(&path).ok();
+}

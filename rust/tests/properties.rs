@@ -231,6 +231,78 @@ fn prop_compressed_size_bounds() {
     });
 }
 
+/// Every codec roundtrips bit-exactly through the on-disk container:
+/// compress → write container → stream back → decompress equals the
+/// source, and a corrupted payload CRC fails with a typed validation
+/// error (never a panic).
+#[test]
+fn prop_container_roundtrip() {
+    use dfloat11::codec::all_codecs;
+    use dfloat11::codec::DecodeOpts;
+    use dfloat11::container::{ContainerReader, ContainerWriter};
+    use dfloat11::error::Error;
+
+    let dir = std::env::temp_dir().join(format!("df11_prop_container_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut case = 0u64;
+    check("container-roundtrip", cfg(10, 4000), |g| {
+        case += 1;
+        let path = dir.join(format!("case_{case}.df11"));
+        let n = g.len();
+        // Arbitrary bit patterns, NaN/Inf included.
+        let ws: Vec<Bf16> = g.vec_of(n, |r| Bf16::from_bits(r.next_u32() as u16));
+        let codecs = all_codecs();
+        let parts: Vec<_> = codecs
+            .iter()
+            .map(|c| c.compress(&ws).map(|p| (c.name(), p)))
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        let mut writer = ContainerWriter::new("prop");
+        for (name, p) in &parts {
+            writer.push(name, name, p.view());
+        }
+        let summary = writer.write_to(&path).map_err(|e| e.to_string())?;
+
+        // Roundtrip: stream groups back, decompress, compare bit-exact.
+        let reader = ContainerReader::open(&path).map_err(|e| e.to_string())?;
+        let threads = 1 + g.usize_in(0, 3);
+        for group in reader.groups() {
+            let group = group.map_err(|e| e.to_string())?;
+            for (name, t) in &group.tensors {
+                let back = t
+                    .decompress(&DecodeOpts { threads })
+                    .map_err(|e| e.to_string())?;
+                if back != ws {
+                    return Err(format!("codec {name} not lossless at n={n}"));
+                }
+            }
+        }
+        drop(reader);
+
+        // Corrupt one payload byte: the read must fail with the typed
+        // container-validation error, not a panic or silent corruption.
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let payload_start = summary.header_bytes as usize;
+        let flip = payload_start + g.usize_in(0, (bytes.len() - payload_start).saturating_sub(1));
+        bytes[flip] ^= 0x10;
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let reader = ContainerReader::open(&path).map_err(|e| e.to_string())?;
+        let mut failed = false;
+        for group in reader.groups() {
+            match group {
+                Ok(_) => {}
+                Err(Error::InvalidContainer(_)) => failed = true,
+                Err(other) => return Err(format!("expected validation error, got {other}")),
+            }
+        }
+        if !failed {
+            return Err("corrupted payload byte went undetected".into());
+        }
+        std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+}
+
 /// rANS roundtrips arbitrary byte streams.
 #[test]
 fn prop_rans_roundtrip() {
