@@ -94,9 +94,9 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let engine = build_engine(&cfg, seed, WeightMode::Df11, use_xla, &artifact_dir)?;
     println!("engine built in {:.1}s (compression included)", t0.elapsed().as_secs_f64());
-    let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
+    let mut server = Server::new(engine, SchedulerConfig::static_batch(batch));
     for r in mk_requests() {
-        server.submit(r);
+        server.submit(r)?;
     }
     let df11 = server.drain()?;
     let bd = &server.engine().breakdown;
@@ -119,9 +119,9 @@ fn main() -> anyhow::Result<()> {
     // --- BF16 reference run (losslessness check) ---
     println!("\n== BF16 (uncompressed) reference ==");
     let engine = build_engine(&cfg, seed, WeightMode::Bf16Resident, use_xla, &artifact_dir)?;
-    let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
+    let mut server = Server::new(engine, SchedulerConfig::static_batch(batch));
     for r in mk_requests() {
-        server.submit(r);
+        server.submit(r)?;
     }
     let bf16 = server.drain()?;
     println!(

@@ -75,9 +75,11 @@ fn main() {
             ("DF11", WeightMode::Df11),
         ] {
             let engine = Engine::build(&cfg, 3, mode).unwrap();
-            let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
+            let mut server = Server::new(engine, SchedulerConfig::static_batch(batch));
             for i in 0..batch {
-                server.submit(Request::new(vec![(i % 60 + 1) as u32, 2], 16));
+                server
+                    .submit(Request::new(vec![(i % 60 + 1) as u32, 2], 16))
+                    .unwrap();
             }
             let report = server.drain().unwrap();
             rows.push((label.to_string(), report.tokens_per_second()));

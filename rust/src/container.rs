@@ -145,16 +145,16 @@ impl<W: Write> Write for CrcWriter<W> {
     }
 }
 
-/// Byte sink that only counts and hashes (the writer's measuring pass).
+/// Byte sink that only counts (sizes the header without serializing
+/// any payload — index fields are fixed-width, so dummy values size
+/// identically to real ones).
 #[derive(Default)]
 struct CountingWriter {
     len: u64,
-    hasher: Hasher,
 }
 
 impl Write for CountingWriter {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        self.hasher.update(buf);
         self.len += buf.len() as u64;
         Ok(buf.len())
     }
@@ -227,9 +227,11 @@ impl ContainerSummary {
 /// Builds a `.df11` container from compressed tensors.
 ///
 /// The writer borrows the tensors (compression output is typically
-/// large) and serializes in two passes: a measuring pass that sizes and
-/// checksums every payload so the header index can be written first,
-/// then the real streaming write. Nothing is buffered whole.
+/// large) and serializes every payload exactly **once**: the header's
+/// index fields are fixed-width, so a placeholder header is laid down
+/// first, payloads stream behind it (measuring lengths and CRCs as
+/// they go), and one seek back patches the real index in place.
+/// Nothing is buffered whole and nothing is serialized twice.
 pub struct ContainerWriter<'a> {
     model_name: String,
     entries: Vec<(String, String, Pending<'a>)>,
@@ -355,34 +357,35 @@ impl<'a> ContainerWriter<'a> {
                 )));
             }
         }
-        // Pass 1: measure + checksum every payload.
-        let mut payloads = Vec::with_capacity(self.entries.len());
-        for (_, _, pending) in &self.entries {
-            let mut counter = CountingWriter::default();
-            write_payload(&mut counter, pending)?;
-            payloads.push((counter.len, counter.hasher.finalize()));
-        }
-        // Header size (offset values are fixed-width, so measuring with
-        // base 0 yields the real size), plus 4 bytes of header CRC.
+        // Size the header without serializing any payload: every index
+        // field is fixed-width, so dummy (len, crc) values measure the
+        // same as the real ones. +4 for the trailing header CRC.
+        let dummy = vec![(0u64, 0u32); self.entries.len()];
         let mut counter = CountingWriter::default();
-        self.write_header(&mut counter, &payloads, 0)?;
+        self.write_header(&mut counter, &dummy, 0)?;
         let header_bytes = counter.len + 4;
 
-        // Pass 2: stream everything to disk.
+        // Single pass: placeholder header, then every payload streamed
+        // exactly once while its length + CRC are measured in flight.
         let file = std::fs::File::create(path)?;
         let mut out = BufWriter::new(file);
-        let mut header = CrcWriter::new(&mut out);
-        self.write_header(&mut header, &payloads, header_bytes)?;
-        let crc = header.crc();
-        out.write_all(&crc.to_le_bytes())?;
+        out.write_all(&vec![0u8; header_bytes as usize])?;
+        let mut payloads = Vec::with_capacity(self.entries.len());
         let mut payload_bytes = 0u64;
-        for ((_, _, pending), &(len, crc)) in self.entries.iter().zip(&payloads) {
+        for (_, _, pending) in &self.entries {
             let mut w = CrcWriter::new(&mut out);
             write_payload(&mut w, pending)?;
-            debug_assert_eq!(w.written, len, "payload length drifted between passes");
-            debug_assert_eq!(w.crc(), crc, "payload crc drifted between passes");
-            payload_bytes += len;
+            payloads.push((w.written, w.crc()));
+            payload_bytes += w.written;
         }
+
+        // Seek back and patch the real index (and its CRC) in place.
+        out.seek(SeekFrom::Start(0))?;
+        let mut header = CrcWriter::new(&mut out);
+        self.write_header(&mut header, &payloads, header_bytes)?;
+        debug_assert_eq!(header.written, header_bytes - 4, "header size drifted");
+        let crc = header.crc();
+        out.write_all(&crc.to_le_bytes())?;
         out.flush()?;
         Ok(ContainerSummary {
             header_bytes,

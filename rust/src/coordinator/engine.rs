@@ -25,7 +25,8 @@ use crate::codec::{CompressedTensor, DecodeOpts};
 use crate::container::ContainerReader;
 use crate::dfloat11::{Df11Model, Df11Tensor};
 use crate::error::{Error, Result};
-use crate::gpu_sim::TransferModel;
+use crate::gpu_sim::{Device, HbmAllocator, TransferModel};
+use crate::kvcache::KvCacheManager;
 use crate::model::init::generate_model_weights;
 use crate::model::ModelConfig;
 use crate::nn;
@@ -614,12 +615,92 @@ impl ScratchPool {
     }
 }
 
+/// What one sequence experienced during a [`Engine::decode_step`] tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEvent {
+    /// Prompt tokens remain; nothing was sampled this tick.
+    Prefill {
+        /// Prompt tokens still to be consumed after this tick.
+        remaining: usize,
+    },
+    /// A token was greedily sampled for this sequence.
+    Token(u32),
+    /// The sequence could not advance: its K/V cache is out of
+    /// positions (`max_seq_len`) or the paged KV budget is exhausted.
+    /// The scheduler should retire the sequence.
+    CacheFull,
+}
+
+/// Per-sequence outcome of one [`Engine::decode_step`] tick, returned
+/// in the same order as the ids passed in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// The sequence this outcome belongs to.
+    pub seq_id: u64,
+    /// What happened.
+    pub event: StepEvent,
+}
+
+/// Recyclable per-sequence K/V buffers: `n_layers` caches of
+/// `(max_seq_len, kv_dim)` each. Pooled so retiring one sequence and
+/// admitting the next allocates nothing.
+struct SlotBuffers {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl SlotBuffers {
+    fn new(n_layers: usize, cache_len: usize) -> SlotBuffers {
+        SlotBuffers {
+            k: (0..n_layers).map(|_| vec![0.0; cache_len]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; cache_len]).collect(),
+        }
+    }
+}
+
+/// State of one in-flight sequence in the incremental lifecycle API.
+struct SeqSlot {
+    /// Prompt token ids, consumed one per tick.
+    prompt: Vec<u32>,
+    /// Tokens fed so far (== K/V cache positions filled).
+    pos: usize,
+    /// The next token to feed once the prompt is exhausted (the last
+    /// greedily sampled token).
+    next: u32,
+    /// This sequence's K/V caches.
+    bufs: SlotBuffers,
+}
+
+/// Simulated paged KV budget behind the lifecycle API: the Figure-5
+/// accounting (HBM left over after resident weights, allocated in
+/// pages) made real for admission control.
+struct KvBudget {
+    hbm: HbmAllocator,
+    mgr: KvCacheManager,
+}
+
+/// A [`Device`] that only models a KV byte budget (the other fields are
+/// never consulted by the allocator).
+fn kv_budget_device(bytes: u64) -> Device {
+    Device {
+        name: "kv-budget",
+        hbm_bytes: bytes,
+        hbm_bw: 0.0,
+        sram_per_block: 0,
+        sm_count: 0,
+        pcie_bw: 0.0,
+        pcie_latency: 0.0,
+        bf16_flops: 0.0,
+    }
+}
+
 /// The inference engine.
 pub struct Engine {
     config: ModelConfig,
     source: Box<dyn WeightSource>,
     backend: Box<dyn BlockBackend>,
-    /// Per-layer K/V caches, `(batch, max_seq, kv_dim)` each.
+    /// Per-layer K/V caches, `(batch, max_seq, kv_dim)` each (the raw
+    /// batch-stepping API: `reset` + `step`).
     k_cache: Vec<Vec<f32>>,
     v_cache: Vec<Vec<f32>>,
     batch: usize,
@@ -633,6 +714,15 @@ pub struct Engine {
     io_staging: Vec<Bf16>,
     embed_w: Vec<f32>,
     head_w: Vec<f32>,
+    /// In-flight sequences of the incremental lifecycle API, by id.
+    seqs: HashMap<u64, SeqSlot>,
+    /// Recycled per-sequence K/V buffers.
+    slot_pool: Vec<SlotBuffers>,
+    /// Total slot buffers ever created (constant once the slot pool is
+    /// warm — asserted by tests).
+    slot_buffers_created: usize,
+    /// Optional paged KV budget consulted per fed token.
+    kv_budget: Option<KvBudget>,
     /// Latency accounting (Figure 6's breakdown).
     pub breakdown: Breakdown,
 }
@@ -703,6 +793,10 @@ impl Engine {
             io_staging: Vec::new(),
             embed_w: Vec::new(),
             head_w: Vec::new(),
+            seqs: HashMap::new(),
+            slot_pool: Vec::new(),
+            slot_buffers_created: 0,
+            kv_budget: None,
             breakdown: Breakdown::default(),
         })
     }
@@ -790,6 +884,312 @@ impl Engine {
     /// Current decode position.
     pub fn pos(&self) -> usize {
         self.pos
+    }
+
+    // --- Incremental sequence lifecycle (continuous batching) ----------
+    //
+    // `start_seq` / `decode_step` / `finish_seq` replace the monolithic
+    // generate-a-whole-batch path for serving: each sequence owns its
+    // K/V caches and position, so the scheduler can admit and retire
+    // sequences mid-flight. `generate` below is a thin wrapper over
+    // this API (kept for benches and tests).
+
+    /// Install a simulated KV byte budget, allocated in pages of
+    /// `page_tokens` tokens (the Figure-5 accounting made real:
+    /// HBM minus resident weights). Each fed token claims cache pages
+    /// through a [`KvCacheManager`]; when the budget is exhausted,
+    /// [`Engine::decode_step`] reports [`StepEvent::CacheFull`] instead
+    /// of advancing the sequence. Fails if sequences are in flight.
+    pub fn set_kv_budget(&mut self, bytes: u64, page_tokens: u64) -> Result<()> {
+        if !self.seqs.is_empty() {
+            return Err(Error::InvalidArgument(
+                "cannot change the KV budget with sequences in flight".into(),
+            ));
+        }
+        self.kv_budget = Some(KvBudget {
+            hbm: HbmAllocator::new(kv_budget_device(bytes)),
+            mgr: KvCacheManager::new(&self.config, page_tokens),
+        });
+        Ok(())
+    }
+
+    /// Remove the KV budget (sequences become limited only by
+    /// `max_seq_len`). Fails if sequences are in flight.
+    pub fn clear_kv_budget(&mut self) -> Result<()> {
+        if !self.seqs.is_empty() {
+            return Err(Error::InvalidArgument(
+                "cannot change the KV budget with sequences in flight".into(),
+            ));
+        }
+        self.kv_budget = None;
+        Ok(())
+    }
+
+    /// Total pages in the installed KV budget (`None` without one).
+    pub fn kv_total_pages(&self) -> Option<u64> {
+        self.kv_budget
+            .as_ref()
+            .map(|b| b.hbm.device().hbm_bytes / b.mgr.bytes_per_page().max(1))
+    }
+
+    /// Pages the installed budget charges for `tokens` cache positions
+    /// (`None` without a budget).
+    pub fn kv_pages_for(&self, tokens: u64) -> Option<u64> {
+        self.kv_budget.as_ref().map(|b| b.mgr.pages_for(tokens))
+    }
+
+    /// Number of sequences currently in flight.
+    pub fn num_active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Total per-sequence K/V buffer sets ever created — constant once
+    /// the slot pool is warm (retire + admit cycles allocate nothing).
+    pub fn slot_buffer_allocations(&self) -> usize {
+        self.slot_buffers_created
+    }
+
+    /// Begin an incremental sequence: claims a (pooled) K/V slot and
+    /// registers the sequence with the KV budget. `id` must be unique
+    /// among in-flight sequences; the prompt must be non-empty, within
+    /// `max_seq_len`, and in-vocabulary.
+    pub fn start_seq(&mut self, id: u64, prompt: &[u32]) -> Result<()> {
+        if self.seqs.contains_key(&id) {
+            return Err(Error::InvalidArgument(format!(
+                "sequence {id} already in flight"
+            )));
+        }
+        if prompt.is_empty() {
+            return Err(Error::InvalidArgument(format!(
+                "sequence {id}: empty prompt"
+            )));
+        }
+        if prompt.len() > self.config.max_seq_len {
+            return Err(Error::KvCacheExhausted(format!(
+                "sequence {id}: prompt of {} tokens exceeds max_seq_len {}",
+                prompt.len(),
+                self.config.max_seq_len
+            )));
+        }
+        for &t in prompt {
+            if t as usize >= self.config.vocab_size {
+                return Err(Error::InvalidArgument(format!(
+                    "sequence {id}: token {t} out of vocab"
+                )));
+            }
+        }
+        if let Some(b) = &mut self.kv_budget {
+            b.mgr.add_sequence(id)?;
+        }
+        let bufs = match self.slot_pool.pop() {
+            Some(b) => b,
+            None => {
+                self.slot_buffers_created += 1;
+                SlotBuffers::new(
+                    self.config.n_layers,
+                    self.config.max_seq_len * self.config.kv_dim(),
+                )
+            }
+        };
+        self.seqs.insert(
+            id,
+            SeqSlot {
+                prompt: prompt.to_vec(),
+                pos: 0,
+                next: 0,
+                bufs,
+            },
+        );
+        Ok(())
+    }
+
+    /// Retire a sequence: releases its KV-budget pages and returns its
+    /// buffers to the slot pool.
+    pub fn finish_seq(&mut self, id: u64) -> Result<()> {
+        let slot = self
+            .seqs
+            .remove(&id)
+            .ok_or_else(|| Error::InvalidArgument(format!("unknown sequence {id}")))?;
+        if let Some(b) = &mut self.kv_budget {
+            b.mgr.release(&mut b.hbm, id)?;
+        }
+        self.slot_pool.push(slot.bufs);
+        Ok(())
+    }
+
+    /// One decode tick over the given in-flight sequences. Each
+    /// sequence feeds one token (the next prompt token, or its last
+    /// sampled token), advancing its own position in its own K/V cache
+    /// — sequences at different depths batch together freely, which is
+    /// what makes mid-flight admission possible.
+    ///
+    /// Outcomes come back in the same order as `ids`. A sequence whose
+    /// K/V cache (or budget page allocation) is exhausted reports
+    /// [`StepEvent::CacheFull`] and does not advance; the rest of the
+    /// batch still runs.
+    ///
+    /// Greedy sampling is performed here so one tick is one engine
+    /// pass; token-identical to [`Engine::generate`] per sequence
+    /// regardless of what else is co-scheduled (all row math is
+    /// row-independent).
+    pub fn decode_step(&mut self, ids: &[u64]) -> Result<Vec<StepOutcome>> {
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut seen = std::collections::HashSet::with_capacity(ids.len());
+        for &id in ids {
+            if !self.seqs.contains_key(&id) {
+                return Err(Error::InvalidArgument(format!("unknown sequence {id}")));
+            }
+            if !seen.insert(id) {
+                return Err(Error::InvalidArgument(format!(
+                    "sequence {id} listed twice in one decode step"
+                )));
+            }
+        }
+
+        // Phase A: claim the cache position each sequence needs this
+        // tick (page-granular via the KV budget); pick the fed token.
+        let mut events: Vec<Option<StepEvent>> = vec![None; ids.len()];
+        let mut active: Vec<(usize, u64, u32)> = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            let pos = self.seqs[&id].pos;
+            if pos >= self.config.max_seq_len {
+                events[i] = Some(StepEvent::CacheFull);
+                continue;
+            }
+            if let Some(b) = &mut self.kv_budget {
+                if b.mgr.extend(&mut b.hbm, id, 1).is_err() {
+                    events[i] = Some(StepEvent::CacheFull);
+                    continue;
+                }
+            }
+            let slot = &self.seqs[&id];
+            let tok = if slot.pos < slot.prompt.len() {
+                slot.prompt[slot.pos]
+            } else {
+                slot.next
+            };
+            active.push((i, id, tok));
+        }
+
+        if !active.is_empty() {
+            let d = self.config.d_model;
+            let n = active.len();
+            let threads = self.decode_threads;
+
+            // Embedding fetch + gather (tokens were validated at
+            // start_seq; sampled tokens are argmax indices < vocab).
+            let cost = self.source.fetch_into(
+                "embed.tok",
+                threads,
+                &mut self.io_staging,
+                &mut self.embed_w,
+            )?;
+            cost.charge(&mut self.breakdown);
+            let t0 = Instant::now();
+            let mut x = vec![0.0f32; n * d];
+            for (row, &(_, _, tok)) in active.iter().enumerate() {
+                let tok = tok as usize;
+                x[row * d..(row + 1) * d]
+                    .copy_from_slice(&self.embed_w[tok * d..(tok + 1) * d]);
+            }
+            self.breakdown
+                .add_measured(Component::Embed, t0.elapsed().as_secs_f64());
+
+            // Transformer blocks: the same block-batched decompression +
+            // one-block-ahead prefetch pipeline as `step`, but each
+            // sequence runs at its own position in its own cache.
+            let n_layers = self.config.n_layers;
+            let config = &self.config;
+            let source: &dyn WeightSource = self.source.as_ref();
+            let pool = &self.scratch;
+            let backend = &mut self.backend;
+            let seqs = &mut self.seqs;
+            let breakdown = &mut self.breakdown;
+            std::thread::scope(|scope| -> Result<()> {
+                let mut pending = Some(scope.spawn(move || fetch_block(source, pool, 0, threads)));
+                for l in 0..n_layers {
+                    let joined = pending
+                        .take()
+                        .expect("prefetch pipeline primed")
+                        .join()
+                        .map_err(|_| Error::Runtime("block prefetch worker panicked".into()))?;
+                    let (scratch, cost) = joined?;
+                    if l + 1 < n_layers {
+                        pending =
+                            Some(scope.spawn(move || fetch_block(source, pool, l + 1, threads)));
+                    }
+                    cost.charge(breakdown);
+                    let t0 = Instant::now();
+                    for (row, &(_, id, _)) in active.iter().enumerate() {
+                        let slot = seqs.get_mut(&id).expect("validated above");
+                        backend.block_forward(
+                            config,
+                            &mut x[row * d..(row + 1) * d],
+                            scratch.weights(),
+                            &mut slot.bufs.k[l],
+                            &mut slot.bufs.v[l],
+                            1,
+                            slot.pos,
+                        )?;
+                    }
+                    breakdown.add_measured(Component::BlockCompute, t0.elapsed().as_secs_f64());
+                    pool.checkin(scratch);
+                }
+                Ok(())
+            })?;
+
+            // LM head over the active rows — skipped entirely on ticks
+            // where every row is still prefilling (their logits would
+            // be discarded, and for long prompts the head fetch +
+            // projection dominates the wasted work).
+            let sampling = active.iter().any(|&(_, id, _)| {
+                let slot = &self.seqs[&id];
+                slot.pos + 1 >= slot.prompt.len()
+            });
+            let logits = if sampling {
+                let cost = self.source.fetch_into(
+                    "lm_head",
+                    threads,
+                    &mut self.io_staging,
+                    &mut self.head_w,
+                )?;
+                cost.charge(&mut self.breakdown);
+                let t0 = Instant::now();
+                let logits = self.backend.lm_head(&self.config, &x, &self.head_w, n)?;
+                self.breakdown
+                    .add_measured(Component::LmHead, t0.elapsed().as_secs_f64());
+                logits
+            } else {
+                Vec::new()
+            };
+
+            // Advance positions and resolve events.
+            let vocab = self.config.vocab_size;
+            for (row, &(i, id, _)) in active.iter().enumerate() {
+                let slot = self.seqs.get_mut(&id).expect("validated above");
+                slot.pos += 1;
+                events[i] = Some(if slot.pos < slot.prompt.len() {
+                    StepEvent::Prefill {
+                        remaining: slot.prompt.len() - slot.pos,
+                    }
+                } else {
+                    let tok = nn::argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
+                    slot.next = tok;
+                    StepEvent::Token(tok)
+                });
+            }
+        }
+
+        Ok(ids
+            .iter()
+            .zip(events)
+            .map(|(&seq_id, event)| StepOutcome {
+                seq_id,
+                event: event.expect("every sequence resolved an event"),
+            })
+            .collect())
     }
 
     /// One decode step: `tokens` has `batch` entries; returns logits
@@ -895,9 +1295,11 @@ impl Engine {
         Ok(logits)
     }
 
-    /// Greedy generation with static batching. Prompts are right-padded
-    /// to a common length; returns `max_new_tokens` generated ids per
-    /// sequence.
+    /// Greedy generation for a fixed set of prompts — a thin wrapper
+    /// over the incremental lifecycle API (`start_seq` / `decode_step`
+    /// / `finish_seq`), kept for benches and batch tests. Each prompt
+    /// runs unpadded at its own depth; returns up to `max_new_tokens`
+    /// generated ids per sequence (fewer if the K/V cache fills).
     pub fn generate(
         &mut self,
         prompts: &[Vec<u32>],
@@ -907,33 +1309,52 @@ impl Engine {
         if batch == 0 {
             return Ok(Vec::new());
         }
-        self.reset(batch);
-        let prompt_len = prompts.iter().map(|p| p.len()).max().unwrap().max(1);
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
-
-        // Prefill (token by token; single-token decode-step artifacts).
-        let mut last_logits = Vec::new();
-        for t in 0..prompt_len {
-            let tokens: Vec<u32> = prompts
-                .iter()
-                .map(|p| *p.get(t).unwrap_or(p.last().unwrap_or(&0)))
-                .collect();
-            last_logits = self.step(&tokens)?;
+        if !self.seqs.is_empty() {
+            return Err(Error::InvalidArgument(
+                "generate: incremental sequences are in flight".into(),
+            ));
         }
-
-        // Decode.
-        let vocab = self.config.vocab_size;
-        for _ in 0..max_new_tokens {
-            let next: Vec<u32> = (0..batch)
-                .map(|b| nn::argmax(&last_logits[b * vocab..(b + 1) * vocab]) as u32)
-                .collect();
-            for (o, &t) in outputs.iter_mut().zip(&next) {
-                o.push(t);
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
+        for (i, p) in prompts.iter().enumerate() {
+            // Tolerate empty prompts the way the old padded path did:
+            // they behave as a single 0 token.
+            let prompt: &[u32] = if p.is_empty() { &[0] } else { p };
+            if let Err(e) = self.start_seq(i as u64 + 1, prompt) {
+                // Unwind already-started sequences so the engine stays
+                // usable after a rejected batch.
+                for id in 1..=i as u64 {
+                    self.finish_seq(id).ok();
+                }
+                return Err(e);
             }
-            if self.pos >= self.config.max_seq_len {
-                break;
+        }
+        let mut live: Vec<u64> = (1..=batch as u64).collect();
+        if max_new_tokens == 0 {
+            for id in live.drain(..) {
+                self.finish_seq(id)?;
             }
-            last_logits = self.step(&next)?;
+            return Ok(outputs);
+        }
+        while !live.is_empty() {
+            let outcomes = self.decode_step(&live)?;
+            let mut retired: Vec<u64> = Vec::new();
+            for o in outcomes {
+                let idx = (o.seq_id - 1) as usize;
+                match o.event {
+                    StepEvent::Prefill { .. } => {}
+                    StepEvent::Token(t) => {
+                        outputs[idx].push(t);
+                        if outputs[idx].len() >= max_new_tokens {
+                            retired.push(o.seq_id);
+                        }
+                    }
+                    StepEvent::CacheFull => retired.push(o.seq_id),
+                }
+            }
+            for id in retired {
+                self.finish_seq(id)?;
+                live.retain(|&l| l != id);
+            }
         }
         Ok(outputs)
     }
@@ -1247,6 +1668,181 @@ mod tests {
             warm,
             "steady state must not allocate fresh scratch buffers"
         );
+    }
+
+    /// Drive one sequence through the lifecycle API to completion.
+    fn run_lifecycle(e: &mut Engine, id: u64, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        e.start_seq(id, prompt).unwrap();
+        let mut out = Vec::new();
+        while out.len() < max_new {
+            let o = e.decode_step(&[id]).unwrap();
+            match o[0].event {
+                StepEvent::Prefill { .. } => {}
+                StepEvent::Token(t) => out.push(t),
+                StepEvent::CacheFull => break,
+            }
+        }
+        e.finish_seq(id).unwrap();
+        out
+    }
+
+    #[test]
+    fn lifecycle_matches_generate_tokenwise() {
+        let cfg = tiny();
+        let prompts = vec![vec![7u32, 8, 9], vec![10u32], vec![11u32, 12]];
+        let mut a = Engine::build(&cfg, 31, WeightMode::Df11).unwrap();
+        let expect = a.generate(&prompts, 6).unwrap();
+        let mut b = Engine::build(&cfg, 31, WeightMode::Df11).unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            assert_eq!(
+                run_lifecycle(&mut b, i as u64 + 1, p, 6),
+                expect[i],
+                "prompt {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_flight_admission_does_not_perturb_sequences() {
+        // The continuous-batching correctness core: a sequence's tokens
+        // must not depend on what else is co-scheduled, including
+        // sequences admitted mid-flight at a different depth.
+        let cfg = tiny();
+        let mut solo = Engine::build(&cfg, 32, WeightMode::Bf16Resident).unwrap();
+        let a_solo = run_lifecycle(&mut solo, 1, &[5, 6, 7], 8);
+        let b_solo = run_lifecycle(&mut solo, 2, &[9, 10], 5);
+
+        let mut e = Engine::build(&cfg, 32, WeightMode::Bf16Resident).unwrap();
+        e.start_seq(1, &[5, 6, 7]).unwrap();
+        let mut a_out = Vec::new();
+        let mut b_out = Vec::new();
+        // Run A alone for a few ticks, then admit B mid-flight.
+        for _ in 0..4 {
+            if let StepEvent::Token(t) = e.decode_step(&[1]).unwrap()[0].event {
+                a_out.push(t);
+            }
+        }
+        e.start_seq(2, &[9, 10]).unwrap();
+        while a_out.len() < 8 || b_out.len() < 5 {
+            let mut ids = Vec::new();
+            if a_out.len() < 8 {
+                ids.push(1);
+            }
+            if b_out.len() < 5 {
+                ids.push(2);
+            }
+            for o in e.decode_step(&ids).unwrap() {
+                if let StepEvent::Token(t) = o.event {
+                    if o.seq_id == 1 {
+                        a_out.push(t);
+                    } else {
+                        b_out.push(t);
+                    }
+                }
+            }
+        }
+        e.finish_seq(1).unwrap();
+        e.finish_seq(2).unwrap();
+        assert_eq!(a_out, a_solo, "co-scheduling must not change sequence A");
+        assert_eq!(b_out, b_solo, "mid-flight admission must not change sequence B");
+    }
+
+    #[test]
+    fn lifecycle_validates_inputs() {
+        let cfg = tiny();
+        let mut e = Engine::build(&cfg, 33, WeightMode::Bf16Resident).unwrap();
+        assert!(e.start_seq(1, &[]).is_err(), "empty prompt");
+        assert!(
+            e.start_seq(1, &vec![1u32; cfg.max_seq_len + 1]).is_err(),
+            "prompt longer than max_seq"
+        );
+        assert!(e.start_seq(1, &[u32::MAX]).is_err(), "out of vocab");
+        e.start_seq(1, &[1, 2]).unwrap();
+        assert!(e.start_seq(1, &[3]).is_err(), "duplicate id");
+        assert!(e.decode_step(&[2]).is_err(), "unknown id");
+        assert!(e.decode_step(&[1, 1]).is_err(), "duplicate id in tick");
+        assert!(e.finish_seq(2).is_err(), "unknown finish");
+        assert!(
+            e.generate(&[vec![1]], 2).is_err(),
+            "generate refuses to run over in-flight sequences"
+        );
+        e.finish_seq(1).unwrap();
+        assert_eq!(e.num_active_seqs(), 0);
+    }
+
+    #[test]
+    fn slot_buffers_recycle_across_sequences() {
+        let cfg = tiny();
+        let mut e = Engine::build(&cfg, 34, WeightMode::Bf16Resident).unwrap();
+        run_lifecycle(&mut e, 1, &[1, 2], 3);
+        let warm = e.slot_buffer_allocations();
+        assert_eq!(warm, 1);
+        for id in 2..6u64 {
+            run_lifecycle(&mut e, id, &[id as u32], 3);
+        }
+        assert_eq!(
+            e.slot_buffer_allocations(),
+            warm,
+            "retire/admit cycles must reuse pooled slot buffers"
+        );
+    }
+
+    #[test]
+    fn cache_full_reported_at_max_seq() {
+        let mut cfg = tiny();
+        cfg.max_seq_len = 4;
+        let mut e = Engine::build(&cfg, 35, WeightMode::Bf16Resident).unwrap();
+        e.start_seq(1, &[1, 2]).unwrap();
+        let mut tokens = 0;
+        loop {
+            match e.decode_step(&[1]).unwrap()[0].event {
+                StepEvent::Prefill { .. } => {}
+                StepEvent::Token(_) => tokens += 1,
+                StepEvent::CacheFull => break,
+            }
+        }
+        // 4 positions: 2 prompt feeds + 2 generated feeds, each feed
+        // past the prompt emitting a token.
+        assert_eq!(tokens, 3);
+        // CacheFull is sticky and non-fatal.
+        assert_eq!(
+            e.decode_step(&[1]).unwrap()[0].event,
+            StepEvent::CacheFull
+        );
+        e.finish_seq(1).unwrap();
+    }
+
+    #[test]
+    fn kv_budget_gates_positions_page_granularly() {
+        let cfg = tiny();
+        let mut e = Engine::build(&cfg, 36, WeightMode::Bf16Resident).unwrap();
+        let page_tokens = 4u64;
+        let bytes_per_token = cfg.kv_bytes_per_token();
+        // Budget: exactly two pages (8 positions).
+        e.set_kv_budget(2 * page_tokens * bytes_per_token, page_tokens)
+            .unwrap();
+        assert_eq!(e.kv_total_pages(), Some(2));
+        assert_eq!(e.kv_pages_for(5), Some(2));
+        e.start_seq(1, &[1, 2, 3]).unwrap();
+        assert!(e.set_kv_budget(1, 1).is_err(), "budget locked while in flight");
+        let mut tokens = 0;
+        loop {
+            match e.decode_step(&[1]).unwrap()[0].event {
+                StepEvent::Prefill { .. } => {}
+                StepEvent::Token(_) => tokens += 1,
+                StepEvent::CacheFull => break,
+            }
+        }
+        // 8 budgeted positions: 3 prompt feeds + 5 generated feeds.
+        assert_eq!(tokens, 6);
+        e.finish_seq(1).unwrap();
+        // Released pages admit the next sequence.
+        e.start_seq(2, &[1]).unwrap();
+        assert!(matches!(
+            e.decode_step(&[2]).unwrap()[0].event,
+            StepEvent::Token(_)
+        ));
+        e.finish_seq(2).unwrap();
     }
 
     #[test]

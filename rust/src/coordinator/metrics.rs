@@ -163,6 +163,55 @@ impl LatencyStats {
     }
 }
 
+/// Decode-slot occupancy over a serve run: how many of the scheduler's
+/// slots held an in-flight sequence at each tick. The continuous-vs-
+/// static comparison (and DF11's freed-memory-becomes-slots story)
+/// reads these.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OccupancyStats {
+    /// Configured decode slots.
+    pub slots: usize,
+    /// Decode ticks observed.
+    pub ticks: u64,
+    /// Sum over ticks of occupied slots.
+    pub occupied_slot_ticks: u64,
+    /// Maximum concurrent sequences observed.
+    pub peak: usize,
+}
+
+impl OccupancyStats {
+    /// Empty stats for a scheduler with `slots` decode slots.
+    pub fn new(slots: usize) -> OccupancyStats {
+        OccupancyStats {
+            slots,
+            ..OccupancyStats::default()
+        }
+    }
+
+    /// Record one tick with `occupied` active sequences.
+    pub fn record(&mut self, occupied: usize) {
+        self.ticks += 1;
+        self.occupied_slot_ticks += occupied as u64;
+        self.peak = self.peak.max(occupied);
+    }
+
+    /// Mean occupied slots per tick.
+    pub fn mean(&self) -> f64 {
+        if self.ticks == 0 {
+            return 0.0;
+        }
+        self.occupied_slot_ticks as f64 / self.ticks as f64
+    }
+
+    /// Mean occupancy as a fraction of configured slots.
+    pub fn utilization(&self) -> f64 {
+        if self.slots == 0 {
+            return 0.0;
+        }
+        self.mean() / self.slots as f64
+    }
+}
+
 /// A stopwatch that charges into a breakdown on drop.
 pub struct Timed<'a> {
     breakdown: &'a mut Breakdown,
@@ -239,6 +288,19 @@ mod tests {
         assert_eq!(s.percentile(0.0), 0.1);
         assert_eq!(s.percentile(100.0), 0.5);
         assert_eq!(s.percentile(50.0), 0.3);
+    }
+
+    #[test]
+    fn occupancy_tracks_mean_and_peak() {
+        let mut o = OccupancyStats::new(4);
+        assert_eq!(o.mean(), 0.0);
+        o.record(1);
+        o.record(3);
+        o.record(2);
+        assert_eq!(o.ticks, 3);
+        assert_eq!(o.peak, 3);
+        assert!((o.mean() - 2.0).abs() < 1e-12);
+        assert!((o.utilization() - 0.5).abs() < 1e-12);
     }
 
     #[test]

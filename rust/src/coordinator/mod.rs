@@ -1,29 +1,38 @@
-//! The serving coordinator (L3): request queue, batcher, scheduler, and
-//! the block-level-decompression inference engine.
+//! The serving coordinator (L3): request queue, scheduler, and the
+//! block-level-decompression inference engine.
 //!
 //! Architecture (vLLM-router-style, scaled to this paper's needs):
 //!
 //! ```text
-//!  submit() ─► RequestQueue ─► Server::drain ─► static batches
-//!                                   │
-//!                                   ▼
-//!                         Engine::generate (prefill + decode)
-//!                         │  per block: DF11 batch-decompress → fwd
-//!                         ▼
-//!            BlockBackend (native Rust   |   PJRT / AOT JAX artifacts)
+//!  submit()/submit_at() ─► RequestQueue ─► Server tick loop
+//!                                            │ static: round-based admission
+//!                                            │ continuous: backfill free slots
+//!                                            │ mid-flight (KV-page admission)
+//!                                            ▼
+//!                  Engine::start_seq / decode_step / finish_seq
+//!                  │  per block: DF11 batch-decompress → fwd
+//!                  │  per sequence: own K/V cache + position
+//!                  ▼
+//!       BlockBackend (native Rust   |   PJRT / AOT JAX artifacts)
 //! ```
+//!
+//! Each decode tick emits [`StepOutcome`]s per sequence; the server
+//! streams [`TokenEvent`]s as tokens appear and reports
+//! TTFT/TPOT/queue-delay and slot-occupancy statistics.
 
 pub mod engine;
 pub mod metrics;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
+pub mod trace;
 
 pub use engine::{
     Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource, Df11Source, Engine,
-    FetchCost, NativeBackend, OffloadSource, ScratchPool, WeightMode, WeightSource,
+    FetchCost, NativeBackend, OffloadSource, ScratchPool, StepEvent, StepOutcome, WeightMode,
+    WeightSource,
 };
-pub use metrics::{Breakdown, Component, LatencyStats};
+pub use metrics::{Breakdown, Component, LatencyStats, OccupancyStats};
 pub use queue::RequestQueue;
-pub use request::{Request, Response};
-pub use scheduler::{SchedulerConfig, ServeReport, Server};
+pub use request::{FinishReason, Request, Response, TokenEvent};
+pub use scheduler::{SchedPolicy, SchedulerConfig, ServeReport, Server};

@@ -1,14 +1,18 @@
-//! Admission queue + batcher.
+//! Admission queue.
 //!
-//! FIFO admission with id assignment, and a batch-forming policy: take
-//! up to `max_batch` requests, preferring prompt-length homogeneity so
-//! static batching wastes little padding (the paper's serving runs use
-//! fixed batch sizes; this batcher generalizes to mixed arrivals).
+//! FIFO admission with queue-assigned ids. Ids are *always* assigned
+//! here — a request submitted with a preset nonzero id is rejected
+//! rather than silently trusted, so two responses can never share an
+//! id. The scheduler pops requests one at a time ([`RequestQueue::pop`])
+//! respecting arrival stamps; the legacy batch helper
+//! ([`RequestQueue::next_batch`]) survives for the static round-based
+//! path and its property tests.
 
 use super::request::Request;
+use crate::error::{Error, Result};
 use std::collections::VecDeque;
 
-/// FIFO request queue with monotone ids.
+/// FIFO request queue with monotone queue-assigned ids.
 #[derive(Debug, Default)]
 pub struct RequestQueue {
     queue: VecDeque<Request>,
@@ -24,15 +28,21 @@ impl RequestQueue {
         }
     }
 
-    /// Admit a request at serving-clock time `now`; returns its id.
-    pub fn push(&mut self, mut req: Request, now: f64) -> u64 {
-        if req.id == 0 {
-            req.id = self.next_id;
-            self.next_id += 1;
+    /// Admit a request arriving at serving-clock time `now`; returns
+    /// its queue-assigned id. Requests must be submitted with `id == 0`
+    /// — a preset id is rejected so duplicate ids cannot occur.
+    pub fn push(&mut self, mut req: Request, now: f64) -> Result<u64> {
+        if req.id != 0 {
+            return Err(Error::InvalidArgument(format!(
+                "request ids are queue-assigned; submit with id 0, got {}",
+                req.id
+            )));
         }
+        req.id = self.next_id;
+        self.next_id += 1;
         req.arrival = now;
         self.queue.push_back(req);
-        self.queue.back().unwrap().id
+        Ok(self.queue.back().unwrap().id)
     }
 
     /// Queue length.
@@ -43,6 +53,17 @@ impl RequestQueue {
     /// True if empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// The request at the head of the queue (next to be admitted).
+    pub fn head(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// Pop the head request. FIFO strictly: arrival gating is the
+    /// scheduler's job (it checks [`RequestQueue::head`] first).
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
     }
 
     /// Form the next batch: up to `max_batch` requests in FIFO order.
@@ -67,9 +88,9 @@ mod tests {
     #[test]
     fn fifo_order_and_ids() {
         let mut q = RequestQueue::new();
-        let a = q.push(Request::new(vec![1], 4), 0.0);
-        let b = q.push(Request::new(vec![2], 4), 0.1);
-        let c = q.push(Request::new(vec![3], 4), 0.2);
+        let a = q.push(Request::new(vec![1], 4), 0.0).unwrap();
+        let b = q.push(Request::new(vec![2], 4), 0.1).unwrap();
+        let c = q.push(Request::new(vec![3], 4), 0.2).unwrap();
         assert_eq!((a, b, c), (1, 2, 3));
         let batch = q.next_batch(2);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
@@ -83,7 +104,7 @@ mod tests {
     fn head_always_in_batch() {
         let mut q = RequestQueue::new();
         for i in 0..10 {
-            q.push(Request::new(vec![i], 1), i as f64);
+            q.push(Request::new(vec![i], 1), i as f64).unwrap();
         }
         while !q.is_empty() {
             let head = q.queued_ids()[0];
@@ -93,17 +114,32 @@ mod tests {
     }
 
     #[test]
-    fn explicit_ids_preserved() {
+    fn preset_ids_rejected() {
         let mut q = RequestQueue::new();
         let mut r = Request::new(vec![1], 1);
         r.id = 99;
-        assert_eq!(q.push(r, 0.0), 99);
+        assert!(q.push(r, 0.0).is_err(), "preset ids must be rejected");
+        assert!(q.is_empty());
+        // Ids stay dense and queue-owned after a rejection.
+        assert_eq!(q.push(Request::new(vec![1], 1), 0.0).unwrap(), 1);
+    }
+
+    #[test]
+    fn head_and_pop_are_fifo() {
+        let mut q = RequestQueue::new();
+        q.push(Request::new(vec![1], 1), 0.5).unwrap();
+        q.push(Request::new(vec![2], 1), 1.5).unwrap();
+        assert_eq!(q.head().unwrap().arrival, 0.5);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.head().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
     }
 
     #[test]
     fn zero_max_batch_still_progresses() {
         let mut q = RequestQueue::new();
-        q.push(Request::new(vec![1], 1), 0.0);
+        q.push(Request::new(vec![1], 1), 0.0).unwrap();
         assert_eq!(q.next_batch(0).len(), 1);
     }
 }

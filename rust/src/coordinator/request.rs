@@ -1,16 +1,25 @@
 //! Request/response types for the serving coordinator.
 
 /// A generation request.
+///
+/// Ids are always assigned by the [`super::queue::RequestQueue`] at
+/// admission; callers must leave `id` at 0 (the queue rejects preset
+/// ids so duplicate-id responses cannot occur).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
-    /// Unique id (assigned by the queue if 0).
+    /// Unique id, assigned by the queue at admission. Must be 0 when
+    /// submitted.
     pub id: u64,
     /// Prompt token ids.
     pub prompt: Vec<u32>,
-    /// Tokens to generate.
+    /// Tokens to generate (per-request budget).
     pub max_new_tokens: usize,
-    /// Arrival timestamp (seconds on the serving clock).
+    /// Arrival timestamp (seconds on the serving clock). For open-loop
+    /// traces this is the stamped arrival; otherwise the submit time.
     pub arrival: f64,
+    /// Stop token: generation ends as soon as this token is emitted
+    /// (the stop token itself is included in the output).
+    pub eos_token: Option<u32>,
 }
 
 impl Request {
@@ -21,8 +30,54 @@ impl Request {
             prompt,
             max_new_tokens,
             arrival: 0.0,
+            eos_token: None,
         }
     }
+
+    /// Set the stop token.
+    pub fn with_eos(mut self, eos: u32) -> Request {
+        self.eos_token = Some(eos);
+        self
+    }
+
+    /// Stamp an arrival time (open-loop trace replay).
+    pub fn with_arrival(mut self, arrival: f64) -> Request {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Worst-case KV-cache positions this request can occupy: the whole
+    /// prompt plus one slot per generated token after the first (the
+    /// final generated token is never fed back). Page-granular admission
+    /// reserves this many tokens up front.
+    pub fn worst_case_kv_tokens(&self) -> u64 {
+        (self.prompt.len() + self.max_new_tokens).saturating_sub(1).max(1) as u64
+    }
+}
+
+/// Why a request finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget.
+    MaxTokens,
+    /// Emitted its stop token.
+    Eos,
+    /// KV cache exhausted (sequence or budget limit); output truncated.
+    CacheFull,
+}
+
+/// One streamed token, emitted as soon as the serving tick that
+/// produced it completes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenEvent {
+    /// Request id.
+    pub request_id: u64,
+    /// The generated token.
+    pub token: u32,
+    /// 0-based index among the request's generated tokens.
+    pub index: usize,
+    /// Serving-clock time of emission.
+    pub time: f64,
 }
 
 /// A completed generation.
@@ -34,8 +89,15 @@ pub struct Response {
     pub tokens: Vec<u32>,
     /// End-to-end latency (arrival -> completion), serving-clock seconds.
     pub latency: f64,
-    /// Time spent queued before execution started.
+    /// Time spent queued before a decode slot was granted.
     pub queue_delay: f64,
+    /// Time to first token (arrival -> first emitted token).
+    pub ttft: f64,
+    /// Time per output token after the first (0 for single-token
+    /// outputs).
+    pub tpot: f64,
+    /// Why generation stopped.
+    pub finish: FinishReason,
 }
 
 #[cfg(test)]
@@ -48,5 +110,22 @@ mod tests {
         assert_eq!(r.id, 0);
         assert_eq!(r.prompt, vec![1, 2, 3]);
         assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.eos_token, None);
+    }
+
+    #[test]
+    fn builders_set_controls() {
+        let r = Request::new(vec![1], 4).with_eos(7).with_arrival(1.5);
+        assert_eq!(r.eos_token, Some(7));
+        assert_eq!(r.arrival, 1.5);
+    }
+
+    #[test]
+    fn worst_case_kv_tokens_counts_fed_positions() {
+        // P prompt tokens + N generated: P + N - 1 positions are fed
+        // (the last generated token never re-enters the cache).
+        assert_eq!(Request::new(vec![1, 2, 3], 5).worst_case_kv_tokens(), 7);
+        assert_eq!(Request::new(vec![1], 1).worst_case_kv_tokens(), 1);
+        assert_eq!(Request::new(vec![], 0).worst_case_kv_tokens(), 1);
     }
 }

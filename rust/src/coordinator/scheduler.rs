@@ -1,42 +1,116 @@
-//! The serving loop: queue → batch → engine → responses.
+//! The serving loop: queue → decode slots → engine → streamed tokens.
 //!
-//! A static-batching scheduler in the style of the paper's evaluation
-//! (fixed batch sizes, decode-to-completion): each round takes up to
-//! `max_batch` requests, runs prefill + decode through the engine, and
-//! emits responses with latency accounting on the serving clock
-//! (wall-clock measured work + simulated device time).
+//! Two scheduling policies share one tick loop over the engine's
+//! incremental sequence API (`start_seq` / `decode_step` /
+//! `finish_seq`):
+//!
+//! * [`SchedPolicy::Static`] — round-based batching in the style of the
+//!   paper's evaluation: a round admits up to `max_batch` requests, and
+//!   late arrivals wait until the whole round retires.
+//! * [`SchedPolicy::Continuous`] — vLLM-style continuous batching:
+//!   queued requests are admitted into free decode slots *mid-flight*
+//!   the moment one opens (and the KV budget allows), and finished
+//!   sequences retire immediately.
+//!
+//! Admission is page-granular when a simulated HBM budget is set: the
+//! KV byte budget is whatever the device has left after resident
+//! weights, so a DF11 engine (smaller resident weights) sustains more
+//! concurrent slots than BF16 under the same budget — the paper's
+//! freed-memory story as scheduler behavior.
+//!
+//! Tokens stream out as [`TokenEvent`]s the tick they are produced;
+//! responses carry TTFT/TPOT and the report carries slot-occupancy
+//! stats. All timing runs on the serving clock (wall-clock measured
+//! work + simulated device time).
 
-use super::engine::Engine;
-use super::metrics::LatencyStats;
+use super::engine::{Engine, StepEvent};
+use super::metrics::{LatencyStats, OccupancyStats};
 use super::queue::RequestQueue;
-use super::request::{Request, Response};
-use crate::error::Result;
+use super::request::{FinishReason, Request, Response, TokenEvent};
+use crate::error::{Error, Result};
 use std::time::Instant;
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Round-based static batching (admit only when all slots are
+    /// empty).
+    Static,
+    /// Continuous batching (admit into any free slot mid-flight).
+    Continuous,
+}
 
 /// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
-    /// Max requests per static batch.
+    /// Concurrent decode slots (per-tick batch cap).
     pub max_batch: usize,
+    /// Scheduling policy.
+    pub policy: SchedPolicy,
+    /// Simulated device HBM budget in bytes. When set, the KV cache
+    /// gets whatever remains after the engine's resident weights, and
+    /// admission reserves pages against it.
+    pub hbm_bytes: Option<u64>,
+    /// KV page granularity in tokens (used with `hbm_bytes`).
+    pub page_tokens: u64,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 8 }
+        SchedulerConfig {
+            max_batch: 8,
+            policy: SchedPolicy::Continuous,
+            hbm_bytes: None,
+            page_tokens: 16,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Continuous batching over `slots` decode slots.
+    pub fn continuous(slots: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: slots,
+            policy: SchedPolicy::Continuous,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    /// Round-based static batching with `slots`-request rounds.
+    pub fn static_batch(slots: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: slots,
+            policy: SchedPolicy::Static,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    /// Cap the simulated device HBM (weights + KV must fit).
+    pub fn with_hbm_budget(mut self, bytes: u64) -> SchedulerConfig {
+        self.hbm_bytes = Some(bytes);
+        self
     }
 }
 
 /// Serving statistics for a drain run.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// Completed responses.
+    /// Completed responses, in completion order.
     pub responses: Vec<Response>,
     /// Total serving-clock seconds (measured + simulated).
     pub total_seconds: f64,
     /// Total generated tokens.
     pub total_tokens: u64,
-    /// Per-request latency statistics.
+    /// End-to-end per-request latency.
     pub latency: LatencyStats,
+    /// Per-request queue delay (arrival → slot granted).
+    pub queue_delay: LatencyStats,
+    /// Per-request time to first token.
+    pub ttft: LatencyStats,
+    /// Per-request time per output token (after the first).
+    pub tpot: LatencyStats,
+    /// Decode-slot occupancy over the run.
+    pub occupancy: OccupancyStats,
 }
 
 impl ServeReport {
@@ -49,6 +123,23 @@ impl ServeReport {
     }
 }
 
+/// One admitted request occupying a decode slot.
+struct InFlight {
+    req: Request,
+    /// Serving-clock time the slot was granted.
+    admitted: f64,
+    /// Serving-clock time of the first emitted token.
+    first_token: Option<f64>,
+    /// Serving-clock time of the latest emitted token.
+    last_token: f64,
+    /// Generated tokens so far.
+    tokens: Vec<u32>,
+    /// KV pages reserved at admission (returned on retirement).
+    reserved_pages: u64,
+    /// Set once the request should retire.
+    finish: Option<FinishReason>,
+}
+
 /// The serving coordinator.
 pub struct Server {
     engine: Engine,
@@ -56,6 +147,8 @@ pub struct Server {
     config: SchedulerConfig,
     /// Serving clock (seconds): wall-clock work + simulated device time.
     clock: f64,
+    /// Whether the HBM-derived KV budget has been installed.
+    budget_installed: bool,
 }
 
 impl Server {
@@ -66,6 +159,7 @@ impl Server {
             queue: RequestQueue::new(),
             config,
             clock: 0.0,
+            budget_installed: false,
         }
     }
 
@@ -84,102 +178,306 @@ impl Server {
         self.clock
     }
 
-    /// Submit a request; returns its id.
-    pub fn submit(&mut self, req: Request) -> u64 {
+    /// Submit a request arriving now; returns its queue-assigned id.
+    /// Requests must carry `id == 0` (ids are queue-owned).
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
         self.queue.push(req, self.clock)
     }
 
-    /// Run until the queue drains; returns the serve report.
+    /// Submit a request with an explicit arrival stamp (open-loop trace
+    /// replay). Arrivals in the past clamp to the current clock; traces
+    /// should be submitted in nondecreasing arrival order (admission is
+    /// FIFO).
+    pub fn submit_at(&mut self, req: Request, arrival: f64) -> Result<u64> {
+        self.queue.push(req, arrival.max(self.clock))
+    }
+
+    /// Derive and install the KV budget from the configured HBM cap:
+    /// whatever the device has left after resident weights.
+    fn ensure_kv_budget(&mut self) -> Result<()> {
+        if self.budget_installed {
+            return Ok(());
+        }
+        if let Some(hbm) = self.config.hbm_bytes {
+            let kv_bytes = hbm.saturating_sub(self.engine.resident_weight_bytes());
+            self.engine
+                .set_kv_budget(kv_bytes, self.config.page_tokens.max(1))?;
+        }
+        self.budget_installed = true;
+        Ok(())
+    }
+
+    /// Run until queue and slots drain, discarding token events.
     pub fn drain(&mut self) -> Result<ServeReport> {
-        let mut responses = Vec::new();
+        self.drain_streaming(|_| {})
+    }
+
+    /// Run until the queue and all decode slots drain, streaming each
+    /// generated token through `sink` the tick it is produced.
+    pub fn drain_streaming(
+        &mut self,
+        mut sink: impl FnMut(TokenEvent),
+    ) -> Result<ServeReport> {
+        self.ensure_kv_budget()?;
+        let slots = self.config.max_batch.max(1);
+        let total_pages = self.engine.kv_total_pages();
+        let mut reserved_pages = 0u64;
+        let mut active: Vec<InFlight> = Vec::new();
+        let mut responses: Vec<Response> = Vec::new();
         let mut total_tokens = 0u64;
+        let mut occupancy = OccupancyStats::new(slots);
         let start_clock = self.clock;
 
-        while !self.queue.is_empty() {
-            let batch = self.queue.next_batch(self.config.max_batch);
-            let batch_start = self.clock;
-            let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
-            let prompts: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        loop {
+            // --- Admission ---------------------------------------------
+            // Continuous: fill any free slot. Static: only open a fresh
+            // round once every slot has retired.
+            let round_open = match self.config.policy {
+                SchedPolicy::Continuous => true,
+                SchedPolicy::Static => active.is_empty(),
+            };
+            if round_open {
+                while active.len() < slots {
+                    let Some(head) = self.queue.head() else { break };
+                    if head.arrival > self.clock {
+                        break; // open-loop: not arrived yet
+                    }
+                    let head_id = head.id;
+                    let worst = head.worst_case_kv_tokens();
+                    if head.max_new_tokens == 0 {
+                        // Nothing to generate: complete immediately,
+                        // claiming neither a slot nor KV pages.
+                        let req = self.queue.pop().expect("head exists");
+                        responses.push(Response {
+                            id: req.id,
+                            tokens: Vec::new(),
+                            latency: self.clock - req.arrival,
+                            queue_delay: self.clock - req.arrival,
+                            ttft: 0.0,
+                            tpot: 0.0,
+                            finish: FinishReason::MaxTokens,
+                        });
+                        continue;
+                    }
+                    // Page-granular KV admission: reserve the worst case
+                    // so an admitted request can never hit budget OOM.
+                    let need = match (total_pages, self.engine.kv_pages_for(worst)) {
+                        (Some(total), Some(need)) => {
+                            if need > total {
+                                return Err(Error::Scheduler(format!(
+                                    "request {head_id} needs {need} KV pages but the \
+                                     budget holds {total}"
+                                )));
+                            }
+                            if reserved_pages + need > total {
+                                break; // wait for a retirement to free pages
+                            }
+                            need
+                        }
+                        _ => 0,
+                    };
+                    let req = self.queue.pop().expect("head exists");
+                    self.engine.start_seq(req.id, &req.prompt)?;
+                    reserved_pages += need;
+                    active.push(InFlight {
+                        admitted: self.clock,
+                        first_token: None,
+                        last_token: self.clock,
+                        tokens: Vec::new(),
+                        reserved_pages: need,
+                        finish: None,
+                        req,
+                    });
+                }
+            }
+            if active.is_empty() {
+                match self.queue.head() {
+                    None => break, // fully drained
+                    Some(h) if h.arrival > self.clock => {
+                        // Idle until the next open-loop arrival.
+                        self.clock = h.arrival;
+                        continue;
+                    }
+                    Some(h) => {
+                        // Arrived, zero slots in flight, still not
+                        // admitted: the request can never fit.
+                        return Err(Error::Scheduler(format!(
+                            "request {} is unschedulable (KV budget too small)",
+                            h.id
+                        )));
+                    }
+                }
+            }
 
-            // Run the batch; charge measured wall time plus the delta in
-            // simulated device time onto the serving clock.
-            let sim_before = self.engine.breakdown.total_seconds()
-                - measured_total(&self.engine.breakdown);
+            // --- One decode tick ---------------------------------------
+            // Charge measured wall time plus the delta in simulated
+            // device time onto the serving clock.
+            let ids: Vec<u64> = active.iter().map(|a| a.req.id).collect();
+            let sim_before = simulated_total(&self.engine.breakdown);
             let t0 = Instant::now();
-            let outputs = self.engine.generate(&prompts, max_new)?;
+            let outcomes = self.engine.decode_step(&ids)?;
             let wall = t0.elapsed().as_secs_f64();
-            let sim_after = self.engine.breakdown.total_seconds()
-                - measured_total(&self.engine.breakdown);
+            let sim_after = simulated_total(&self.engine.breakdown);
             self.clock += wall + (sim_after - sim_before).max(0.0);
+            occupancy.record(active.len());
 
-            for (req, toks) in batch.into_iter().zip(outputs) {
-                let toks: Vec<u32> = toks.into_iter().take(req.max_new_tokens).collect();
-                total_tokens += toks.len() as u64;
+            // --- Outcomes ----------------------------------------------
+            for (slot, outcome) in active.iter_mut().zip(&outcomes) {
+                debug_assert_eq!(slot.req.id, outcome.seq_id, "outcome order");
+                match outcome.event {
+                    StepEvent::Prefill { .. } => {}
+                    StepEvent::Token(t) => {
+                        if slot.first_token.is_none() {
+                            slot.first_token = Some(self.clock);
+                        }
+                        slot.tokens.push(t);
+                        slot.last_token = self.clock;
+                        sink(TokenEvent {
+                            request_id: slot.req.id,
+                            token: t,
+                            index: slot.tokens.len() - 1,
+                            time: self.clock,
+                        });
+                        if slot.req.eos_token == Some(t) {
+                            slot.finish = Some(FinishReason::Eos);
+                        } else if slot.tokens.len() >= slot.req.max_new_tokens {
+                            slot.finish = Some(FinishReason::MaxTokens);
+                        }
+                    }
+                    StepEvent::CacheFull => slot.finish = Some(FinishReason::CacheFull),
+                }
+            }
+
+            // --- Retire finished sequences immediately -----------------
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].finish.is_none() {
+                    i += 1;
+                    continue;
+                }
+                let slot = active.remove(i);
+                self.engine.finish_seq(slot.req.id)?;
+                reserved_pages -= slot.reserved_pages;
+                total_tokens += slot.tokens.len() as u64;
+                let first = slot.first_token.unwrap_or(self.clock);
+                let n = slot.tokens.len();
                 responses.push(Response {
-                    id: req.id,
-                    tokens: toks,
-                    latency: self.clock - req.arrival,
-                    queue_delay: batch_start - req.arrival,
+                    id: slot.req.id,
+                    latency: self.clock - slot.req.arrival,
+                    queue_delay: slot.admitted - slot.req.arrival,
+                    ttft: first - slot.req.arrival,
+                    tpot: if n > 1 {
+                        (slot.last_token - first) / (n - 1) as f64
+                    } else {
+                        0.0
+                    },
+                    finish: slot.finish.expect("retired with a reason"),
+                    tokens: slot.tokens,
                 });
             }
         }
 
-        let latency = LatencyStats::new(responses.iter().map(|r| r.latency).collect());
         Ok(ServeReport {
-            responses,
             total_seconds: self.clock - start_clock,
             total_tokens,
-            latency,
+            latency: LatencyStats::new(responses.iter().map(|r| r.latency).collect()),
+            queue_delay: LatencyStats::new(responses.iter().map(|r| r.queue_delay).collect()),
+            ttft: LatencyStats::new(responses.iter().map(|r| r.ttft).collect()),
+            tpot: LatencyStats::new(responses.iter().map(|r| r.tpot).collect()),
+            occupancy,
+            responses,
         })
     }
 }
 
-/// Sum of measured components (helper: Breakdown exposes per-component
-/// getters; the simulated share is total - measured).
-fn measured_total(b: &super::metrics::Breakdown) -> f64 {
-    super::metrics::Component::all()
+/// Simulated (device-model) seconds accumulated in a breakdown: total
+/// minus the measured share.
+fn simulated_total(b: &super::metrics::Breakdown) -> f64 {
+    let measured: f64 = super::metrics::Component::all()
         .iter()
         .map(|&c| b.measured_seconds(c))
-        .sum()
+        .sum();
+    b.total_seconds() - measured
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::engine::WeightMode;
+    use super::*;
     use crate::model::ModelConfig;
 
-    fn server(mode: WeightMode) -> Server {
+    fn server_with(mode: WeightMode, config: SchedulerConfig) -> Server {
         let cfg = ModelConfig::test_tiny();
         let engine = Engine::build(&cfg, 11, mode).unwrap();
-        Server::new(engine, SchedulerConfig { max_batch: 4 })
+        Server::new(engine, config)
+    }
+
+    fn server(mode: WeightMode) -> Server {
+        server_with(mode, SchedulerConfig::continuous(4))
     }
 
     #[test]
     fn drain_completes_all_requests() {
-        let mut s = server(WeightMode::Bf16Resident);
-        for i in 0..6 {
-            s.submit(Request::new(vec![i as u32 + 1, 2, 3], 4));
+        for config in [SchedulerConfig::continuous(4), SchedulerConfig::static_batch(4)] {
+            let mut s = server_with(WeightMode::Bf16Resident, config);
+            for i in 0..6 {
+                s.submit(Request::new(vec![i as u32 + 1, 2, 3], 4)).unwrap();
+            }
+            let report = s.drain().unwrap();
+            assert_eq!(report.responses.len(), 6);
+            assert!(report.responses.iter().all(|r| r.tokens.len() == 4));
+            assert!(report
+                .responses
+                .iter()
+                .all(|r| r.finish == FinishReason::MaxTokens));
+            assert_eq!(report.total_tokens, 24);
+            assert!(report.total_seconds > 0.0);
+            assert!(report.tokens_per_second() > 0.0);
+            // All six ids come back exactly once.
+            let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+            assert_eq!(report.occupancy.peak, 4);
+            assert!(report.occupancy.mean() > 0.0);
         }
-        let report = s.drain().unwrap();
-        assert_eq!(report.responses.len(), 6);
-        assert!(report.responses.iter().all(|r| r.tokens.len() == 4));
-        assert_eq!(report.total_tokens, 24);
-        assert!(report.total_seconds > 0.0);
-        assert!(report.tokens_per_second() > 0.0);
-        // FIFO: ids come back in order.
-        let ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
-        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]
     fn respects_per_request_token_budgets() {
         let mut s = server(WeightMode::Bf16Resident);
-        s.submit(Request::new(vec![1], 2));
-        s.submit(Request::new(vec![2], 7));
+        s.submit(Request::new(vec![1], 2)).unwrap();
+        s.submit(Request::new(vec![2], 7)).unwrap();
+        s.submit(Request::new(vec![3], 0)).unwrap();
         let report = s.drain().unwrap();
-        assert_eq!(report.responses[0].tokens.len(), 2);
-        assert_eq!(report.responses[1].tokens.len(), 7);
+        let by_id = |id: u64| {
+            report
+                .responses
+                .iter()
+                .find(|r| r.id == id)
+                .unwrap()
+                .tokens
+                .len()
+        };
+        assert_eq!(by_id(1), 2);
+        assert_eq!(by_id(2), 7);
+        assert_eq!(by_id(3), 0, "zero-budget requests complete empty");
+    }
+
+    #[test]
+    fn eos_token_stops_generation() {
+        // Find what the engine would emit, then stop on that token.
+        let mut s = server(WeightMode::Bf16Resident);
+        s.submit(Request::new(vec![5, 6], 6)).unwrap();
+        let free_run = s.drain().unwrap().responses.remove(0).tokens;
+        assert_eq!(free_run.len(), 6);
+        let eos = free_run[2];
+        // Greedy decode may emit `eos` earlier; stop at its first use.
+        let stop = free_run.iter().position(|&t| t == eos).unwrap();
+        let mut s = server(WeightMode::Bf16Resident);
+        s.submit(Request::new(vec![5, 6], 6).with_eos(eos)).unwrap();
+        let resp = s.drain().unwrap().responses.remove(0);
+        assert_eq!(resp.finish, FinishReason::Eos);
+        assert_eq!(resp.tokens, free_run[..=stop].to_vec(), "eos is included");
     }
 
     #[test]
@@ -187,26 +485,106 @@ mod tests {
         let mut a = server(WeightMode::Bf16Resident);
         let mut b = server(WeightMode::Df11);
         for s in [&mut a, &mut b] {
-            s.submit(Request::new(vec![5, 6, 7], 6));
-            s.submit(Request::new(vec![8], 6));
+            s.submit(Request::new(vec![5, 6, 7], 6)).unwrap();
+            s.submit(Request::new(vec![8], 6)).unwrap();
         }
         let ra = a.drain().unwrap();
         let rb = b.drain().unwrap();
         for (x, y) in ra.responses.iter().zip(&rb.responses) {
+            assert_eq!(x.id, y.id);
             assert_eq!(x.tokens, y.tokens, "lossless serving");
         }
     }
 
     #[test]
-    fn latency_includes_queue_delay() {
-        let mut s = server(WeightMode::Bf16Resident);
-        // 5 requests, batch 4: the 5th waits a full round.
+    fn latency_metrics_populate() {
+        let mut s = server_with(WeightMode::Bf16Resident, SchedulerConfig::static_batch(4));
+        // 5 requests, 4 slots: the 5th waits a full static round.
         for i in 0..5 {
-            s.submit(Request::new(vec![i as u32 + 1], 3));
+            s.submit(Request::new(vec![i as u32 + 1], 3)).unwrap();
         }
         let report = s.drain().unwrap();
-        let last = report.responses.last().unwrap();
+        let last = report.responses.iter().find(|r| r.id == 5).unwrap();
         assert!(last.queue_delay > 0.0, "5th request must have queued");
         assert!(last.latency >= last.queue_delay);
+        for r in &report.responses {
+            assert!(r.ttft > 0.0, "request {} ttft", r.id);
+            assert!(r.ttft <= r.latency);
+            assert!(r.tpot > 0.0, "multi-token outputs have tpot");
+        }
+        assert!(report.ttft.mean() > 0.0);
+        assert!(report.queue_delay.mean() > 0.0);
+    }
+
+    #[test]
+    fn continuous_backfills_slots_mid_flight() {
+        // One long request + several short ones on 2 slots: continuous
+        // backfills the short slot repeatedly while the long request
+        // decodes, so peak occupancy stays 2 and everyone completes.
+        let mut s = server_with(WeightMode::Bf16Resident, SchedulerConfig::continuous(2));
+        s.submit(Request::new(vec![1], 12)).unwrap();
+        for i in 0..4 {
+            s.submit(Request::new(vec![i as u32 + 2], 1)).unwrap();
+        }
+        let report = s.drain().unwrap();
+        assert_eq!(report.responses.len(), 5);
+        assert_eq!(report.occupancy.peak, 2);
+        // The long request finishes last despite being submitted first.
+        assert_eq!(report.responses.last().unwrap().id, 1);
+    }
+
+    #[test]
+    fn streaming_sink_sees_every_token_in_order() {
+        let mut s = server(WeightMode::Bf16Resident);
+        s.submit(Request::new(vec![3, 4], 5)).unwrap();
+        s.submit(Request::new(vec![9], 3)).unwrap();
+        let mut events: Vec<TokenEvent> = Vec::new();
+        let report = s.drain_streaming(|e| events.push(e)).unwrap();
+        assert_eq!(events.len() as u64, report.total_tokens);
+        for r in &report.responses {
+            let streamed: Vec<u32> = events
+                .iter()
+                .filter(|e| e.request_id == r.id)
+                .map(|e| e.token)
+                .collect();
+            assert_eq!(streamed, r.tokens, "request {}", r.id);
+        }
+        // Event clocks are nondecreasing and indices per request dense.
+        assert!(events.windows(2).all(|w| w[0].time <= w[1].time));
+    }
+
+    #[test]
+    fn submit_rejects_preset_ids() {
+        let mut s = server(WeightMode::Bf16Resident);
+        let mut r = Request::new(vec![1], 1);
+        r.id = 7;
+        assert!(s.submit(r).is_err());
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_respected() {
+        let mut s = server_with(WeightMode::Bf16Resident, SchedulerConfig::continuous(2));
+        s.submit_at(Request::new(vec![1], 2), 0.0).unwrap();
+        // Far-future arrival: the server idles forward to it.
+        s.submit_at(Request::new(vec![2], 2), 1e6).unwrap();
+        let report = s.drain().unwrap();
+        assert_eq!(report.responses.len(), 2);
+        let late = report.responses.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(late.queue_delay, 0.0, "an idle server admits on arrival");
+        assert!(report.total_seconds >= 1e6);
+    }
+
+    #[test]
+    fn unschedulable_request_is_a_typed_error() {
+        // An HBM budget equal to resident weights leaves zero KV pages.
+        let cfg = ModelConfig::test_tiny();
+        let engine = Engine::build(&cfg, 11, WeightMode::Bf16Resident).unwrap();
+        let budget = engine.resident_weight_bytes();
+        let mut s = Server::new(
+            engine,
+            SchedulerConfig::continuous(2).with_hbm_budget(budget),
+        );
+        s.submit(Request::new(vec![1], 4)).unwrap();
+        assert!(matches!(s.drain(), Err(Error::Scheduler(_))));
     }
 }

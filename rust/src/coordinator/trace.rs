@@ -1,0 +1,143 @@
+//! Arrival-stamped workload traces (open-loop load).
+//!
+//! The continuous-vs-static comparison needs workloads where requests
+//! *arrive over time* instead of all at once. A trace is a plain text
+//! file, one request per line:
+//!
+//! ```text
+//! # arrival_seconds  max_new_tokens  prompt_tokens  [eos_token]
+//! 0.0    6  1,2,3
+//! 0.002  8  4,5      17
+//! ```
+//!
+//! `#` comments and blank lines are ignored. Arrivals are seconds on
+//! the serving clock; requests are replayed through
+//! [`super::Server::submit_at`] in arrival order (the parser sorts, so
+//! hand-written traces need not be pre-sorted).
+
+use super::request::Request;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Parse a trace from text. Returns requests with `arrival` stamped,
+/// sorted by arrival (stable), ids left 0 for queue assignment.
+pub fn parse_trace(text: &str) -> Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let bad = |what: &str| {
+            Error::InvalidArgument(format!("trace line {}: {what}: {line:?}", lineno + 1))
+        };
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 3 || fields.len() > 4 {
+            return Err(bad("want `arrival max_new prompt [eos]`"));
+        }
+        let arrival: f64 = fields[0]
+            .parse()
+            .map_err(|_| bad("bad arrival seconds"))?;
+        if !arrival.is_finite() || arrival < 0.0 {
+            return Err(bad("arrival must be finite and >= 0"));
+        }
+        let max_new: usize = fields[1].parse().map_err(|_| bad("bad max_new_tokens"))?;
+        let prompt: Vec<u32> = fields[2]
+            .split(',')
+            .map(|t| t.parse().map_err(|_| bad("bad prompt token")))
+            .collect::<Result<_>>()?;
+        if prompt.is_empty() {
+            return Err(bad("empty prompt"));
+        }
+        let mut req = Request::new(prompt, max_new).with_arrival(arrival);
+        if let Some(eos) = fields.get(3) {
+            req = req.with_eos(eos.parse().map_err(|_| bad("bad eos token"))?);
+        }
+        out.push(req);
+    }
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("finite arrivals"));
+    Ok(out)
+}
+
+/// Load a trace file.
+pub fn load_trace(path: &Path) -> Result<Vec<Request>> {
+    parse_trace(&std::fs::read_to_string(path)?)
+}
+
+/// Synthesize a staggered open-loop workload: `n` requests arriving
+/// `interval` seconds apart, with deterministic varied prompts and
+/// per-request budgets cycling through `max_new_cycle`.
+pub fn staggered(
+    n: usize,
+    interval: f64,
+    prompt_len: usize,
+    max_new_cycle: &[usize],
+) -> Vec<Request> {
+    let cycle = if max_new_cycle.is_empty() {
+        &[8][..]
+    } else {
+        max_new_cycle
+    };
+    (0..n)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..prompt_len.max(1))
+                .map(|t| ((i * 31 + t * 7) % 60 + 1) as u32)
+                .collect();
+            Request::new(prompt, cycle[i % cycle.len()]).with_arrival(i as f64 * interval)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_blanks_and_eos() {
+        let text = "\
+# staggered smoke trace
+0.0   6  1,2,3
+
+0.002 8  4,5  17
+0.001 2  9
+";
+        let reqs = parse_trace(text).unwrap();
+        assert_eq!(reqs.len(), 3);
+        // Sorted by arrival.
+        assert_eq!(reqs[0].arrival, 0.0);
+        assert_eq!(reqs[1].arrival, 0.001);
+        assert_eq!(reqs[2].arrival, 0.002);
+        assert_eq!(reqs[0].prompt, vec![1, 2, 3]);
+        assert_eq!(reqs[0].max_new_tokens, 6);
+        assert_eq!(reqs[0].eos_token, None);
+        assert_eq!(reqs[2].eos_token, Some(17));
+        assert!(reqs.iter().all(|r| r.id == 0), "ids stay queue-assigned");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_trace("0.0 6").is_err(), "missing prompt");
+        assert!(parse_trace("x 6 1,2").is_err(), "bad arrival");
+        assert!(parse_trace("-1 6 1,2").is_err(), "negative arrival");
+        assert!(parse_trace("0.0 y 1,2").is_err(), "bad max_new");
+        assert!(parse_trace("0.0 6 1,z").is_err(), "bad token");
+        assert!(parse_trace("0.0 6 1 2 3").is_err(), "too many fields");
+        let err = parse_trace("ok 1 2").unwrap_err();
+        assert!(format!("{err}").contains("line 1"), "errors cite the line");
+    }
+
+    #[test]
+    fn staggered_is_deterministic_and_spaced() {
+        let a = staggered(5, 0.25, 3, &[2, 9]);
+        let b = staggered(5, 0.25, 3, &[2, 9]);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        assert!((a[4].arrival - 1.0).abs() < 1e-12);
+        assert_eq!(a[0].max_new_tokens, 2);
+        assert_eq!(a[1].max_new_tokens, 9);
+        assert_eq!(a[2].max_new_tokens, 2);
+        assert!(a.iter().all(|r| r.prompt.len() == 3));
+        // Empty cycle falls back to a default budget.
+        assert_eq!(staggered(1, 0.0, 2, &[])[0].max_new_tokens, 8);
+    }
+}

@@ -43,6 +43,27 @@ impl KvCacheManager {
         self.bytes_per_token
     }
 
+    /// Allocation granularity in tokens (vLLM-style page size).
+    pub fn page_tokens(&self) -> u64 {
+        self.page_tokens
+    }
+
+    /// Bytes of one KV page.
+    pub fn bytes_per_page(&self) -> u64 {
+        self.page_tokens * self.bytes_per_token
+    }
+
+    /// Pages needed to hold `tokens` (at least one — a sequence always
+    /// occupies a page). Drives the scheduler's page-granular admission.
+    pub fn pages_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.page_tokens).max(1)
+    }
+
+    /// Total live tokens across all registered sequences.
+    pub fn total_tokens(&self) -> u64 {
+        self.seqs.values().map(|s| s.tokens).sum()
+    }
+
     /// Register a new sequence.
     pub fn add_sequence(&mut self, seq_id: u64) -> Result<()> {
         if self.seqs.contains_key(&seq_id) {
@@ -182,6 +203,32 @@ mod tests {
         mgr.release(&mut hbm, 7).unwrap();
         assert_eq!(hbm.used(), 0);
         assert_eq!(mgr.num_sequences(), 0);
+    }
+
+    #[test]
+    fn page_math_helpers() {
+        let cfg = ModelConfig::test_tiny();
+        let mgr = KvCacheManager::new(&cfg, 16);
+        assert_eq!(mgr.page_tokens(), 16);
+        assert_eq!(mgr.bytes_per_page(), 16 * mgr.bytes_per_token());
+        assert_eq!(mgr.pages_for(0), 1, "a sequence always holds a page");
+        assert_eq!(mgr.pages_for(1), 1);
+        assert_eq!(mgr.pages_for(16), 1);
+        assert_eq!(mgr.pages_for(17), 2);
+    }
+
+    #[test]
+    fn total_tokens_tracks_live_sequences() {
+        let cfg = ModelConfig::test_tiny();
+        let mut mgr = KvCacheManager::new(&cfg, 8);
+        let mut hbm = HbmAllocator::new(small_device(1 << 30));
+        mgr.add_sequence(1).unwrap();
+        mgr.add_sequence(2).unwrap();
+        mgr.extend(&mut hbm, 1, 5).unwrap();
+        mgr.extend(&mut hbm, 2, 9).unwrap();
+        assert_eq!(mgr.total_tokens(), 14);
+        mgr.release(&mut hbm, 1).unwrap();
+        assert_eq!(mgr.total_tokens(), 9);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! Examples:
 //!   dfloat11 compress --model tiny-100m --out /tmp/t.df11
 //!   dfloat11 inspect /tmp/t.df11
-//!   dfloat11 serve --requests 16 --batch 4 --mode df11
+//!   dfloat11 serve --requests 16 --slots 4 --mode df11 --sched continuous
+//!   dfloat11 serve --trace workload.txt --sched static --slots 2
 //!   dfloat11 serve --requests 4 --from /tmp/t.df11 --model tiny-100m
 //!   dfloat11 decode --in /tmp/t.df11 --verify --model tiny-100m
 //!   dfloat11 estimate --model llama31-405b --gpus 8 --device a100-80g
@@ -20,7 +21,9 @@ use dfloat11::bench_harness::fmt;
 use dfloat11::cli::Args;
 use dfloat11::codec::{codec_by_name, CompressedTensor, DecodeOpts};
 use dfloat11::container::{ContainerReader, ContainerWriter};
-use dfloat11::coordinator::{Component, Engine, Request, SchedulerConfig, Server, WeightMode};
+use dfloat11::coordinator::{
+    trace, Component, Engine, Request, SchedPolicy, SchedulerConfig, Server, WeightMode,
+};
 use dfloat11::entropy::ComponentHistograms;
 use dfloat11::error::{Error, Result};
 use dfloat11::gpu_sim::Device;
@@ -36,7 +39,12 @@ fn usage() -> ! {
          compress  --model NAME --scale N --seed S --codec df11|rans|raw\n\
                    --out PATH                         synthesize + compress to a container\n\
          inspect   PATH | --in PATH                   stats for a .df11 container\n\
-         serve     --requests N --batch B --mode bf16|df11|offload\n\
+         serve     --requests N --slots S --mode bf16|df11|offload\n\
+                   --sched static|continuous   scheduling policy (default\n\
+                                 continuous: admit into free slots mid-flight)\n\
+                   --trace PATH  replay an arrival-stamped workload file\n\
+                                 (lines: `arrival max_new tok,tok,... [eos]`)\n\
+                   --stagger S   synthetic arrivals spaced S seconds apart\n\
                    --threads T   decompression worker threads (0 = one per core);\n\
                                  block i+1 is decompressed while block i computes\n\
                    --from PATH   serve weights out of a .df11 container\n\
@@ -152,10 +160,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_parse_or("requests", 8usize)?;
-    let batch = args.get_parse_or("batch", 4usize)?;
+    // `--slots` is the decode-slot count; `--batch` survives as an alias.
+    let slots = args.get_parse_or("slots", args.get_parse_or("batch", 4usize)?)?;
     let new_tokens = args.get_parse_or("tokens", 8usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
     let threads = args.get_parse_or("threads", 0usize)?;
+    let stagger = args.get_parse_or("stagger", 0.0f64)?;
+    let policy = match args.get_or("sched", "continuous").as_str() {
+        "static" => SchedPolicy::Static,
+        "continuous" => SchedPolicy::Continuous,
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown scheduler {other} (want static|continuous)"
+            )))
+        }
+    };
     let cfg = scaled_config(args, 24)?;
     let mut engine = if let Some(from) = args.get("from") {
         // Serve straight out of a .df11 container (streamed, CRC-checked,
@@ -184,26 +203,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     engine.set_decode_threads(threads);
     println!(
-        "serving {} ({} params, source {}, batch {batch}, {} decode threads)",
+        "serving {} ({} params, source {}, {policy:?} scheduler, {slots} slots, {} decode threads)",
         cfg.name,
         cfg.num_params(),
         engine.source().source_name(),
         engine.decode_threads()
     );
-    let mut server = Server::new(engine, SchedulerConfig { max_batch: batch });
-    for i in 0..requests {
-        let prompt: Vec<u32> = (0..4).map(|t| ((i * 7 + t) % 60 + 1) as u32).collect();
-        server.submit(Request::new(prompt, new_tokens));
+    let mut server = Server::new(
+        engine,
+        SchedulerConfig {
+            max_batch: slots,
+            policy,
+            ..SchedulerConfig::default()
+        },
+    );
+    let workload = if let Some(path) = args.get("trace") {
+        trace::load_trace(Path::new(path))?
+    } else {
+        trace::staggered(requests, stagger, 4, &[new_tokens])
+    };
+    let submitted = workload.len();
+    for req in workload {
+        let at = req.arrival;
+        server.submit_at(req, at)?;
     }
     let report = server.drain()?;
+    if report.responses.len() != submitted {
+        return Err(Error::Scheduler(format!(
+            "{} of {submitted} requests completed",
+            report.responses.len()
+        )));
+    }
     println!(
-        "served {} requests, {} tokens in {} -> {:.2} tok/s; p50 {} p95 {}",
+        "served {} requests, {} tokens in {} -> {:.2} tok/s; latency p50 {} p95 {}",
         report.responses.len(),
         report.total_tokens,
         fmt::seconds(report.total_seconds),
         report.tokens_per_second(),
         fmt::seconds(report.latency.percentile(50.0)),
         fmt::seconds(report.latency.percentile(95.0)),
+    );
+    println!("queue delay mean {:.6} s", report.queue_delay.mean());
+    println!(
+        "ttft mean {:.6} s (p50 {:.6}, p95 {:.6}); tpot mean {:.6} s",
+        report.ttft.mean(),
+        report.ttft.percentile(50.0),
+        report.ttft.percentile(95.0),
+        report.tpot.mean(),
+    );
+    println!(
+        "occupancy mean {:.2}/{slots} slots (peak {}) over {} ticks",
+        report.occupancy.mean(),
+        report.occupancy.peak,
+        report.occupancy.ticks,
     );
     let bd = &server.engine().breakdown;
     let decompress = bd.measured_seconds(Component::Decompress);

@@ -71,9 +71,9 @@ fn three_modes_serve_identically() {
         },
     ] {
         let engine = Engine::build(&cfg, 5, mode).unwrap();
-        let mut server = Server::new(engine, SchedulerConfig { max_batch: 2 });
+        let mut server = Server::new(engine, SchedulerConfig::static_batch(2));
         for r in workload.clone() {
-            server.submit(r);
+            server.submit(r).unwrap();
         }
         let report = server.drain().unwrap();
         outputs.push(

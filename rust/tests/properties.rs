@@ -179,7 +179,8 @@ fn prop_queue_never_starves_or_duplicates() {
         let mut q = RequestQueue::new();
         let n = g.usize_in(1, g.size.max(2));
         for i in 0..n {
-            q.push(Request::new(vec![i as u32], 1), i as f64);
+            q.push(Request::new(vec![i as u32], 1), i as f64)
+                .expect("queue-assigned ids");
         }
         let mut seen = Vec::new();
         while !q.is_empty() {
