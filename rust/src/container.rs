@@ -526,6 +526,10 @@ pub struct ContainerReader {
     entries: Vec<IndexEntry>,
     /// Distinct group names in index order.
     group_names: Vec<String>,
+    /// Entry indices of every payload read, in read order. Sharding
+    /// tests assert through this that a shard only ever touches the
+    /// container ranges its `ShardPlan` assigns to it.
+    read_log: Mutex<Vec<usize>>,
 }
 
 impl std::fmt::Debug for ContainerReader {
@@ -642,6 +646,7 @@ impl ContainerReader {
             version,
             entries,
             group_names,
+            read_log: Mutex::new(Vec::new()),
         })
     }
 
@@ -682,12 +687,40 @@ impl ContainerReader {
         CompressionStats::new(original, compressed, self.total_elements())
     }
 
+    /// Entry indices of every payload read so far, in read order (the
+    /// shard-isolation instrumentation; see `read_log` field docs).
+    pub fn read_log(&self) -> Vec<usize> {
+        // Audit instrumentation must not fail open: keep the recorded
+        // reads even if a panic poisoned the lock mid-fetch.
+        match self.read_log.lock() {
+            Ok(log) => log.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+
+    /// Group names of every payload read so far (deduplicated, in first-
+    /// read order) — the granularity `ShardPlan` assignments use.
+    pub fn groups_read(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for idx in self.read_log() {
+            let g = &self.entries[idx].group;
+            if !out.iter().any(|have| have == g) {
+                out.push(g.clone());
+            }
+        }
+        out
+    }
+
     /// Read and parse one block payload by index (CRC-checked).
     pub fn read_tensor_at(&self, idx: usize) -> Result<CompressedTensor> {
         let entry = self
             .entries
             .get(idx)
             .ok_or_else(|| Error::InvalidArgument(format!("no index entry {idx}")))?;
+        match self.read_log.lock() {
+            Ok(mut log) => log.push(idx),
+            Err(poisoned) => poisoned.into_inner().push(idx),
+        }
         let mut buf = vec![0u8; entry.len as usize];
         {
             let mut f = self

@@ -19,7 +19,7 @@
 //! always-available native Rust implementation, or the PJRT executor
 //! running the AOT-compiled JAX artifacts (`runtime::XlaBackend`).
 
-use super::metrics::{Breakdown, Component};
+use super::metrics::{Breakdown, Component, ShardStat};
 use crate::bf16::Bf16;
 use crate::codec::{CompressedTensor, DecodeOpts};
 use crate::container::ContainerReader;
@@ -35,6 +35,173 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Which slice of the model an engine executes.
+///
+/// A full-model engine owns every transformer block plus the embedding
+/// and LM head. Under layer sharding (`coordinator::sharded`), each
+/// shard engine owns one contiguous block range; the first shard also
+/// owns the embedding and the last the LM head. The role scopes the
+/// engine's weight fetches, per-sequence K/V buffers, and KV-budget
+/// byte rate to the resident slice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRole {
+    /// First transformer block this engine runs.
+    pub first_layer: usize,
+    /// Number of consecutive blocks it runs (may be 0 for pass-through
+    /// shards when there are more GPUs than layers).
+    pub n_layers: usize,
+    /// Whether this engine holds `embed.tok` and embeds fed tokens.
+    pub owns_embed: bool,
+    /// Whether this engine holds `lm_head` and projects logits.
+    pub owns_head: bool,
+}
+
+impl ShardRole {
+    /// The full-model role for a config.
+    pub fn full(config: &ModelConfig) -> ShardRole {
+        ShardRole {
+            first_layer: 0,
+            n_layers: config.n_layers,
+            owns_embed: true,
+            owns_head: true,
+        }
+    }
+
+    /// Whether this role covers the whole model.
+    pub fn is_full(&self, config: &ModelConfig) -> bool {
+        self.owns_embed
+            && self.owns_head
+            && self.first_layer == 0
+            && self.n_layers == config.n_layers
+    }
+
+    /// One past the last owned block.
+    pub fn end_layer(&self) -> usize {
+        self.first_layer + self.n_layers
+    }
+}
+
+/// The engine surface the serving tick loop drives: the per-request
+/// lifecycle plus the budget/accounting queries `Server` schedules
+/// with. Implemented by the single-box [`Engine`] and by
+/// [`crate::coordinator::ShardedEngine`], so both scheduler policies
+/// run sharded or unsharded unchanged.
+pub trait ServingEngine {
+    /// Begin an incremental sequence (unique `id`, non-empty prompt).
+    fn start_seq(&mut self, id: u64, prompt: &[u32]) -> Result<()>;
+
+    /// One decode tick over the given in-flight sequences; outcomes
+    /// come back in `ids` order.
+    fn decode_step(&mut self, ids: &[u64]) -> Result<Vec<StepOutcome>>;
+
+    /// Retire a sequence, releasing its K/V resources.
+    fn finish_seq(&mut self, id: u64) -> Result<()>;
+
+    /// Derive and install the paged KV budget from a per-device HBM
+    /// cap: each device budgets whatever remains after its resident
+    /// weights (per shard under sharding, so DF11's freed HBM becomes
+    /// extra KV pages on every shard).
+    fn install_hbm_budget(&mut self, hbm_bytes: u64, page_tokens: u64) -> Result<()>;
+
+    /// Schedulable KV pages (the minimum across devices), `None`
+    /// without a budget.
+    fn kv_total_pages(&self) -> Option<u64>;
+
+    /// Pages the budget charges for `tokens` cache positions, `None`
+    /// without a budget.
+    fn kv_pages_for(&self, tokens: u64) -> Option<u64>;
+
+    /// Peak device-resident weight bytes (per device under sharding).
+    fn resident_weight_bytes(&self) -> u64;
+
+    /// Aggregated latency breakdown (summed across shards).
+    fn breakdown(&self) -> &Breakdown;
+
+    /// Weight-source label for reports.
+    fn source_label(&self) -> String;
+
+    /// Set the decompression worker-thread count (0 = auto).
+    fn set_decode_threads(&mut self, threads: usize);
+
+    /// Current decompression worker-thread count.
+    fn decode_threads(&self) -> usize;
+
+    /// Number of shards (1 for a single-box engine).
+    fn num_shards(&self) -> usize;
+
+    /// Number of sequences currently in flight.
+    fn num_active_seqs(&self) -> usize;
+
+    /// Per-shard placement/timing stats (empty for a single-box
+    /// engine — its breakdown *is* the whole story).
+    fn shard_stats(&self) -> Vec<ShardStat>;
+}
+
+/// Greedy generation for a fixed set of prompts over any serving
+/// engine — the batch convenience wrapper behind [`Engine::generate`]
+/// and the sharded engine's `generate` (one implementation, so the two
+/// cannot drift). Each prompt runs unpadded at its own depth; empty
+/// prompts behave as a single 0 token; returns up to `max_new_tokens`
+/// generated ids per sequence (fewer if the K/V cache fills).
+pub fn generate_with<E: ServingEngine + ?Sized>(
+    engine: &mut E,
+    prompts: &[Vec<u32>],
+    max_new_tokens: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let batch = prompts.len();
+    if batch == 0 {
+        return Ok(Vec::new());
+    }
+    if engine.num_active_seqs() > 0 {
+        return Err(Error::InvalidArgument(
+            "generate: incremental sequences are in flight".into(),
+        ));
+    }
+    let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
+    for (i, p) in prompts.iter().enumerate() {
+        // Tolerate empty prompts the way the old padded path did: they
+        // behave as a single 0 token.
+        let prompt: &[u32] = if p.is_empty() { &[0] } else { p };
+        if let Err(e) = engine.start_seq(i as u64 + 1, prompt) {
+            // Unwind already-started sequences so the engine stays
+            // usable after a rejected batch.
+            for id in 1..=i as u64 {
+                engine.finish_seq(id).ok();
+            }
+            return Err(e);
+        }
+    }
+    let mut live: Vec<u64> = (1..=batch as u64).collect();
+    if max_new_tokens == 0 {
+        for id in live.drain(..) {
+            engine.finish_seq(id)?;
+        }
+        return Ok(outputs);
+    }
+    while !live.is_empty() {
+        let outcomes = engine.decode_step(&live)?;
+        let mut retired: Vec<u64> = Vec::new();
+        for o in outcomes {
+            let idx = (o.seq_id - 1) as usize;
+            match o.event {
+                StepEvent::Prefill { .. } => {}
+                StepEvent::Token(t) => {
+                    outputs[idx].push(t);
+                    if outputs[idx].len() >= max_new_tokens {
+                        retired.push(o.seq_id);
+                    }
+                }
+                StepEvent::CacheFull => retired.push(o.seq_id),
+            }
+        }
+        for id in retired {
+            engine.finish_seq(id)?;
+            live.retain(|&l| l != id);
+        }
+    }
+    Ok(outputs)
+}
 
 /// How weights are stored and fetched per use.
 #[derive(Clone, Debug, PartialEq)]
@@ -488,6 +655,35 @@ impl ContainerSource {
         })
     }
 
+    /// Open a container restricted to a set of groups — a shard's
+    /// container-range assignment. Only those groups are indexed (and
+    /// counted as resident); fetching any tensor outside them is a
+    /// typed error, so a shard can never materialize weights beyond
+    /// its `ShardPlan` slice.
+    pub fn open_scoped(path: &Path, groups: &[String]) -> Result<ContainerSource> {
+        let reader = ContainerReader::open(path)?;
+        for g in groups {
+            if !reader.group_names().iter().any(|have| have == g) {
+                return Err(Error::InvalidArgument(format!(
+                    "container {} has no group {g} for this shard",
+                    reader.model_name()
+                )));
+            }
+        }
+        let index = reader
+            .entries()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| groups.iter().any(|g| *g == e.group))
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(ContainerSource {
+            reader,
+            index,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
     /// The underlying streaming reader.
     pub fn reader(&self) -> &ContainerReader {
         &self.reader
@@ -551,9 +747,36 @@ impl WeightSource for ContainerSource {
     }
 
     fn resident_weight_bytes(&self) -> u64 {
-        // Compressed payload bytes — the container serves compressed-
-        // resident, decompress-on-use.
-        self.reader.entries().iter().map(|e| e.len).sum()
+        // Compressed payload bytes of the *indexed* entries — the
+        // container serves compressed-resident, decompress-on-use, and
+        // a scoped (sharded) source only holds its own slice.
+        self.index
+            .values()
+            .map(|&i| self.reader.entries()[i].len)
+            .sum()
+    }
+}
+
+/// Shared weight sources delegate through the `Arc` (the sharding
+/// tests keep a handle on each shard's scoped [`ContainerSource`] to
+/// inspect its reader instrumentation while the engine serves from it).
+impl<S: WeightSource + ?Sized> WeightSource for Arc<S> {
+    fn source_name(&self) -> &'static str {
+        (**self).source_name()
+    }
+
+    fn fetch_into(
+        &self,
+        name: &str,
+        threads: usize,
+        staging: &mut Vec<Bf16>,
+        out: &mut Vec<f32>,
+    ) -> Result<FetchCost> {
+        (**self).fetch_into(name, threads, staging, out)
+    }
+
+    fn resident_weight_bytes(&self) -> u64 {
+        (**self).resident_weight_bytes()
     }
 }
 
@@ -697,6 +920,9 @@ fn kv_budget_device(bytes: u64) -> Device {
 /// The inference engine.
 pub struct Engine {
     config: ModelConfig,
+    /// The model slice this engine executes (full for single-box
+    /// serving; one block range + optional embed/head under sharding).
+    role: ShardRole,
     source: Box<dyn WeightSource>,
     backend: Box<dyn BlockBackend>,
     /// Per-layer K/V caches, `(batch, max_seq, kv_dim)` each (the raw
@@ -723,6 +949,10 @@ pub struct Engine {
     slot_buffers_created: usize,
     /// Optional paged KV budget consulted per fed token.
     kv_budget: Option<KvBudget>,
+    /// Logits of the most recent tick's LM-head pass (rows follow the
+    /// tick's active order; empty when no row sampled). The sharding
+    /// bit-identity suite compares these across engine shapes.
+    last_logits: Vec<f32>,
     /// Latency accounting (Figure 6's breakdown).
     pub breakdown: Breakdown,
 }
@@ -779,9 +1009,33 @@ impl Engine {
         source: Box<dyn WeightSource>,
         backend: Box<dyn BlockBackend>,
     ) -> Result<Engine> {
+        let role = ShardRole::full(config);
+        Self::build_shard(config, source, backend, role)
+    }
+
+    /// Build a shard-scoped engine: it runs only `role`'s block range
+    /// (embedding/head per the role flags), its weight source holds
+    /// only that slice, and its K/V buffers and KV-budget byte rate
+    /// cover only the owned layers. Driven through the `shard_*`
+    /// sub-step methods by [`crate::coordinator::ShardedEngine`].
+    pub fn build_shard(
+        config: &ModelConfig,
+        source: Box<dyn WeightSource>,
+        backend: Box<dyn BlockBackend>,
+        role: ShardRole,
+    ) -> Result<Engine> {
         config.validate()?;
+        if role.end_layer() > config.n_layers {
+            return Err(Error::InvalidArgument(format!(
+                "shard role covers blocks {}..{} of a {}-layer model",
+                role.first_layer,
+                role.end_layer(),
+                config.n_layers
+            )));
+        }
         Ok(Engine {
             config: config.clone(),
+            role,
             source,
             backend,
             k_cache: Vec::new(),
@@ -797,6 +1051,7 @@ impl Engine {
             slot_pool: Vec::new(),
             slot_buffers_created: 0,
             kv_budget: None,
+            last_logits: Vec::new(),
             breakdown: Breakdown::default(),
         })
     }
@@ -836,6 +1091,26 @@ impl Engine {
     /// Model config.
     pub fn config(&self) -> &ModelConfig {
         &self.config
+    }
+
+    /// The model slice this engine executes.
+    pub fn shard_role(&self) -> &ShardRole {
+        &self.role
+    }
+
+    /// Guard for entry points that embed, run every block, and project
+    /// logits in one pass — only a full-model engine can.
+    fn require_full_role(&self, what: &str) -> Result<()> {
+        if self.role.is_full(&self.config) {
+            return Ok(());
+        }
+        Err(Error::InvalidArgument(format!(
+            "{what} needs a full-model engine, but this one owns blocks {}..{} of {} \
+             (drive shards through coordinator::ShardedEngine)",
+            self.role.first_layer,
+            self.role.end_layer(),
+            self.config.n_layers
+        )))
     }
 
     /// Set the decompression worker-thread count (the serve `--threads`
@@ -906,9 +1181,13 @@ impl Engine {
                 "cannot change the KV budget with sequences in flight".into(),
             ));
         }
+        // Charge only the resident slice: a shard owning k of N layers
+        // pays k/N of the full model's KV bytes per token, so freed
+        // weight HBM becomes extra pages *on that shard*.
+        let bytes_per_token = 2 * self.role.n_layers as u64 * self.config.kv_dim() as u64 * 2;
         self.kv_budget = Some(KvBudget {
             hbm: HbmAllocator::new(kv_budget_device(bytes)),
-            mgr: KvCacheManager::new(&self.config, page_tokens),
+            mgr: KvCacheManager::with_bytes_per_token(bytes_per_token, page_tokens),
         });
         Ok(())
     }
@@ -936,6 +1215,29 @@ impl Engine {
     /// (`None` without a budget).
     pub fn kv_pages_for(&self, tokens: u64) -> Option<u64> {
         self.kv_budget.as_ref().map(|b| b.mgr.pages_for(tokens))
+    }
+
+    /// Whether the KV budget can cover one more fed token for sequence
+    /// `id` (always true without a budget). Non-mutating, so a caller
+    /// coordinating several budgets — one per shard — can check them
+    /// all before committing any.
+    pub fn kv_can_extend(&self, id: u64) -> bool {
+        match &self.kv_budget {
+            None => true,
+            Some(b) => {
+                let need = b.mgr.pages_needed(id, 1) * b.mgr.bytes_per_page();
+                b.hbm.would_fit(need)
+            }
+        }
+    }
+
+    /// Charge one fed token for sequence `id` against the KV budget
+    /// (no-op without one).
+    pub fn kv_extend(&mut self, id: u64) -> Result<()> {
+        match &mut self.kv_budget {
+            None => Ok(()),
+            Some(b) => b.mgr.extend(&mut b.hbm, id, 1),
+        }
     }
 
     /// Number of sequences currently in flight.
@@ -985,8 +1287,9 @@ impl Engine {
             Some(b) => b,
             None => {
                 self.slot_buffers_created += 1;
+                // One K/V cache pair per *owned* layer only.
                 SlotBuffers::new(
-                    self.config.n_layers,
+                    self.role.n_layers,
                     self.config.max_seq_len * self.config.kv_dim(),
                 )
             }
@@ -1033,6 +1336,7 @@ impl Engine {
     /// regardless of what else is co-scheduled (all row math is
     /// row-independent).
     pub fn decode_step(&mut self, ids: &[u64]) -> Result<Vec<StepOutcome>> {
+        self.require_full_role("decode_step")?;
         if ids.is_empty() {
             return Ok(Vec::new());
         }
@@ -1074,33 +1378,132 @@ impl Engine {
         }
 
         if !active.is_empty() {
-            let d = self.config.d_model;
             let n = active.len();
-            let threads = self.decode_threads;
+            let toks: Vec<u32> = active.iter().map(|&(_, _, tok)| tok).collect();
+            let act_ids: Vec<u64> = active.iter().map(|&(_, id, _)| id).collect();
 
-            // Embedding fetch + gather (tokens were validated at
-            // start_seq; sampled tokens are argmax indices < vocab).
-            let cost = self.source.fetch_into(
-                "embed.tok",
-                threads,
-                &mut self.io_staging,
-                &mut self.embed_w,
-            )?;
-            cost.charge(&mut self.breakdown);
-            let t0 = Instant::now();
-            let mut x = vec![0.0f32; n * d];
-            for (row, &(_, _, tok)) in active.iter().enumerate() {
-                let tok = tok as usize;
-                x[row * d..(row + 1) * d]
-                    .copy_from_slice(&self.embed_w[tok * d..(tok + 1) * d]);
+            // Embed → every block → head, through the same shard
+            // sub-steps a `ShardedEngine` pipelines across engines; a
+            // full-role engine simply runs all three itself.
+            let mut x = self.shard_embed(&toks)?;
+            self.shard_blocks(&act_ids, &mut x)?;
+
+            // LM head over the active rows — skipped entirely on ticks
+            // where every row is still prefilling (their logits would
+            // be discarded, and for long prompts the head fetch +
+            // projection dominates the wasted work). `shard_blocks`
+            // advanced each position past the token just fed, so a row
+            // samples once its position reaches the prompt length.
+            let sampling = active.iter().any(|&(_, id, _)| {
+                let slot = &self.seqs[&id];
+                slot.pos >= slot.prompt.len()
+            });
+            let logits = if sampling {
+                self.shard_head(&x, n)?
+            } else {
+                Vec::new()
+            };
+
+            // Resolve events.
+            let vocab = self.config.vocab_size;
+            for (row, &(i, id, _)) in active.iter().enumerate() {
+                let slot = self.seqs.get_mut(&id).expect("validated above");
+                events[i] = Some(if slot.pos < slot.prompt.len() {
+                    StepEvent::Prefill {
+                        remaining: slot.prompt.len() - slot.pos,
+                    }
+                } else {
+                    let tok = nn::argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
+                    slot.next = tok;
+                    StepEvent::Token(tok)
+                });
             }
-            self.breakdown
-                .add_measured(Component::Embed, t0.elapsed().as_secs_f64());
+            self.last_logits = logits;
+        } else {
+            self.last_logits.clear();
+        }
 
-            // Transformer blocks: the same block-batched decompression +
-            // one-block-ahead prefetch pipeline as `step`, but each
-            // sequence runs at its own position in its own cache.
-            let n_layers = self.config.n_layers;
+        Ok(ids
+            .iter()
+            .zip(events)
+            .map(|(&seq_id, event)| StepOutcome {
+                seq_id,
+                event: event.expect("every sequence resolved an event"),
+            })
+            .collect())
+    }
+
+    // --- Shard sub-steps -----------------------------------------------
+    //
+    // One decode tick decomposes into embed → blocks → head. A full-
+    // role engine runs all three in `decode_step`; under sharding,
+    // `ShardedEngine` calls `shard_embed` on the first shard, pipes the
+    // activation tensor through every shard's `shard_blocks`, and
+    // finishes with `shard_head` on the last — the activation hop is
+    // the only thing that crosses shard boundaries.
+
+    /// Fetch the token embedding and gather one activation row per fed
+    /// token. Requires `owns_embed`.
+    pub fn shard_embed(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        if !self.role.owns_embed {
+            return Err(Error::InvalidArgument(
+                "shard_embed on a shard that does not own the embedding".into(),
+            ));
+        }
+        let d = self.config.d_model;
+        let cost = self.source.fetch_into(
+            "embed.tok",
+            self.decode_threads,
+            &mut self.io_staging,
+            &mut self.embed_w,
+        )?;
+        cost.charge(&mut self.breakdown);
+        let t0 = Instant::now();
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (row, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= self.config.vocab_size {
+                return Err(Error::InvalidArgument(format!("token {tok} out of vocab")));
+            }
+            x[row * d..(row + 1) * d].copy_from_slice(&self.embed_w[tok * d..(tok + 1) * d]);
+        }
+        self.breakdown
+            .add_measured(Component::Embed, t0.elapsed().as_secs_f64());
+        Ok(x)
+    }
+
+    /// Run this engine's owned transformer blocks over one activation
+    /// row per sequence (each at its own position in its own K/V
+    /// cache), with the block-batched decompression + one-block-ahead
+    /// prefetch pipeline, then advance every sequence's position past
+    /// the token just fed. Zero-block (pass-through) shards only
+    /// advance positions.
+    pub fn shard_blocks(&mut self, ids: &[u64], x: &mut [f32]) -> Result<()> {
+        let d = self.config.d_model;
+        if x.len() != ids.len() * d {
+            return Err(Error::InvalidArgument(format!(
+                "shard_blocks got {} activation floats for {} sequences of width {d}",
+                x.len(),
+                ids.len()
+            )));
+        }
+        for &id in ids {
+            let slot = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| Error::InvalidArgument(format!("unknown sequence {id}")))?;
+            if slot.pos >= self.config.max_seq_len {
+                return Err(Error::KvCacheExhausted(format!(
+                    "sequence {id}: position {} >= max_seq_len {}",
+                    slot.pos, self.config.max_seq_len
+                )));
+            }
+        }
+
+        let first = self.role.first_layer;
+        let owned = self.role.n_layers;
+        if owned > 0 {
+            let threads = self.decode_threads;
             let config = &self.config;
             let source: &dyn WeightSource = self.source.as_ref();
             let pool = &self.scratch;
@@ -1108,22 +1511,26 @@ impl Engine {
             let seqs = &mut self.seqs;
             let breakdown = &mut self.breakdown;
             std::thread::scope(|scope| -> Result<()> {
-                let mut pending = Some(scope.spawn(move || fetch_block(source, pool, 0, threads)));
-                for l in 0..n_layers {
+                let mut pending =
+                    Some(scope.spawn(move || fetch_block(source, pool, first, threads)));
+                for l in 0..owned {
                     let joined = pending
                         .take()
                         .expect("prefetch pipeline primed")
                         .join()
                         .map_err(|_| Error::Runtime("block prefetch worker panicked".into()))?;
                     let (scratch, cost) = joined?;
-                    if l + 1 < n_layers {
-                        pending =
-                            Some(scope.spawn(move || fetch_block(source, pool, l + 1, threads)));
+                    if l + 1 < owned {
+                        pending = Some(
+                            scope.spawn(move || fetch_block(source, pool, first + l + 1, threads)),
+                        );
                     }
                     cost.charge(breakdown);
                     let t0 = Instant::now();
-                    for (row, &(_, id, _)) in active.iter().enumerate() {
+                    for (row, &id) in ids.iter().enumerate() {
                         let slot = seqs.get_mut(&id).expect("validated above");
+                        // K/V caches are indexed by *local* layer: slot
+                        // buffers only cover the owned range.
                         backend.block_forward(
                             config,
                             &mut x[row * d..(row + 1) * d],
@@ -1139,57 +1546,39 @@ impl Engine {
                 }
                 Ok(())
             })?;
-
-            // LM head over the active rows — skipped entirely on ticks
-            // where every row is still prefilling (their logits would
-            // be discarded, and for long prompts the head fetch +
-            // projection dominates the wasted work).
-            let sampling = active.iter().any(|&(_, id, _)| {
-                let slot = &self.seqs[&id];
-                slot.pos + 1 >= slot.prompt.len()
-            });
-            let logits = if sampling {
-                let cost = self.source.fetch_into(
-                    "lm_head",
-                    threads,
-                    &mut self.io_staging,
-                    &mut self.head_w,
-                )?;
-                cost.charge(&mut self.breakdown);
-                let t0 = Instant::now();
-                let logits = self.backend.lm_head(&self.config, &x, &self.head_w, n)?;
-                self.breakdown
-                    .add_measured(Component::LmHead, t0.elapsed().as_secs_f64());
-                logits
-            } else {
-                Vec::new()
-            };
-
-            // Advance positions and resolve events.
-            let vocab = self.config.vocab_size;
-            for (row, &(i, id, _)) in active.iter().enumerate() {
-                let slot = self.seqs.get_mut(&id).expect("validated above");
-                slot.pos += 1;
-                events[i] = Some(if slot.pos < slot.prompt.len() {
-                    StepEvent::Prefill {
-                        remaining: slot.prompt.len() - slot.pos,
-                    }
-                } else {
-                    let tok = nn::argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
-                    slot.next = tok;
-                    StepEvent::Token(tok)
-                });
-            }
         }
+        for &id in ids {
+            self.seqs.get_mut(&id).expect("validated above").pos += 1;
+        }
+        Ok(())
+    }
 
-        Ok(ids
-            .iter()
-            .zip(events)
-            .map(|(&seq_id, event)| StepOutcome {
-                seq_id,
-                event: event.expect("every sequence resolved an event"),
-            })
-            .collect())
+    /// Final norm + LM-head projection over `batch` activation rows.
+    /// Requires `owns_head`.
+    pub fn shard_head(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if !self.role.owns_head {
+            return Err(Error::InvalidArgument(
+                "shard_head on a shard that does not own the LM head".into(),
+            ));
+        }
+        let cost = self.source.fetch_into(
+            "lm_head",
+            self.decode_threads,
+            &mut self.io_staging,
+            &mut self.head_w,
+        )?;
+        cost.charge(&mut self.breakdown);
+        let t0 = Instant::now();
+        let logits = self.backend.lm_head(&self.config, x, &self.head_w, batch)?;
+        self.breakdown
+            .add_measured(Component::LmHead, t0.elapsed().as_secs_f64());
+        Ok(logits)
+    }
+
+    /// Logits from the most recent tick's LM-head pass (rows follow
+    /// that tick's active order; empty when no row sampled).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
     }
 
     /// One decode step: `tokens` has `batch` entries; returns logits
@@ -1201,6 +1590,7 @@ impl Engine {
     /// a prefetch worker while block `i` computes, hiding decompression
     /// latency behind block math.
     pub fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        self.require_full_role("step")?;
         if tokens.len() != self.batch {
             return Err(Error::InvalidArgument(format!(
                 "step got {} tokens for batch {}",
@@ -1300,63 +1690,14 @@ impl Engine {
     /// / `finish_seq`), kept for benches and batch tests. Each prompt
     /// runs unpadded at its own depth; returns up to `max_new_tokens`
     /// generated ids per sequence (fewer if the K/V cache fills).
+    /// The loop itself is [`generate_with`], shared with the sharded
+    /// engine.
     pub fn generate(
         &mut self,
         prompts: &[Vec<u32>],
         max_new_tokens: usize,
     ) -> Result<Vec<Vec<u32>>> {
-        let batch = prompts.len();
-        if batch == 0 {
-            return Ok(Vec::new());
-        }
-        if !self.seqs.is_empty() {
-            return Err(Error::InvalidArgument(
-                "generate: incremental sequences are in flight".into(),
-            ));
-        }
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); batch];
-        for (i, p) in prompts.iter().enumerate() {
-            // Tolerate empty prompts the way the old padded path did:
-            // they behave as a single 0 token.
-            let prompt: &[u32] = if p.is_empty() { &[0] } else { p };
-            if let Err(e) = self.start_seq(i as u64 + 1, prompt) {
-                // Unwind already-started sequences so the engine stays
-                // usable after a rejected batch.
-                for id in 1..=i as u64 {
-                    self.finish_seq(id).ok();
-                }
-                return Err(e);
-            }
-        }
-        let mut live: Vec<u64> = (1..=batch as u64).collect();
-        if max_new_tokens == 0 {
-            for id in live.drain(..) {
-                self.finish_seq(id)?;
-            }
-            return Ok(outputs);
-        }
-        while !live.is_empty() {
-            let outcomes = self.decode_step(&live)?;
-            let mut retired: Vec<u64> = Vec::new();
-            for o in outcomes {
-                let idx = (o.seq_id - 1) as usize;
-                match o.event {
-                    StepEvent::Prefill { .. } => {}
-                    StepEvent::Token(t) => {
-                        outputs[idx].push(t);
-                        if outputs[idx].len() >= max_new_tokens {
-                            retired.push(o.seq_id);
-                        }
-                    }
-                    StepEvent::CacheFull => retired.push(o.seq_id),
-                }
-            }
-            for id in retired {
-                self.finish_seq(id)?;
-                live.retain(|&l| l != id);
-            }
-        }
-        Ok(outputs)
+        generate_with(self, prompts, max_new_tokens)
     }
 
     /// Total negative log-likelihood (nats) of `tokens` under teacher
@@ -1374,6 +1715,65 @@ impl Engine {
             logits = self.step(&[tokens[t]])?;
         }
         Ok(total)
+    }
+}
+
+impl ServingEngine for Engine {
+    fn start_seq(&mut self, id: u64, prompt: &[u32]) -> Result<()> {
+        Engine::start_seq(self, id, prompt)
+    }
+
+    fn decode_step(&mut self, ids: &[u64]) -> Result<Vec<StepOutcome>> {
+        Engine::decode_step(self, ids)
+    }
+
+    fn finish_seq(&mut self, id: u64) -> Result<()> {
+        Engine::finish_seq(self, id)
+    }
+
+    fn install_hbm_budget(&mut self, hbm_bytes: u64, page_tokens: u64) -> Result<()> {
+        let kv = hbm_bytes.saturating_sub(self.resident_weight_bytes());
+        self.set_kv_budget(kv, page_tokens.max(1))
+    }
+
+    fn kv_total_pages(&self) -> Option<u64> {
+        Engine::kv_total_pages(self)
+    }
+
+    fn kv_pages_for(&self, tokens: u64) -> Option<u64> {
+        Engine::kv_pages_for(self, tokens)
+    }
+
+    fn resident_weight_bytes(&self) -> u64 {
+        Engine::resident_weight_bytes(self)
+    }
+
+    fn breakdown(&self) -> &Breakdown {
+        &self.breakdown
+    }
+
+    fn source_label(&self) -> String {
+        self.source.source_name().to_string()
+    }
+
+    fn set_decode_threads(&mut self, threads: usize) {
+        Engine::set_decode_threads(self, threads)
+    }
+
+    fn decode_threads(&self) -> usize {
+        Engine::decode_threads(self)
+    }
+
+    fn num_shards(&self) -> usize {
+        1
+    }
+
+    fn num_active_seqs(&self) -> usize {
+        Engine::num_active_seqs(self)
+    }
+
+    fn shard_stats(&self) -> Vec<ShardStat> {
+        Vec::new()
     }
 }
 
@@ -1843,6 +2243,101 @@ mod tests {
             StepEvent::Token(_)
         ));
         e.finish_seq(2).unwrap();
+    }
+
+    #[test]
+    fn partial_role_guards_full_model_entry_points() {
+        // A shard engine owning only block 1 (no embed, no head) must
+        // reject the full-model APIs with a typed error and refuse the
+        // sub-steps for slices it does not own.
+        let cfg = tiny();
+        let raw = generate_model_weights(&cfg, 9);
+        let map = raw
+            .into_iter()
+            .filter(|(s, _)| s.group == "block.1")
+            .map(|(s, w)| (s.name, w))
+            .collect();
+        let role = ShardRole {
+            first_layer: 1,
+            n_layers: 1,
+            owns_embed: false,
+            owns_head: false,
+        };
+        let mut e = Engine::build_shard(
+            &cfg,
+            Box::new(Bf16Source::new(map)),
+            Box::new(NativeBackend),
+            role,
+        )
+        .unwrap();
+        assert!(matches!(
+            e.decode_step(&[1]),
+            Err(Error::InvalidArgument(_))
+        ));
+        e.reset(1);
+        assert!(matches!(e.step(&[1]), Err(Error::InvalidArgument(_))));
+        assert!(matches!(
+            e.shard_embed(&[1]),
+            Err(Error::InvalidArgument(_))
+        ));
+        assert!(matches!(
+            e.shard_head(&[0.0; 32], 1),
+            Err(Error::InvalidArgument(_))
+        ));
+        // The owned slice works: one sequence, one activation row per
+        // fed token, K/V scoped to the single owned layer.
+        e.start_seq(1, &[1, 2]).unwrap();
+        let mut x = vec![0.1f32; cfg.d_model];
+        e.shard_blocks(&[1], &mut x).unwrap();
+        e.shard_blocks(&[1], &mut x).unwrap();
+        // Width mismatch is typed.
+        let mut narrow = vec![0.0f32; 3];
+        assert!(e.shard_blocks(&[1], &mut narrow).is_err());
+        e.finish_seq(1).unwrap();
+        // Out-of-range roles are rejected at build time.
+        let bad = ShardRole {
+            first_layer: 2,
+            n_layers: 1,
+            owns_embed: false,
+            owns_head: false,
+        };
+        assert!(Engine::build_shard(
+            &cfg,
+            Box::new(Bf16Source::new(HashMap::new())),
+            Box::new(NativeBackend),
+            bad
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scoped_container_source_serves_only_its_groups() {
+        let cfg = tiny();
+        let raw = generate_model_weights(&cfg, 12);
+        let model = Df11Model::compress_from_weights(cfg.name.clone(), raw).unwrap();
+        let dir = std::env::temp_dir().join("df11_engine_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("scoped_{}.df11", std::process::id()));
+        crate::container::write_df11_model(&path, &model).unwrap();
+
+        let groups = vec!["block.0".to_string()];
+        let scoped = ContainerSource::open_scoped(&path, &groups).unwrap();
+        let full = ContainerSource::open(&path).unwrap();
+        assert!(scoped.resident_weight_bytes() < full.resident_weight_bytes());
+        let mut staging = Vec::new();
+        let mut out = Vec::new();
+        scoped
+            .fetch_into("block.0.q_proj", 1, &mut staging, &mut out)
+            .unwrap();
+        assert!(!out.is_empty());
+        // Outside the scope: typed error, and nothing was read.
+        assert!(scoped
+            .fetch_into("block.1.q_proj", 1, &mut staging, &mut out)
+            .is_err());
+        assert_eq!(scoped.reader().groups_read(), vec!["block.0".to_string()]);
+        // Unknown group in the scope list is rejected upfront.
+        assert!(ContainerSource::open_scoped(&path, &["block.9".to_string()]).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -115,6 +115,18 @@ impl Breakdown {
         self.simulated.clear();
     }
 
+    /// Accumulate another breakdown into this one (every component,
+    /// including phase sub-timings). The sharded engine aggregates its
+    /// per-shard breakdowns through this.
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (&c, &s) in &other.measured {
+            *self.measured.entry(c).or_insert(0.0) += s;
+        }
+        for (&c, &s) in &other.simulated {
+            *self.simulated.entry(c).or_insert(0.0) += s;
+        }
+    }
+
     /// Difference vs another breakdown (self - other), per component.
     pub fn delta(&self, other: &Breakdown) -> Vec<(Component, f64)> {
         Component::all()
@@ -129,6 +141,24 @@ impl Breakdown {
             })
             .collect()
     }
+}
+
+/// Per-shard timing/placement summary surfaced by sharded engines
+/// (`serve --shards` prints one line per entry).
+#[derive(Clone, Debug)]
+pub struct ShardStat {
+    /// Display label (e.g. `shard0`).
+    pub label: String,
+    /// First transformer block owned by the shard.
+    pub first_layer: usize,
+    /// Number of transformer blocks owned.
+    pub n_layers: usize,
+    /// Device-resident weight bytes on this shard.
+    pub resident_bytes: u64,
+    /// Measured decompression seconds on this shard.
+    pub decompress_seconds: f64,
+    /// Measured block-compute seconds on this shard.
+    pub compute_seconds: f64,
 }
 
 /// Serving-level latency stats for a batch of request latencies.
@@ -279,6 +309,20 @@ mod tests {
         assert!(Component::phases()
             .iter()
             .all(|c| !Component::all().contains(c)));
+    }
+
+    #[test]
+    fn merge_accumulates_all_components() {
+        let mut a = Breakdown::default();
+        a.add_measured(Component::Decompress, 1.0);
+        a.add_measured(Component::DecompressPhase1, 0.25);
+        let mut b = Breakdown::default();
+        b.add_measured(Component::Decompress, 0.5);
+        b.add_simulated(Component::Transfer, 2.0);
+        a.merge(&b);
+        assert_eq!(a.measured_seconds(Component::Decompress), 1.5);
+        assert_eq!(a.measured_seconds(Component::DecompressPhase1), 0.25);
+        assert_eq!(a.simulated_seconds(Component::Transfer), 2.0);
     }
 
     #[test]

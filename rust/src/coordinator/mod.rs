@@ -9,7 +9,10 @@
 //!                                            │ continuous: backfill free slots
 //!                                            │ mid-flight (KV-page admission)
 //!                                            ▼
-//!                  Engine::start_seq / decode_step / finish_seq
+//!            ServingEngine::start_seq / decode_step / finish_seq
+//!                  │  Engine: single box, every block
+//!                  │  ShardedEngine: one Engine per GPU shard,
+//!                  │    activations piped shard-to-shard per tick
 //!                  │  per block: DF11 batch-decompress → fwd
 //!                  │  per sequence: own K/V cache + position
 //!                  ▼
@@ -25,14 +28,16 @@ pub mod metrics;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
+pub mod sharded;
 pub mod trace;
 
 pub use engine::{
-    Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource, Df11Source, Engine,
-    FetchCost, NativeBackend, OffloadSource, ScratchPool, StepEvent, StepOutcome, WeightMode,
-    WeightSource,
+    generate_with, Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource,
+    Df11Source, Engine, FetchCost, NativeBackend, OffloadSource, ScratchPool, ServingEngine,
+    ShardRole, StepEvent, StepOutcome, WeightMode, WeightSource,
 };
-pub use metrics::{Breakdown, Component, LatencyStats, OccupancyStats};
+pub use metrics::{Breakdown, Component, LatencyStats, OccupancyStats, ShardStat};
 pub use queue::RequestQueue;
 pub use request::{FinishReason, Request, Response, TokenEvent};
 pub use scheduler::{SchedPolicy, SchedulerConfig, ServeReport, Server};
+pub use sharded::{shard_groups, ShardedEngine};

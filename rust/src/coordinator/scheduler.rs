@@ -23,7 +23,7 @@
 //! stats. All timing runs on the serving clock (wall-clock measured
 //! work + simulated device time).
 
-use super::engine::{Engine, StepEvent};
+use super::engine::{Engine, ServingEngine, StepEvent};
 use super::metrics::{LatencyStats, OccupancyStats};
 use super::queue::RequestQueue;
 use super::request::{FinishReason, Request, Response, TokenEvent};
@@ -140,9 +140,12 @@ struct InFlight {
     finish: Option<FinishReason>,
 }
 
-/// The serving coordinator.
-pub struct Server {
-    engine: Engine,
+/// The serving coordinator. Generic over the engine shape: a single-
+/// box [`Engine`] (the default) or a [`super::ShardedEngine`] running a
+/// `ShardPlan` across per-shard engines — both scheduler policies work
+/// unchanged against the [`ServingEngine`] lifecycle.
+pub struct Server<E: ServingEngine = Engine> {
+    engine: E,
     queue: RequestQueue,
     config: SchedulerConfig,
     /// Serving clock (seconds): wall-clock work + simulated device time.
@@ -151,9 +154,9 @@ pub struct Server {
     budget_installed: bool,
 }
 
-impl Server {
+impl<E: ServingEngine> Server<E> {
     /// New server over an engine.
-    pub fn new(engine: Engine, config: SchedulerConfig) -> Server {
+    pub fn new(engine: E, config: SchedulerConfig) -> Server<E> {
         Server {
             engine,
             queue: RequestQueue::new(),
@@ -164,12 +167,12 @@ impl Server {
     }
 
     /// The underlying engine (for breakdown inspection).
-    pub fn engine(&self) -> &Engine {
+    pub fn engine(&self) -> &E {
         &self.engine
     }
 
     /// Mutable engine access.
-    pub fn engine_mut(&mut self) -> &mut Engine {
+    pub fn engine_mut(&mut self) -> &mut E {
         &mut self.engine
     }
 
@@ -192,16 +195,16 @@ impl Server {
         self.queue.push(req, arrival.max(self.clock))
     }
 
-    /// Derive and install the KV budget from the configured HBM cap:
-    /// whatever the device has left after resident weights.
+    /// Derive and install the KV budget from the configured *per-
+    /// device* HBM cap: each device budgets whatever it has left after
+    /// its resident weights (every shard, under sharding).
     fn ensure_kv_budget(&mut self) -> Result<()> {
         if self.budget_installed {
             return Ok(());
         }
         if let Some(hbm) = self.config.hbm_bytes {
-            let kv_bytes = hbm.saturating_sub(self.engine.resident_weight_bytes());
             self.engine
-                .set_kv_budget(kv_bytes, self.config.page_tokens.max(1))?;
+                .install_hbm_budget(hbm, self.config.page_tokens.max(1))?;
         }
         self.budget_installed = true;
         Ok(())
@@ -313,11 +316,11 @@ impl Server {
             // Charge measured wall time plus the delta in simulated
             // device time onto the serving clock.
             let ids: Vec<u64> = active.iter().map(|a| a.req.id).collect();
-            let sim_before = simulated_total(&self.engine.breakdown);
+            let sim_before = simulated_total(self.engine.breakdown());
             let t0 = Instant::now();
             let outcomes = self.engine.decode_step(&ids)?;
             let wall = t0.elapsed().as_secs_f64();
-            let sim_after = simulated_total(&self.engine.breakdown);
+            let sim_after = simulated_total(self.engine.breakdown());
             self.clock += wall + (sim_after - sim_before).max(0.0);
             occupancy.record(active.len());
 

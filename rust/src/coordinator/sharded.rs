@@ -1,0 +1,662 @@
+//! Multi-engine sharded serving: a `ShardPlan` made executable.
+//!
+//! The paper's headline capability is lossless inference of Llama 3.1
+//! 405B sharded across 8 GPUs. [`crate::multi_gpu::plan_layer_sharding`]
+//! decides *where* blocks go; this module actually runs the plan: one
+//! shard-scoped [`Engine`] per GPU, each owning only its contiguous
+//! transformer-block range (embed on the first shard, LM head on the
+//! last), loading weights through range reads of exactly its container
+//! groups — no shard ever materializes the full model.
+//!
+//! ```text
+//!   decode_step(ids)
+//!     │ shard 0: embed + blocks[0..a)      ── activation hop ──┐
+//!     │ shard 1: blocks[a..b)              ── activation hop ──┤
+//!     │ shard N-1: blocks[..n_layers) + LM head ◄──────────────┘
+//!     ▼ greedy sample (top level, identical to the unsharded engine)
+//! ```
+//!
+//! The per-request lifecycle API (`start_seq` / `decode_step` /
+//! `finish_seq`) is preserved unchanged at the top, so the `Server`
+//! tick loop — both `--sched static|continuous` policies — drives a
+//! [`ShardedEngine`] exactly like a single-box [`Engine`]. Activations
+//! hop shard-to-shard once per tick; each hop charges the analytic
+//! inter-GPU transfer time onto the simulated clock (the same model
+//! `multi_gpu::step_latency` uses, so the executable path and the
+//! analytic path can be cross-checked — see `bench_fig10_multigpu`).
+//!
+//! KV budgets are charged per shard: a shard owning `k` of `N` layers
+//! budgets only `k/N` of the KV bytes per token against *its* HBM minus
+//! *its* resident slice, so DF11's freed memory shows up as more
+//! schedulable slots on every shard.
+
+use super::engine::{
+    Bf16Source, ContainerSource, Df11Source, Engine, NativeBackend, ServingEngine, ShardRole,
+    StepEvent, StepOutcome, WeightMode, WeightSource,
+};
+use super::metrics::{Breakdown, Component, ShardStat};
+use crate::dfloat11::Df11Model;
+use crate::error::{Error, Result};
+use crate::model::init::generate_model_weights;
+use crate::model::ModelConfig;
+use crate::multi_gpu::{activation_hop_seconds, shard_layer_ranges, ShardPlan};
+use crate::nn;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Top-level state of one in-flight sequence (prompt bookkeeping and
+/// greedy sampling live here; the K/V slices live in the shards).
+struct SeqState {
+    prompt: Vec<u32>,
+    /// Tokens fed so far — kept in lockstep with every shard's slot
+    /// position (each shard sees every fed token's activations).
+    pos: usize,
+    /// The next token to feed once the prompt is exhausted.
+    next: u32,
+}
+
+/// Group names a shard serves: its block range, plus embed on the
+/// first shard and the LM head (when untied) on the last.
+pub fn shard_groups(config: &ModelConfig, shard: usize, ranges: &[(usize, usize)]) -> Vec<String> {
+    let (first, count) = ranges[shard];
+    let mut groups = Vec::with_capacity(count + 2);
+    if shard == 0 {
+        groups.push("embed".to_string());
+    }
+    for l in first..first + count {
+        groups.push(format!("block.{l}"));
+    }
+    if shard + 1 == ranges.len() && !config.tie_embeddings {
+        groups.push("lm_head".to_string());
+    }
+    groups
+}
+
+fn role_for(shard: usize, ranges: &[(usize, usize)]) -> ShardRole {
+    let (first_layer, n_layers) = ranges[shard];
+    ShardRole {
+        first_layer,
+        n_layers,
+        owns_embed: shard == 0,
+        owns_head: shard + 1 == ranges.len(),
+    }
+}
+
+/// Check a plan against the serving config and return its layer ranges.
+fn validate_plan(config: &ModelConfig, plan: &ShardPlan) -> Result<Vec<(usize, usize)>> {
+    // Tied embeddings would need the last shard to project logits with
+    // the *first* shard's embedding matrix — a cross-shard weight
+    // dependency this pipeline does not implement. Fail at build time,
+    // not on the first sampling tick.
+    if config.tie_embeddings {
+        return Err(Error::InvalidArgument(format!(
+            "{}: sharded serving does not support tied embeddings (the LM head \
+             would live on the first shard)",
+            config.name
+        )));
+    }
+    let ranges = shard_layer_ranges(plan);
+    if ranges.is_empty() {
+        return Err(Error::InvalidArgument("plan has zero shards".into()));
+    }
+    let covered: usize = ranges.iter().map(|&(_, n)| n).sum();
+    if covered != config.n_layers {
+        return Err(Error::InvalidArgument(format!(
+            "plan covers {covered} blocks but {} has {} layers — was it built \
+             for a different model config?",
+            config.name, config.n_layers
+        )));
+    }
+    Ok(ranges)
+}
+
+/// A layer-sharded serving engine: one shard-scoped [`Engine`] per
+/// planned GPU, driven as a single [`ServingEngine`].
+pub struct ShardedEngine {
+    config: ModelConfig,
+    shards: Vec<Engine>,
+    ranges: Vec<(usize, usize)>,
+    seqs: HashMap<u64, SeqState>,
+    /// Aggregate of every shard's breakdown plus the hop clock below,
+    /// refreshed after each tick (the `Server` reads deltas of this).
+    agg: Breakdown,
+    /// Simulated inter-shard activation-hop time.
+    hops: Breakdown,
+    /// Logits of the most recent tick's LM-head pass (rows follow the
+    /// tick's active order; empty when no row sampled).
+    last_logits: Vec<f32>,
+}
+
+impl ShardedEngine {
+    /// Build with synthetic weights for `config`, split per the plan:
+    /// each shard's source holds only its own tensors (BF16 maps or
+    /// per-shard DF11-compressed models). Offload mode is a single-box
+    /// baseline and is rejected here.
+    pub fn build(
+        config: &ModelConfig,
+        seed: u64,
+        mode: WeightMode,
+        plan: &ShardPlan,
+    ) -> Result<ShardedEngine> {
+        config.validate()?;
+        let ranges = validate_plan(config, plan)?;
+        // Split the generated inventory by owning shard (group → shard
+        // resolved once, not per tensor).
+        let mut owner: HashMap<String, usize> = HashMap::new();
+        for s in 0..ranges.len() {
+            for g in shard_groups(config, s, &ranges) {
+                owner.insert(g, s);
+            }
+        }
+        let mut per_shard: Vec<Vec<(crate::model::WeightSpec, Vec<crate::bf16::Bf16>)>> =
+            (0..ranges.len()).map(|_| Vec::new()).collect();
+        for (spec, w) in generate_model_weights(config, seed) {
+            let &shard = owner.get(&spec.group).ok_or_else(|| {
+                Error::InvalidArgument(format!("no shard owns group {}", spec.group))
+            })?;
+            per_shard[shard].push((spec, w));
+        }
+        let mut sources: Vec<Box<dyn WeightSource>> = Vec::with_capacity(ranges.len());
+        for (s, tensors) in per_shard.into_iter().enumerate() {
+            sources.push(match mode {
+                WeightMode::Bf16Resident => {
+                    let map = tensors.into_iter().map(|(sp, w)| (sp.name, w)).collect();
+                    Box::new(Bf16Source::new(map))
+                }
+                WeightMode::Df11 => {
+                    let name = format!("{}-shard{s}", config.name);
+                    Box::new(Df11Source::new(Df11Model::compress_from_weights(
+                        name, tensors,
+                    )?))
+                }
+                WeightMode::OffloadBf16 { .. } => {
+                    return Err(Error::InvalidArgument(
+                        "sharded serving supports bf16 and df11 weights (offload is a \
+                         single-box baseline)"
+                            .into(),
+                    ))
+                }
+            });
+        }
+        Self::build_with_sources(config, sources, plan)
+    }
+
+    /// Serve a `.df11` container sharded: each shard opens the
+    /// container scoped to exactly its assigned groups and streams only
+    /// those ranges (validated upfront against the config's inventory).
+    pub fn build_from_container(
+        config: &ModelConfig,
+        path: &Path,
+        plan: &ShardPlan,
+    ) -> Result<ShardedEngine> {
+        config.validate()?;
+        let ranges = validate_plan(config, plan)?;
+        let inventory = config.weight_inventory();
+        let mut sources: Vec<Box<dyn WeightSource>> = Vec::with_capacity(ranges.len());
+        for s in 0..ranges.len() {
+            let groups = shard_groups(config, s, &ranges);
+            let source = ContainerSource::open_scoped(path, &groups)?;
+            // The shard's slice of the inventory must be present with
+            // matching element counts (same check as the unsharded
+            // container build, scoped to this shard).
+            for spec in inventory.iter().filter(|sp| groups.contains(&sp.group)) {
+                match source
+                    .reader()
+                    .entries()
+                    .iter()
+                    .find(|e| e.name == spec.name)
+                {
+                    None => {
+                        return Err(Error::InvalidArgument(format!(
+                            "container {} is missing tensor {} for shard {s}",
+                            source.reader().model_name(),
+                            spec.name
+                        )))
+                    }
+                    Some(e) if e.num_elements as usize != spec.numel() => {
+                        return Err(Error::ShapeMismatch(format!(
+                            "container tensor {} has {} elements, config expects {}",
+                            spec.name,
+                            e.num_elements,
+                            spec.numel()
+                        )))
+                    }
+                    Some(_) => {}
+                }
+            }
+            sources.push(Box::new(source));
+        }
+        Self::build_with_sources(config, sources, plan)
+    }
+
+    /// Build over explicit per-shard sources (one per planned GPU, in
+    /// shard order). The sharding test suite passes `Arc`-shared scoped
+    /// container sources here so it can audit their read logs.
+    pub fn build_with_sources(
+        config: &ModelConfig,
+        sources: Vec<Box<dyn WeightSource>>,
+        plan: &ShardPlan,
+    ) -> Result<ShardedEngine> {
+        config.validate()?;
+        let ranges = validate_plan(config, plan)?;
+        if sources.len() != ranges.len() {
+            return Err(Error::InvalidArgument(format!(
+                "{} sources for a {}-shard plan",
+                sources.len(),
+                ranges.len()
+            )));
+        }
+        let mut shards = Vec::with_capacity(ranges.len());
+        for (s, source) in sources.into_iter().enumerate() {
+            shards.push(Engine::build_shard(
+                config,
+                source,
+                Box::new(NativeBackend),
+                role_for(s, &ranges),
+            )?);
+        }
+        Ok(ShardedEngine {
+            config: config.clone(),
+            shards,
+            ranges,
+            seqs: HashMap::new(),
+            agg: Breakdown::default(),
+            hops: Breakdown::default(),
+            last_logits: Vec::new(),
+        })
+    }
+
+    /// Model config.
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    /// Per-shard `(first_layer, n_layers)` block ranges.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// One shard engine (for inspection).
+    pub fn shard(&self, s: usize) -> &Engine {
+        &self.shards[s]
+    }
+
+    /// Logits from the most recent tick's LM-head pass (rows follow
+    /// that tick's active order; empty when no row sampled).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    fn refresh_agg(&mut self) {
+        let mut agg = Breakdown::default();
+        for shard in &self.shards {
+            agg.merge(&shard.breakdown);
+        }
+        agg.merge(&self.hops);
+        self.agg = agg;
+    }
+
+    /// Greedy generation for a fixed set of prompts — the sharded
+    /// mirror of [`Engine::generate`], kept for benches and the
+    /// bit-identity suite. The loop is the shared
+    /// [`super::engine::generate_with`], so the two engine shapes
+    /// cannot drift.
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<u32>],
+        max_new_tokens: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        super::engine::generate_with(self, prompts, max_new_tokens)
+    }
+}
+
+impl ServingEngine for ShardedEngine {
+    /// Begin a sequence on every shard (each claims its own K/V slice
+    /// and budget registration); unwinds cleanly on mid-way failure.
+    fn start_seq(&mut self, id: u64, prompt: &[u32]) -> Result<()> {
+        if self.seqs.contains_key(&id) {
+            return Err(Error::InvalidArgument(format!(
+                "sequence {id} already in flight"
+            )));
+        }
+        for s in 0..self.shards.len() {
+            if let Err(e) = self.shards[s].start_seq(id, prompt) {
+                for u in 0..s {
+                    self.shards[u].finish_seq(id).ok();
+                }
+                return Err(e);
+            }
+        }
+        self.seqs.insert(
+            id,
+            SeqState {
+                prompt: prompt.to_vec(),
+                pos: 0,
+                next: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// One decode tick: claim KV on every shard, embed on the first,
+    /// pipe activations through every shard's block range, project and
+    /// greedily sample on the last. Token-identical to the unsharded
+    /// engine: the math is the same per-layer sequence, only split
+    /// across engines.
+    ///
+    /// NOTE: the tick frame (validation, Phase A claim/CacheFull,
+    /// sampling decision, event resolution) deliberately mirrors
+    /// [`Engine::decode_step`] — only the middle differs (one engine's
+    /// sub-steps vs. a pipeline over shards, with cross-shard KV
+    /// precheck-then-commit). A behavioral change to either frame must
+    /// be made in both; `tests/sharding.rs` pins them bit-identical.
+    fn decode_step(&mut self, ids: &[u64]) -> Result<Vec<StepOutcome>> {
+        if ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut seen = std::collections::HashSet::with_capacity(ids.len());
+        for &id in ids {
+            if !self.seqs.contains_key(&id) {
+                return Err(Error::InvalidArgument(format!("unknown sequence {id}")));
+            }
+            if !seen.insert(id) {
+                return Err(Error::InvalidArgument(format!(
+                    "sequence {id} listed twice in one decode step"
+                )));
+            }
+        }
+
+        // Phase A: claim this tick's cache position on *every* shard —
+        // all budgets are pre-checked so the extension commits on all
+        // shards or none — and pick the fed token.
+        let mut events: Vec<Option<StepEvent>> = vec![None; ids.len()];
+        let mut active: Vec<(usize, u64, u32)> = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            if self.seqs[&id].pos >= self.config.max_seq_len {
+                events[i] = Some(StepEvent::CacheFull);
+                continue;
+            }
+            if !self.shards.iter().all(|s| s.kv_can_extend(id)) {
+                events[i] = Some(StepEvent::CacheFull);
+                continue;
+            }
+            for shard in &mut self.shards {
+                shard.kv_extend(id)?;
+            }
+            let st = &self.seqs[&id];
+            let tok = if st.pos < st.prompt.len() {
+                st.prompt[st.pos]
+            } else {
+                st.next
+            };
+            active.push((i, id, tok));
+        }
+
+        if !active.is_empty() {
+            let n = active.len();
+            let d = self.config.d_model;
+            let toks: Vec<u32> = active.iter().map(|&(_, _, tok)| tok).collect();
+            let act_ids: Vec<u64> = active.iter().map(|&(_, id, _)| id).collect();
+
+            // Shard pipeline: embed on shard 0, then each shard's block
+            // range in order, the activation tensor hopping between
+            // engines (one simulated inter-GPU transfer per hop).
+            let mut x = self.shards[0].shard_embed(&toks)?;
+            let n_shards = self.shards.len();
+            for s in 0..n_shards {
+                self.shards[s].shard_blocks(&act_ids, &mut x)?;
+                if s + 1 < n_shards {
+                    let bytes = (n * d * 2) as u64;
+                    self.hops
+                        .add_simulated(Component::Transfer, activation_hop_seconds(bytes));
+                }
+            }
+
+            // Greedy sampling at the top, exactly as the single-box
+            // engine does it (head skipped on all-prefill ticks).
+            let sampling = active.iter().any(|&(_, id, _)| {
+                let st = &self.seqs[&id];
+                st.pos + 1 >= st.prompt.len()
+            });
+            let logits = if sampling {
+                self.shards[n_shards - 1].shard_head(&x, n)?
+            } else {
+                Vec::new()
+            };
+            let vocab = self.config.vocab_size;
+            for (row, &(i, id, _)) in active.iter().enumerate() {
+                let st = self.seqs.get_mut(&id).expect("validated above");
+                st.pos += 1;
+                events[i] = Some(if st.pos < st.prompt.len() {
+                    StepEvent::Prefill {
+                        remaining: st.prompt.len() - st.pos,
+                    }
+                } else {
+                    let tok = nn::argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
+                    st.next = tok;
+                    StepEvent::Token(tok)
+                });
+            }
+            self.last_logits = logits;
+        } else {
+            self.last_logits.clear();
+        }
+        self.refresh_agg();
+
+        Ok(ids
+            .iter()
+            .zip(events)
+            .map(|(&seq_id, event)| StepOutcome {
+                seq_id,
+                event: event.expect("every sequence resolved an event"),
+            })
+            .collect())
+    }
+
+    fn finish_seq(&mut self, id: u64) -> Result<()> {
+        if self.seqs.remove(&id).is_none() {
+            return Err(Error::InvalidArgument(format!("unknown sequence {id}")));
+        }
+        for shard in &mut self.shards {
+            shard.finish_seq(id)?;
+        }
+        Ok(())
+    }
+
+    /// Per-shard budgets: every shard gets the *per-GPU* HBM cap minus
+    /// its own resident slice — DF11's smaller shards leave more KV
+    /// pages on every GPU.
+    fn install_hbm_budget(&mut self, hbm_bytes: u64, page_tokens: u64) -> Result<()> {
+        for shard in &mut self.shards {
+            let kv = hbm_bytes.saturating_sub(shard.resident_weight_bytes());
+            shard.set_kv_budget(kv, page_tokens.max(1))?;
+        }
+        Ok(())
+    }
+
+    /// The schedulable page count is the tightest shard's.
+    fn kv_total_pages(&self) -> Option<u64> {
+        self.shards.iter().filter_map(|s| s.kv_total_pages()).min()
+    }
+
+    /// Page granularity is token-based and identical on every shard;
+    /// take the max defensively.
+    fn kv_pages_for(&self, tokens: u64) -> Option<u64> {
+        self.shards
+            .iter()
+            .filter_map(|s| s.kv_pages_for(tokens))
+            .max()
+    }
+
+    /// Peak per-shard resident bytes — the per-GPU number feasibility
+    /// and budget math care about.
+    fn resident_weight_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.resident_weight_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn breakdown(&self) -> &Breakdown {
+        &self.agg
+    }
+
+    fn source_label(&self) -> String {
+        let inner = self
+            .shards
+            .first()
+            .map(|s| s.source().source_name())
+            .unwrap_or("empty");
+        format!("sharded-{}x-{inner}", self.shards.len())
+    }
+
+    fn set_decode_threads(&mut self, threads: usize) {
+        for shard in &mut self.shards {
+            shard.set_decode_threads(threads);
+        }
+    }
+
+    fn decode_threads(&self) -> usize {
+        self.shards
+            .first()
+            .map(|s| s.decode_threads())
+            .unwrap_or(1)
+    }
+
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn num_active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn shard_stats(&self) -> Vec<ShardStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let (first_layer, n_layers) = self.ranges[s];
+                ShardStat {
+                    label: format!("shard{s}"),
+                    first_layer,
+                    n_layers,
+                    resident_bytes: shard.resident_weight_bytes(),
+                    decompress_seconds: shard.breakdown.measured_seconds(Component::Decompress),
+                    compute_seconds: shard.breakdown.measured_seconds(Component::BlockCompute),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::Device;
+    use crate::multi_gpu::{plan_layer_sharding, ShardFormat};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::test_tiny()
+    }
+
+    fn plan(cfg: &ModelConfig, shards: usize) -> ShardPlan {
+        plan_layer_sharding(cfg, &Device::a100_80g(), shards, ShardFormat::Df11).unwrap()
+    }
+
+    #[test]
+    fn shard_groups_partition_the_inventory() {
+        let cfg = tiny(); // 2 layers
+        let p = plan(&cfg, 2);
+        let ranges = shard_layer_ranges(&p);
+        let g0 = shard_groups(&cfg, 0, &ranges);
+        let g1 = shard_groups(&cfg, 1, &ranges);
+        assert_eq!(g0, vec!["embed", "block.0"]);
+        assert_eq!(g1, vec!["block.1", "lm_head"]);
+        // Every inventory group is owned by exactly one shard.
+        for spec in cfg.weight_inventory() {
+            let owners = [&g0, &g1]
+                .iter()
+                .filter(|g| g.contains(&spec.group))
+                .count();
+            assert_eq!(owners, 1, "group {}", spec.group);
+        }
+    }
+
+    #[test]
+    fn more_shards_than_layers_passes_through() {
+        // 4 shards over 2 layers: two zero-block pass-through shards.
+        let cfg = tiny();
+        let p = plan(&cfg, 4);
+        let mut e = ShardedEngine::build(&cfg, 11, WeightMode::Bf16Resident, &p).unwrap();
+        assert_eq!(e.num_shards(), 4);
+        assert_eq!(e.ranges().iter().filter(|&&(_, n)| n == 0).count(), 2);
+        let out = e.generate(&[vec![1, 2, 3]], 4).unwrap();
+        let mut solo = Engine::build(&cfg, 11, WeightMode::Bf16Resident).unwrap();
+        assert_eq!(out, solo.generate(&[vec![1, 2, 3]], 4).unwrap());
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected() {
+        let cfg = tiny();
+        let mut other = tiny();
+        other.n_layers = 3;
+        let p = plan(&other, 2); // covers 3 blocks, config has 2
+        assert!(ShardedEngine::build(&cfg, 1, WeightMode::Bf16Resident, &p).is_err());
+    }
+
+    #[test]
+    fn tied_embeddings_are_rejected_at_build_time() {
+        // The LM head of a tied config lives in the first shard's
+        // embedding matrix — a cross-shard dependency the pipeline does
+        // not implement. Must fail at build, not on the first sample.
+        let mut cfg = tiny();
+        cfg.tie_embeddings = true;
+        let p = plan(&cfg, 2);
+        let err = ShardedEngine::build(&cfg, 1, WeightMode::Bf16Resident, &p).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "got {err}");
+    }
+
+    #[test]
+    fn offload_mode_is_rejected() {
+        let cfg = tiny();
+        let p = plan(&cfg, 2);
+        let mode = WeightMode::OffloadBf16 {
+            resident_layers: 1,
+            transfer: crate::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
+        };
+        assert!(ShardedEngine::build(&cfg, 1, mode, &p).is_err());
+    }
+
+    #[test]
+    fn lifecycle_validates_and_unwinds() {
+        let cfg = tiny();
+        let p = plan(&cfg, 2);
+        let mut e = ShardedEngine::build(&cfg, 3, WeightMode::Bf16Resident, &p).unwrap();
+        assert!(e.start_seq(1, &[]).is_err(), "empty prompt");
+        assert_eq!(e.num_active_seqs(), 0);
+        // The failed start must have unwound every shard's registration.
+        e.start_seq(1, &[1, 2]).unwrap();
+        assert!(e.start_seq(1, &[3]).is_err(), "duplicate id");
+        assert!(e.decode_step(&[2]).is_err(), "unknown id");
+        assert!(e.decode_step(&[1, 1]).is_err(), "duplicate in tick");
+        e.finish_seq(1).unwrap();
+        assert!(e.finish_seq(1).is_err(), "double finish");
+        for shard in &e.shards {
+            assert_eq!(shard.num_active_seqs(), 0, "shards drained");
+        }
+    }
+
+    #[test]
+    fn hop_time_accrues_on_the_simulated_clock() {
+        let cfg = tiny();
+        let p = plan(&cfg, 2);
+        let mut e = ShardedEngine::build(&cfg, 5, WeightMode::Bf16Resident, &p).unwrap();
+        e.generate(&[vec![1, 2]], 2).unwrap();
+        assert!(
+            e.breakdown().simulated_seconds(Component::Transfer) > 0.0,
+            "2 shards must charge at least one activation hop per tick"
+        );
+    }
+}

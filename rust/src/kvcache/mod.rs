@@ -31,8 +31,15 @@ impl KvCacheManager {
     /// Manager for a model config. `page_tokens` is the allocation
     /// granularity (vLLM-style paging; 16 is the common default).
     pub fn new(config: &ModelConfig, page_tokens: u64) -> Self {
+        Self::with_bytes_per_token(config.kv_bytes_per_token(), page_tokens)
+    }
+
+    /// Manager with an explicit per-token byte rate. Shard-scoped
+    /// engines budget only their resident layer slice, so their rate is
+    /// `2 * owned_layers * kv_dim * 2` rather than the full model's.
+    pub fn with_bytes_per_token(bytes_per_token: u64, page_tokens: u64) -> Self {
         KvCacheManager {
-            bytes_per_token: config.kv_bytes_per_token(),
+            bytes_per_token,
             page_tokens: page_tokens.max(1),
             seqs: HashMap::new(),
         }
@@ -113,6 +120,25 @@ impl KvCacheManager {
     /// Current token count of a sequence.
     pub fn tokens(&self, seq_id: u64) -> u64 {
         self.seqs.get(&seq_id).map(|s| s.tokens).unwrap_or(0)
+    }
+
+    /// Pages a sequence currently holds.
+    pub fn pages_held(&self, seq_id: u64) -> u64 {
+        self.seqs
+            .get(&seq_id)
+            .map(|s| s.allocs.len() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Extra pages an `extend(seq_id, new_tokens)` would have to
+    /// allocate. Lets a caller check affordability across several
+    /// budgets *before* committing any of them (the sharded engine
+    /// must extend every shard's budget or none).
+    pub fn pages_needed(&self, seq_id: u64, new_tokens: u64) -> u64 {
+        let tokens = self.tokens(seq_id);
+        (tokens + new_tokens)
+            .div_ceil(self.page_tokens)
+            .saturating_sub(self.pages_held(seq_id))
     }
 
     /// Release a sequence and free its pages.
@@ -215,6 +241,34 @@ mod tests {
         assert_eq!(mgr.pages_for(1), 1);
         assert_eq!(mgr.pages_for(16), 1);
         assert_eq!(mgr.pages_for(17), 2);
+    }
+
+    #[test]
+    fn pages_needed_predicts_extend_cost() {
+        let cfg = ModelConfig::test_tiny();
+        let mut mgr = KvCacheManager::new(&cfg, 16);
+        let mut hbm = HbmAllocator::new(small_device(1 << 30));
+        mgr.add_sequence(1).unwrap();
+        // Fresh sequence: the first token claims page 1.
+        assert_eq!(mgr.pages_held(1), 0);
+        assert_eq!(mgr.pages_needed(1, 1), 1);
+        mgr.extend(&mut hbm, 1, 10).unwrap();
+        assert_eq!(mgr.pages_held(1), 1);
+        // 6 more fit the page; the 7th spills.
+        assert_eq!(mgr.pages_needed(1, 6), 0);
+        assert_eq!(mgr.pages_needed(1, 7), 1);
+        // Unknown sequences hold nothing.
+        assert_eq!(mgr.pages_held(9), 0);
+    }
+
+    #[test]
+    fn scoped_byte_rate_constructor() {
+        // A shard owning half the layers charges half the bytes/token.
+        let cfg = ModelConfig::test_tiny();
+        let full = KvCacheManager::new(&cfg, 16);
+        let half = KvCacheManager::with_bytes_per_token(cfg.kv_bytes_per_token() / 2, 16);
+        assert_eq!(half.bytes_per_token() * 2, full.bytes_per_token());
+        assert_eq!(half.bytes_per_page() * 2, full.bytes_per_page());
     }
 
     #[test]

@@ -22,7 +22,8 @@ use dfloat11::cli::Args;
 use dfloat11::codec::{codec_by_name, CompressedTensor, DecodeOpts};
 use dfloat11::container::{ContainerReader, ContainerWriter};
 use dfloat11::coordinator::{
-    trace, Component, Engine, Request, SchedPolicy, SchedulerConfig, Server, WeightMode,
+    trace, Component, Engine, Request, SchedPolicy, SchedulerConfig, Server, ServingEngine,
+    ShardedEngine, WeightMode,
 };
 use dfloat11::entropy::ComponentHistograms;
 use dfloat11::error::{Error, Result};
@@ -42,6 +43,11 @@ fn usage() -> ! {
          serve     --requests N --slots S --mode bf16|df11|offload\n\
                    --sched static|continuous   scheduling policy (default\n\
                                  continuous: admit into free slots mid-flight)\n\
+                   --shards N    layer-shard across N engines (plan from\n\
+                                 plan_layer_sharding; activations pipe\n\
+                                 shard-to-shard; 1 = single box)\n\
+                   --format bf16|df11  sharded weight format (default df11)\n\
+                   --device NAME plan device for --shards (default a100-80g)\n\
                    --trace PATH  replay an arrival-stamped workload file\n\
                                  (lines: `arrival max_new tok,tok,... [eos]`)\n\
                    --stagger S   synthetic arrivals spaced S seconds apart\n\
@@ -159,11 +165,99 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let shards = args.get_parse_or("shards", 1usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let cfg = scaled_config(args, 24)?;
+    // `--format` is the sharded-weights knob (bf16|df11); `--mode` the
+    // single-box one (bf16|df11|offload). They are aliases for the
+    // weight format, so passing both would make one silently win —
+    // reject the conflict instead.
+    let (mode_name, via_format) = match (args.get("format"), args.get("mode")) {
+        (Some(_), Some(_)) => {
+            return Err(Error::InvalidArgument(
+                "pass --format or --mode, not both (they both select the weight format)"
+                    .into(),
+            ))
+        }
+        (Some(f), None) => (f.to_string(), true),
+        (None, Some(m)) => (m.to_string(), false),
+        (None, None) => ("df11".to_string(), false),
+    };
+    if via_format && !matches!(mode_name.as_str(), "bf16" | "df11") {
+        return Err(Error::InvalidArgument(format!(
+            "unknown format {mode_name} (want bf16|df11; offload is --mode only)"
+        )));
+    }
+    if let Some(from) = args.get("from") {
+        // Serve straight out of a .df11 container (streamed, CRC-checked,
+        // decompressed into the engine's reusable scratch pool). The
+        // container fixes the weights, so --mode/--format/--seed would
+        // be silently meaningless — reject the conflict instead.
+        if args.get("mode").is_some() || args.get("format").is_some() || args.get("seed").is_some()
+        {
+            return Err(Error::InvalidArgument(
+                "--from serves the container's weights; it cannot be combined \
+                 with --mode, --format, or --seed"
+                    .into(),
+            ));
+        }
+        if shards > 1 {
+            let plan = serve_plan(args, &cfg, shards, ShardFormat::Df11)?;
+            let engine = ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
+            return run_server(engine, args, &cfg);
+        }
+        let engine = Engine::build_from_container(&cfg, Path::new(from))?;
+        return run_server(engine, args, &cfg);
+    }
+    if shards > 1 {
+        let (mode, format) = match mode_name.as_str() {
+            "bf16" => (WeightMode::Bf16Resident, ShardFormat::Bf16),
+            "df11" => (WeightMode::Df11, ShardFormat::Df11),
+            other => {
+                return Err(Error::InvalidArgument(format!(
+                    "unknown sharded format {other} (want bf16|df11)"
+                )))
+            }
+        };
+        let plan = serve_plan(args, &cfg, shards, format)?;
+        let engine = ShardedEngine::build(&cfg, seed, mode, &plan)?;
+        return run_server(engine, args, &cfg);
+    }
+    let mode = match mode_name.as_str() {
+        "bf16" => WeightMode::Bf16Resident,
+        "df11" => WeightMode::Df11,
+        "offload" => WeightMode::OffloadBf16 {
+            resident_layers: 1,
+            transfer: dfloat11::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
+        },
+        other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
+    };
+    run_server(Engine::build(&cfg, seed, mode)?, args, &cfg)
+}
+
+/// Layer-sharding plan for `serve --shards N` (ranges drive the
+/// per-shard engines; the analytic feasibility flag is advisory at
+/// scaled-down executable sizes).
+fn serve_plan(
+    args: &Args,
+    cfg: &ModelConfig,
+    shards: usize,
+    format: ShardFormat,
+) -> Result<dfloat11::multi_gpu::ShardPlan> {
+    let device = Device::by_name(&args.get_or("device", "a100-80g"))
+        .ok_or_else(|| Error::InvalidArgument("unknown device".into()))?;
+    plan_layer_sharding(cfg, &device, shards, format)
+}
+
+/// Drive any [`ServingEngine`] — single-box or sharded — through the
+/// scheduler and print the serving report (plus a `tokens-crc32`
+/// digest of every response's token stream, so CI can assert sharded
+/// and unsharded runs emit bit-identical output).
+fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -> Result<()> {
     let requests = args.get_parse_or("requests", 8usize)?;
     // `--slots` is the decode-slot count; `--batch` survives as an alias.
     let slots = args.get_parse_or("slots", args.get_parse_or("batch", 4usize)?)?;
     let new_tokens = args.get_parse_or("tokens", 8usize)?;
-    let seed = args.get_parse_or("seed", 42u64)?;
     let threads = args.get_parse_or("threads", 0usize)?;
     let stagger = args.get_parse_or("stagger", 0.0f64)?;
     let policy = match args.get_or("sched", "continuous").as_str() {
@@ -175,39 +269,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )))
         }
     };
-    let cfg = scaled_config(args, 24)?;
-    let mut engine = if let Some(from) = args.get("from") {
-        // Serve straight out of a .df11 container (streamed, CRC-checked,
-        // decompressed into the engine's reusable scratch pool). The
-        // container fixes the weights, so --mode/--seed would be silently
-        // meaningless — reject the conflict instead.
-        if args.get("mode").is_some() || args.get("seed").is_some() {
-            return Err(Error::InvalidArgument(
-                "--from serves the container's weights; it cannot be combined \
-                 with --mode or --seed"
-                    .into(),
-            ));
-        }
-        Engine::build_from_container(&cfg, Path::new(from))?
-    } else {
-        let mode = match args.get_or("mode", "df11").as_str() {
-            "bf16" => WeightMode::Bf16Resident,
-            "df11" => WeightMode::Df11,
-            "offload" => WeightMode::OffloadBf16 {
-                resident_layers: 1,
-                transfer: dfloat11::gpu_sim::TransferModel::for_device(&Device::a100_40g()),
-            },
-            other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
-        };
-        Engine::build(&cfg, seed, mode)?
-    };
     engine.set_decode_threads(threads);
     println!(
-        "serving {} ({} params, source {}, {policy:?} scheduler, {slots} slots, {} decode threads)",
+        "serving {} ({} params, source {}, {policy:?} scheduler, {slots} slots, {} decode \
+         threads, {} shard(s))",
         cfg.name,
         cfg.num_params(),
-        engine.source().source_name(),
-        engine.decode_threads()
+        engine.source_label(),
+        engine.decode_threads(),
+        engine.num_shards(),
     );
     let mut server = Server::new(
         engine,
@@ -257,7 +327,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.occupancy.peak,
         report.occupancy.ticks,
     );
-    let bd = &server.engine().breakdown;
+    // Output digest: CRC-32 over (id, tokens) sorted by id — identical
+    // workloads must yield identical digests regardless of engine
+    // shape or scheduler (the shard-smoke CI gate compares these).
+    let mut responses: Vec<_> = report.responses.iter().collect();
+    responses.sort_by_key(|r| r.id);
+    let mut hasher = dfloat11::crc32::Hasher::new();
+    for r in &responses {
+        hasher.update(&r.id.to_le_bytes());
+        for &t in &r.tokens {
+            hasher.update(&t.to_le_bytes());
+        }
+    }
+    println!("tokens-crc32 {:#010x}", hasher.finalize());
+    let bd = server.engine().breakdown();
     let decompress = bd.measured_seconds(Component::Decompress);
     if decompress > 0.0 {
         let phases: Vec<String> = Component::phases()
@@ -268,6 +351,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "decompress total {} ({})",
             fmt::seconds(decompress),
             phases.join(", ")
+        );
+    }
+    for s in server.engine().shard_stats() {
+        println!(
+            "  {} blocks {}..{}: resident {}, decompress {}, compute {}",
+            s.label,
+            s.first_layer,
+            s.first_layer + s.n_layers,
+            fmt::bytes(s.resident_bytes),
+            fmt::seconds(s.decompress_seconds),
+            fmt::seconds(s.compute_seconds),
         );
     }
     Ok(())
@@ -295,10 +389,16 @@ fn cmd_estimate(args: &Args) -> Result<()> {
         fmt::bytes(*plan.bytes_per_gpu.iter().max().unwrap()),
         plan.feasible
     );
+    // A model whose single block outgrows the device can never be layer-
+    // sharded onto it — surface that as "infeasible", not a count.
+    let min_str = |f: ShardFormat| match min_gpus(&cfg, &device, f) {
+        Ok(n) => n.to_string(),
+        Err(_) => "infeasible".to_string(),
+    };
     println!(
         "min GPUs: bf16 {}, df11 {}",
-        min_gpus(&cfg, &device, ShardFormat::Bf16),
-        min_gpus(&cfg, &device, ShardFormat::Df11)
+        min_str(ShardFormat::Bf16),
+        min_str(ShardFormat::Df11)
     );
     if plan.feasible {
         for batch in [1u64, 8, 32] {

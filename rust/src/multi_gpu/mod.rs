@@ -88,16 +88,50 @@ pub fn plan_layer_sharding(
     })
 }
 
-/// Minimum GPU count for which the plan is feasible.
-pub fn min_gpus(model: &ModelConfig, device: &Device, format: ShardFormat) -> usize {
-    for n in 1..=64 {
-        if let Ok(p) = plan_layer_sharding(model, device, n, format) {
-            if p.feasible {
-                return n;
-            }
-        }
+/// Contiguous `(first_layer, n_layers)` block ranges per GPU for a
+/// plan — the executable counterpart of `blocks_per_gpu` (each shard
+/// engine owns exactly one of these ranges, plus embed on the first
+/// shard and the LM head on the last).
+pub fn shard_layer_ranges(plan: &ShardPlan) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::with_capacity(plan.blocks_per_gpu.len());
+    let mut first = 0;
+    for &blocks in &plan.blocks_per_gpu {
+        ranges.push((first, blocks));
+        first += blocks;
     }
-    usize::MAX
+    ranges
+}
+
+/// Seconds for one inter-GPU activation hop of `bytes` (per-hop latency
+/// plus NVLink-ish bandwidth). Shared by the analytic `step_latency`
+/// model and the executable sharded engine's simulated clock.
+pub fn activation_hop_seconds(bytes: u64) -> f64 {
+    INTER_GPU_LAT + bytes as f64 / INTER_GPU_BW
+}
+
+/// Minimum GPU count for which the plan is feasible.
+///
+/// Layer sharding cannot split a single transformer block, so the
+/// search is bounded by `n_layers`: past that point every extra GPU
+/// holds zero blocks and the largest shard stops shrinking. If even the
+/// one-block-per-GPU plan does not fit the device, no GPU count ever
+/// will, and a typed OOM error reports the irreducible shard size
+/// instead of looping (or claiming an absurd count).
+pub fn min_gpus(model: &ModelConfig, device: &Device, format: ShardFormat) -> Result<usize> {
+    let cap = model.n_layers.max(1);
+    let mut largest_shard = 0u64;
+    for n in 1..=cap {
+        let p = plan_layer_sharding(model, device, n, format)?;
+        if p.feasible {
+            return Ok(n);
+        }
+        largest_shard = *p.bytes_per_gpu.iter().max().expect("n >= 1 shards");
+    }
+    Err(Error::OutOfMemory {
+        requested: largest_shard,
+        free: (device.hbm_bytes as f64 * (1.0 - RESERVE_FRACTION)) as u64,
+        device: device.name.to_string(),
+    })
 }
 
 /// Analytic per-token step latency for a plan at a batch size.
@@ -121,8 +155,7 @@ pub fn step_latency(model: &ModelConfig, plan: &ShardPlan, batch: u64) -> f64 {
     }
     // Activation hops between consecutive GPUs.
     let hops = plan.blocks_per_gpu.len().saturating_sub(1) as f64;
-    let act_bytes = (batch * d * 2) as f64;
-    total += hops * (INTER_GPU_LAT + act_bytes / INTER_GPU_BW);
+    total += hops * activation_hop_seconds(batch * d * 2);
     total
 }
 
@@ -147,7 +180,7 @@ mod tests {
         let df11 = plan_layer_sharding(&m, &d, 8, ShardFormat::Df11).unwrap();
         assert!(df11.feasible, "DF11 405B must fit 8x80GB");
         // And BF16 needs roughly twice the hardware.
-        let need_bf16 = min_gpus(&m, &d, ShardFormat::Bf16);
+        let need_bf16 = min_gpus(&m, &d, ShardFormat::Bf16).unwrap();
         assert!(need_bf16 > 8 && need_bf16 <= 16, "bf16 needs {need_bf16}");
     }
 
@@ -188,10 +221,57 @@ mod tests {
     fn min_gpus_monotone_in_format() {
         let m = zoo::llama33_70b();
         let d = Device::a100_40g();
-        let bf16 = min_gpus(&m, &d, ShardFormat::Bf16);
-        let df11 = min_gpus(&m, &d, ShardFormat::Df11);
+        let bf16 = min_gpus(&m, &d, ShardFormat::Bf16).unwrap();
+        let df11 = min_gpus(&m, &d, ShardFormat::Df11).unwrap();
         assert!(df11 <= bf16);
         assert!(df11 >= 2); // 95 GB doesn't fit one 40 GB GPU
+    }
+
+    #[test]
+    fn min_gpus_never_fits_is_a_typed_error() {
+        // A device too small for even one transformer block: the old
+        // search would scan forever (or report a nonsense count); now
+        // the bounded search returns a typed OOM naming the irreducible
+        // shard size.
+        let m = zoo::llama31_405b();
+        let mut d = Device::a100_80g();
+        d.hbm_bytes = 1 << 30; // 1 GiB: a 405B block alone is ~7 GB
+        match min_gpus(&m, &d, ShardFormat::Bf16) {
+            Err(Error::OutOfMemory {
+                requested, free, ..
+            }) => {
+                assert!(requested > free, "{requested} must exceed budget {free}");
+            }
+            other => panic!("expected OutOfMemory, got {other:?}"),
+        }
+        // The bound is n_layers: one block per GPU is the limit plan.
+        let fits = min_gpus(&m, &Device::a100_80g(), ShardFormat::Bf16).unwrap();
+        assert!(fits <= m.n_layers);
+    }
+
+    #[test]
+    fn shard_layer_ranges_partition_the_model() {
+        let m = zoo::llama31_8b(); // 32 layers
+        let d = Device::a100_80g();
+        for gpus in [1usize, 3, 8, 40] {
+            let p = plan_layer_sharding(&m, &d, gpus, ShardFormat::Df11).unwrap();
+            let ranges = shard_layer_ranges(&p);
+            assert_eq!(ranges.len(), gpus);
+            let mut next = 0;
+            for &(first, count) in &ranges {
+                assert_eq!(first, next, "ranges must be contiguous");
+                next += count;
+            }
+            assert_eq!(next, m.n_layers, "ranges must cover every block");
+        }
+    }
+
+    #[test]
+    fn activation_hop_matches_step_latency_model() {
+        let bytes = 4096u64;
+        let t = activation_hop_seconds(bytes);
+        assert!(t > INTER_GPU_LAT);
+        assert!((t - (INTER_GPU_LAT + bytes as f64 / INTER_GPU_BW)).abs() < 1e-18);
     }
 
     #[test]

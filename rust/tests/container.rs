@@ -7,6 +7,7 @@ use dfloat11::codec::{all_codecs, Codec, DecodeOpts, Df11Codec, RansCodec, RawBf
 use dfloat11::container::{
     write_df11_model, ContainerReader, ContainerWriter, CONTAINER_VERSION,
 };
+use dfloat11::coordinator::{ContainerSource, WeightSource};
 use dfloat11::dfloat11::{Df11Model, Df11Tensor, TensorGroup};
 use dfloat11::error::Error;
 use dfloat11::rng::Rng;
@@ -169,6 +170,123 @@ fn payload_crc_corruption_is_validation_not_panic() {
     // The untouched block still reads and roundtrips.
     let t = reader.read_tensor("rans").unwrap();
     assert_eq!(t.decompress(&DecodeOpts::default()).unwrap(), ws);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Byte position of entry `k`'s offset field inside the header, walked
+/// from the parsed index metadata (every field is fixed-width except
+/// the length-prefixed strings).
+fn offset_field_pos(reader: &ContainerReader, k: usize) -> usize {
+    let mut pos = 4 + 4; // magic + version
+    pos += 8 + reader.model_name().len(); // name
+    pos += 4; // entry count
+    for (i, e) in reader.entries().iter().enumerate() {
+        pos += 8 + e.group.len(); // group
+        pos += 8 + e.name.len(); // tensor name
+        pos += 1; // codec id
+        pos += 4 + 8 * e.shape.len(); // ndim + dims
+        pos += 8; // num_elements
+        if i == k {
+            return pos;
+        }
+        pos += 8 + 8 + 4; // offset + len + crc
+    }
+    panic!("entry {k} out of range");
+}
+
+/// Header byte length: last entry's walk end + its tail fields + the
+/// trailing header CRC.
+fn header_len(reader: &ContainerReader) -> usize {
+    let last = reader.entries().len() - 1;
+    offset_field_pos(reader, last) + 8 + 8 + 4 + 4
+}
+
+#[test]
+fn truncation_mid_group_fails_typed_and_isolates() {
+    // A group with several tensors, the file cut inside the group's
+    // *second* tensor: streaming the group is a typed error, while the
+    // intact first tensor still reads — never a wrong-weight decode.
+    let mut writer = ContainerWriter::new("midgroup");
+    let a = Df11Codec::default().compress(&gaussian_weights(2_000, 31)).unwrap();
+    let b = Df11Codec::default().compress(&gaussian_weights(2_000, 32)).unwrap();
+    writer.push("block.0", "block.0.a", a.view());
+    writer.push("block.0", "block.0.b", b.view());
+    let path = temp_path("midgroup");
+    writer.write_to(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let cut = (reader.entries()[1].offset + reader.entries()[1].len / 2) as usize;
+    drop(reader);
+    std::fs::write(&path, &bytes[..cut]).unwrap();
+
+    let reader = ContainerReader::open(&path).unwrap();
+    let err = reader.read_group("block.0").unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    let ok = reader.read_tensor("block.0.a").unwrap();
+    assert!(ok.decompress(&DecodeOpts::default()).is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn group_range_past_eof_is_a_typed_error() {
+    // A (CRC-valid) index whose payload range points past EOF — the
+    // shape of bug a mis-assigned shard range read would hit. The read
+    // must surface a typed truncation error, never parse garbage.
+    let (path, _) = write_grouped("past_eof");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let k = reader.entries().len() - 1; // lm_head
+    let pos = offset_field_pos(&reader, k);
+    let hdr_len = header_len(&reader);
+    drop(reader);
+    let bogus = bytes.len() as u64 + 4096;
+    bytes[pos..pos + 8].copy_from_slice(&bogus.to_le_bytes());
+    // Re-seal the header CRC so only the range itself is "wrong".
+    let crc = dfloat11::crc32::crc32(&bytes[..hdr_len - 4]);
+    bytes[hdr_len - 4..hdr_len].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+
+    let reader = ContainerReader::open(&path).expect("header is self-consistent");
+    let err = reader.read_group("lm_head").unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    // Groups with in-range payloads are unaffected.
+    assert!(reader.read_group("embed").is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn crc_corruption_in_one_shards_slice_is_isolated() {
+    // Flip a bit inside block.1's payload: the shard scoped to block.1
+    // must get a typed CRC error on fetch, while the shard scoped to
+    // the untouched groups serves every one of its tensors.
+    let (path, _) = write_grouped("shard_slice");
+    let reader = ContainerReader::open(&path).unwrap();
+    let idx = reader.find("block.1.w").unwrap();
+    let target = reader.entries()[idx].offset + reader.entries()[idx].len / 2;
+    drop(reader);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[target as usize] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let healthy =
+        ContainerSource::open_scoped(&path, &["embed".to_string(), "block.0".to_string()])
+            .unwrap();
+    let poisoned = ContainerSource::open_scoped(&path, &["block.1".to_string()]).unwrap();
+    let mut staging = Vec::new();
+    let mut out = Vec::new();
+    for name in ["embed.w", "block.0.w"] {
+        healthy
+            .fetch_into(name, 1, &mut staging, &mut out)
+            .unwrap_or_else(|e| panic!("healthy shard tensor {name}: {e}"));
+        assert!(!out.is_empty());
+    }
+    let err = poisoned
+        .fetch_into("block.1.w", 1, &mut staging, &mut out)
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::InvalidContainer(_)),
+        "corruption must be a typed error, got {err}"
+    );
     std::fs::remove_file(&path).ok();
 }
 

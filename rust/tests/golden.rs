@@ -1,0 +1,200 @@
+//! Golden-fixture losslessness: a tiny `.df11` container is checked in
+//! at `tests/fixtures/golden.df11` together with the pinned CRC-32 of
+//! its fully decoded weights. Every codec path — container range
+//! reads, the sequential DF11 decoder, the parallel two-phase
+//! pipeline, and the rANS baseline — must reproduce exactly that CRC,
+//! so silent on-disk or decoder format drift across PRs fails loudly
+//! here instead of corrupting weights quietly.
+//!
+//! The fixture's weights are integer-deterministic (a fixed LCG over
+//! safe BF16 bit patterns, no floats involved), so the file is
+//! reproducible byte-for-byte: `fixture_matches_canonical_writer_output`
+//! rebuilds it through `ContainerWriter` and compares bytes.
+
+use dfloat11::bf16::Bf16;
+use dfloat11::codec::{Codec, DecodeOpts, RansCodec};
+use dfloat11::container::{ContainerReader, ContainerWriter, CONTAINER_VERSION};
+use dfloat11::crc32::Hasher;
+use dfloat11::Df11Tensor;
+use std::path::PathBuf;
+
+/// CRC-32 over the concatenated BF16 bits (little-endian) of every
+/// tensor in index order. Pinned: changing it means the format or a
+/// decoder changed behavior.
+const GOLDEN_WEIGHTS_CRC32: u32 = 0x5fa90c47;
+
+/// The fixture inventory: (group, name, shape, LCG seed).
+const GOLDEN_TENSORS: [(&str, &str, &[usize], u32); 5] = [
+    ("embed", "embed.tok", &[32, 16], 1),
+    ("block.0", "block.0.w", &[24, 24], 2),
+    ("block.0", "block.0.v", &[600], 3),
+    ("block.1", "block.1.w", &[24, 24], 4),
+    ("lm_head", "lm_head", &[16, 32], 5),
+];
+const GOLDEN_MODEL_NAME: &str = "golden-fixture";
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden.df11")
+}
+
+/// LCG step → a finite, normal BF16 bit pattern (exponent 120..135:
+/// no NaN/Inf/subnormal edge cases in the golden weights).
+fn golden_bits(state: &mut u32) -> u16 {
+    *state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+    let s = *state;
+    let sign = ((s >> 31) & 1) as u16;
+    let exp = (120 + ((s >> 23) & 0x0F)) as u16;
+    let man = ((s >> 9) & 0x7F) as u16;
+    (sign << 15) | (exp << 7) | man
+}
+
+fn golden_weights(shape: &[usize], seed: u32) -> Vec<Bf16> {
+    let n: usize = shape.iter().product();
+    let mut state = seed;
+    (0..n).map(|_| Bf16::from_bits(golden_bits(&mut state))).collect()
+}
+
+/// CRC-32 over tensors' bits in the given order.
+fn crc_of(tensors: &[Vec<Bf16>]) -> u32 {
+    let mut h = Hasher::new();
+    for t in tensors {
+        for w in t {
+            h.update(&w.to_bits().to_le_bytes());
+        }
+    }
+    h.finalize()
+}
+
+#[test]
+fn generator_reproduces_the_pinned_crc() {
+    // The in-test generator itself must match the pinned CRC — if this
+    // fails, the constant and the fixture were regenerated out of sync.
+    let tensors: Vec<Vec<Bf16>> = GOLDEN_TENSORS
+        .iter()
+        .map(|&(_, _, shape, seed)| golden_weights(shape, seed))
+        .collect();
+    assert_eq!(crc_of(&tensors), GOLDEN_WEIGHTS_CRC32);
+}
+
+#[test]
+fn golden_fixture_decodes_to_pinned_crc() {
+    let reader = ContainerReader::open(&fixture_path()).expect("checked-in fixture opens");
+    assert_eq!(reader.model_name(), GOLDEN_MODEL_NAME);
+    assert_eq!(reader.version(), CONTAINER_VERSION);
+    assert_eq!(reader.entries().len(), GOLDEN_TENSORS.len());
+
+    let mut decoded = Vec::new();
+    for (i, &(group, name, shape, seed)) in GOLDEN_TENSORS.iter().enumerate() {
+        let entry = &reader.entries()[i];
+        assert_eq!(entry.group, group);
+        assert_eq!(entry.name, name);
+        assert_eq!(entry.shape, shape.to_vec());
+        let w = reader
+            .read_tensor_at(i)
+            .unwrap()
+            .decompress(&DecodeOpts::default())
+            .unwrap();
+        // Range-read output matches the regenerated source bitwise.
+        assert_eq!(w, golden_weights(shape, seed), "tensor {name}");
+        decoded.push(w);
+    }
+    assert_eq!(
+        crc_of(&decoded),
+        GOLDEN_WEIGHTS_CRC32,
+        "container range-read path drifted"
+    );
+}
+
+#[test]
+fn golden_weights_survive_every_codec_path() {
+    let source: Vec<Vec<Bf16>> = GOLDEN_TENSORS
+        .iter()
+        .map(|&(_, _, shape, seed)| golden_weights(shape, seed))
+        .collect();
+
+    // DF11 sequential decoder.
+    let df11: Vec<Df11Tensor> = source
+        .iter()
+        .map(|w| Df11Tensor::compress(w).unwrap())
+        .collect();
+    let serial: Vec<Vec<Bf16>> = df11.iter().map(|t| t.decompress().unwrap()).collect();
+    assert_eq!(crc_of(&serial), GOLDEN_WEIGHTS_CRC32, "df11 serial path");
+
+    // DF11 parallel two-phase pipeline (explicit pool width, no
+    // small-tensor dispatch shortcut).
+    let parallel: Vec<Vec<Bf16>> = df11
+        .iter()
+        .map(|t| t.decompress_parallel(4).unwrap())
+        .collect();
+    assert_eq!(crc_of(&parallel), GOLDEN_WEIGHTS_CRC32, "df11 parallel path");
+
+    // rANS baseline codec.
+    let rans: Vec<Vec<Bf16>> = source
+        .iter()
+        .map(|w| {
+            RansCodec
+                .compress(w)
+                .unwrap()
+                .decompress(&DecodeOpts::default())
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(crc_of(&rans), GOLDEN_WEIGHTS_CRC32, "rans path");
+
+    // DF11 payloads through a container: write, then range-read back
+    // in scrambled order.
+    let dir = std::env::temp_dir().join("df11_golden_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("roundtrip_{}.df11", std::process::id()));
+    let mut writer = ContainerWriter::new(GOLDEN_MODEL_NAME);
+    for (&(group, name, _, _), t) in GOLDEN_TENSORS.iter().zip(&df11) {
+        writer.push(group, name, dfloat11::codec::CompressedRef::Df11(t));
+    }
+    writer.write_to(&path).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let mut by_index: Vec<Vec<Bf16>> = vec![Vec::new(); GOLDEN_TENSORS.len()];
+    for i in (0..GOLDEN_TENSORS.len()).rev() {
+        by_index[i] = reader
+            .read_tensor_at(i)
+            .unwrap()
+            .decompress(&DecodeOpts { threads: 2 })
+            .unwrap();
+    }
+    assert_eq!(
+        crc_of(&by_index),
+        GOLDEN_WEIGHTS_CRC32,
+        "df11 container range-read path"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fixture_matches_canonical_writer_output() {
+    // Rebuild the fixture through `ContainerWriter` (raw-bf16 payloads,
+    // same order) and require byte identity with the checked-in file —
+    // any writer-format drift shows up as a diff here, and the fixture
+    // can be regenerated by writing this test's output over it.
+    let tensors: Vec<_> = GOLDEN_TENSORS
+        .iter()
+        .map(|&(_, _, shape, seed)| {
+            dfloat11::codec::RawBf16Codec
+                .compress_shaped(&golden_weights(shape, seed), shape)
+                .unwrap()
+        })
+        .collect();
+    let mut writer = ContainerWriter::new(GOLDEN_MODEL_NAME);
+    for (&(group, name, _, _), t) in GOLDEN_TENSORS.iter().zip(&tensors) {
+        writer.push(group, name, t.view());
+    }
+    let dir = std::env::temp_dir().join("df11_golden_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("canonical_{}.df11", std::process::id()));
+    writer.write_to(&path).unwrap();
+    let rebuilt = std::fs::read(&path).unwrap();
+    let committed = std::fs::read(fixture_path()).unwrap();
+    assert_eq!(
+        rebuilt, committed,
+        "writer output no longer matches the checked-in golden fixture"
+    );
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,398 @@
+//! Cross-shard bit-identity: the sharded multi-engine path must be
+//! indistinguishable — tokens *and* logits — from the single-box
+//! engine, for every weight source (BF16, DF11, container range reads)
+//! and both scheduler policies, at shard counts 1/2/4. Plus the
+//! isolation property: no shard ever reads container groups outside
+//! its `ShardPlan` assignment (checked via reader instrumentation).
+
+use dfloat11::container::write_df11_model;
+use dfloat11::coordinator::{
+    shard_groups, ContainerSource, Engine, FinishReason, Request, SchedPolicy, SchedulerConfig,
+    Server, ServingEngine, ShardedEngine, StepEvent, WeightMode, WeightSource,
+};
+use dfloat11::dfloat11::Df11Model;
+use dfloat11::gpu_sim::Device;
+use dfloat11::model::init::generate_model_weights;
+use dfloat11::model::ModelConfig;
+use dfloat11::multi_gpu::{plan_layer_sharding, shard_layer_ranges, ShardFormat, ShardPlan};
+use dfloat11::proptest_lite::{check, Config};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn tiny() -> ModelConfig {
+    ModelConfig::test_tiny()
+}
+
+fn plan_for(cfg: &ModelConfig, shards: usize) -> ShardPlan {
+    plan_layer_sharding(cfg, &Device::a100_80g(), shards, ShardFormat::Df11).unwrap()
+}
+
+fn temp_container(tag: &str, cfg: &ModelConfig, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir().join("df11_sharding_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}_{}.df11", std::process::id()));
+    let raw = generate_model_weights(cfg, seed);
+    let model = Df11Model::compress_from_weights(cfg.name.clone(), raw).unwrap();
+    write_df11_model(&path, &model).unwrap();
+    path
+}
+
+/// Drive one engine through the lifecycle on a fixed two-sequence
+/// workload, recording every sampled token and every tick's logits.
+fn run_lifecycle<E: ServingEngine + TickLogits>(engine: &mut E) -> (Vec<Vec<u32>>, Vec<Vec<f32>>) {
+    let prompts: [&[u32]; 2] = [&[5, 6, 7], &[9]];
+    let max_new = 6usize;
+    engine.start_seq(1, prompts[0]).unwrap();
+    engine.start_seq(2, prompts[1]).unwrap();
+    let mut tokens = vec![Vec::new(), Vec::new()];
+    let mut logit_ticks = Vec::new();
+    let mut live = vec![1u64, 2u64];
+    while !live.is_empty() {
+        let outcomes = engine.decode_step(&live).unwrap();
+        logit_ticks.push(engine.tick_logits());
+        let mut retired = Vec::new();
+        for o in outcomes {
+            let idx = (o.seq_id - 1) as usize;
+            match o.event {
+                StepEvent::Prefill { .. } => {}
+                StepEvent::Token(t) => {
+                    tokens[idx].push(t);
+                    if tokens[idx].len() >= max_new {
+                        retired.push(o.seq_id);
+                    }
+                }
+                StepEvent::CacheFull => retired.push(o.seq_id),
+            }
+        }
+        for id in retired {
+            engine.finish_seq(id).unwrap();
+            live.retain(|&l| l != id);
+        }
+    }
+    (tokens, logit_ticks)
+}
+
+/// Test-local extension: read the last tick's logits from any engine
+/// (both shapes expose `last_logits`; the serving trait stays minimal).
+trait TickLogits {
+    fn tick_logits(&self) -> Vec<f32>;
+}
+
+impl TickLogits for Engine {
+    fn tick_logits(&self) -> Vec<f32> {
+        self.last_logits().to_vec()
+    }
+}
+
+impl TickLogits for ShardedEngine {
+    fn tick_logits(&self) -> Vec<f32> {
+        self.last_logits().to_vec()
+    }
+}
+
+/// THE acceptance property, in-memory sources: for N ∈ {1,2,4}, the
+/// sharded engine's token streams AND per-tick logits are bit-identical
+/// to the unsharded engine, for BF16 and DF11 weights.
+#[test]
+fn sharded_matches_unsharded_bitwise_bf16_and_df11() {
+    let cfg = tiny();
+    for mode in [WeightMode::Bf16Resident, WeightMode::Df11] {
+        let mut solo = Engine::build(&cfg, 7, mode.clone()).unwrap();
+        let (expect_tokens, expect_logits) = run_lifecycle(&mut solo);
+        assert!(expect_tokens.iter().all(|t| !t.is_empty()));
+        for shards in SHARD_COUNTS {
+            let plan = plan_for(&cfg, shards);
+            let mut sharded = ShardedEngine::build(&cfg, 7, mode.clone(), &plan).unwrap();
+            let (tokens, logits) = run_lifecycle(&mut sharded);
+            assert_eq!(
+                tokens, expect_tokens,
+                "{mode:?} tokens diverged at {shards} shards"
+            );
+            assert_eq!(
+                logits.len(),
+                expect_logits.len(),
+                "{mode:?} tick count diverged at {shards} shards"
+            );
+            for (tick, (a, b)) in logits.iter().zip(&expect_logits).enumerate() {
+                assert_eq!(a.len(), b.len(), "{mode:?} logit rows, tick {tick}");
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{mode:?} logits diverged at {shards} shards, tick {tick}"
+                );
+            }
+        }
+    }
+}
+
+/// Same acceptance for the container source: every shard streams only
+/// its groups from disk, and the result is still bit-identical.
+#[test]
+fn sharded_container_matches_unsharded_bitwise() {
+    let cfg = tiny();
+    let path = temp_container("bitident", &cfg, 7);
+    let mut solo = Engine::build_from_container(&cfg, &path).unwrap();
+    let (expect_tokens, expect_logits) = run_lifecycle(&mut solo);
+    for shards in SHARD_COUNTS {
+        let plan = plan_for(&cfg, shards);
+        let mut sharded = ShardedEngine::build_from_container(&cfg, &path, &plan).unwrap();
+        let (tokens, logits) = run_lifecycle(&mut sharded);
+        assert_eq!(tokens, expect_tokens, "container tokens at {shards} shards");
+        for (tick, (a, b)) in logits.iter().zip(&expect_logits).enumerate() {
+            assert_eq!(a.len(), b.len(), "container logit rows, tick {tick}");
+            assert!(
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "container logits diverged at {shards} shards, tick {tick}"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+fn tokens_by_id(report: &dfloat11::coordinator::ServeReport) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<(u64, Vec<u32>)> = report
+        .responses
+        .iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+fn serve_workload<E: ServingEngine>(
+    engine: E,
+    policy: SchedPolicy,
+    slots: usize,
+    workload: &[Request],
+) -> dfloat11::coordinator::ServeReport {
+    let mut server = Server::new(
+        engine,
+        SchedulerConfig {
+            max_batch: slots,
+            policy,
+            ..SchedulerConfig::default()
+        },
+    );
+    for r in workload {
+        let at = r.arrival;
+        server.submit_at(r.clone(), at).unwrap();
+    }
+    server.drain().unwrap()
+}
+
+/// Both scheduler policies over every source × shard count: the full
+/// serving stack (queue → slots → engine) emits identical tokens
+/// sharded and unsharded.
+#[test]
+fn server_emits_identical_tokens_across_shards_sources_and_policies() {
+    let cfg = tiny();
+    let seed = 13;
+    let path = temp_container("server", &cfg, seed);
+    let workload: Vec<Request> = (0..5)
+        .map(|i| Request::new(vec![(i * 11 % 50 + 1) as u32, 7, 8], 3 + i % 4))
+        .collect();
+
+    for policy in [SchedPolicy::Static, SchedPolicy::Continuous] {
+        for source in ["bf16", "df11", "container"] {
+            let build_solo = || -> Engine {
+                match source {
+                    "bf16" => Engine::build(&cfg, seed, WeightMode::Bf16Resident).unwrap(),
+                    "df11" => Engine::build(&cfg, seed, WeightMode::Df11).unwrap(),
+                    _ => Engine::build_from_container(&cfg, &path).unwrap(),
+                }
+            };
+            let expect = tokens_by_id(&serve_workload(build_solo(), policy, 2, &workload));
+            assert_eq!(expect.len(), workload.len());
+            for shards in SHARD_COUNTS {
+                let plan = plan_for(&cfg, shards);
+                let engine = match source {
+                    "bf16" => {
+                        ShardedEngine::build(&cfg, seed, WeightMode::Bf16Resident, &plan).unwrap()
+                    }
+                    "df11" => ShardedEngine::build(&cfg, seed, WeightMode::Df11, &plan).unwrap(),
+                    _ => ShardedEngine::build_from_container(&cfg, &path, &plan).unwrap(),
+                };
+                let got = tokens_by_id(&serve_workload(engine, policy, 2, &workload));
+                assert_eq!(
+                    got, expect,
+                    "{source} under {policy:?} diverged at {shards} shards"
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Randomized equivalence: arbitrary mixed-length workloads, random
+/// slot counts and shard counts — sharded serving may only change
+/// latency, never tokens.
+#[test]
+fn prop_sharded_serving_is_token_invariant() {
+    let cfg = tiny();
+    let vocab = cfg.vocab_size as u32;
+    check(
+        "sharded-equivalence",
+        Config {
+            cases: 8,
+            max_size: 32,
+            ..Config::default()
+        },
+        |g| {
+            let n_reqs = g.usize_in(1, 5);
+            let slots = g.usize_in(1, 3);
+            let shards = SHARD_COUNTS[g.usize_in(0, SHARD_COUNTS.len() - 1)];
+            let policy = if g.usize_in(0, 1) == 0 {
+                SchedPolicy::Static
+            } else {
+                SchedPolicy::Continuous
+            };
+            let workload: Vec<Request> = (0..n_reqs)
+                .map(|_| {
+                    let plen = g.usize_in(1, 4);
+                    let prompt = g.vec_of(plen, |r| r.next_u32() % vocab);
+                    Request::new(prompt, g.usize_in(1, 5))
+                })
+                .collect();
+            let solo = Engine::build(&cfg, 3, WeightMode::Bf16Resident).unwrap();
+            let expect = tokens_by_id(&serve_workload(solo, policy, slots, &workload));
+            let plan = plan_for(&cfg, shards);
+            let sharded = ShardedEngine::build(&cfg, 3, WeightMode::Bf16Resident, &plan).unwrap();
+            let got = tokens_by_id(&serve_workload(sharded, policy, slots, &workload));
+            if got != expect {
+                return Err(format!(
+                    "{n_reqs} reqs, {slots} slots, {shards} shards, {policy:?}: diverged"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The isolation property: serving a sharded workload, each shard's
+/// container reader must only ever touch the groups its `ShardPlan`
+/// range assigns to it — and never materialize the full model.
+#[test]
+fn no_shard_reads_container_groups_outside_its_assignment() {
+    let cfg = tiny();
+    let path = temp_container("isolation", &cfg, 21);
+    let shards = 2usize;
+    let plan = plan_for(&cfg, shards);
+    let ranges = shard_layer_ranges(&plan);
+
+    // Keep an Arc handle on each scoped source to audit it afterwards.
+    let handles: Vec<Arc<ContainerSource>> = (0..shards)
+        .map(|s| {
+            let groups = shard_groups(&cfg, s, &ranges);
+            Arc::new(ContainerSource::open_scoped(&path, &groups).unwrap())
+        })
+        .collect();
+    let sources: Vec<Box<dyn WeightSource>> = handles
+        .iter()
+        .map(|h| Box::new(h.clone()) as Box<dyn WeightSource>)
+        .collect();
+    let engine = ShardedEngine::build_with_sources(&cfg, sources, &plan).unwrap();
+
+    let total_payload: u64 = handles[0]
+        .reader()
+        .entries()
+        .iter()
+        .map(|e| e.len)
+        .sum();
+    let workload: Vec<Request> = (0..3).map(|i| Request::new(vec![i + 1, 2], 4)).collect();
+    let report = serve_workload(engine, SchedPolicy::Continuous, 2, &workload);
+    assert_eq!(report.responses.len(), 3);
+    assert!(report
+        .responses
+        .iter()
+        .all(|r| r.finish == FinishReason::MaxTokens));
+
+    for (s, handle) in handles.iter().enumerate() {
+        let assigned = shard_groups(&cfg, s, &ranges);
+        let read = handle.reader().groups_read();
+        assert!(
+            !read.is_empty(),
+            "shard {s} served tokens without reading its container slice?"
+        );
+        for g in &read {
+            assert!(
+                assigned.contains(g),
+                "shard {s} read group {g} outside its assignment {assigned:?}"
+            );
+        }
+        // No shard holds (or read) the whole model.
+        assert!(
+            handle.resident_weight_bytes() < total_payload,
+            "shard {s} materialized the full container"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The PR 3 freed-memory assertion, sharded: under the same *per-GPU*
+/// HBM budget, DF11's smaller resident slice leaves every shard more
+/// KV pages, so the DF11 sharded server sustains strictly more
+/// concurrent slots than the BF16 one — with identical tokens.
+#[test]
+fn df11_shards_sustain_more_slots_than_bf16_under_same_per_gpu_budget() {
+    // Mid-size config so DF11's compression gap dwarfs per-tensor
+    // overheads (as in tests/scheduling.rs).
+    let cfg = ModelConfig {
+        name: "mid".into(),
+        vocab_size: 256,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 256,
+        max_seq_len: 64,
+        tie_embeddings: false,
+    };
+    let seed = 4;
+    let shards = 2usize;
+    let page_tokens = SchedulerConfig::default().page_tokens;
+    let plan = plan_for(&cfg, shards);
+    let workload: Vec<Request> = (0..4)
+        .map(|i| Request::new(vec![i as u32 + 1, 2], 4))
+        .collect();
+
+    // Per-GPU budget: the BF16 peak shard's resident bytes plus exactly
+    // one page of its (per-shard, 1-of-2-layers) KV rate.
+    let bf16_peak = ShardedEngine::build(&cfg, seed, WeightMode::Bf16Resident, &plan)
+        .unwrap()
+        .resident_weight_bytes();
+    let shard_kv_per_token = cfg.kv_bytes_per_token() / cfg.n_layers as u64;
+    let budget = bf16_peak + page_tokens * shard_kv_per_token;
+
+    let run = |mode: WeightMode| {
+        let engine = ShardedEngine::build(&cfg, seed, mode, &plan).unwrap();
+        let mut server = Server::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 4,
+                policy: SchedPolicy::Continuous,
+                hbm_bytes: Some(budget),
+                page_tokens,
+            },
+        );
+        for r in &workload {
+            server.submit(r.clone()).unwrap();
+        }
+        server.drain().unwrap()
+    };
+
+    let bf16 = run(WeightMode::Bf16Resident);
+    let df11 = run(WeightMode::Df11);
+    assert_eq!(bf16.responses.len(), 4);
+    assert_eq!(df11.responses.len(), 4);
+    assert_eq!(
+        bf16.occupancy.peak, 1,
+        "bf16 per-GPU budget holds exactly one page on the peak shard"
+    );
+    assert!(
+        df11.occupancy.peak >= 2,
+        "df11's freed per-shard HBM must become concurrent slots (peak {})",
+        df11.occupancy.peak
+    );
+    assert_eq!(tokens_by_id(&bf16), tokens_by_id(&df11));
+}
