@@ -15,7 +15,7 @@
 
 pub mod rans;
 
-pub use rans::{rans_decode, rans_encode, RansModel};
+pub use rans::{rans_decode, rans_decode_bf16_into, rans_decode_into, rans_encode, RansModel};
 
 use crate::bf16::Bf16;
 use crate::error::Result;

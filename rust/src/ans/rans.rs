@@ -140,8 +140,14 @@ pub fn rans_encode(model: &RansModel, data: &[u8]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Decode `n` bytes from an rANS stream.
-pub fn rans_decode(model: &RansModel, encoded: &[u8], n: usize) -> Result<Vec<u8>> {
+/// The streaming decode core: emits `n` bytes through `emit`, never
+/// allocating. Every public decode entry point is a shim over this.
+fn rans_decode_stream(
+    model: &RansModel,
+    encoded: &[u8],
+    n: usize,
+    mut emit: impl FnMut(u8),
+) -> Result<()> {
     if encoded.len() < 4 {
         return Err(Error::corrupt("rANS stream shorter than state"));
     }
@@ -152,7 +158,6 @@ pub fn rans_decode(model: &RansModel, encoded: &[u8], n: usize) -> Result<Vec<u8
         pos += 1;
     }
     let mask = PROB_SCALE - 1;
-    let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let slot = x & mask;
         let s = model.slot_to_symbol[slot as usize];
@@ -166,9 +171,46 @@ pub fn rans_decode(model: &RansModel, encoded: &[u8], n: usize) -> Result<Vec<u8
             x = (x << 8) | encoded[pos] as u32;
             pos += 1;
         }
-        out.push(s);
+        emit(s);
     }
+    Ok(())
+}
+
+/// Decode `n` bytes from an rANS stream into a fresh vector.
+pub fn rans_decode(model: &RansModel, encoded: &[u8], n: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(n);
+    rans_decode_stream(model, encoded, n, |b| out.push(b))?;
     Ok(out)
+}
+
+/// Decode exactly `out.len()` bytes into a caller buffer — the
+/// allocation-free steady-state serving path.
+pub fn rans_decode_into(model: &RansModel, encoded: &[u8], out: &mut [u8]) -> Result<()> {
+    let mut i = 0usize;
+    rans_decode_stream(model, encoded, out.len(), |b| {
+        out[i] = b;
+        i += 1;
+    })
+}
+
+/// Decode `2 * out.len()` little-endian bytes straight into BF16 slots
+/// — no intermediate byte buffer at all, so container serving with
+/// `--codec rans` allocates nothing once the scratch pool is warm.
+pub fn rans_decode_bf16_into(
+    model: &RansModel,
+    encoded: &[u8],
+    out: &mut [crate::bf16::Bf16],
+) -> Result<()> {
+    let mut i = 0usize;
+    let mut lo = 0u8;
+    rans_decode_stream(model, encoded, out.len() * 2, |b| {
+        if i % 2 == 0 {
+            lo = b;
+        } else {
+            out[i / 2] = crate::bf16::Bf16::from_bits(u16::from_le_bytes([lo, b]));
+        }
+        i += 1;
+    })
 }
 
 #[cfg(test)]
@@ -239,6 +281,27 @@ mod tests {
     fn unknown_symbol_rejected_at_encode() {
         let model = RansModel::from_data(&[1, 1, 2]);
         assert!(rans_encode(&model, &[3]).is_err());
+    }
+
+    #[test]
+    fn decode_into_paths_match_the_allocating_decoder() {
+        let mut rng = Rng::new(9);
+        let data: Vec<u8> = (0..9001).map(|_| (rng.next_u32() % 23) as u8).collect();
+        let model = RansModel::from_data(&data);
+        let enc = rans_encode(&model, &data).unwrap();
+        let mut into = vec![0u8; data.len()];
+        rans_decode_into(&model, &enc, &mut into).unwrap();
+        assert_eq!(into, data);
+        // BF16 pair assembly: even byte count decodes into exact slots.
+        let bytes: Vec<u8> = (0..4096u32).flat_map(|i| [(i % 7) as u8, (i % 5) as u8]).collect();
+        let model = RansModel::from_data(&bytes);
+        let enc = rans_encode(&model, &bytes).unwrap();
+        let mut bf = vec![crate::bf16::Bf16::from_bits(0); bytes.len() / 2];
+        rans_decode_bf16_into(&model, &enc, &mut bf).unwrap();
+        for (i, w) in bf.iter().enumerate() {
+            let want = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            assert_eq!(w.to_bits(), want, "slot {i}");
+        }
     }
 
     #[test]

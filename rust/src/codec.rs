@@ -18,11 +18,13 @@
 //! The legacy free functions remain as thin shims so existing tests and
 //! benches keep working, but new code should go through this API.
 
-use crate::ans::rans::{rans_decode, rans_encode, RansModel};
+use crate::ans::rans::{rans_decode_bf16_into, rans_encode, RansModel};
 use crate::bf16::Bf16;
 use crate::dfloat11::{CompressionStats, Df11Tensor};
 use crate::error::{Error, Result};
 use crate::gpu_sim::KernelConfig;
+use crate::runtime::pool::WorkerPool;
+use std::sync::Arc;
 
 /// On-disk codec identifier — the byte stored in every container index
 /// entry. Stable across versions; never reuse a value.
@@ -64,26 +66,72 @@ impl CodecId {
 }
 
 /// Tensors below this element count decode sequentially even when a
-/// worker pool is requested: the parallel pipeline spawns scoped
-/// threads per call (not a persistent pool), and two spawn/join rounds
-/// cost tens of microseconds — about what the sequential decoder needs
-/// for ~64k elements — so smaller tensors lose by going parallel. The
-/// serving engine and the codec dispatch share this cutoff.
-pub const PARALLEL_MIN_ELEMENTS: usize = 64 * 1024;
+/// worker pool is requested. The persistent pool removed the per-call
+/// thread spawn/join that used to dominate small decodes; what remains
+/// is queue-push + wake + scan-barrier coordination, a few
+/// microseconds — about what the sequential decoder needs for ~32k
+/// elements. The serving engine and the codec dispatch share this
+/// cutoff (it is half the pre-pool value: persistence made parallel
+/// decode profitable on smaller blocks).
+pub const PARALLEL_MIN_ELEMENTS: usize = 32 * 1024;
 
 /// Decode-time options shared by all codecs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub struct DecodeOpts {
-    /// Worker threads for codecs with a parallel pipeline (DF11).
-    /// `1` selects the sequential decoder; other codecs ignore this.
-    /// Small tensors (under [`PARALLEL_MIN_ELEMENTS`]) decode
-    /// sequentially regardless — spawn overhead dominates there.
+    /// Worker-width *hint* for codecs with a parallel pipeline (DF11):
+    /// `1` selects the sequential decoder, `0` the pool's full width;
+    /// other codecs ignore this. Small tensors (under
+    /// [`PARALLEL_MIN_ELEMENTS`]) decode sequentially regardless —
+    /// coordination overhead dominates there.
     pub threads: usize,
+    /// The persistent worker pool decodes run on. `None` selects the
+    /// crate-global pool ([`WorkerPool::global`]); the serving engine
+    /// passes its configured pool here.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for DecodeOpts {
     fn default() -> Self {
-        DecodeOpts { threads: 1 }
+        DecodeOpts {
+            threads: 1,
+            pool: None,
+        }
+    }
+}
+
+impl DecodeOpts {
+    /// Options with a worker-width hint on the default (global) pool.
+    pub fn with_threads(threads: usize) -> DecodeOpts {
+        DecodeOpts {
+            threads,
+            pool: None,
+        }
+    }
+
+    /// Options bound to an explicit pool.
+    pub fn with_pool(threads: usize, pool: Arc<WorkerPool>) -> DecodeOpts {
+        DecodeOpts {
+            threads,
+            pool: Some(pool),
+        }
+    }
+
+    /// The pool decodes run on (explicit handle or the crate-global).
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        self.pool.clone().unwrap_or_else(WorkerPool::global)
+    }
+
+    /// The resolved worker width (`threads == 0` means pool width).
+    /// Reads the width without spawning the global pool, so reporting
+    /// paths can resolve the sentinel before any decode has run.
+    pub fn width(&self) -> usize {
+        match self.threads {
+            0 => match &self.pool {
+                Some(pool) => pool.width(),
+                None => WorkerPool::global_width(),
+            },
+            n => n,
+        }
     }
 }
 
@@ -196,19 +244,23 @@ impl CompressedTensor {
         }
         match self {
             CompressedTensor::Df11(t) => {
-                if opts.threads > 1 && t.num_elements() >= PARALLEL_MIN_ELEMENTS {
-                    crate::dfloat11::parallel::decompress_parallel_into(t, out, opts.threads)?;
+                if opts.width() > 1 && t.num_elements() >= PARALLEL_MIN_ELEMENTS {
+                    let pool = opts.pool_handle();
+                    crate::dfloat11::parallel::decompress_pooled_into(
+                        t,
+                        out,
+                        opts.threads,
+                        &pool,
+                    )?;
                 } else {
                     crate::dfloat11::decompress::decompress_sequential_into(t, out)?;
                 }
                 Ok(())
             }
             CompressedTensor::Rans(t) => {
-                let bytes = rans_decode(&t.model, &t.encoded, t.num_elements * 2)?;
-                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-                    *o = Bf16::from_bits(u16::from_le_bytes([c[0], c[1]]));
-                }
-                Ok(())
+                // Straight into the caller's BF16 slots: the steady-
+                // state serving path allocates no intermediate bytes.
+                rans_decode_bf16_into(&t.model, &t.encoded, out)
             }
             CompressedTensor::RawBf16(t) => {
                 for (o, &b) in out.iter_mut().zip(t.bits.iter()) {
@@ -311,17 +363,18 @@ fn validate_shape(weights: &[Bf16], shape: &[usize]) -> Result<()> {
 
 /// The paper's codec: Huffman-coded exponents, verbatim sign/mantissa,
 /// two-phase-kernel auxiliary variables.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Df11Codec {
-    /// Decode options (`threads > 1` selects the parallel pipeline).
+    /// Decode options (`threads > 1` selects the pooled pipeline).
     pub opts: DecodeOpts,
 }
 
 impl Df11Codec {
-    /// A codec decoding on `threads` workers (`1` = sequential).
+    /// A codec decoding on up to `threads` pool workers (`1` =
+    /// sequential, `0` = the pool's full width).
     pub fn with_threads(threads: usize) -> Df11Codec {
         Df11Codec {
-            opts: DecodeOpts { threads },
+            opts: DecodeOpts::with_threads(threads),
         }
     }
 }

@@ -30,7 +30,8 @@ use crate::kvcache::KvCacheManager;
 use crate::model::init::generate_model_weights;
 use crate::model::ModelConfig;
 use crate::nn;
-use std::collections::HashMap;
+use crate::runtime::pool::WorkerPool;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -121,11 +122,16 @@ pub trait ServingEngine {
     /// Weight-source label for reports.
     fn source_label(&self) -> String;
 
-    /// Set the decompression worker-thread count (0 = auto).
+    /// Set the decompression worker-width hint (0 = the pool's width).
     fn set_decode_threads(&mut self, threads: usize);
 
-    /// Current decompression worker-thread count.
+    /// Current (resolved) decompression worker width.
     fn decode_threads(&self) -> usize;
+
+    /// Replace the persistent worker pool decodes and prefetches run
+    /// on (the `serve --threads` knob builds a dedicated pool; the
+    /// default is the crate-global one).
+    fn set_decode_pool(&mut self, pool: Arc<WorkerPool>);
 
     /// Number of shards (1 for a single-box engine).
     fn num_shards(&self) -> usize;
@@ -435,12 +441,12 @@ pub trait WeightSource: Send + Sync {
     fn source_name(&self) -> &'static str;
 
     /// Materialize tensor `name` as f32 into `out`, staging through
-    /// `staging`, decoding on up to `threads` workers where the codec
-    /// supports it. Returns the fetch's cost accounting.
+    /// `staging`, decoding through the pool/width in `opts` where the
+    /// codec supports it. Returns the fetch's cost accounting.
     fn fetch_into(
         &self,
         name: &str,
-        threads: usize,
+        opts: &DecodeOpts,
         staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost>;
@@ -457,21 +463,28 @@ fn widen_into(src: &[Bf16], out: &mut Vec<f32>) {
 }
 
 /// Decode one DF11 tensor into the reused staging buffer, choosing the
-/// parallel pipeline for large tensors, with per-phase accounting.
+/// pooled two-phase pipeline for large tensors, with per-phase
+/// accounting.
 fn decode_df11_tensor(
     tensor: &Df11Tensor,
-    threads: usize,
+    opts: &DecodeOpts,
     staging: &mut Vec<Bf16>,
 ) -> Result<FetchCost> {
     let t0 = Instant::now();
     let mut cost = FetchCost::default();
     staging.resize(tensor.num_elements(), Bf16::from_bits(0));
-    // Production hot path: the parallel two-phase pipeline for large
-    // tensors when a pool is configured, else the optimized sequential
+    // Production hot path: the two-phase pipeline on the persistent
+    // worker pool for large tensors, else the optimized sequential
     // decoder (the Algorithm-1-faithful kernel simulation lives in
     // gpu_sim and is exercised by tests/benches).
-    if threads > 1 && tensor.num_elements() >= PARALLEL_MIN_ELEMENTS {
-        let stats = crate::dfloat11::parallel::decompress_parallel_into(tensor, staging, threads)?;
+    if opts.width() > 1 && tensor.num_elements() >= PARALLEL_MIN_ELEMENTS {
+        let pool = opts.pool_handle();
+        let stats = crate::dfloat11::parallel::decompress_pooled_into(
+            tensor,
+            staging,
+            opts.threads,
+            &pool,
+        )?;
         cost.phase1 = stats.phase1_seconds;
         cost.phase2 = stats.phase2_seconds;
     } else {
@@ -501,7 +514,7 @@ impl WeightSource for Bf16Source {
     fn fetch_into(
         &self,
         name: &str,
-        _threads: usize,
+        _opts: &DecodeOpts,
         _staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost> {
@@ -550,7 +563,7 @@ impl WeightSource for Df11Source {
     fn fetch_into(
         &self,
         name: &str,
-        threads: usize,
+        opts: &DecodeOpts,
         staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost> {
@@ -559,7 +572,7 @@ impl WeightSource for Df11Source {
             .get(name)
             .ok_or_else(|| Error::InvalidArgument(format!("no weight {name}")))?;
         let tensor = &self.model.groups[gi].tensors[ti].1;
-        let cost = decode_df11_tensor(tensor, threads, staging)?;
+        let cost = decode_df11_tensor(tensor, opts, staging)?;
         widen_into(staging, out);
         Ok(cost)
     }
@@ -600,7 +613,7 @@ impl WeightSource for OffloadSource {
     fn fetch_into(
         &self,
         name: &str,
-        _threads: usize,
+        _opts: &DecodeOpts,
         _staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost> {
@@ -719,7 +732,7 @@ impl WeightSource for ContainerSource {
     fn fetch_into(
         &self,
         name: &str,
-        threads: usize,
+        opts: &DecodeOpts,
         staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost> {
@@ -730,11 +743,11 @@ impl WeightSource for ContainerSource {
         let tensor = self.tensor(name)?;
         let load = t_load.elapsed().as_secs_f64();
         let mut cost = match &*tensor {
-            CompressedTensor::Df11(t) => decode_df11_tensor(t, threads, staging)?,
+            CompressedTensor::Df11(t) => decode_df11_tensor(t, opts, staging)?,
             other => {
                 let t0 = Instant::now();
                 staging.resize(other.num_elements(), Bf16::from_bits(0));
-                other.decompress_into(staging, &DecodeOpts { threads })?;
+                other.decompress_into(staging, opts)?;
                 FetchCost {
                     decompress: t0.elapsed().as_secs_f64(),
                     ..FetchCost::default()
@@ -768,11 +781,11 @@ impl<S: WeightSource + ?Sized> WeightSource for Arc<S> {
     fn fetch_into(
         &self,
         name: &str,
-        threads: usize,
+        opts: &DecodeOpts,
         staging: &mut Vec<Bf16>,
         out: &mut Vec<f32>,
     ) -> Result<FetchCost> {
-        (**self).fetch_into(name, threads, staging, out)
+        (**self).fetch_into(name, opts, staging, out)
     }
 
     fn resident_weight_bytes(&self) -> u64 {
@@ -931,9 +944,18 @@ pub struct Engine {
     v_cache: Vec<Vec<f32>>,
     batch: usize,
     pos: usize,
-    /// Worker threads for the parallel decompression pipeline
-    /// (1 = sequential decoder).
+    /// Worker-width hint for the pooled decompression pipeline
+    /// (1 = sequential decoder, 0 = the pool's full width).
     decode_threads: usize,
+    /// The persistent worker pool decodes and prefetches run on.
+    /// `None` = the crate-global pool, resolved lazily at decode time
+    /// so an engine handed a dedicated pool never spawns the global
+    /// one (`set_decode_pool`).
+    pool: Option<Arc<WorkerPool>>,
+    /// Blocks decoded ahead of need by the shard-overlap pipeline
+    /// (layer → pooled scratch + fetch cost), consumed by
+    /// `shard_blocks` before it pays for a fresh fetch.
+    prefetched: Mutex<VecDeque<PrefetchedBlock>>,
     /// Reusable block-fetch scratch buffers (prefetch pipeline).
     scratch: ScratchPool,
     /// Reused staging + f32 buffers for the embed/LM-head fetches.
@@ -957,14 +979,13 @@ pub struct Engine {
     pub breakdown: Breakdown,
 }
 
-/// Default decompression pool width: one worker per available core.
-fn default_decode_threads() -> usize {
-    crate::auto_threads()
-}
-
 /// Small-tensor sequential-decode cutoff, shared with the codec-layer
 /// dispatch so both paths agree (see [`crate::codec::PARALLEL_MIN_ELEMENTS`]).
 const PARALLEL_MIN_ELEMENTS: usize = crate::codec::PARALLEL_MIN_ELEMENTS;
+
+/// One block decoded ahead of need: its layer, and the pooled scratch
+/// plus fetch cost (or the error, surfaced when consumed).
+type PrefetchedBlock = (usize, Result<(BlockScratch, FetchCost)>);
 
 impl Engine {
     /// Build an engine with synthetic weights for `config`.
@@ -1042,7 +1063,9 @@ impl Engine {
             v_cache: Vec::new(),
             batch: 0,
             pos: 0,
-            decode_threads: default_decode_threads(),
+            decode_threads: 0,
+            pool: None,
+            prefetched: Mutex::new(VecDeque::new()),
             scratch: ScratchPool::default(),
             io_staging: Vec::new(),
             embed_w: Vec::new(),
@@ -1113,19 +1136,38 @@ impl Engine {
         )))
     }
 
-    /// Set the decompression worker-thread count (the serve `--threads`
-    /// knob). `0` restores the auto default (one worker per core).
+    /// Set the decompression worker-width hint (the serve `--threads`
+    /// knob). `0` restores the auto default (the pool's full width).
     pub fn set_decode_threads(&mut self, threads: usize) {
-        self.decode_threads = if threads == 0 {
-            default_decode_threads()
-        } else {
-            threads
-        };
+        self.decode_threads = threads;
     }
 
-    /// Current decompression worker-thread count.
+    /// Current resolved decompression worker width (the one place the
+    /// `0 = pool width` sentinel resolves is [`DecodeOpts::width`]).
     pub fn decode_threads(&self) -> usize {
-        self.decode_threads
+        self.decode_opts().width()
+    }
+
+    /// Replace the persistent worker pool decodes and prefetches run on
+    /// (the default is the crate-global pool).
+    pub fn set_decode_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
+    }
+
+    /// The pool this engine decodes on (the crate-global one unless a
+    /// dedicated pool was installed).
+    pub fn decode_pool(&self) -> Arc<WorkerPool> {
+        self.pool.clone().unwrap_or_else(WorkerPool::global)
+    }
+
+    /// Decode options carrying this engine's pool + width hint — what
+    /// every weight fetch decodes through. `pool: None` defers to the
+    /// crate-global pool at the decode site.
+    fn decode_opts(&self) -> DecodeOpts {
+        DecodeOpts {
+            threads: self.decode_threads,
+            pool: self.pool.clone(),
+        }
     }
 
     /// Device-resident weight bytes for this source (drives the memory
@@ -1451,9 +1493,10 @@ impl Engine {
             ));
         }
         let d = self.config.d_model;
+        let opts = self.decode_opts();
         let cost = self.source.fetch_into(
             "embed.tok",
-            self.decode_threads,
+            &opts,
             &mut self.io_staging,
             &mut self.embed_w,
         )?;
@@ -1503,27 +1546,33 @@ impl Engine {
         let first = self.role.first_layer;
         let owned = self.role.n_layers;
         if owned > 0 {
-            let threads = self.decode_threads;
+            let opts = self.decode_opts();
+            let worker_pool = self.decode_pool();
             let config = &self.config;
             let source: &dyn WeightSource = self.source.as_ref();
-            let pool = &self.scratch;
+            let scratch_pool = &self.scratch;
+            let prefetched = &self.prefetched;
             let backend = &mut self.backend;
             let seqs = &mut self.seqs;
             let breakdown = &mut self.breakdown;
-            std::thread::scope(|scope| -> Result<()> {
-                let mut pending =
-                    Some(scope.spawn(move || fetch_block(source, pool, first, threads)));
+            // One-block-ahead prefetch, submitted to the persistent
+            // pool (no per-call thread spawn). Each fetch first checks
+            // the prefetched-block queue the shard-overlap pipeline may
+            // have filled during the previous shard's compute.
+            worker_pool.scope(|scope| -> Result<()> {
+                let opts = &opts;
+                let mut pending = Some(scope.spawn(move || {
+                    take_or_fetch(source, scratch_pool, prefetched, first, opts)
+                }));
                 for l in 0..owned {
-                    let joined = pending
+                    let (scratch, cost) = pending
                         .take()
                         .expect("prefetch pipeline primed")
-                        .join()
-                        .map_err(|_| Error::Runtime("block prefetch worker panicked".into()))?;
-                    let (scratch, cost) = joined?;
+                        .join()??;
                     if l + 1 < owned {
-                        pending = Some(
-                            scope.spawn(move || fetch_block(source, pool, first + l + 1, threads)),
-                        );
+                        pending = Some(scope.spawn(move || {
+                            take_or_fetch(source, scratch_pool, prefetched, first + l + 1, opts)
+                        }));
                     }
                     cost.charge(breakdown);
                     let t0 = Instant::now();
@@ -1542,7 +1591,7 @@ impl Engine {
                         )?;
                     }
                     breakdown.add_measured(Component::BlockCompute, t0.elapsed().as_secs_f64());
-                    pool.checkin(scratch);
+                    scratch_pool.checkin(scratch);
                 }
                 Ok(())
             })?;
@@ -1561,9 +1610,10 @@ impl Engine {
                 "shard_head on a shard that does not own the LM head".into(),
             ));
         }
+        let opts = self.decode_opts();
         let cost = self.source.fetch_into(
             "lm_head",
-            self.decode_threads,
+            &opts,
             &mut self.io_staging,
             &mut self.head_w,
         )?;
@@ -1602,7 +1652,7 @@ impl Engine {
             return Err(Error::InvalidArgument("call reset(batch) first".into()));
         }
         let d = self.config.d_model;
-        let threads = self.decode_threads;
+        let opts = self.decode_opts();
 
         // Embedding fetch + gather, through the engine's reused staging
         // and f32 buffers. The fetch cost is charged to
@@ -1610,7 +1660,7 @@ impl Engine {
         // after it — components must not double-count seconds.
         let cost = self.source.fetch_into(
             "embed.tok",
-            threads,
+            &opts,
             &mut self.io_staging,
             &mut self.embed_w,
         )?;
@@ -1629,32 +1679,36 @@ impl Engine {
             .add_measured(Component::Embed, t0.elapsed().as_secs_f64());
 
         // Transformer blocks, block-batched decompression (§2.3.3),
-        // prefetched one block ahead on a scoped worker. Each fetch
-        // checks a scratch out of the pool, decompresses into it, and
-        // checks it back in after the block computes — steady state
-        // cycles two scratches with zero allocation.
+        // prefetched one block ahead on the persistent worker pool.
+        // Each fetch checks a scratch out of the pool, decompresses
+        // into it, and checks it back in after the block computes —
+        // steady state cycles two scratches with zero allocation.
         let n_layers = self.config.n_layers;
+        let worker_pool = self.decode_pool();
         let config = &self.config;
         let source: &dyn WeightSource = self.source.as_ref();
-        let pool = &self.scratch;
+        let scratch_pool = &self.scratch;
+        let prefetched = &self.prefetched;
         let backend = &mut self.backend;
         let k_cache = &mut self.k_cache;
         let v_cache = &mut self.v_cache;
         let breakdown = &mut self.breakdown;
         let batch = self.batch;
         let pos = self.pos;
-        std::thread::scope(|scope| -> Result<()> {
-            let mut pending = Some(scope.spawn(move || fetch_block(source, pool, 0, threads)));
+        worker_pool.scope(|scope| -> Result<()> {
+            let opts = &opts;
+            let mut pending = Some(
+                scope.spawn(move || take_or_fetch(source, scratch_pool, prefetched, 0, opts)),
+            );
             for l in 0..n_layers {
-                let joined = pending
+                let (scratch, cost) = pending
                     .take()
                     .expect("prefetch pipeline primed")
-                    .join()
-                    .map_err(|_| Error::Runtime("block prefetch worker panicked".into()))?;
-                let (scratch, cost) = joined?;
+                    .join()??;
                 if l + 1 < n_layers {
-                    pending =
-                        Some(scope.spawn(move || fetch_block(source, pool, l + 1, threads)));
+                    pending = Some(scope.spawn(move || {
+                        take_or_fetch(source, scratch_pool, prefetched, l + 1, opts)
+                    }));
                 }
                 cost.charge(breakdown);
                 let t0 = Instant::now();
@@ -1664,7 +1718,7 @@ impl Engine {
                 // The scratch returns to the pool — the decompressed
                 // weights are logically discarded after use, as in the
                 // paper, but the buffers are recycled for block l+2.
-                pool.checkin(scratch);
+                scratch_pool.checkin(scratch);
             }
             Ok(())
         })?;
@@ -1672,7 +1726,7 @@ impl Engine {
         // LM head, through the reused head buffer.
         let cost =
             self.source
-                .fetch_into("lm_head", threads, &mut self.io_staging, &mut self.head_w)?;
+                .fetch_into("lm_head", &opts, &mut self.io_staging, &mut self.head_w)?;
         cost.charge(&mut self.breakdown);
         let t0 = Instant::now();
         let logits = self
@@ -1764,6 +1818,10 @@ impl ServingEngine for Engine {
         Engine::decode_threads(self)
     }
 
+    fn set_decode_pool(&mut self, pool: Arc<WorkerPool>) {
+        Engine::set_decode_pool(self, pool)
+    }
+
     fn num_shards(&self) -> usize {
         1
     }
@@ -1779,15 +1837,15 @@ impl ServingEngine for Engine {
 
 /// Fetch all seven matrices of one transformer block — the prefetch
 /// unit, decompressed as one batch (§2.3.3) — into a pooled scratch.
-/// Free function (not a method) so the block-prefetch worker can run it
+/// Free function (not a method) so a pool prefetch task can run it
 /// without borrowing the engine.
 fn fetch_block(
     source: &dyn WeightSource,
-    pool: &ScratchPool,
+    scratch_pool: &ScratchPool,
     layer: usize,
-    threads: usize,
+    opts: &DecodeOpts,
 ) -> Result<(BlockScratch, FetchCost)> {
-    let mut scratch = pool.checkout();
+    let mut scratch = scratch_pool.checkout();
     let g = format!("block.{layer}");
     let mut cost = FetchCost::default();
     {
@@ -1802,10 +1860,92 @@ fn fetch_block(
             ("down_proj", &mut w.down),
         ];
         for (suffix, out) in targets {
-            cost.merge(&source.fetch_into(&format!("{g}.{suffix}"), threads, staging, out)?);
+            cost.merge(&source.fetch_into(&format!("{g}.{suffix}"), opts, staging, out)?);
         }
     }
     Ok((scratch, cost))
+}
+
+/// Consume a block the shard-overlap pipeline decoded ahead of need,
+/// or fetch it now. Entries are keyed by layer and weights are
+/// immutable, so a queued block is always content-identical to a fresh
+/// fetch — overlap can change *when* decode time is spent, never a bit
+/// of what is decoded.
+fn take_or_fetch(
+    source: &dyn WeightSource,
+    scratch_pool: &ScratchPool,
+    prefetched: &Mutex<VecDeque<PrefetchedBlock>>,
+    layer: usize,
+    opts: &DecodeOpts,
+) -> Result<(BlockScratch, FetchCost)> {
+    {
+        let mut q = prefetched.lock().expect("prefetch queue poisoned");
+        if let Some(i) = q.iter().position(|(l, _)| *l == layer) {
+            return q.remove(i).expect("indexed entry present").1;
+        }
+    }
+    fetch_block(source, scratch_pool, layer, opts)
+}
+
+/// Everything a pool task needs to decode one engine's owned blocks
+/// ahead of need — shared references only, so the sharded pipeline can
+/// prefetch shard `s+1`'s blocks while shard `s` (mutably borrowed)
+/// computes.
+pub(crate) struct PrefetchCtx<'a> {
+    source: &'a dyn WeightSource,
+    scratch: &'a ScratchPool,
+    prefetched: &'a Mutex<VecDeque<PrefetchedBlock>>,
+    first: usize,
+    owned: usize,
+    opts: DecodeOpts,
+}
+
+/// How many blocks the shard-overlap pipeline decodes ahead. This is
+/// the *pipeline-fill* window: once a shard starts computing, its own
+/// one-block-ahead prefetch hides the remaining decodes behind block
+/// math, so only the first blocks' decode sits on the critical path.
+/// Bounding the window also bounds memory — at most this many extra
+/// scratches (decompressed blocks) exist per shard, instead of the
+/// whole shard's weights being materialized at once.
+const SHARD_PREFETCH_DEPTH: usize = 2;
+
+impl PrefetchCtx<'_> {
+    /// Decode the leading [`SHARD_PREFETCH_DEPTH`] owned blocks into
+    /// the prefetch queue (skipping layers already queued by an
+    /// earlier overlap). Runs on a pool worker; a failed fetch is
+    /// parked in the queue and surfaces when the block is consumed.
+    pub(crate) fn run(&self) {
+        for layer in self.first..(self.first + self.owned).min(self.first + SHARD_PREFETCH_DEPTH) {
+            let queued = self
+                .prefetched
+                .lock()
+                .expect("prefetch queue poisoned")
+                .iter()
+                .any(|(l, _)| *l == layer);
+            if queued {
+                continue;
+            }
+            let fetched = fetch_block(self.source, self.scratch, layer, &self.opts);
+            self.prefetched
+                .lock()
+                .expect("prefetch queue poisoned")
+                .push_back((layer, fetched));
+        }
+    }
+}
+
+impl Engine {
+    /// The prefetch context the sharded pipeline hands to a pool task.
+    pub(crate) fn prefetch_ctx(&self) -> PrefetchCtx<'_> {
+        PrefetchCtx {
+            source: self.source.as_ref(),
+            scratch: &self.scratch,
+            prefetched: &self.prefetched,
+            first: self.role.first_layer,
+            owned: self.role.n_layers,
+            opts: self.decode_opts(),
+        }
+    }
 }
 
 /// Offload policy: embed/lm_head and the first `resident_layers` blocks
@@ -2068,6 +2208,52 @@ mod tests {
             warm,
             "steady state must not allocate fresh scratch buffers"
         );
+
+        // The same property for `--codec rans` container serving: the
+        // allocation-free `rans_decode_bf16_into` path decodes straight
+        // into the pooled scratch, so steady state allocates nothing
+        // either — and the logits match the BF16 reference bitwise.
+        use crate::codec::{Codec, RansCodec};
+        let seed = 5;
+        let raw = generate_model_weights(&cfg, seed);
+        let mut writer = crate::container::ContainerWriter::new(cfg.name.clone());
+        let parts: Vec<_> = raw
+            .iter()
+            .map(|(spec, w)| {
+                (
+                    spec.group.clone(),
+                    spec.name.clone(),
+                    RansCodec.compress_shaped(w, &[spec.shape[0], spec.shape[1]]).unwrap(),
+                )
+            })
+            .collect();
+        for (group, name, t) in &parts {
+            writer.push(group, name, t.view());
+        }
+        let dir = std::env::temp_dir().join("df11_engine_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("rans_scratch_{}.df11", std::process::id()));
+        writer.write_to(&path).unwrap();
+
+        let mut rans = Engine::build_from_container(&cfg, &path).unwrap();
+        let mut bf16 = Engine::build(&cfg, seed, WeightMode::Bf16Resident).unwrap();
+        rans.reset(1);
+        bf16.reset(1);
+        assert_eq!(
+            rans.step(&[1]).unwrap(),
+            bf16.step(&[1]).unwrap(),
+            "rans container logits must match bf16 bitwise"
+        );
+        let warm = rans.scratch_allocations();
+        for t in 0..5u32 {
+            rans.step(&[t]).unwrap();
+        }
+        assert_eq!(
+            rans.scratch_allocations(),
+            warm,
+            "rans container serving must stop allocating after warmup"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     /// Drive one sequence through the lifecycle API to completion.
@@ -2326,13 +2512,14 @@ mod tests {
         assert!(scoped.resident_weight_bytes() < full.resident_weight_bytes());
         let mut staging = Vec::new();
         let mut out = Vec::new();
+        let opts = DecodeOpts::default();
         scoped
-            .fetch_into("block.0.q_proj", 1, &mut staging, &mut out)
+            .fetch_into("block.0.q_proj", &opts, &mut staging, &mut out)
             .unwrap();
         assert!(!out.is_empty());
         // Outside the scope: typed error, and nothing was read.
         assert!(scoped
-            .fetch_into("block.1.q_proj", 1, &mut staging, &mut out)
+            .fetch_into("block.1.q_proj", &opts, &mut staging, &mut out)
             .is_err());
         assert_eq!(scoped.reader().groups_read(), vec!["block.0".to_string()]);
         // Unknown group in the scope list is rejected upfront.

@@ -40,4 +40,4 @@ pub use metrics::{Breakdown, Component, LatencyStats, OccupancyStats, ShardStat}
 pub use queue::RequestQueue;
 pub use request::{FinishReason, Request, Response, TokenEvent};
 pub use scheduler::{SchedPolicy, SchedulerConfig, ServeReport, Server};
-pub use sharded::{shard_groups, ShardedEngine};
+pub use sharded::{shard_groups, ShardTickClock, ShardedEngine};

@@ -41,8 +41,10 @@ use crate::model::init::generate_model_weights;
 use crate::model::ModelConfig;
 use crate::multi_gpu::{activation_hop_seconds, shard_layer_ranges, ShardPlan};
 use crate::nn;
+use crate::runtime::pool::WorkerPool;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Top-level state of one in-flight sequence (prompt bookkeeping and
 /// greedy sampling live here; the K/V slices live in the shards).
@@ -70,6 +72,20 @@ pub fn shard_groups(config: &ModelConfig, shard: usize, ranges: &[(usize, usize)
         groups.push("lm_head".to_string());
     }
     groups
+}
+
+/// One shard's cumulative `(decode, compute)` measured seconds — the
+/// stage split the tick clock takes deltas of. Decode is the whole
+/// decompress bucket; compute is block math plus the embed/head passes
+/// that run on that shard.
+fn stage_seconds(shard: &Engine) -> (f64, f64) {
+    let b = &shard.breakdown;
+    (
+        b.measured_seconds(Component::Decompress),
+        b.measured_seconds(Component::BlockCompute)
+            + b.measured_seconds(Component::Embed)
+            + b.measured_seconds(Component::LmHead),
+    )
 }
 
 fn role_for(shard: usize, ranges: &[(usize, usize)]) -> ShardRole {
@@ -110,6 +126,25 @@ fn validate_plan(config: &ModelConfig, plan: &ShardPlan) -> Result<Vec<(usize, u
     Ok(ranges)
 }
 
+/// The simulated shard-tick clock, accumulated per decode tick from
+/// the shards' *measured* stage times. The serial model charges what a
+/// strictly sequential shard loop would pay, `Σ_s (decode_s +
+/// compute_s)`; the pipelined model charges `decode_0 + Σ_s
+/// max(compute_s, decode_{s+1})` — shard `s+1` decodes its resident
+/// blocks while shard `s` computes, so overlapped stages cost their
+/// **max, not their sum**. Inter-shard activation-hop time is charged
+/// to both. `bench_fig10_multigpu` compares the two columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardTickClock {
+    /// Simulated seconds for strictly serial shard ticks.
+    pub serial_seconds: f64,
+    /// Simulated seconds with decode overlapped onto the previous
+    /// shard's compute.
+    pub pipelined_seconds: f64,
+    /// Decode ticks accumulated.
+    pub ticks: u64,
+}
+
 /// A layer-sharded serving engine: one shard-scoped [`Engine`] per
 /// planned GPU, driven as a single [`ServingEngine`].
 pub struct ShardedEngine {
@@ -125,6 +160,14 @@ pub struct ShardedEngine {
     /// Logits of the most recent tick's LM-head pass (rows follow the
     /// tick's active order; empty when no row sampled).
     last_logits: Vec<f32>,
+    /// Whether shard `s+1` prefetch-decodes its blocks on the worker
+    /// pool while shard `s` computes (`serve --pipeline on|off`).
+    pipeline: bool,
+    /// The worker pool the shard-overlap prefetch tasks run on.
+    /// `None` = the crate-global pool, resolved lazily.
+    pool: Option<Arc<WorkerPool>>,
+    /// Serial-vs-pipelined simulated tick accounting.
+    clock: ShardTickClock,
 }
 
 impl ShardedEngine {
@@ -263,7 +306,28 @@ impl ShardedEngine {
             agg: Breakdown::default(),
             hops: Breakdown::default(),
             last_logits: Vec::new(),
+            pipeline: true,
+            pool: None,
+            clock: ShardTickClock::default(),
         })
+    }
+
+    /// Enable/disable the shard-overlap pipeline (`serve --pipeline`).
+    /// Purely a scheduling knob: output tokens and logits are
+    /// bit-identical either way (pinned by `tests/sharding.rs` and the
+    /// `pool-matrix` CI digest diff).
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.pipeline = on;
+    }
+
+    /// Whether the shard-overlap pipeline is active.
+    pub fn pipeline(&self) -> bool {
+        self.pipeline
+    }
+
+    /// The simulated serial-vs-pipelined shard tick clock.
+    pub fn tick_clock(&self) -> ShardTickClock {
+        self.clock
     }
 
     /// Model config.
@@ -398,13 +462,46 @@ impl ServingEngine for ShardedEngine {
             let toks: Vec<u32> = active.iter().map(|&(_, _, tok)| tok).collect();
             let act_ids: Vec<u64> = active.iter().map(|&(_, id, _)| id).collect();
 
+            // Stage-time snapshot for the serial-vs-pipelined tick
+            // clock (deltas taken after the tick).
+            let stages_before: Vec<(f64, f64)> = self.shards.iter().map(stage_seconds).collect();
+            let hops_before = self.hops.simulated_seconds(Component::Transfer);
+
             // Shard pipeline: embed on shard 0, then each shard's block
             // range in order, the activation tensor hopping between
-            // engines (one simulated inter-GPU transfer per hop).
+            // engines (one simulated inter-GPU transfer per hop). With
+            // the pipeline on, shard s+1 decodes its resident blocks on
+            // the worker pool *while* shard s computes — `shard_blocks`
+            // then consumes the prefetched scratches instead of paying
+            // the decode on the critical path. Output identity is
+            // untouched: prefetch only moves *when* a block is decoded.
             let mut x = self.shards[0].shard_embed(&toks)?;
             let n_shards = self.shards.len();
+            // Resolve the overlap pool once per tick, and only when the
+            // pipeline can actually overlap something (the None ->
+            // global fallback must not spawn the global pool on serial
+            // or single-shard serves).
+            let overlap_pool = if self.pipeline && n_shards > 1 {
+                Some(self.pool.clone().unwrap_or_else(WorkerPool::global))
+            } else {
+                None
+            };
             for s in 0..n_shards {
-                self.shards[s].shard_blocks(&act_ids, &mut x)?;
+                let (head_shards, tail_shards) = self.shards.split_at_mut(s + 1);
+                let cur = &mut head_shards[s];
+                match overlap_pool.as_ref().zip(tail_shards.first()) {
+                    Some((worker_pool, nx)) => {
+                        let (computed, prefetch) = worker_pool.scope(|scope| {
+                            let ctx = nx.prefetch_ctx();
+                            let overlap = scope.spawn(move || ctx.run());
+                            let computed = cur.shard_blocks(&act_ids, &mut x);
+                            (computed, overlap.join())
+                        });
+                        computed?;
+                        prefetch?;
+                    }
+                    None => cur.shard_blocks(&act_ids, &mut x)?,
+                }
                 if s + 1 < n_shards {
                     let bytes = (n * d * 2) as u64;
                     self.hops
@@ -438,6 +535,30 @@ impl ServingEngine for ShardedEngine {
                 });
             }
             self.last_logits = logits;
+
+            // Tick clock: charge the measured stage deltas onto both
+            // simulated models. Overlapped stages cost max, not sum.
+            let hop_dt = self.hops.simulated_seconds(Component::Transfer) - hops_before;
+            let stages: Vec<(f64, f64)> = self
+                .shards
+                .iter()
+                .zip(stages_before)
+                .map(|(shard, (d0, c0))| {
+                    let (d1, c1) = stage_seconds(shard);
+                    (d1 - d0, c1 - c0)
+                })
+                .collect();
+            let mut serial = hop_dt;
+            // Shard 0's decode cannot hide behind anything.
+            let mut pipelined = hop_dt + stages[0].0;
+            for (s, &(decode, compute)) in stages.iter().enumerate() {
+                serial += decode + compute;
+                let next_decode = stages.get(s + 1).map(|t| t.0).unwrap_or(0.0);
+                pipelined += compute.max(next_decode);
+            }
+            self.clock.serial_seconds += serial;
+            self.clock.pipelined_seconds += pipelined;
+            self.clock.ticks += 1;
         } else {
             self.last_logits.clear();
         }
@@ -515,6 +636,13 @@ impl ServingEngine for ShardedEngine {
         for shard in &mut self.shards {
             shard.set_decode_threads(threads);
         }
+    }
+
+    fn set_decode_pool(&mut self, pool: Arc<WorkerPool>) {
+        for shard in &mut self.shards {
+            shard.set_decode_pool(pool.clone());
+        }
+        self.pool = Some(pool);
     }
 
     fn decode_threads(&self) -> usize {

@@ -1,30 +1,40 @@
-//! Multi-threaded two-phase decompression (the paper's kernel on CPU
-//! threads).
+//! Multi-threaded two-phase decompression (the paper's kernel on the
+//! persistent CPU worker pool).
 //!
 //! [`crate::gpu_sim::kernel`] executes Algorithm 1 with block/thread
 //! fidelity; [`super::decompress`] is the fastest *single-stream*
 //! decoder. This module is the *parallel throughput* artifact: it runs
-//! the same two phases as the CUDA kernel, but fans the work out over a
-//! pool of OS threads so decode throughput scales with cores:
+//! the same two phases as the CUDA kernel, but fans the work out over
+//! the resident [`WorkerPool`] so decode throughput scales with cores:
 //!
 //! 1. **phase 1** — every thread-chunk of the encoded stream (the same
 //!    `n`-byte chunks the gap array indexes) is scanned to *count* the
-//!    codewords starting inside it; chunks are striped over the worker
-//!    pool;
+//!    codewords starting inside it; chunks are split into **stealable
+//!    stripes** submitted as pool tasks;
 //! 2. the per-chunk counts go through the **Blelloch exclusive scan**
 //!    ([`crate::gpu_sim::prefix_sum`]) to produce each chunk's output
 //!    position, cross-checked against the container's block output
 //!    positions;
-//! 3. **phase 2** — workers re-decode their chunks, writing assembled
-//!    BF16 values into disjoint slices of one preallocated output
-//!    buffer.
+//! 3. **phase 2** — pool tasks re-decode the chunk stripes, writing
+//!    assembled BF16 values into disjoint slices of one preallocated
+//!    output buffer. Each stripe's output window is derived from the
+//!    scan **positions** (never from which worker runs it), so work
+//!    stealing cannot move a single output bit.
+//!
+//! Workers are **not** spawned per call: both phases submit to a
+//! persistent pool ([`WorkerPool::global`] unless the caller passes
+//! one), mirroring the paper's resident-kernel discipline — per-call
+//! cost is a queue push, not a thread spawn/join round. Stripes are
+//! finer than one-per-worker, so a worker stuck on a long-code-dense
+//! stripe no longer serializes the block: idle workers steal the
+//! remaining stripes.
 //!
 //! Both phases decode with the sequential hot path's machinery (64-bit
 //! bit-buffer + multi-symbol [`FastTable`] windows, hierarchical-LUT
 //! fallback for long codes), so per-thread speed matches the sequential
 //! decoder and the output is **bit-for-bit identical** to
 //! [`super::decompress::decompress_sequential`] — enforced by the
-//! property suite and the CI losslessness gate.
+//! property suite, the pool stress suite, and the CI losslessness gate.
 
 use super::decompress::FastTable;
 use super::format::Df11Tensor;
@@ -32,7 +42,10 @@ use crate::bf16::Bf16;
 use crate::error::{Error, Result};
 use crate::gpu_sim::prefix_sum::blelloch_exclusive_scan;
 use crate::huffman::lut::HierarchicalLut;
+use crate::runtime::pool::{self, WorkerPool};
 use std::time::Instant;
+
+pub use crate::runtime::pool::auto_threads;
 
 /// Per-phase execution statistics for one parallel decompression.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -56,39 +69,36 @@ pub fn decompress_parallel(tensor: &Df11Tensor, threads: usize) -> Result<Vec<Bf
     Ok(out)
 }
 
-/// One worker per available core — the `--threads 0` auto default,
-/// shared by the serving engine and the CLI.
-pub fn auto_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-}
+/// Stripes submitted per effective worker: finer-than-one-per-worker
+/// granularity is what makes stealing effective — a long-code-dense
+/// stripe pins one worker while the others steal the rest.
+const STRIPES_PER_WORKER: usize = 4;
 
-/// Hard cap on spawned workers: beyond any real host's core count,
-/// extra workers only add spawn overhead (chunks are striped, so fewer
-/// workers than chunks is always valid).
-const MAX_WORKERS: usize = 64;
-
-/// Minimum elements per worker: below this, a worker's decode takes
-/// about as long as spawning it, so the pool width degrades toward 1
-/// for small tensors regardless of the request.
-const MIN_ELEMENTS_PER_WORKER: usize = 1024;
-
-/// Parallel two-phase decompression into a caller buffer.
+/// Parallel two-phase decompression into a caller buffer, on the
+/// crate-global persistent pool.
 ///
-/// `threads` is the requested worker width; `0` selects one worker
-/// per core ([`auto_threads`]). The width is clamped to `[1, chunks]`,
-/// to [`MAX_WORKERS`], and so each worker gets at least
-/// [`MIN_ELEMENTS_PER_WORKER`] elements. With an effective width of 1
-/// the pipeline still runs both phases (useful for equivalence
-/// testing). Workers are **scoped threads spawned per call**, not a
-/// persistent pool — cheap relative to decoding large tensors, but
-/// callers with many tiny tensors should prefer the sequential
-/// decoder (the serving engine applies exactly that cutoff).
+/// `threads` is the requested worker width hint; `0` selects the pool
+/// default. Clamping (chunk count, [`pool::MAX_WORKERS`],
+/// [`pool::MIN_ELEMENTS_PER_WORKER`]) lives in
+/// [`pool::effective_width`]. With an effective width of 1 the
+/// pipeline still runs both phases inline (useful for equivalence
+/// testing).
 pub fn decompress_parallel_into(
     tensor: &Df11Tensor,
     out: &mut [Bf16],
     threads: usize,
+) -> Result<ParallelStats> {
+    decompress_pooled_into(tensor, out, threads, &WorkerPool::global())
+}
+
+/// Parallel two-phase decompression on an explicit [`WorkerPool`] —
+/// the serving engine passes its configured pool; tests pass pools of
+/// pinned width/stealing configuration.
+pub fn decompress_pooled_into(
+    tensor: &Df11Tensor,
+    out: &mut [Bf16],
+    threads: usize,
+    pool: &WorkerPool,
 ) -> Result<ParallelStats> {
     if out.len() != tensor.num_elements() {
         return Err(Error::ShapeMismatch(format!(
@@ -113,51 +123,62 @@ pub fn decompress_parallel_into(
         return Err(Error::corrupt("container has elements but no chunks"));
     }
     let chunk_bits = (bytes_per_thread * 8) as u64;
-    let threads = match threads {
-        0 => auto_threads(),
+    // Resolve the width hint against the pool (0 = pool default); the
+    // single clamp in `pool::effective_width` handles chunk count,
+    // MAX_WORKERS, and small-tensor degradation. Stripes are finer than
+    // one per worker so idle workers can steal.
+    let hint = match threads {
+        0 => pool.width(),
         n => n,
     };
-    let max_by_size = (out.len() / MIN_ELEMENTS_PER_WORKER).max(1);
-    let width = threads.clamp(1, num_chunks).min(MAX_WORKERS);
-    let requested = width.min(max_by_size);
-    let chunks_per_worker = num_chunks.div_ceil(requested);
-    // Striping can need fewer workers than requested (9 chunks at 4
-    // requested stripe as 3+3+3); report what actually runs.
-    let workers = num_chunks.div_ceil(chunks_per_worker);
+    let width = pool::effective_width(hint, num_chunks, out.len()).min(pool.width());
+    let stripe_count = if width == 1 {
+        1
+    } else {
+        num_chunks.min(width * STRIPES_PER_WORKER)
+    };
+    let chunks_per_stripe = num_chunks.div_ceil(stripe_count);
 
-    // --- Phase 1: count codewords per chunk, striped over the pool. ---
+    // --- Phase 1: count codewords per chunk, stealable stripes. ---
     let t0 = Instant::now();
     let mut counts = vec![0u32; num_chunks];
     {
-        let mut stripes: Vec<(usize, &mut [u32])> = Vec::with_capacity(workers);
+        let mut stripes: Vec<(usize, &mut [u32])> = Vec::with_capacity(stripe_count);
         let mut rest: &mut [u32] = &mut counts;
         let mut base = 0usize;
         while !rest.is_empty() {
-            let take = chunks_per_worker.min(rest.len());
+            let take = chunks_per_stripe.min(rest.len());
             let (head, tail) = rest.split_at_mut(take);
             stripes.push((base, head));
             base += take;
             rest = tail;
         }
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::with_capacity(stripes.len());
-            for (base, stripe) in stripes {
-                handles.push(scope.spawn(move || -> Result<()> {
-                    for (j, slot) in stripe.iter_mut().enumerate() {
-                        let c = base + j;
-                        if let Some((start, end)) = chunk_span(c, chunk_bits, gaps[c], bit_len) {
-                            *slot = count_chunk(encoded, lut, fast, start, end)?;
-                        }
-                    }
-                    Ok(())
-                }));
-            }
-            for h in handles {
-                h.join()
-                    .map_err(|_| Error::Runtime("phase 1 worker panicked".into()))??;
+        let count_stripe = |base: usize, stripe: &mut [u32]| -> Result<()> {
+            for (j, slot) in stripe.iter_mut().enumerate() {
+                let c = base + j;
+                if let Some((start, end)) = chunk_span(c, chunk_bits, gaps[c], bit_len) {
+                    *slot = count_chunk(encoded, lut, fast, start, end)?;
+                }
             }
             Ok(())
-        })?;
+        };
+        if width == 1 {
+            for (base, stripe) in stripes {
+                count_stripe(base, stripe)?;
+            }
+        } else {
+            pool.scope(|scope| -> Result<()> {
+                let count_stripe = &count_stripe;
+                let mut handles = Vec::with_capacity(stripes.len());
+                for (base, stripe) in stripes {
+                    handles.push(scope.spawn(move || count_stripe(base, stripe)));
+                }
+                for h in handles {
+                    h.join()??;
+                }
+                Ok(())
+            })?;
+        }
     }
     let phase1_seconds = t0.elapsed().as_secs_f64();
 
@@ -182,8 +203,12 @@ pub fn decompress_parallel_into(
         }
     }
 
-    // --- Phase 2: decode chunks into disjoint output windows. ---
+    // --- Phase 2: decode chunk stripes into disjoint output windows.
+    //     Every window is *position-derived* (the scan fixes where each
+    //     stripe's output starts), so the result is identical no matter
+    //     which worker ends up decoding which stripe. ---
     let t1 = Instant::now();
+    let elements = out.len();
     {
         struct Job<'j> {
             lo: usize,
@@ -191,12 +216,12 @@ pub fn decompress_parallel_into(
             out: &'j mut [Bf16],
             sm: &'j [u8],
         }
-        let mut jobs: Vec<Job> = Vec::with_capacity(workers);
+        let mut jobs: Vec<Job> = Vec::with_capacity(stripe_count);
         let mut rest_out: &mut [Bf16] = out;
         let mut consumed = 0usize;
         let mut lo = 0usize;
         while lo < num_chunks {
-            let hi = (lo + chunks_per_worker).min(num_chunks);
+            let hi = (lo + chunks_per_stripe).min(num_chunks);
             let end_pos = if hi == num_chunks {
                 total as usize
             } else {
@@ -214,46 +239,53 @@ pub fn decompress_parallel_into(
             lo = hi;
         }
         let counts = &counts;
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::with_capacity(jobs.len());
-            for job in jobs {
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let Job { lo, hi, out, sm } = job;
-                    let mut off = 0usize;
-                    for c in lo..hi {
-                        let cnt = counts[c] as usize;
-                        if cnt == 0 {
-                            continue;
-                        }
-                        let (start, end) = chunk_span(c, chunk_bits, gaps[c], bit_len)
-                            .ok_or_else(|| Error::corrupt("counted chunk has empty span"))?;
-                        decode_chunk(
-                            encoded,
-                            lut,
-                            fast,
-                            start,
-                            end,
-                            &sm[off..off + cnt],
-                            &mut out[off..off + cnt],
-                        )?;
-                        off += cnt;
-                    }
-                    Ok(())
-                }));
-            }
-            for h in handles {
-                h.join()
-                    .map_err(|_| Error::Runtime("phase 2 worker panicked".into()))??;
+        let decode_stripe = |job: Job| -> Result<()> {
+            let Job { lo, hi, out, sm } = job;
+            let mut off = 0usize;
+            for c in lo..hi {
+                let cnt = counts[c] as usize;
+                if cnt == 0 {
+                    continue;
+                }
+                let (start, end) = chunk_span(c, chunk_bits, gaps[c], bit_len)
+                    .ok_or_else(|| Error::corrupt("counted chunk has empty span"))?;
+                decode_chunk(
+                    encoded,
+                    lut,
+                    fast,
+                    start,
+                    end,
+                    &sm[off..off + cnt],
+                    &mut out[off..off + cnt],
+                )?;
+                off += cnt;
             }
             Ok(())
-        })?;
+        };
+        if width == 1 {
+            for job in jobs {
+                decode_stripe(job)?;
+            }
+        } else {
+            pool.scope(|scope| -> Result<()> {
+                let decode_stripe = &decode_stripe;
+                let mut handles = Vec::with_capacity(jobs.len());
+                for job in jobs {
+                    handles.push(scope.spawn(move || decode_stripe(job)));
+                }
+                for h in handles {
+                    h.join()??;
+                }
+                Ok(())
+            })?;
+        }
     }
     let phase2_seconds = t1.elapsed().as_secs_f64();
 
     Ok(ParallelStats {
-        threads: workers,
+        threads: width,
         chunks: num_chunks,
-        elements: out.len(),
+        elements,
         phase1_seconds,
         phase2_seconds,
     })

@@ -41,12 +41,11 @@ pub mod nn;
 pub mod offload;
 pub mod proptest_lite;
 pub mod rng;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 
 pub use bf16::Bf16;
 pub use codec::{Codec, CodecId, CompressedTensor, DecodeOpts};
 pub use container::{ContainerReader, ContainerWriter};
-pub use dfloat11::parallel::auto_threads;
 pub use dfloat11::{Df11Model, Df11Tensor};
 pub use error::{Error, Result};
+pub use runtime::pool::{auto_threads, WorkerPool};

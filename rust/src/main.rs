@@ -31,6 +31,7 @@ use dfloat11::gpu_sim::Device;
 use dfloat11::model::init::generate_model_weights;
 use dfloat11::model::{zoo, ModelConfig};
 use dfloat11::multi_gpu::{min_gpus, plan_layer_sharding, ShardFormat};
+use dfloat11::WorkerPool;
 use std::path::Path;
 
 fn usage() -> ! {
@@ -51,8 +52,11 @@ fn usage() -> ! {
                    --trace PATH  replay an arrival-stamped workload file\n\
                                  (lines: `arrival max_new tok,tok,... [eos]`)\n\
                    --stagger S   synthetic arrivals spaced S seconds apart\n\
-                   --threads T   decompression worker threads (0 = one per core);\n\
+                   --threads T   decode worker-pool width (0 = shared per-core\n\
+                                 pool; T > 0 builds a dedicated persistent pool);\n\
                                  block i+1 is decompressed while block i computes\n\
+                   --pipeline on|off  overlap shard s+1's block decode with\n\
+                                 shard s's compute (default on; needs --shards)\n\
                    --from PATH   serve weights out of a .df11 container\n\
                                  (pass the matching --model/--scale)\n\
          estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
@@ -168,6 +172,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.get_parse_or("shards", 1usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
     let cfg = scaled_config(args, 24)?;
+    // Shard overlap only exists with >1 shard; an explicit --pipeline
+    // on a single-box serve would silently do nothing, so reject it
+    // (same convention as the other meaningless flag combinations).
+    if args.get("pipeline").is_some() && shards <= 1 {
+        return Err(Error::InvalidArgument(
+            "--pipeline overlaps shard decode with the previous shard's compute; \
+             it needs --shards N (N > 1)"
+                .into(),
+        ));
+    }
+    let pipeline = match args.get_or("pipeline", "on").as_str() {
+        "on" | "true" => true,
+        "off" | "false" => false,
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown --pipeline {other} (want on|off)"
+            )))
+        }
+    };
     // `--format` is the sharded-weights knob (bf16|df11); `--mode` the
     // single-box one (bf16|df11|offload). They are aliases for the
     // weight format, so passing both would make one silently win —
@@ -203,7 +226,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         if shards > 1 {
             let plan = serve_plan(args, &cfg, shards, ShardFormat::Df11)?;
-            let engine = ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
+            let mut engine = ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
+            engine.set_pipeline(pipeline);
             return run_server(engine, args, &cfg);
         }
         let engine = Engine::build_from_container(&cfg, Path::new(from))?;
@@ -220,7 +244,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         };
         let plan = serve_plan(args, &cfg, shards, format)?;
-        let engine = ShardedEngine::build(&cfg, seed, mode, &plan)?;
+        let mut engine = ShardedEngine::build(&cfg, seed, mode, &plan)?;
+        engine.set_pipeline(pipeline);
         return run_server(engine, args, &cfg);
     }
     let mode = match mode_name.as_str() {
@@ -269,6 +294,12 @@ fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -
             )))
         }
     };
+    // `--threads T` builds a dedicated persistent pool of that width;
+    // 0 keeps the crate-global per-core pool (the hint then defaults to
+    // the pool's full width).
+    if threads > 0 {
+        engine.set_decode_pool(WorkerPool::new(threads));
+    }
     engine.set_decode_threads(threads);
     println!(
         "serving {} ({} params, source {}, {policy:?} scheduler, {slots} slots, {} decode \
@@ -416,11 +447,15 @@ fn cmd_decode(args: &Args) -> Result<()> {
         .get("in")
         .or_else(|| args.positional(1))
         .ok_or_else(|| Error::InvalidArgument("pass a path or --in PATH".into()))?;
-    let threads = match args.get_parse_or("threads", 0usize)? {
-        0 => dfloat11::auto_threads(),
-        n => n,
+    // `--threads T` builds a dedicated persistent pool; 0 uses the
+    // shared per-core pool at its full width.
+    let threads = args.get_parse_or("threads", 0usize)?;
+    let opts = if threads > 0 {
+        DecodeOpts::with_pool(threads, WorkerPool::new(threads))
+    } else {
+        DecodeOpts::with_threads(0)
     };
-    let opts = DecodeOpts { threads };
+    let threads = opts.width();
     let reader = ContainerReader::open(Path::new(path))?;
     let verify = args.flag("verify");
     // Regenerate the source weights when verifying bit-identity.

@@ -1,176 +1,20 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX artifacts.
-//!
-//! The compile path (`make artifacts`) runs Python once; from then on
-//! this module is the only bridge to the model graph: it loads the HLO
-//! *text* artifacts (xla_extension 0.5.1 rejects jax>=0.5 serialized
-//! protos — see /opt/xla-example/README.md), compiles them on the PJRT
-//! CPU client, and executes them with concrete literals. Python never
-//! runs on the request path.
+//! Runtime substrates: the persistent decode worker pool (always
+//! available — it *is* the crate's decode execution engine) and the
+//! PJRT bridge to AOT-compiled JAX artifacts (feature-gated on `pjrt`,
+//! which needs the vendored `xla` bindings).
 
+pub mod pool;
+
+pub use pool::{PoolScope, TaskHandle, WorkerPool};
+
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use executor::{ArtifactMeta, XlaBackend};
-
-use crate::error::{Error, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-
-/// A PJRT client + cache of compiled executables, keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// CPU-PJRT runtime over an artifact directory.
-    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(Runtime {
-            client,
-            artifact_dir: artifact_dir.as_ref().to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-        })
-    }
-
-    /// Platform name reported by PJRT.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Artifact directory.
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
-    }
-
-    /// True if the named artifact file exists.
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            return Err(Error::MissingArtifact {
-                path: path.display().to_string(),
-            });
-        }
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(wrap)?;
-        let exe = Rc::new(exe);
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute an artifact with the given input literals; returns the
-    /// decomposed output tuple (artifacts are lowered with
-    /// `return_tuple=True`).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
-        let literal = result[0][0].to_literal_sync().map_err(wrap)?;
-        literal.to_tuple().map_err(wrap)
-    }
-}
-
-/// Build an f32 literal from a flat slice + dims.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let numel: i64 = dims.iter().product();
-    if numel as usize != data.len() {
-        return Err(Error::ShapeMismatch(format!(
-            "literal dims {dims:?} vs data len {}",
-            data.len()
-        )));
-    }
-    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
-}
-
-/// Build an i32 literal.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
-}
-
-/// Scalar i32 literal.
-pub fn literal_scalar_i32(v: i32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Extract an f32 vector from a literal.
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(wrap)
-}
-
-pub(crate) fn wrap(e: xla::Error) -> Error {
-    Error::Runtime(e.to_string())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Tests that need artifacts are gated on their presence so
-    /// `cargo test` passes before `make artifacts` (CI ordering), while
-    /// the Makefile default target always builds artifacts first.
-    fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if dir.join("meta.json").exists() {
-            Some(Runtime::cpu(dir).expect("pjrt cpu client"))
-        } else {
-            None
-        }
-    }
-
-    #[test]
-    fn pjrt_client_boots() {
-        let rt = Runtime::cpu("artifacts").expect("client");
-        assert!(!rt.platform().is_empty());
-    }
-
-    #[test]
-    fn missing_artifact_is_reported() {
-        let rt = Runtime::cpu("artifacts").unwrap();
-        match rt.executable("no_such_artifact").map(|_| ()) {
-            Err(Error::MissingArtifact { path }) => assert!(path.contains("no_such_artifact")),
-            other => panic!("expected MissingArtifact, got {other:?}"),
-        }
-    }
-
-    #[test]
-    fn embed_artifact_gathers_rows() {
-        let Some(rt) = runtime() else { return };
-        let meta = executor::ArtifactMeta::load(rt.artifact_dir()).unwrap();
-        let (v, d) = (meta.vocab_size, meta.d_model);
-        let emb: Vec<f32> = (0..v * d).map(|i| (i % 1000) as f32).collect();
-        let tokens = [3i32, 7];
-        let out = rt
-            .run(
-                "embed_b2",
-                &[
-                    literal_i32(&tokens, &[2]).unwrap(),
-                    literal_f32(&emb, &[v as i64, d as i64]).unwrap(),
-                ],
-            )
-            .unwrap();
-        let x = literal_to_f32(&out[0]).unwrap();
-        assert_eq!(x.len(), 2 * d);
-        assert_eq!(x[0], ((3 * d) % 1000) as f32);
-        assert_eq!(x[d], ((7 * d) % 1000) as f32);
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
-        assert_eq!(literal_to_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
-        assert!(literal_f32(&[1.0], &[2]).is_err());
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{
+    literal_f32, literal_i32, literal_scalar_i32, literal_to_f32, Runtime,
+};

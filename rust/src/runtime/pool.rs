@@ -1,0 +1,653 @@
+//! The crate-wide persistent decode worker pool.
+//!
+//! Every layer that fans work out — the two-phase DF11 decompression
+//! pipeline, the engine's one-block-ahead prefetch, and the sharded
+//! engine's shard-overlap pipeline — used to pay a full
+//! `std::thread::scope` spawn/join round per call. This module replaces
+//! all of those with one [`WorkerPool`]: OS threads spawned **once**
+//! (sized by [`auto_threads`], overridable), fed through per-worker
+//! deques with work stealing, shut down gracefully when the pool is
+//! dropped. The design mirrors the paper's GPU kernel discipline: the
+//! decoder stays *resident* and per-call cost is a queue push, not a
+//! thread spawn.
+//!
+//! ## Execution model
+//!
+//! Work is submitted through [`WorkerPool::scope`], which hands the
+//! caller a [`PoolScope`]. Tasks spawned on a scope may borrow from the
+//! caller's stack (like `std::thread::scope`); the scope blocks until
+//! every task has finished before returning, which is what makes the
+//! internal lifetime erasure sound. Each [`PoolScope::spawn`] returns a
+//! [`TaskHandle`] whose `join` yields the task's result — or a typed
+//! error if the task panicked (**panic isolation**: a panicking task
+//! never takes a worker thread down; the worker catches the unwind,
+//! records it in the handle, and moves on to the next job).
+//!
+//! ## Scheduling
+//!
+//! * Tasks spawned from **outside** the pool are distributed
+//!   round-robin across the per-worker deques.
+//! * Tasks spawned from **inside** a pool worker (nested scopes — e.g.
+//!   a shard-pipeline task that itself runs the two-phase decode) go to
+//!   that worker's own deque, newest-first, so a blocked worker can
+//!   always drain its own subtasks and nesting cannot deadlock.
+//! * Idle workers **steal** the oldest task from another worker's
+//!   deque (chunk-granularity stealing: the DF11 pipeline submits many
+//!   small chunk stripes per block, so a worker stuck on a
+//!   long-code-dense stripe no longer serializes the whole block —
+//!   its remaining stripes are stolen by whoever finishes first).
+//! * Threads **waiting** on a scope or handle help out by running
+//!   queued tasks instead of blocking, so a width-1 pool still makes
+//!   progress under arbitrarily nested scopes.
+//!
+//! Stealing can be disabled per pool ([`WorkerPool::with_config`]) —
+//! used by the scheduling-equivalence tests to prove bit-identity is
+//! placement-independent, and as the control arm of the fairness
+//! benchmarks.
+
+use crate::error::{Error, Result};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::Duration;
+
+/// Hard cap on pool workers: beyond any real host's core count, extra
+/// workers only add scheduling overhead (work is striped, so fewer
+/// workers than tasks is always valid).
+pub const MAX_WORKERS: usize = 64;
+
+/// Minimum elements per decode worker: below this, coordinating a
+/// worker costs about as much as the decode itself, so the effective
+/// width degrades toward 1 for small tensors regardless of the request.
+pub const MIN_ELEMENTS_PER_WORKER: usize = 1024;
+
+static AUTO_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// One worker per available core — the `--threads 0` auto default.
+/// Cached in a `OnceLock`: `available_parallelism` is a syscall on some
+/// platforms and this is consulted on every block fetch.
+pub fn auto_threads() -> usize {
+    *AUTO_THREADS.get_or_init(|| {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// The one place decode widths are clamped (formerly duplicated in
+/// `dfloat11::parallel`): a `requested` width of 0 means
+/// [`auto_threads`]; the result is clamped to `[1, work_items]`, to
+/// [`MAX_WORKERS`], and so each worker gets at least
+/// [`MIN_ELEMENTS_PER_WORKER`] elements.
+pub fn effective_width(requested: usize, work_items: usize, elements: usize) -> usize {
+    let requested = match requested {
+        0 => auto_threads(),
+        n => n,
+    };
+    let by_size = (elements / MIN_ELEMENTS_PER_WORKER).max(1);
+    requested
+        .clamp(1, work_items.max(1))
+        .min(MAX_WORKERS)
+        .min(by_size)
+}
+
+/// A queued unit of work (lifetime-erased; see the safety notes on
+/// [`PoolScope::spawn`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    /// Upper bound on queued jobs (incremented on push, decremented
+    /// after a successful pop) — workers only sleep when it reaches 0.
+    ready: usize,
+    shutdown: bool,
+}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    /// One deque per worker. Owners pop newest-first (locality for
+    /// nested tasks); thieves and external helpers steal oldest-first.
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    state: Mutex<PoolState>,
+    work_cond: Condvar,
+    /// Whether idle workers may take jobs from other workers' deques.
+    stealing: bool,
+    /// Round-robin cursor for external submissions.
+    next_deque: AtomicUsize,
+    /// Workers currently running (drops to 0 after shutdown joins).
+    live_workers: AtomicUsize,
+}
+
+thread_local! {
+    /// `(pool identity, worker index)` for pool worker threads.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+impl Shared {
+    fn id(&self) -> usize {
+        self as *const Shared as usize
+    }
+
+    /// The calling thread's worker index in *this* pool, if any.
+    fn current_worker(&self) -> Option<usize> {
+        WORKER.with(|w| match w.get() {
+            Some((pool, idx)) if pool == self.id() => Some(idx),
+            _ => None,
+        })
+    }
+
+    fn push(&self, job: Job) {
+        let idx = match self.current_worker() {
+            // Nested spawns stay on the spawning worker's deque so it
+            // can always drain them while waiting (no deadlock even
+            // with stealing disabled).
+            Some(i) => i,
+            None => self.next_deque.fetch_add(1, Ordering::Relaxed) % self.deques.len(),
+        };
+        // Increment `ready` strictly *before* the job becomes visible:
+        // a pop always happens after its push, so every decrement in
+        // `note_taken` is matched by an earlier increment and the
+        // counter can never drift permanently above the true queue
+        // depth (transient overcounts between the increment and the
+        // push only cause one bounded timed wait).
+        {
+            let mut st = self.state.lock().expect("pool state poisoned");
+            st.ready += 1;
+        }
+        self.deques[idx].lock().expect("pool deque poisoned").push_back(job);
+        self.work_cond.notify_one();
+    }
+
+    fn note_taken(&self) {
+        let mut st = self.state.lock().expect("pool state poisoned");
+        st.ready = st.ready.saturating_sub(1);
+    }
+
+    /// Take one job: own deque first (newest), then — when stealing is
+    /// permitted — the oldest job of another worker's deque. External
+    /// threads (`me == None`) only ever steal.
+    fn find_job(&self, me: Option<usize>, allow_steal: bool) -> Option<Job> {
+        if let Some(i) = me {
+            if let Some(j) = self.deques[i].lock().expect("pool deque poisoned").pop_back() {
+                self.note_taken();
+                return Some(j);
+            }
+        }
+        if !allow_steal {
+            return None;
+        }
+        let n = self.deques.len();
+        let start = me.map(|i| i + 1).unwrap_or(0);
+        for k in 0..n {
+            let t = (start + k) % n;
+            if Some(t) == me {
+                continue;
+            }
+            if let Some(j) = self.deques[t].lock().expect("pool deque poisoned").pop_front() {
+                self.note_taken();
+                return Some(j);
+            }
+        }
+        None
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((shared.id(), idx))));
+    loop {
+        if let Some(job) = shared.find_job(Some(idx), shared.stealing) {
+            // Panic isolation lives inside the job wrapper (the unwind
+            // is caught and recorded in the task's slot), so `job()`
+            // cannot take this worker down.
+            job();
+            continue;
+        }
+        let mut st = shared.state.lock().expect("pool state poisoned");
+        if st.shutdown {
+            break;
+        }
+        if st.ready == 0 {
+            let _unused = shared.work_cond.wait(st).expect("pool state poisoned");
+        } else {
+            // Jobs exist somewhere we may not take from (stealing off,
+            // or a racing pop); timed wait instead of a hot spin.
+            let _unused = shared
+                .work_cond
+                .wait_timeout(st, Duration::from_micros(200))
+                .expect("pool state poisoned");
+        }
+    }
+    shared.live_workers.fetch_sub(1, Ordering::Release);
+}
+
+/// A persistent worker pool. Construct once (or use the crate-wide
+/// [`WorkerPool::global`]); workers live until the pool is dropped.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+/// A handle onto a pool's internals that survives the pool itself —
+/// lets tests assert every worker actually exited after drop.
+pub struct WorkerProbe {
+    shared: Arc<Shared>,
+}
+
+impl WorkerProbe {
+    /// Workers still running.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::Acquire)
+    }
+}
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// Width the global pool is configured to use (`DF11_POOL_WIDTH`
+/// override, else one worker per core).
+fn configured_global_width() -> usize {
+    std::env::var("DF11_POOL_WIDTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&w| w > 0)
+        .unwrap_or_else(auto_threads)
+}
+
+impl WorkerPool {
+    /// A pool of `width` workers with stealing enabled.
+    pub fn new(width: usize) -> Arc<WorkerPool> {
+        Self::with_config(width, true)
+    }
+
+    /// A pool of `width` workers (clamped to `[1, MAX_WORKERS]`),
+    /// optionally with stealing disabled (each task then runs on the
+    /// worker whose deque it was pushed to).
+    pub fn with_config(width: usize, stealing: bool) -> Arc<WorkerPool> {
+        let width = width.clamp(1, MAX_WORKERS);
+        let shared = Arc::new(Shared {
+            deques: (0..width).map(|_| Mutex::new(VecDeque::new())).collect(),
+            state: Mutex::new(PoolState {
+                ready: 0,
+                shutdown: false,
+            }),
+            work_cond: Condvar::new(),
+            stealing,
+            next_deque: AtomicUsize::new(0),
+            live_workers: AtomicUsize::new(width),
+        });
+        let handles = (0..width)
+            .map(|i| {
+                let s = shared.clone();
+                thread::Builder::new()
+                    .name(format!("df11-pool-{i}"))
+                    .spawn(move || worker_main(s, i))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Arc::new(WorkerPool {
+            shared,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    /// The crate-wide shared pool: spawned on first use, sized by
+    /// [`auto_threads`] (override with `DF11_POOL_WIDTH`), shared by
+    /// every codec, engine, and shard pipeline that is not handed an
+    /// explicit pool.
+    pub fn global() -> Arc<WorkerPool> {
+        GLOBAL
+            .get_or_init(|| WorkerPool::new(configured_global_width()))
+            .clone()
+    }
+
+    /// The width the global pool has — or would have — **without**
+    /// spawning it. Lets reporting paths (`serve`'s startup banner)
+    /// resolve the `threads = 0` sentinel before any decode has run.
+    pub fn global_width() -> usize {
+        match GLOBAL.get() {
+            Some(pool) => pool.width(),
+            None => configured_global_width().clamp(1, MAX_WORKERS),
+        }
+    }
+
+    /// Worker count.
+    pub fn width(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Whether idle workers steal from other workers' deques.
+    pub fn stealing(&self) -> bool {
+        self.shared.stealing
+    }
+
+    /// Workers currently running.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::Acquire)
+    }
+
+    /// A probe that outlives the pool (for shutdown tests).
+    pub fn probe(&self) -> WorkerProbe {
+        WorkerProbe {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Run `f` with a [`PoolScope`]: tasks it spawns may borrow from
+    /// the enclosing stack, and the scope waits for all of them (the
+    /// waiting thread helps execute queued tasks) before returning.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
+    {
+        let scope = PoolScope {
+            shared: self.shared.as_ref(),
+            outstanding: Arc::new((Mutex::new(0usize), Condvar::new())),
+            scope_lt: PhantomData,
+            env_lt: PhantomData,
+        };
+        // The closure result is captured before the barrier so a panic
+        // inside `f` still waits for in-flight tasks (they may borrow
+        // the caller's stack) before unwinding.
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.wait_all();
+        match result {
+            Ok(r) => r,
+            Err(p) => resume_unwind(p),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+        }
+        self.work_notify_all();
+        for h in self.handles.lock().expect("pool handles poisoned").drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl WorkerPool {
+    fn work_notify_all(&self) {
+        self.shared.work_cond.notify_all();
+    }
+}
+
+enum SlotState<T> {
+    Pending,
+    Done(T),
+    Panicked(String),
+    Taken,
+}
+
+struct TaskSlot<T> {
+    state: Mutex<SlotState<T>>,
+    cond: Condvar,
+}
+
+/// A scope over borrowed data, analogous to `std::thread::Scope` but
+/// executing on the persistent pool.
+pub struct PoolScope<'scope, 'env: 'scope> {
+    shared: &'scope Shared,
+    /// Tasks spawned and not yet finished (the scope-exit barrier).
+    outstanding: Arc<(Mutex<usize>, Condvar)>,
+    scope_lt: PhantomData<&'scope mut &'scope ()>,
+    env_lt: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> PoolScope<'scope, 'env> {
+    /// Submit a task to the pool. The closure may borrow anything that
+    /// outlives the scope; its result (or panic) is retrieved through
+    /// the returned [`TaskHandle`].
+    pub fn spawn<T, F>(&'scope self, f: F) -> TaskHandle<'scope, T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        let slot = Arc::new(TaskSlot {
+            state: Mutex::new(SlotState::Pending),
+            cond: Condvar::new(),
+        });
+        *self.outstanding.0.lock().expect("scope counter poisoned") += 1;
+        let task_slot = slot.clone();
+        let outstanding = self.outstanding.clone();
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            let res = catch_unwind(AssertUnwindSafe(f));
+            {
+                let mut st = task_slot.state.lock().expect("task slot poisoned");
+                *st = match res {
+                    Ok(v) => SlotState::Done(v),
+                    Err(p) => SlotState::Panicked(panic_message(&p)),
+                };
+            }
+            task_slot.cond.notify_all();
+            // Release this side's slot reference *before* the barrier
+            // decrement: if the handle was dropped unjoined (its Arc is
+            // gone once the scope closure returns), the stored result —
+            // which may borrow scope data — is destroyed here, strictly
+            // before `wait_all` can observe the counter at zero and let
+            // the scope return.
+            drop(task_slot);
+            let (lock, cond) = &*outstanding;
+            let mut n = lock.lock().expect("scope counter poisoned");
+            *n -= 1;
+            if *n == 0 {
+                cond.notify_all();
+            }
+        });
+        // SAFETY: the job only borrows data outliving 'scope, and both
+        // `wait_all` (run unconditionally at scope exit, even when the
+        // scope closure panics) and `TaskHandle::join` guarantee the
+        // job has fully completed before the scope returns — so the
+        // erased lifetime can never be observed dangling. The scope
+        // itself lives in `WorkerPool::scope`'s frame and cannot be
+        // leaked. This is the same argument `std::thread::scope` makes.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        self.shared.push(job);
+        TaskHandle {
+            slot,
+            shared: self.shared,
+            _lt: PhantomData,
+        }
+    }
+
+    /// Block until every spawned task has finished, executing queued
+    /// tasks while waiting.
+    fn wait_all(&self) {
+        loop {
+            if *self.outstanding.0.lock().expect("scope counter poisoned") == 0 {
+                return;
+            }
+            let me = self.shared.current_worker();
+            if let Some(job) = self.shared.find_job(me, self.shared.stealing) {
+                job();
+                continue;
+            }
+            let g = self.outstanding.0.lock().expect("scope counter poisoned");
+            if *g != 0 {
+                // Timed wait: the last task's notify could race our
+                // help attempt, and new stealable work may appear.
+                let _unused = self
+                    .outstanding
+                    .1
+                    .wait_timeout(g, Duration::from_micros(200))
+                    .expect("scope counter poisoned");
+            }
+        }
+    }
+}
+
+/// The join handle of one pool task.
+pub struct TaskHandle<'scope, T> {
+    slot: Arc<TaskSlot<T>>,
+    shared: &'scope Shared,
+    _lt: PhantomData<&'scope ()>,
+}
+
+impl<T> TaskHandle<'_, T> {
+    /// Wait for the task, executing other queued tasks while waiting.
+    /// A panicking task surfaces as a typed error here — the worker
+    /// that ran it survives.
+    pub fn join(self) -> Result<T> {
+        loop {
+            {
+                let mut st = self.slot.state.lock().expect("task slot poisoned");
+                match std::mem::replace(&mut *st, SlotState::Taken) {
+                    SlotState::Done(v) => return Ok(v),
+                    SlotState::Panicked(msg) => {
+                        return Err(Error::Runtime(format!("pool task panicked: {msg}")))
+                    }
+                    SlotState::Pending => *st = SlotState::Pending,
+                    SlotState::Taken => unreachable!("task joined twice"),
+                }
+            }
+            let me = self.shared.current_worker();
+            if let Some(job) = self.shared.find_job(me, self.shared.stealing) {
+                job();
+                continue;
+            }
+            let st = self.slot.state.lock().expect("task slot poisoned");
+            if matches!(*st, SlotState::Pending) {
+                let _unused = self
+                    .slot
+                    .cond
+                    .wait_timeout(st, Duration::from_micros(200))
+                    .expect("task slot poisoned");
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_runs_borrowing_tasks_to_completion() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 64];
+        pool.scope(|scope| {
+            let mut handles = Vec::new();
+            for (i, chunk) in data.chunks_mut(8).enumerate() {
+                handles.push(scope.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = (i * 8 + j) as u64;
+                    }
+                    i
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                assert_eq!(h.join().unwrap(), i);
+            }
+        });
+        let expect: Vec<u64> = (0..64).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn implicit_scope_barrier_waits_for_unjoined_tasks() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicU64::new(0);
+        pool.scope(|scope| {
+            for _ in 0..32 {
+                scope.spawn(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // No joins: the scope exit must still wait for all 32.
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panics_are_isolated_and_reported() {
+        let pool = WorkerPool::new(2);
+        let err = pool.scope(|scope| {
+            let bad = scope.spawn(|| -> usize { panic!("boom {}", 7) });
+            bad.join().unwrap_err()
+        });
+        assert!(err.to_string().contains("boom 7"), "got {err}");
+        // The pool keeps working after a task panic.
+        let ok = pool.scope(|scope| scope.spawn(|| 41 + 1).join().unwrap());
+        assert_eq!(ok, 42);
+        assert_eq!(pool.live_workers(), 2, "panic must not kill workers");
+    }
+
+    #[test]
+    fn nested_scopes_make_progress_at_width_one() {
+        let pool = WorkerPool::with_config(1, false);
+        let total = pool.scope(|outer| {
+            let h = outer.spawn(|| {
+                // Runs on the single worker, which then blocks on an
+                // inner scope — it must drain its own deque to finish.
+                let inner: u64 = pool_sum(&pool, 10);
+                inner
+            });
+            h.join().unwrap()
+        });
+        assert_eq!(total, 45);
+    }
+
+    fn pool_sum(pool: &WorkerPool, n: u64) -> u64 {
+        pool.scope(|scope| {
+            let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || i)).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        })
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = WorkerPool::new(6);
+        let probe = pool.probe();
+        assert_eq!(pool.live_workers(), 6);
+        pool.scope(|scope| {
+            for _ in 0..12 {
+                scope.spawn(|| std::thread::yield_now());
+            }
+        });
+        drop(pool);
+        assert_eq!(probe.live_workers(), 0, "drop must join all workers");
+    }
+
+    #[test]
+    fn effective_width_clamps_in_one_place() {
+        assert_eq!(effective_width(8, 3, 1 << 20), 3, "clamped by work items");
+        assert_eq!(effective_width(8, 100, 2048), 2, "clamped by elements");
+        assert_eq!(effective_width(1, 100, 1 << 20), 1);
+        assert_eq!(effective_width(0, 1 << 20, 1 << 30), auto_threads().min(MAX_WORKERS));
+        assert_eq!(effective_width(1000, 1 << 20, 1 << 30), MAX_WORKERS);
+        assert_eq!(effective_width(4, 0, 0), 1, "degenerate input still yields one worker");
+    }
+
+    #[test]
+    fn stealing_disabled_still_completes_external_work() {
+        let pool = WorkerPool::with_config(2, false);
+        assert!(!pool.stealing());
+        assert_eq!(pool_sum(&pool, 64), (0..64).sum());
+    }
+
+    #[test]
+    fn auto_threads_is_cached_and_positive() {
+        let a = auto_threads();
+        assert!(a >= 1);
+        assert_eq!(a, auto_threads());
+    }
+}

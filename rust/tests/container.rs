@@ -276,12 +276,12 @@ fn crc_corruption_in_one_shards_slice_is_isolated() {
     let mut out = Vec::new();
     for name in ["embed.w", "block.0.w"] {
         healthy
-            .fetch_into(name, 1, &mut staging, &mut out)
+            .fetch_into(name, &DecodeOpts::default(), &mut staging, &mut out)
             .unwrap_or_else(|e| panic!("healthy shard tensor {name}: {e}"));
         assert!(!out.is_empty());
     }
     let err = poisoned
-        .fetch_into("block.1.w", 1, &mut staging, &mut out)
+        .fetch_into("block.1.w", &DecodeOpts::default(), &mut staging, &mut out)
         .unwrap_err();
     assert!(
         matches!(err, Error::InvalidContainer(_)),
@@ -308,7 +308,7 @@ fn mixed_codec_container_roundtrips() {
     assert_eq!(group.tensors.len(), 3);
     for (name, t) in &group.tensors {
         assert_eq!(
-            t.decompress(&DecodeOpts { threads: 2 }).unwrap(),
+            t.decompress(&DecodeOpts::with_threads(2)).unwrap(),
             ws,
             "codec {name}"
         );

@@ -128,6 +128,31 @@ fn golden_weights_survive_every_codec_path() {
         .collect();
     assert_eq!(crc_of(&parallel), GOLDEN_WEIGHTS_CRC32, "df11 parallel path");
 
+    // The same pipeline through explicit persistent pools: every
+    // width × stealing configuration reproduces the pinned CRC (work
+    // stealing may move *where* a stripe decodes, never a bit of it).
+    for width in [1usize, 2, 8] {
+        for stealing in [true, false] {
+            let pool = dfloat11::WorkerPool::with_config(width, stealing);
+            let pooled: Vec<Vec<Bf16>> = df11
+                .iter()
+                .map(|t| {
+                    let mut out = vec![Bf16::from_bits(0); t.num_elements()];
+                    dfloat11::dfloat11::parallel::decompress_pooled_into(
+                        t, &mut out, width, &pool,
+                    )
+                    .unwrap();
+                    out
+                })
+                .collect();
+            assert_eq!(
+                crc_of(&pooled),
+                GOLDEN_WEIGHTS_CRC32,
+                "pooled path width={width} stealing={stealing}"
+            );
+        }
+    }
+
     // rANS baseline codec.
     let rans: Vec<Vec<Bf16>> = source
         .iter()
@@ -157,7 +182,7 @@ fn golden_weights_survive_every_codec_path() {
         by_index[i] = reader
             .read_tensor_at(i)
             .unwrap()
-            .decompress(&DecodeOpts { threads: 2 })
+            .decompress(&DecodeOpts::with_threads(2))
             .unwrap();
     }
     assert_eq!(

@@ -1,0 +1,194 @@
+//! The persistent decode-runtime suite: the pooled two-phase pipeline
+//! must be bit-identical to the sequential decoder across randomized
+//! tensor sizes × pool widths × stealing configurations, pool workers
+//! must never leak across repeated engine construction, and task
+//! panics must stay isolated to the task that raised them.
+
+use dfloat11::bf16::Bf16;
+use dfloat11::coordinator::{Engine, WeightMode};
+use dfloat11::dfloat11::decompress::decompress_sequential;
+use dfloat11::dfloat11::parallel::decompress_pooled_into;
+use dfloat11::model::ModelConfig;
+use dfloat11::rng::Rng;
+use dfloat11::runtime::pool::WorkerPool;
+use dfloat11::Df11Tensor;
+
+fn gaussian(n: usize, seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    xs.into_iter().map(Bf16::from_f32).collect()
+}
+
+/// The pool stress matrix: randomized tensor sizes × widths 1/2/8 ×
+/// stealing enabled/disabled, every cell bit-identical to
+/// `decompress_sequential`. Output windows are position-derived, so no
+/// placement or stealing decision may move a single bit.
+#[test]
+fn pooled_decode_matches_sequential_across_widths_and_stealing() {
+    let mut rng = Rng::new(0xD_F11);
+    let mut sizes: Vec<usize> = (0..10).map(|_| 1 + rng.next_index(120_000)).collect();
+    // Always include the degenerate and cutoff-straddling corners.
+    sizes.extend([1, 2, 1023, 1024, 32 * 1024, 32 * 1024 + 1]);
+    let pools: Vec<_> = [1usize, 2, 8]
+        .iter()
+        .flat_map(|&w| {
+            [
+                WorkerPool::with_config(w, true),
+                WorkerPool::with_config(w, false),
+            ]
+        })
+        .collect();
+    for (i, &n) in sizes.iter().enumerate() {
+        let ws = gaussian(n, 1000 + i as u64);
+        let t = Df11Tensor::compress(&ws).unwrap();
+        let seq = decompress_sequential(&t).unwrap();
+        assert_eq!(seq, ws, "sequential decode must roundtrip (n={n})");
+        for pool in &pools {
+            for hint in [0usize, 1, pool.width()] {
+                let mut out = vec![Bf16::from_bits(0); n];
+                let stats = decompress_pooled_into(&t, &mut out, hint, pool).unwrap();
+                assert_eq!(
+                    out,
+                    seq,
+                    "n={n} width={} stealing={} hint={hint}",
+                    pool.width(),
+                    pool.stealing()
+                );
+                assert!(stats.threads >= 1 && stats.threads <= pool.width());
+            }
+        }
+    }
+}
+
+/// Long-code-dense streams are the stealing stress case: deep codes
+/// cluster decode work into a few stripes, so the work-stealing path
+/// actually executes — and must still be bit-exact.
+#[test]
+fn stealing_survives_long_code_dense_streams() {
+    // Exact power-of-two frequencies give code lengths 1..=18; the deep
+    // symbols cluster in the second half of the stream.
+    let mut exps = Vec::new();
+    for i in 0..18u32 {
+        let sym = 60 + i as u8;
+        for _ in 0..(1usize << (17 - i)) {
+            exps.push(sym);
+        }
+    }
+    exps.push(90);
+    let ws: Vec<Bf16> = exps
+        .iter()
+        .enumerate()
+        .map(|(i, &e)| Bf16::from_parts(e, (i * 131 % 256) as u8))
+        .collect();
+    let t = Df11Tensor::compress(&ws).unwrap();
+    let seq = decompress_sequential(&t).unwrap();
+    for stealing in [true, false] {
+        let pool = WorkerPool::with_config(8, stealing);
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        decompress_pooled_into(&t, &mut out, 8, &pool).unwrap();
+        assert_eq!(out, seq, "stealing={stealing}");
+    }
+}
+
+/// A panicking pool task is reported as a typed error on its handle;
+/// the worker that ran it survives and keeps serving.
+#[test]
+fn task_panic_is_isolated_and_pool_survives() {
+    let pool = WorkerPool::new(2);
+    let err = pool.scope(|scope| {
+        let h = scope.spawn(|| -> u32 { panic!("intentional test panic") });
+        h.join().unwrap_err()
+    });
+    assert!(
+        err.to_string().contains("pool task panicked"),
+        "got: {err}"
+    );
+    assert_eq!(pool.live_workers(), 2, "panic must not kill a worker");
+    // The same pool still decodes correctly afterwards.
+    let ws = gaussian(50_000, 7);
+    let t = Df11Tensor::compress(&ws).unwrap();
+    let mut out = vec![Bf16::from_bits(0); ws.len()];
+    decompress_pooled_into(&t, &mut out, 2, &pool).unwrap();
+    assert_eq!(out, ws);
+}
+
+/// Dropping a pool joins every worker — the probe outlives the pool
+/// and observes zero live workers after the drop returns.
+#[test]
+fn pool_drop_joins_all_workers() {
+    for width in [1usize, 3, 8] {
+        let pool = WorkerPool::new(width);
+        let probe = pool.probe();
+        assert_eq!(pool.live_workers(), width);
+        pool.scope(|scope| {
+            for _ in 0..width * 4 {
+                scope.spawn(std::thread::yield_now);
+            }
+        });
+        drop(pool);
+        assert_eq!(probe.live_workers(), 0, "width {width} leaked workers");
+    }
+}
+
+/// Repeated `Engine` construction + serving + drop must not leak
+/// workers: every default-built engine shares the *same* crate-global
+/// pool (spawned once), and a dedicated pool attached to an engine has
+/// all of its workers joined once the engine drops (observed through a
+/// probe that outlives the pool).
+#[test]
+fn repeated_engine_construction_leaks_no_workers() {
+    let cfg = ModelConfig::test_tiny();
+    let global = WorkerPool::global();
+    let mut probes = Vec::new();
+    for seed in 0..6u64 {
+        let mut e = Engine::build(&cfg, seed, WeightMode::Df11).unwrap();
+        e.reset(1);
+        e.step(&[seed as u32 % 16]).unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(&e.decode_pool(), &global),
+            "default engines must share the one global pool, not spawn their own"
+        );
+        drop(e);
+        // A dedicated pool lives exactly as long as its engine.
+        let mut d = Engine::build(&cfg, seed, WeightMode::Df11).unwrap();
+        let dedicated = WorkerPool::new(3);
+        probes.push(dedicated.probe());
+        d.set_decode_pool(dedicated);
+        d.reset(1);
+        d.step(&[2]).unwrap();
+        drop(d);
+    }
+    for (i, probe) in probes.iter().enumerate() {
+        assert_eq!(
+            probe.live_workers(),
+            0,
+            "engine cycle {i} leaked dedicated-pool workers"
+        );
+    }
+    assert_eq!(
+        global.live_workers(),
+        global.width(),
+        "the global pool's workers stay resident for the process"
+    );
+}
+
+/// The dedicated-pool path (`serve --threads T`) produces the same
+/// tokens as the shared-pool default, at every width.
+#[test]
+fn dedicated_pool_tokens_match_shared_pool() {
+    let cfg = ModelConfig::test_tiny();
+    let prompts = vec![vec![3u32, 4, 5], vec![6u32]];
+    let mut base = Engine::build(&cfg, 21, WeightMode::Df11).unwrap();
+    let expect = base.generate(&prompts, 6).unwrap();
+    for width in [1usize, 2, 8] {
+        let mut e = Engine::build(&cfg, 21, WeightMode::Df11).unwrap();
+        e.set_decode_pool(WorkerPool::new(width));
+        e.set_decode_threads(width);
+        assert_eq!(
+            e.generate(&prompts, 6).unwrap(),
+            expect,
+            "width {width} diverged"
+        );
+    }
+}

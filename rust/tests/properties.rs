@@ -271,7 +271,7 @@ fn prop_container_roundtrip() {
             let group = group.map_err(|e| e.to_string())?;
             for (name, t) in &group.tensors {
                 let back = t
-                    .decompress(&DecodeOpts { threads })
+                    .decompress(&DecodeOpts::with_threads(threads))
                     .map_err(|e| e.to_string())?;
                 if back != ws {
                     return Err(format!("codec {name} not lossless at n={n}"));

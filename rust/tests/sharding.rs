@@ -396,3 +396,39 @@ fn df11_shards_sustain_more_slots_than_bf16_under_same_per_gpu_budget() {
     );
     assert_eq!(tokens_by_id(&bf16), tokens_by_id(&df11));
 }
+
+/// The shard-overlap pipeline is a pure scheduling change: pipeline on
+/// vs off must produce bit-identical tokens and per-tick logits, and
+/// the simulated tick clock must charge the pipelined model no more
+/// than the serial one (max-of-overlapped never exceeds the sum).
+#[test]
+fn pipelined_shard_ticks_are_bit_identical_to_serial() {
+    let cfg = tiny();
+    for shards in SHARD_COUNTS {
+        let plan = plan_for(&cfg, shards);
+        let mut on = ShardedEngine::build(&cfg, 11, WeightMode::Df11, &plan).unwrap();
+        on.set_pipeline(true);
+        let mut off = ShardedEngine::build(&cfg, 11, WeightMode::Df11, &plan).unwrap();
+        off.set_pipeline(false);
+        let (tokens_on, logits_on) = run_lifecycle(&mut on);
+        let (tokens_off, logits_off) = run_lifecycle(&mut off);
+        assert_eq!(tokens_on, tokens_off, "{shards} shards: pipeline changed tokens");
+        assert_eq!(logits_on.len(), logits_off.len());
+        for (tick, (a, b)) in logits_on.iter().zip(&logits_off).enumerate() {
+            assert!(
+                a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{shards} shards: pipeline changed logits at tick {tick}"
+            );
+        }
+        for clock in [on.tick_clock(), off.tick_clock()] {
+            assert!(clock.ticks > 0, "clock must accumulate ticks");
+            assert!(
+                clock.pipelined_seconds <= clock.serial_seconds + 1e-12,
+                "max-of-overlapped must never exceed the serial sum \
+                 (pipelined {} vs serial {})",
+                clock.pipelined_seconds,
+                clock.serial_seconds
+            );
+        }
+    }
+}
