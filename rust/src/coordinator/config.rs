@@ -1,0 +1,234 @@
+//! Unified serving configuration: one fluent builder for the CLI, the
+//! single-engine [`super::Server`], and the replicated
+//! [`super::fleet::Fleet`].
+//!
+//! Before this module, serving knobs were scattered across
+//! `SchedulerConfig::continuous` / `static_batch` / `with_hbm_budget`
+//! constructors and ad-hoc CLI checks (`--pipeline` rejected without
+//! `--shards`, …). [`ServeConfig`] centralizes both: every knob is a
+//! fluent setter, and [`ServeConfig::validate`] is the single typed-
+//! error gate ([`Error::Config`]) that the CLI, `Server::from_config`,
+//! and `Fleet::new` all run through.
+
+use super::scheduler::{SchedPolicy, SchedulerConfig};
+use crate::error::{Error, Result};
+
+/// Fluent serving configuration shared by the `serve` CLI, [`super::Server`],
+/// and [`super::fleet::Fleet`].
+///
+/// ```
+/// use dfloat11::coordinator::{SchedPolicy, ServeConfig};
+/// let cfg = ServeConfig::new()
+///     .continuous()
+///     .slots(4)
+///     .replicas(2)
+///     .queue_capacity(64);
+/// cfg.validate().unwrap();
+/// assert_eq!(cfg.policy, SchedPolicy::Continuous);
+/// assert_eq!(cfg.scheduler_config().max_batch, 4);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Concurrent decode slots *per replica* (per-tick batch cap).
+    pub slots: usize,
+    /// Admission policy (static rounds or continuous batching).
+    pub policy: SchedPolicy,
+    /// Simulated HBM budget in bytes, per replica (per device under
+    /// sharding). When set, KV gets whatever remains after resident
+    /// weights.
+    pub hbm_bytes: Option<u64>,
+    /// KV page granularity in tokens (used with `hbm_bytes`).
+    pub page_tokens: u64,
+    /// Layer shards per replica (1 = single box).
+    pub shards: usize,
+    /// Shard-overlap pipeline: `None` = default (on when sharded),
+    /// `Some(_)` = explicit request — invalid without `shards > 1`.
+    pub pipeline: Option<bool>,
+    /// Engine replicas behind the fleet router (1 = plain server).
+    pub replicas: usize,
+    /// Bound on the fleet admission queue; arrivals past it are
+    /// rejected with a typed outcome. `None` = unbounded.
+    pub queue_capacity: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slots: 8,
+            policy: SchedPolicy::Continuous,
+            hbm_bytes: None,
+            page_tokens: 16,
+            shards: 1,
+            pipeline: None,
+            replicas: 1,
+            queue_capacity: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Default configuration (continuous batching, 8 slots, one
+    /// replica, unbounded queue).
+    pub fn new() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    /// Use continuous batching (admit into free slots mid-flight).
+    pub fn continuous(mut self) -> ServeConfig {
+        self.policy = SchedPolicy::Continuous;
+        self
+    }
+
+    /// Use round-based static batching.
+    pub fn static_batch(mut self) -> ServeConfig {
+        self.policy = SchedPolicy::Static;
+        self
+    }
+
+    /// Set the admission policy explicitly.
+    pub fn policy(mut self, policy: SchedPolicy) -> ServeConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Concurrent decode slots per replica.
+    pub fn slots(mut self, slots: usize) -> ServeConfig {
+        self.slots = slots;
+        self
+    }
+
+    /// Cap the simulated per-replica HBM (weights + KV must fit).
+    pub fn hbm_budget(mut self, bytes: u64) -> ServeConfig {
+        self.hbm_bytes = Some(bytes);
+        self
+    }
+
+    /// KV page granularity in tokens.
+    pub fn page_tokens(mut self, tokens: u64) -> ServeConfig {
+        self.page_tokens = tokens;
+        self
+    }
+
+    /// Layer shards per replica.
+    pub fn shards(mut self, shards: usize) -> ServeConfig {
+        self.shards = shards;
+        self
+    }
+
+    /// Explicitly enable/disable the shard-overlap pipeline (requires
+    /// `shards > 1`; the default is on when sharded).
+    pub fn pipeline(mut self, on: bool) -> ServeConfig {
+        self.pipeline = Some(on);
+        self
+    }
+
+    /// Engine replicas behind the fleet router.
+    pub fn replicas(mut self, replicas: usize) -> ServeConfig {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Bound the fleet admission queue (arrivals past the bound get a
+    /// typed `Rejected` outcome instead of unbounded queue growth).
+    pub fn queue_capacity(mut self, capacity: usize) -> ServeConfig {
+        self.queue_capacity = Some(capacity);
+        self
+    }
+
+    /// Whether the shard-overlap pipeline is effectively on.
+    pub fn pipeline_enabled(&self) -> bool {
+        self.pipeline.unwrap_or(true) && self.shards > 1
+    }
+
+    /// The single typed-error gate for every serving knob. The CLI,
+    /// [`super::Server::from_config`], and [`super::fleet::Fleet::new`]
+    /// all validate through here, so a nonsense combination fails the
+    /// same way no matter which surface it entered from.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |m: String| Err(Error::Config(m));
+        if self.slots == 0 {
+            return bad("slots must be >= 1".into());
+        }
+        if self.page_tokens == 0 {
+            return bad("page_tokens must be >= 1".into());
+        }
+        if self.shards == 0 {
+            return bad("shards must be >= 1".into());
+        }
+        if self.replicas == 0 {
+            return bad("replicas must be >= 1".into());
+        }
+        if self.pipeline.is_some() && self.shards <= 1 {
+            return bad(
+                "pipeline overlaps shard decode with the previous shard's \
+                 compute; it needs shards > 1"
+                    .into(),
+            );
+        }
+        if self.queue_capacity == Some(0) {
+            return bad("queue capacity must be >= 1 (or unbounded)".into());
+        }
+        if self.hbm_bytes == Some(0) {
+            return bad("an HBM budget of 0 bytes can never hold weights".into());
+        }
+        Ok(())
+    }
+
+    /// The per-replica scheduler view of this configuration (what a
+    /// single [`super::Server`] tick loop consumes).
+    pub fn scheduler_config(&self) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: self.slots,
+            policy: self.policy,
+            hbm_bytes: self.hbm_bytes,
+            page_tokens: self.page_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_round_trips_to_scheduler_config() {
+        let cfg = ServeConfig::new()
+            .static_batch()
+            .slots(3)
+            .hbm_budget(1 << 20)
+            .page_tokens(8);
+        cfg.validate().unwrap();
+        let sc = cfg.scheduler_config();
+        assert_eq!(sc.max_batch, 3);
+        assert_eq!(sc.policy, SchedPolicy::Static);
+        assert_eq!(sc.hbm_bytes, Some(1 << 20));
+        assert_eq!(sc.page_tokens, 8);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense_with_typed_errors() {
+        let cases = [
+            ServeConfig::new().slots(0),
+            ServeConfig::new().page_tokens(0),
+            ServeConfig::new().shards(0),
+            ServeConfig::new().replicas(0),
+            // The old ad-hoc CLI check, now centralized: pipeline
+            // without shards.
+            ServeConfig::new().pipeline(true),
+            ServeConfig::new().pipeline(false),
+            ServeConfig::new().queue_capacity(0),
+            ServeConfig::new().hbm_budget(0),
+        ];
+        for cfg in cases {
+            match cfg.validate() {
+                Err(Error::Config(_)) => {}
+                other => panic!("want Err(Config) for {cfg:?}, got {other:?}"),
+            }
+        }
+        // Pipeline with shards is fine either way.
+        ServeConfig::new().shards(2).pipeline(false).validate().unwrap();
+        assert!(!ServeConfig::new().shards(2).pipeline(false).pipeline_enabled());
+        assert!(ServeConfig::new().shards(2).pipeline_enabled(), "default on");
+        assert!(!ServeConfig::new().pipeline_enabled(), "off when unsharded");
+    }
+}

@@ -1,0 +1,1050 @@
+//! Fleet-scale replicated serving: N engine replicas behind a
+//! pluggable admission router.
+//!
+//! This is the layer above [`super::Server`]: where a server drives one
+//! [`ServingEngine`] (single-box or sharded), a [`Fleet`] owns N of
+//! them — *replicas*, each holding a full copy of the model — and
+//! routes every admitted request to exactly one replica:
+//!
+//! ```text
+//!  submit()/submit_at() ─► bounded global queue ─► RouterPolicy
+//!        (backpressure:        │ FIFO, arrival-gated │ round-robin /
+//!         typed Rejected)      ▼                     │ least-loaded /
+//!                        Fleet tick loop ◄───────────┘ session-affinity
+//!                    replica 0   replica 1  …  replica N-1
+//!                    (Healthy)   (Draining)    (Dead → re-route)
+//! ```
+//!
+//! All replicas tick in lockstep on one shared serving clock: each
+//! fleet tick decodes one step on every replica with work, and the
+//! clock advances by the *slowest* replica's tick (they run in
+//! parallel in a real deployment). Per-replica health is explicit:
+//! `Draining` replicas finish their in-flight work but admit nothing
+//! new; marking a replica `Dead` re-queues its in-flight requests at
+//! the head of the global queue — ids stay queue-owned, partial tokens
+//! are discarded, and the request regenerates from its prompt on
+//! another replica, so exactly one response is ever produced per id.
+//!
+//! The paper's serving claim lives here: under one per-replica HBM
+//! budget, DF11 replicas hold smaller resident weights, keep more KV
+//! pages, and therefore sustain more concurrent sequences — measurably
+//! higher fleet *goodput* (completed tokens per second) than BF16 at
+//! equal replica count (`bench_fleet` asserts this; ZipServ makes the
+//! same hardware-aware-compression argument).
+
+use super::config::ServeConfig;
+use super::engine::{ServingEngine, StepOutcome};
+use super::metrics::{GoodputPoint, LatencyStats, OccupancyStats};
+use super::queue::RequestQueue;
+use super::request::{Request, Response, TokenEvent};
+use super::scheduler::{empty_response, simulated_total, AdmissionPolicy, InFlight};
+use crate::error::{Error, Result};
+use std::collections::HashSet;
+use std::time::Instant;
+
+/// Health of one fleet replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Serving and admitting.
+    Healthy,
+    /// Finishing in-flight work; admits nothing new.
+    Draining,
+    /// Gone. In-flight work was re-queued; dead replicas never rejoin
+    /// (their engine state is lost).
+    Dead,
+}
+
+impl ReplicaHealth {
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "Healthy",
+            ReplicaHealth::Draining => "Draining",
+            ReplicaHealth::Dead => "Dead",
+        }
+    }
+}
+
+/// Router-visible snapshot of one replica at an admission decision.
+/// Only replicas that can actually admit the request right now are
+/// offered as candidates (healthy, admission gate open, a free decode
+/// slot, enough unreserved KV pages for the request's worst case).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    /// Fleet index of the replica.
+    pub index: usize,
+    /// Current health (always `Healthy` for candidates).
+    pub health: ReplicaHealth,
+    /// Sequences currently in flight on the replica.
+    pub active_seqs: usize,
+    /// Free decode slots.
+    pub free_slots: usize,
+    /// Unreserved KV pages (`None` without an HBM budget).
+    pub free_pages: Option<u64>,
+}
+
+/// The admission router: which replica serves the next request.
+///
+/// The fleet pre-filters to replicas that *can* admit (so a policy can
+/// never route onto a `Dead`, `Draining`, full, or KV-exhausted
+/// replica); the policy picks among them. Returning `None` defers the
+/// request until capacity frees up.
+pub trait RouterPolicy {
+    /// Display name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Pick the fleet index of the replica that should serve `req`,
+    /// from `candidates` (each `index` field is a fleet index;
+    /// `n_replicas` is the fleet size).
+    fn route(
+        &mut self,
+        req: &Request,
+        candidates: &[ReplicaView],
+        n_replicas: usize,
+    ) -> Option<usize>;
+}
+
+/// Rotate admissions across replicas in fleet order, skipping replicas
+/// that cannot admit.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoundRobin {
+    /// Start rotating from replica 0.
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl RouterPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(
+        &mut self,
+        _req: &Request,
+        candidates: &[ReplicaView],
+        n_replicas: usize,
+    ) -> Option<usize> {
+        let n = n_replicas.max(1);
+        let cursor = self.cursor % n;
+        // First candidate at or after the cursor, wrapping.
+        let chosen = candidates
+            .iter()
+            .map(|c| c.index)
+            .min_by_key(|&i| (i + n - cursor) % n)?;
+        self.cursor = (chosen + 1) % n;
+        Some(chosen)
+    }
+}
+
+/// Route to the replica with the most unreserved KV pages (the fewest
+/// in-flight sequences when no HBM budget is installed); ties break to
+/// the lowest fleet index.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl LeastLoaded {
+    /// New least-loaded router.
+    pub fn new() -> LeastLoaded {
+        LeastLoaded
+    }
+}
+
+impl RouterPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(
+        &mut self,
+        _req: &Request,
+        candidates: &[ReplicaView],
+        _n_replicas: usize,
+    ) -> Option<usize> {
+        candidates
+            .iter()
+            .min_by_key(|c| {
+                (
+                    std::cmp::Reverse(c.free_pages.unwrap_or(0)),
+                    c.active_seqs,
+                    c.index,
+                )
+            })
+            .map(|c| c.index)
+    }
+}
+
+/// Sticky session routing: requests sharing a [`Request::session`] key
+/// hash to one preferred replica and stay there while it can admit;
+/// sessionless requests (and sessions whose preferred replica is dead,
+/// draining, or out of capacity) fall back to [`LeastLoaded`].
+#[derive(Debug, Default)]
+pub struct SessionAffinity {
+    fallback: LeastLoaded,
+}
+
+impl SessionAffinity {
+    /// New session-affinity router.
+    pub fn new() -> SessionAffinity {
+        SessionAffinity::default()
+    }
+
+    /// The replica a session key prefers in a fleet of `n` replicas.
+    pub fn preferred(session: u64, n_replicas: usize) -> usize {
+        (session_hash(session) % n_replicas.max(1) as u64) as usize
+    }
+}
+
+impl RouterPolicy for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "session-affinity"
+    }
+
+    fn route(
+        &mut self,
+        req: &Request,
+        candidates: &[ReplicaView],
+        n_replicas: usize,
+    ) -> Option<usize> {
+        if let Some(key) = req.session {
+            let preferred = SessionAffinity::preferred(key, n_replicas);
+            if candidates.iter().any(|c| c.index == preferred) {
+                return Some(preferred);
+            }
+        }
+        self.fallback.route(req, candidates, n_replicas)
+    }
+}
+
+/// SplitMix64: a cheap, well-mixed stable hash for session keys.
+fn session_hash(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Why a request was rejected instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded admission queue was full at arrival (backpressure).
+    QueueFull,
+    /// The request's worst-case KV demand exceeds every healthy
+    /// replica's whole budget — it can never be scheduled.
+    Unschedulable,
+    /// Every replica is draining or dead.
+    NoHealthyReplica,
+}
+
+impl RejectReason {
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::Unschedulable => "unschedulable",
+            RejectReason::NoHealthyReplica => "no-healthy-replica",
+        }
+    }
+}
+
+/// A rejected request: the typed backpressure outcome. Rejection is a
+/// normal serving result, never a panic or an error return.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rejection {
+    /// Queue-assigned id, or 0 when rejected at the door (the request
+    /// never entered the queue, so no id was ever issued for it).
+    pub id: u64,
+    /// Arrival stamp of the rejected request.
+    pub arrival: f64,
+    /// Its session key, if any.
+    pub session: Option<u64>,
+    /// Why it was rejected.
+    pub reason: RejectReason,
+}
+
+/// Outcome of submitting a request to the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitOutcome {
+    /// Entered the bounded admission queue under this queue-owned id.
+    Enqueued(u64),
+    /// Open-loop future arrival: parked until its stamp, it enters the
+    /// queue (and gets its id) when it arrives on the serving clock.
+    Deferred,
+    /// Backpressure: the bounded queue was full at arrival.
+    Rejected(Rejection),
+}
+
+/// One routing decision (requests re-routed after a replica death
+/// appear a second time with `reroute` set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouteEvent {
+    /// Serving-clock time of the admission.
+    pub time: f64,
+    /// Queue-assigned request id.
+    pub request_id: u64,
+    /// Fleet index of the serving replica.
+    pub replica: usize,
+    /// True when this admission re-routes a request whose previous
+    /// replica died.
+    pub reroute: bool,
+}
+
+/// One health transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthEvent {
+    /// Serving-clock time of the transition.
+    pub time: f64,
+    /// Fleet index of the replica.
+    pub replica: usize,
+    /// New health state.
+    pub health: ReplicaHealth,
+    /// In-flight requests re-queued by the transition (death only).
+    pub rerouted: usize,
+}
+
+/// Per-replica summary for a drain run.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    /// Display label (`replica0`, …).
+    pub label: String,
+    /// Health at the end of the run.
+    pub health: ReplicaHealth,
+    /// Requests admitted onto this replica (including re-routes).
+    pub routed: usize,
+    /// Tokens generated by requests that *completed* on this replica.
+    pub tokens: u64,
+    /// Decode ticks this replica ran.
+    pub ticks: u64,
+    /// Peak concurrent sequences.
+    pub peak_active: usize,
+}
+
+/// Fleet-level serving statistics for a drain run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Completed responses, in completion order.
+    pub responses: Vec<Response>,
+    /// Rejected requests (backpressure, unschedulable, no replica).
+    pub rejections: Vec<Rejection>,
+    /// Every routing decision, in admission order.
+    pub routes: Vec<RouteEvent>,
+    /// Every health transition, in time order.
+    pub health_events: Vec<HealthEvent>,
+    /// Per-replica summaries.
+    pub per_replica: Vec<ReplicaReport>,
+    /// Total serving-clock seconds for the run.
+    pub total_seconds: f64,
+    /// Total generated tokens across completed responses.
+    pub total_tokens: u64,
+    /// End-to-end per-request latency.
+    pub latency: LatencyStats,
+    /// Per-request queue delay (arrival → slot granted; re-routed
+    /// requests count up to their final admission).
+    pub queue_delay: LatencyStats,
+    /// Per-request time to first token.
+    pub ttft: LatencyStats,
+    /// Per-request time per output token (after the first).
+    pub tpot: LatencyStats,
+    /// Fleet-wide occupancy (slots = replicas × per-replica slots).
+    pub occupancy: OccupancyStats,
+}
+
+impl FleetReport {
+    /// Requests offered to the fleet this run (completed + rejected).
+    pub fn offered(&self) -> usize {
+        self.responses.len() + self.rejections.len()
+    }
+
+    /// Goodput: tokens of *completed* requests per serving-clock
+    /// second. Rejected requests contribute nothing — this is the
+    /// number a bounded-queue fleet is judged by.
+    pub fn goodput(&self) -> f64 {
+        if self.total_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.total_seconds
+    }
+}
+
+/// One replica: an engine plus the fleet's bookkeeping about it.
+struct FleetReplica<E: ServingEngine> {
+    engine: E,
+    health: ReplicaHealth,
+    active: Vec<InFlight>,
+    /// KV pages reserved for in-flight requests (worst case each).
+    reserved_pages: u64,
+    /// Schedulable pages under the installed budget (`None` without).
+    total_pages: Option<u64>,
+    routed: usize,
+    tokens: u64,
+    ticks: u64,
+    peak_active: usize,
+}
+
+impl<E: ServingEngine> FleetReplica<E> {
+    fn new(engine: E) -> FleetReplica<E> {
+        FleetReplica {
+            engine,
+            health: ReplicaHealth::Healthy,
+            active: Vec::new(),
+            reserved_pages: 0,
+            total_pages: None,
+            routed: 0,
+            tokens: 0,
+            ticks: 0,
+            peak_active: 0,
+        }
+    }
+
+    fn free_pages(&self) -> Option<u64> {
+        self.total_pages
+            .map(|t| t.saturating_sub(self.reserved_pages))
+    }
+
+    /// Pages this replica must reserve to admit a request with `worst`
+    /// worst-case KV tokens — `None` when it cannot right now.
+    fn pages_to_admit(&self, worst: u64) -> Option<u64> {
+        match (self.total_pages, self.engine.kv_pages_for(worst)) {
+            (Some(total), Some(need)) => {
+                if self.reserved_pages + need > total {
+                    None
+                } else {
+                    Some(need)
+                }
+            }
+            _ => Some(0),
+        }
+    }
+
+    /// Whether the request could *ever* fit here (empty replica).
+    fn could_ever_fit(&self, worst: u64) -> bool {
+        match (self.total_pages, self.engine.kv_pages_for(worst)) {
+            (Some(total), Some(need)) => need <= total,
+            _ => true,
+        }
+    }
+}
+
+/// N engine replicas behind an admission router. Generic over the
+/// engine shape exactly like [`super::Server`]: plain [`super::Engine`],
+/// container-backed, and [`super::ShardedEngine`] replicas all work
+/// unchanged.
+pub struct Fleet<E: ServingEngine> {
+    replicas: Vec<FleetReplica<E>>,
+    router: Box<dyn RouterPolicy>,
+    admission: Box<dyn AdmissionPolicy>,
+    config: ServeConfig,
+    /// Global admission queue (bounded by `config.queue_capacity`).
+    queue: RequestQueue,
+    /// Open-loop arrivals not yet due, sorted by arrival at drain.
+    offered: Vec<Request>,
+    /// Shared serving clock (seconds): all replicas tick in lockstep.
+    clock: f64,
+    rejections: Vec<Rejection>,
+    routes: Vec<RouteEvent>,
+    health_events: Vec<HealthEvent>,
+    /// Scheduled health transitions `(time, replica, health)`.
+    transitions: Vec<(f64, usize, ReplicaHealth)>,
+    /// Ids that have been admitted at least once (re-route detection).
+    routed_once: HashSet<u64>,
+    budget_installed: bool,
+}
+
+impl<E: ServingEngine> Fleet<E> {
+    /// New fleet over `engines` (one per replica; every engine should
+    /// hold the same model). The config is validated through the
+    /// unified [`ServeConfig`] gate and must name exactly
+    /// `engines.len()` replicas.
+    pub fn new(
+        engines: Vec<E>,
+        config: ServeConfig,
+        router: Box<dyn RouterPolicy>,
+    ) -> Result<Fleet<E>> {
+        config.validate()?;
+        if engines.is_empty() {
+            return Err(Error::Config("a fleet needs at least one replica".into()));
+        }
+        if config.replicas != engines.len() {
+            return Err(Error::Config(format!(
+                "config names {} replicas but {} engines were supplied",
+                config.replicas,
+                engines.len()
+            )));
+        }
+        Ok(Fleet {
+            replicas: engines.into_iter().map(FleetReplica::new).collect(),
+            router,
+            admission: config.policy.admission(),
+            config,
+            queue: RequestQueue::new(),
+            offered: Vec::new(),
+            clock: 0.0,
+            rejections: Vec::new(),
+            routes: Vec::new(),
+            health_events: Vec::new(),
+            transitions: Vec::new(),
+            routed_once: HashSet::new(),
+            budget_installed: false,
+        })
+    }
+
+    /// Number of replicas (live or dead).
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Current serving-clock time.
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// The router's display name.
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Weight-source label (taken from replica 0).
+    pub fn source_label(&self) -> String {
+        self.replicas[0].engine.source_label()
+    }
+
+    /// A replica's current health.
+    pub fn replica_health(&self, replica: usize) -> Option<ReplicaHealth> {
+        self.replicas.get(replica).map(|r| r.health)
+    }
+
+    /// Arrived-but-unadmitted requests currently queued.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Transition a replica's health immediately. Marking a replica
+    /// `Dead` re-queues its in-flight requests at the head of the
+    /// global queue under their original ids (partial tokens are
+    /// discarded; the requests regenerate elsewhere, so no id can ever
+    /// produce two responses). Dead replicas cannot rejoin.
+    pub fn set_health(&mut self, replica: usize, health: ReplicaHealth) -> Result<()> {
+        let n = self.replicas.len();
+        let r = self
+            .replicas
+            .get_mut(replica)
+            .ok_or_else(|| Error::InvalidArgument(format!("no replica {replica} in a fleet of {n}")))?;
+        let prev = r.health;
+        if prev == health {
+            return Ok(());
+        }
+        if prev == ReplicaHealth::Dead {
+            return Err(Error::Scheduler(format!(
+                "replica {replica} is dead; dead replicas cannot rejoin \
+                 (their engine state is lost)"
+            )));
+        }
+        r.health = health;
+        let mut rerouted = 0usize;
+        if health == ReplicaHealth::Dead {
+            // The box is gone: re-queue its in-flight work. Newest
+            // first, so pushing each at the queue head restores the
+            // original FIFO order.
+            let slots: Vec<InFlight> = r.active.drain(..).collect();
+            r.reserved_pages = 0;
+            for slot in slots.into_iter().rev() {
+                self.queue.requeue_front(slot.into_request())?;
+                rerouted += 1;
+            }
+        }
+        self.health_events.push(HealthEvent {
+            time: self.clock,
+            replica,
+            health,
+            rerouted,
+        });
+        Ok(())
+    }
+
+    /// Schedule a health transition at serving-clock time `at` (fires
+    /// during a drain once the clock reaches it; transitions scheduled
+    /// past the end of the run never fire).
+    pub fn set_health_at(&mut self, replica: usize, health: ReplicaHealth, at: f64) -> Result<()> {
+        if replica >= self.replicas.len() {
+            return Err(Error::InvalidArgument(format!(
+                "no replica {replica} in a fleet of {}",
+                self.replicas.len()
+            )));
+        }
+        if !at.is_finite() || at < 0.0 {
+            return Err(Error::InvalidArgument(
+                "health transitions need a finite, nonnegative time".into(),
+            ));
+        }
+        self.transitions.push((at, replica, health));
+        Ok(())
+    }
+
+    /// Kill a replica at serving-clock time `at` (failure injection:
+    /// the degraded-serving CI run drives this).
+    pub fn kill_at(&mut self, replica: usize, at: f64) -> Result<()> {
+        self.set_health_at(replica, ReplicaHealth::Dead, at)
+    }
+
+    /// Submit a request arriving now. Requests must carry `id == 0`
+    /// (ids are queue-owned). Returns the typed outcome — a full
+    /// bounded queue yields [`SubmitOutcome::Rejected`], not an error.
+    pub fn submit(&mut self, req: Request) -> Result<SubmitOutcome> {
+        let now = self.clock;
+        self.submit_at(req, now)
+    }
+
+    /// Submit a request with an explicit arrival stamp (open-loop
+    /// trace replay). Future arrivals are parked and enter the bounded
+    /// queue when the serving clock reaches them; past arrivals clamp
+    /// to the current clock.
+    pub fn submit_at(&mut self, req: Request, arrival: f64) -> Result<SubmitOutcome> {
+        if req.id != 0 {
+            return Err(Error::InvalidArgument(format!(
+                "request ids are queue-assigned; submit with id 0, got {}",
+                req.id
+            )));
+        }
+        let arrival = arrival.max(self.clock);
+        if arrival > self.clock {
+            self.offered.push(req.with_arrival(arrival));
+            return Ok(SubmitOutcome::Deferred);
+        }
+        Ok(self.enqueue_now(req, arrival))
+    }
+
+    /// Move an arrived request into the bounded queue, or reject it.
+    fn enqueue_now(&mut self, req: Request, arrival: f64) -> SubmitOutcome {
+        if let Some(cap) = self.config.queue_capacity {
+            if self.queue.len() >= cap {
+                let rejection = Rejection {
+                    id: 0,
+                    arrival,
+                    session: req.session,
+                    reason: RejectReason::QueueFull,
+                };
+                self.rejections.push(rejection.clone());
+                return SubmitOutcome::Rejected(rejection);
+            }
+        }
+        let id = self
+            .queue
+            .push(req, arrival)
+            .expect("id 0 was checked before enqueue");
+        SubmitOutcome::Enqueued(id)
+    }
+
+    /// Install per-replica KV budgets from the configured HBM cap.
+    fn ensure_kv_budget(&mut self) -> Result<()> {
+        if self.budget_installed {
+            return Ok(());
+        }
+        if let Some(hbm) = self.config.hbm_bytes {
+            for r in &mut self.replicas {
+                r.engine
+                    .install_hbm_budget(hbm, self.config.page_tokens.max(1))?;
+            }
+        }
+        for r in &mut self.replicas {
+            r.total_pages = r.engine.kv_total_pages();
+        }
+        self.budget_installed = true;
+        Ok(())
+    }
+
+    /// Fire scheduled health transitions due by the current clock, in
+    /// time order.
+    fn fire_due_transitions(&mut self) -> Result<()> {
+        loop {
+            let due = self
+                .transitions
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.0 <= self.clock)
+                .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).expect("finite times"))
+                .map(|(i, _)| i);
+            let Some(i) = due else { break };
+            let (_, replica, health) = self.transitions.remove(i);
+            // A second transition on an already-dead replica is a
+            // no-op, not an error (set_health short-circuits equal
+            // states; unequal ones on a dead replica are refused).
+            if self.replicas[replica].health == ReplicaHealth::Dead {
+                continue;
+            }
+            self.set_health(replica, health)?;
+        }
+        Ok(())
+    }
+
+    /// Run until every offered request completes or is rejected,
+    /// discarding token events.
+    pub fn drain(&mut self) -> Result<FleetReport> {
+        self.drain_streaming(|_| {})
+    }
+
+    /// Run until the queue, the offered arrivals, and every replica's
+    /// decode slots drain, streaming each generated token through
+    /// `sink` the tick it is produced. Tokens of requests re-routed
+    /// after a replica death are re-streamed from index 0 on the new
+    /// replica (the response carries only the final, complete stream).
+    pub fn drain_streaming(&mut self, mut sink: impl FnMut(TokenEvent)) -> Result<FleetReport> {
+        self.ensure_kv_budget()?;
+        let n = self.replicas.len();
+        let slots = self.config.slots.max(1);
+        let mut responses: Vec<Response> = Vec::new();
+        let mut total_tokens = 0u64;
+        let mut occupancy = OccupancyStats::new(n * slots);
+        let start_clock = self.clock;
+        self.offered
+            .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("finite arrivals"));
+
+        loop {
+            self.fire_due_transitions()?;
+
+            // --- Open-loop arrivals into the bounded queue -------------
+            while self
+                .offered
+                .first()
+                .is_some_and(|r| r.arrival <= self.clock)
+            {
+                let req = self.offered.remove(0);
+                let arrival = req.arrival;
+                self.enqueue_now(req, arrival);
+            }
+
+            // --- Admission via the router ------------------------------
+            loop {
+                let Some(head) = self.queue.head() else { break };
+                let worst = head.worst_case_kv_tokens();
+                if head.max_new_tokens == 0 {
+                    // Nothing to generate: complete immediately without
+                    // touching any replica.
+                    let req = self.queue.pop().expect("head exists");
+                    responses.push(empty_response(&req, self.clock));
+                    continue;
+                }
+                let any_healthy = self
+                    .replicas
+                    .iter()
+                    .any(|r| r.health == ReplicaHealth::Healthy);
+                if !any_healthy {
+                    // Graceful degradation: accepted work that can
+                    // never be served is rejected, not wedged.
+                    let req = self.queue.pop().expect("head exists");
+                    self.rejections.push(Rejection {
+                        id: req.id,
+                        arrival: req.arrival,
+                        session: req.session,
+                        reason: RejectReason::NoHealthyReplica,
+                    });
+                    continue;
+                }
+                let fits_somewhere = self.replicas.iter().any(|r| {
+                    r.health == ReplicaHealth::Healthy && r.could_ever_fit(worst)
+                });
+                if !fits_somewhere {
+                    let req = self.queue.pop().expect("head exists");
+                    self.rejections.push(Rejection {
+                        id: req.id,
+                        arrival: req.arrival,
+                        session: req.session,
+                        reason: RejectReason::Unschedulable,
+                    });
+                    continue;
+                }
+                let candidates: Vec<ReplicaView> = self
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, r)| {
+                        if r.health != ReplicaHealth::Healthy
+                            || !self.admission.admit_now(r.active.len())
+                            || r.active.len() >= slots
+                        {
+                            return None;
+                        }
+                        r.pages_to_admit(worst)?;
+                        Some(ReplicaView {
+                            index: i,
+                            health: r.health,
+                            active_seqs: r.active.len(),
+                            free_slots: slots - r.active.len(),
+                            free_pages: r.free_pages(),
+                        })
+                    })
+                    .collect();
+                if candidates.is_empty() {
+                    break; // wait for retirements to free capacity
+                }
+                let Some(chosen) = self.router.route(head, &candidates, n) else {
+                    break; // router defers
+                };
+                if !candidates.iter().any(|c| c.index == chosen) {
+                    return Err(Error::Scheduler(format!(
+                        "router {} chose replica {chosen}, which cannot admit",
+                        self.router.name()
+                    )));
+                }
+                let req = self.queue.pop().expect("head exists");
+                let need = self.replicas[chosen]
+                    .pages_to_admit(worst)
+                    .expect("candidate had pages");
+                self.replicas[chosen].engine.start_seq(req.id, &req.prompt)?;
+                self.replicas[chosen].reserved_pages += need;
+                self.replicas[chosen].routed += 1;
+                let reroute = !self.routed_once.insert(req.id);
+                self.routes.push(RouteEvent {
+                    time: self.clock,
+                    request_id: req.id,
+                    replica: chosen,
+                    reroute,
+                });
+                self.replicas[chosen]
+                    .active
+                    .push(InFlight::admit(req, self.clock, need));
+            }
+
+            // --- One lockstep decode tick across the fleet -------------
+            // Every replica with work decodes one step; the shared
+            // clock advances by the slowest replica (they run in
+            // parallel across boxes).
+            let mut ticked: Vec<(usize, Vec<StepOutcome>)> = Vec::new();
+            let mut max_tick_seconds = 0.0f64;
+            let mut fleet_active = 0usize;
+            for (i, r) in self.replicas.iter_mut().enumerate() {
+                if r.health == ReplicaHealth::Dead || r.active.is_empty() {
+                    continue;
+                }
+                fleet_active += r.active.len();
+                let ids: Vec<u64> = r.active.iter().map(|a| a.req.id).collect();
+                let sim_before = simulated_total(r.engine.breakdown());
+                let t0 = Instant::now();
+                let outcomes = r.engine.decode_step(&ids)?;
+                let wall = t0.elapsed().as_secs_f64();
+                let sim_after = simulated_total(r.engine.breakdown());
+                max_tick_seconds = max_tick_seconds.max(wall + (sim_after - sim_before).max(0.0));
+                r.ticks += 1;
+                r.peak_active = r.peak_active.max(r.active.len());
+                ticked.push((i, outcomes));
+            }
+
+            if ticked.is_empty() {
+                if self.queue.head().is_some() {
+                    // Zero in-flight work, an arrived request, and no
+                    // admission: only a deferring router can get here.
+                    return Err(Error::Scheduler(format!(
+                        "fleet made no progress: router {} deferred request {} \
+                         with every replica idle",
+                        self.router.name(),
+                        self.queue.head().expect("head exists").id
+                    )));
+                }
+                // Idle: jump to the next event, or finish.
+                let next_arrival = self.offered.first().map(|r| r.arrival);
+                let next_transition = self
+                    .transitions
+                    .iter()
+                    .map(|t| t.0)
+                    .filter(|&t| t > self.clock)
+                    .fold(f64::INFINITY, f64::min);
+                match next_arrival {
+                    Some(at) => {
+                        self.clock = at.min(next_transition).max(self.clock);
+                        continue;
+                    }
+                    None => break, // fully drained
+                }
+            }
+
+            self.clock += max_tick_seconds;
+            occupancy.record(fleet_active);
+
+            // --- Outcomes & retirement ---------------------------------
+            for (i, outcomes) in ticked {
+                let now = self.clock;
+                let r = &mut self.replicas[i];
+                for (slot, outcome) in r.active.iter_mut().zip(&outcomes) {
+                    slot.apply(outcome, now, &mut sink);
+                }
+                let mut j = 0;
+                while j < r.active.len() {
+                    if r.active[j].finish.is_none() {
+                        j += 1;
+                        continue;
+                    }
+                    let slot = r.active.remove(j);
+                    r.engine.finish_seq(slot.req.id)?;
+                    r.reserved_pages -= slot.reserved_pages;
+                    r.tokens += slot.tokens.len() as u64;
+                    total_tokens += slot.tokens.len() as u64;
+                    responses.push(slot.into_response(now));
+                }
+            }
+        }
+
+        Ok(FleetReport {
+            total_seconds: self.clock - start_clock,
+            total_tokens,
+            latency: LatencyStats::new(responses.iter().map(|r| r.latency).collect()),
+            queue_delay: LatencyStats::new(responses.iter().map(|r| r.queue_delay).collect()),
+            ttft: LatencyStats::new(responses.iter().map(|r| r.ttft).collect()),
+            tpot: LatencyStats::new(responses.iter().map(|r| r.tpot).collect()),
+            occupancy,
+            per_replica: self
+                .replicas
+                .iter()
+                .enumerate()
+                .map(|(i, r)| ReplicaReport {
+                    label: format!("replica{i}"),
+                    health: r.health,
+                    routed: r.routed,
+                    tokens: r.tokens,
+                    ticks: r.ticks,
+                    peak_active: r.peak_active,
+                })
+                .collect(),
+            rejections: std::mem::take(&mut self.rejections),
+            routes: std::mem::take(&mut self.routes),
+            health_events: std::mem::take(&mut self.health_events),
+            responses,
+        })
+    }
+}
+
+/// Replay `base_workload` through a fresh fleet at each offered load
+/// (arrivals re-stamped to `1/rps` spacing) and report the
+/// goodput-vs-offered-load curve. `make_fleet` builds an identically
+/// configured fleet per point (runs must not share serving state).
+pub fn goodput_sweep<E: ServingEngine, F: FnMut() -> Result<Fleet<E>>>(
+    mut make_fleet: F,
+    base_workload: &[Request],
+    loads_rps: &[f64],
+) -> Result<Vec<GoodputPoint>> {
+    let mut curve = Vec::with_capacity(loads_rps.len());
+    for &rps in loads_rps {
+        if !rps.is_finite() || rps <= 0.0 {
+            return Err(Error::InvalidArgument(format!(
+                "offered load must be a positive, finite requests/second (got {rps})"
+            )));
+        }
+        let mut fleet = make_fleet()?;
+        let interval = 1.0 / rps;
+        for (i, r) in base_workload.iter().enumerate() {
+            let mut req = r.clone();
+            req.id = 0;
+            let at = i as f64 * interval;
+            fleet.submit_at(req, at)?;
+        }
+        let report = fleet.drain()?;
+        curve.push(GoodputPoint {
+            offered_rps: rps,
+            completed: report.responses.len(),
+            rejected: report.rejections.len(),
+            goodput_tps: report.goodput(),
+        });
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(index: usize, active: usize, free_slots: usize, free_pages: Option<u64>) -> ReplicaView {
+        ReplicaView {
+            index,
+            health: ReplicaHealth::Healthy,
+            active_seqs: active,
+            free_slots,
+            free_pages,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_missing() {
+        let mut rr = RoundRobin::new();
+        let req = Request::new(vec![1], 1);
+        let all = [view(0, 0, 2, None), view(1, 0, 2, None), view(2, 0, 2, None)];
+        assert_eq!(rr.route(&req, &all, 3), Some(0));
+        assert_eq!(rr.route(&req, &all, 3), Some(1));
+        assert_eq!(rr.route(&req, &all, 3), Some(2));
+        assert_eq!(rr.route(&req, &all, 3), Some(0), "wraps");
+        // Replica 1 missing from candidates: skipped, cursor keeps
+        // rotating.
+        let partial = [view(0, 0, 2, None), view(2, 0, 2, None)];
+        assert_eq!(rr.route(&req, &partial, 3), Some(2));
+        assert_eq!(rr.route(&req, &partial, 3), Some(0));
+        assert_eq!(rr.route(&req, &[], 3), None, "no candidates defers");
+    }
+
+    #[test]
+    fn least_loaded_prefers_free_pages_then_active() {
+        let mut ll = LeastLoaded::new();
+        let req = Request::new(vec![1], 1);
+        // Most free pages wins.
+        let c = [
+            view(0, 1, 3, Some(2)),
+            view(1, 3, 1, Some(9)),
+            view(2, 0, 4, Some(4)),
+        ];
+        assert_eq!(ll.route(&req, &c, 3), Some(1));
+        // Without a budget, fewest active sequences wins; ties break
+        // low.
+        let c = [view(0, 2, 2, None), view(1, 1, 3, None), view(2, 1, 3, None)];
+        assert_eq!(ll.route(&req, &c, 3), Some(1));
+        assert_eq!(ll.route(&req, &[], 3), None);
+    }
+
+    #[test]
+    fn session_affinity_sticks_and_falls_back() {
+        let mut sa = SessionAffinity::new();
+        let n = 4;
+        let all: Vec<ReplicaView> = (0..n).map(|i| view(i, 0, 2, None)).collect();
+        let req = Request::new(vec![1], 1).with_session(77);
+        let preferred = SessionAffinity::preferred(77, n);
+        // Sticky while the preferred replica is a candidate…
+        for _ in 0..3 {
+            assert_eq!(sa.route(&req, &all, n), Some(preferred));
+        }
+        // …falls back to least-loaded when it is not.
+        let without: Vec<ReplicaView> = all
+            .iter()
+            .copied()
+            .filter(|c| c.index != preferred)
+            .collect();
+        let fallback = sa.route(&req, &without, n).unwrap();
+        assert_ne!(fallback, preferred);
+        // Sessionless requests just load-balance.
+        let plain = Request::new(vec![1], 1);
+        assert!(sa.route(&plain, &all, n).is_some());
+        // The preferred replica is a stable function of the key.
+        assert_eq!(
+            SessionAffinity::preferred(77, n),
+            SessionAffinity::preferred(77, n)
+        );
+    }
+
+    #[test]
+    fn session_hash_spreads_keys() {
+        // Not a distribution test — just that nearby keys do not all
+        // collapse onto one replica.
+        let n = 4usize;
+        let mut hit = [false; 4];
+        for key in 0..64u64 {
+            hit[SessionAffinity::preferred(key, n)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 keys cover all 4 replicas");
+    }
+
+    #[test]
+    fn reject_reason_labels_are_stable() {
+        assert_eq!(RejectReason::QueueFull.label(), "queue-full");
+        assert_eq!(RejectReason::Unschedulable.label(), "unschedulable");
+        assert_eq!(RejectReason::NoHealthyReplica.label(), "no-healthy-replica");
+        assert_eq!(ReplicaHealth::Draining.label(), "Draining");
+    }
+}

@@ -242,6 +242,22 @@ impl OccupancyStats {
     }
 }
 
+/// One point on a goodput-vs-offered-load curve
+/// ([`super::fleet::goodput_sweep`] produces these): at a given offered
+/// load, how many requests completed vs were rejected, and the
+/// completed-token throughput the fleet sustained.
+#[derive(Clone, Copy, Debug)]
+pub struct GoodputPoint {
+    /// Offered load in requests per second of serving clock.
+    pub offered_rps: f64,
+    /// Requests that completed with a response.
+    pub completed: usize,
+    /// Requests rejected (backpressure or unschedulable).
+    pub rejected: usize,
+    /// Completed tokens per serving-clock second.
+    pub goodput_tps: f64,
+}
+
 /// A stopwatch that charges into a breakdown on drop.
 pub struct Timed<'a> {
     breakdown: &'a mut Breakdown,

@@ -22,8 +22,16 @@
 //! Each decode tick emits [`StepOutcome`]s per sequence; the server
 //! streams [`TokenEvent`]s as tokens appear and reports
 //! TTFT/TPOT/queue-delay and slot-occupancy statistics.
+//!
+//! One level up, [`fleet::Fleet`] replicates the whole stack: N
+//! replicas (each any [`ServingEngine`]) behind a pluggable
+//! [`fleet::RouterPolicy`] admission router with a bounded global
+//! queue, per-replica health, and re-routing — see the
+//! [`fleet`] module docs.
 
+pub mod config;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod queue;
 pub mod request;
@@ -31,13 +39,22 @@ pub mod scheduler;
 pub mod sharded;
 pub mod trace;
 
+pub use config::ServeConfig;
 pub use engine::{
     generate_with, Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource,
     Df11Source, Engine, FetchCost, NativeBackend, OffloadSource, ScratchPool, ServingEngine,
     ShardRole, StepEvent, StepOutcome, WeightMode, WeightSource,
 };
-pub use metrics::{Breakdown, Component, LatencyStats, OccupancyStats, ShardStat};
+pub use fleet::{
+    goodput_sweep, Fleet, FleetReport, HealthEvent, LeastLoaded, RejectReason, Rejection,
+    ReplicaHealth, ReplicaReport, ReplicaView, RoundRobin, RouteEvent, RouterPolicy,
+    SessionAffinity, SubmitOutcome,
+};
+pub use metrics::{Breakdown, Component, GoodputPoint, LatencyStats, OccupancyStats, ShardStat};
 pub use queue::RequestQueue;
 pub use request::{FinishReason, Request, Response, TokenEvent};
-pub use scheduler::{SchedPolicy, SchedulerConfig, ServeReport, Server};
+pub use scheduler::{
+    AdmissionPolicy, ContinuousAdmission, SchedPolicy, SchedulerConfig, ServeReport, Server,
+    StaticAdmission,
+};
 pub use sharded::{shard_groups, ShardTickClock, ShardedEngine};

@@ -66,6 +66,31 @@ impl RequestQueue {
         self.queue.pop_front()
     }
 
+    /// Put an already-admitted request back at the head of the queue
+    /// (fleet re-route after a replica death). Unlike
+    /// [`RequestQueue::push`], the request must *keep* its original
+    /// queue-assigned id — ids stay queue-owned, so a re-routed request
+    /// can never produce a second response under a fresh id. Only ids
+    /// this queue actually issued are accepted.
+    pub fn requeue_front(&mut self, req: Request) -> Result<()> {
+        if req.id == 0 || req.id >= self.next_id {
+            return Err(Error::InvalidArgument(format!(
+                "requeue_front wants a previously queue-assigned id \
+                 (got {}, issued so far: 1..{})",
+                req.id, self.next_id
+            )));
+        }
+        if self.queue.iter().any(|q| q.id == req.id) {
+            return Err(Error::InvalidArgument(format!(
+                "request {} is already queued; re-queuing it would \
+                 duplicate its response",
+                req.id
+            )));
+        }
+        self.queue.push_front(req);
+        Ok(())
+    }
+
     /// Form the next batch: up to `max_batch` requests in FIFO order.
     ///
     /// Starvation-freedom invariant: the head of the queue is *always*
@@ -134,6 +159,27 @@ mod tests {
         assert_eq!(q.head().unwrap().id, 2);
         assert_eq!(q.pop().unwrap().id, 2);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn requeue_front_keeps_ids_queue_owned() {
+        let mut q = RequestQueue::new();
+        q.push(Request::new(vec![1], 1), 0.0).unwrap();
+        q.push(Request::new(vec![2], 1), 0.0).unwrap();
+        let popped = q.pop().unwrap();
+        assert_eq!(popped.id, 1);
+        // Re-route puts the request back at the head, same id.
+        q.requeue_front(popped.clone()).unwrap();
+        assert_eq!(q.head().unwrap().id, 1);
+        // A never-issued id is rejected (ids stay queue-owned)...
+        let mut fake = Request::new(vec![3], 1);
+        fake.id = 99;
+        assert!(q.requeue_front(fake).is_err());
+        let unassigned = Request::new(vec![3], 1);
+        assert!(q.requeue_front(unassigned).is_err(), "id 0 is rejected");
+        // ...and a still-queued id cannot be duplicated.
+        assert!(q.requeue_front(popped).is_err());
+        assert_eq!(q.queued_ids(), vec![1, 2]);
     }
 
     #[test]

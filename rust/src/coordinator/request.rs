@@ -20,6 +20,11 @@ pub struct Request {
     /// Stop token: generation ends as soon as this token is emitted
     /// (the stop token itself is included in the output).
     pub eos_token: Option<u32>,
+    /// Session key for sticky routing. Requests sharing a session key
+    /// are routed to the same fleet replica while it stays healthy
+    /// (see `coordinator::fleet::SessionAffinity`); `None` requests
+    /// route by load alone.
+    pub session: Option<u64>,
 }
 
 impl Request {
@@ -31,18 +36,46 @@ impl Request {
             max_new_tokens,
             arrival: 0.0,
             eos_token: None,
+            session: None,
         }
     }
 
     /// Set the stop token.
+    ///
+    /// ```
+    /// use dfloat11::coordinator::Request;
+    /// let r = Request::new(vec![1, 2], 8).with_eos(17);
+    /// assert_eq!(r.eos_token, Some(17));
+    /// ```
     pub fn with_eos(mut self, eos: u32) -> Request {
         self.eos_token = Some(eos);
         self
     }
 
     /// Stamp an arrival time (open-loop trace replay).
+    ///
+    /// ```
+    /// use dfloat11::coordinator::Request;
+    /// let r = Request::new(vec![1], 4).with_arrival(0.25);
+    /// assert_eq!(r.arrival, 0.25);
+    /// ```
     pub fn with_arrival(mut self, arrival: f64) -> Request {
         self.arrival = arrival;
+        self
+    }
+
+    /// Tag the request with a session key for sticky fleet routing.
+    /// The id stays queue-owned — a session key never affects id
+    /// assignment, only which replica serves the request.
+    ///
+    /// ```
+    /// use dfloat11::coordinator::Request;
+    /// let r = Request::new(vec![1], 4).with_session(42);
+    /// assert_eq!(r.session, Some(42));
+    /// assert_eq!(r.id, 0, "ids stay queue-assigned");
+    /// ```
+    pub fn with_session(mut self, session: u64) -> Request {
+        self.session = Some(session);
         self
     }
 
@@ -115,9 +148,14 @@ mod tests {
 
     #[test]
     fn builders_set_controls() {
-        let r = Request::new(vec![1], 4).with_eos(7).with_arrival(1.5);
+        let r = Request::new(vec![1], 4)
+            .with_eos(7)
+            .with_arrival(1.5)
+            .with_session(3);
         assert_eq!(r.eos_token, Some(7));
         assert_eq!(r.arrival, 1.5);
+        assert_eq!(r.session, Some(3));
+        assert_eq!(r.id, 0, "builders never touch the queue-owned id");
     }
 
     #[test]

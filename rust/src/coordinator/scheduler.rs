@@ -23,7 +23,8 @@
 //! stats. All timing runs on the serving clock (wall-clock measured
 //! work + simulated device time).
 
-use super::engine::{Engine, ServingEngine, StepEvent};
+use super::config::ServeConfig;
+use super::engine::{Engine, ServingEngine, StepEvent, StepOutcome};
 use super::metrics::{LatencyStats, OccupancyStats};
 use super::queue::RequestQueue;
 use super::request::{FinishReason, Request, Response, TokenEvent};
@@ -38,6 +39,59 @@ pub enum SchedPolicy {
     Static,
     /// Continuous batching (admit into any free slot mid-flight).
     Continuous,
+}
+
+impl SchedPolicy {
+    /// Thin constructor for the admission trait object this policy
+    /// denotes — [`Server`] and [`super::fleet::Fleet`] both schedule
+    /// through the returned [`AdmissionPolicy`].
+    pub fn admission(self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            SchedPolicy::Static => Box::new(StaticAdmission),
+            SchedPolicy::Continuous => Box::new(ContinuousAdmission),
+        }
+    }
+}
+
+/// The admission decision, extracted from the scheduler's old
+/// `SchedPolicy` match arms so single-server and fleet tick loops share
+/// one implementation. Given how many sequences an engine (or fleet
+/// replica) already has in flight, may new requests be admitted into
+/// its free slots this tick?
+pub trait AdmissionPolicy {
+    /// True when new requests may be admitted alongside `active`
+    /// in-flight sequences.
+    fn admit_now(&self, active: usize) -> bool;
+
+    /// Display label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Round-based static batching: a fresh round opens only once every
+/// slot has retired.
+pub struct StaticAdmission;
+
+impl AdmissionPolicy for StaticAdmission {
+    fn admit_now(&self, active: usize) -> bool {
+        active == 0
+    }
+
+    fn label(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Continuous batching: any free slot admits mid-flight.
+pub struct ContinuousAdmission;
+
+impl AdmissionPolicy for ContinuousAdmission {
+    fn admit_now(&self, _active: usize) -> bool {
+        true
+    }
+
+    fn label(&self) -> &'static str {
+        "continuous"
+    }
 }
 
 /// Scheduler configuration.
@@ -67,25 +121,20 @@ impl Default for SchedulerConfig {
 }
 
 impl SchedulerConfig {
-    /// Continuous batching over `slots` decode slots.
+    /// Continuous batching over `slots` decode slots. Thin shim over
+    /// the canonical [`ServeConfig`] builder.
     pub fn continuous(slots: usize) -> SchedulerConfig {
-        SchedulerConfig {
-            max_batch: slots,
-            policy: SchedPolicy::Continuous,
-            ..SchedulerConfig::default()
-        }
+        ServeConfig::new().continuous().slots(slots).scheduler_config()
     }
 
-    /// Round-based static batching with `slots`-request rounds.
+    /// Round-based static batching with `slots`-request rounds. Thin
+    /// shim over the canonical [`ServeConfig`] builder.
     pub fn static_batch(slots: usize) -> SchedulerConfig {
-        SchedulerConfig {
-            max_batch: slots,
-            policy: SchedPolicy::Static,
-            ..SchedulerConfig::default()
-        }
+        ServeConfig::new().static_batch().slots(slots).scheduler_config()
     }
 
-    /// Cap the simulated device HBM (weights + KV must fit).
+    /// Cap the simulated device HBM (weights + KV must fit). Thin shim
+    /// over [`ServeConfig::hbm_budget`].
     pub fn with_hbm_budget(mut self, bytes: u64) -> SchedulerConfig {
         self.hbm_bytes = Some(bytes);
         self
@@ -123,21 +172,117 @@ impl ServeReport {
     }
 }
 
-/// One admitted request occupying a decode slot.
-struct InFlight {
-    req: Request,
+/// One admitted request occupying a decode slot. Shared by the
+/// single-engine [`Server`] tick loop and each fleet replica's — the
+/// outcome bookkeeping (TTFT stamps, eos/budget finish, streaming)
+/// exists exactly once.
+pub(crate) struct InFlight {
+    pub(crate) req: Request,
     /// Serving-clock time the slot was granted.
-    admitted: f64,
+    pub(crate) admitted: f64,
     /// Serving-clock time of the first emitted token.
-    first_token: Option<f64>,
+    pub(crate) first_token: Option<f64>,
     /// Serving-clock time of the latest emitted token.
-    last_token: f64,
+    pub(crate) last_token: f64,
     /// Generated tokens so far.
-    tokens: Vec<u32>,
+    pub(crate) tokens: Vec<u32>,
     /// KV pages reserved at admission (returned on retirement).
-    reserved_pages: u64,
+    pub(crate) reserved_pages: u64,
     /// Set once the request should retire.
-    finish: Option<FinishReason>,
+    pub(crate) finish: Option<FinishReason>,
+}
+
+impl InFlight {
+    /// Admit `req` into a slot at serving-clock `now` with
+    /// `reserved_pages` KV pages held for its worst case.
+    pub(crate) fn admit(req: Request, now: f64, reserved_pages: u64) -> InFlight {
+        InFlight {
+            admitted: now,
+            first_token: None,
+            last_token: now,
+            tokens: Vec::new(),
+            reserved_pages,
+            finish: None,
+            req,
+        }
+    }
+
+    /// Apply one decode-step outcome at serving-clock `now`, streaming
+    /// any emitted token through `sink` and marking retirement when the
+    /// request's budget, stop token, or cache limit is hit.
+    pub(crate) fn apply(
+        &mut self,
+        outcome: &StepOutcome,
+        now: f64,
+        sink: &mut impl FnMut(TokenEvent),
+    ) {
+        debug_assert_eq!(self.req.id, outcome.seq_id, "outcome order");
+        match outcome.event {
+            StepEvent::Prefill { .. } => {}
+            StepEvent::Token(t) => {
+                if self.first_token.is_none() {
+                    self.first_token = Some(now);
+                }
+                self.tokens.push(t);
+                self.last_token = now;
+                sink(TokenEvent {
+                    request_id: self.req.id,
+                    token: t,
+                    index: self.tokens.len() - 1,
+                    time: now,
+                });
+                if self.req.eos_token == Some(t) {
+                    self.finish = Some(FinishReason::Eos);
+                } else if self.tokens.len() >= self.req.max_new_tokens {
+                    self.finish = Some(FinishReason::MaxTokens);
+                }
+            }
+            StepEvent::CacheFull => self.finish = Some(FinishReason::CacheFull),
+        }
+    }
+
+    /// Consume the slot into a completed [`Response`] at serving-clock
+    /// `now`. Must only be called once `finish` is set.
+    pub(crate) fn into_response(self, now: f64) -> Response {
+        let first = self.first_token.unwrap_or(now);
+        let n = self.tokens.len();
+        Response {
+            id: self.req.id,
+            latency: now - self.req.arrival,
+            queue_delay: self.admitted - self.req.arrival,
+            ttft: first - self.req.arrival,
+            tpot: if n > 1 {
+                (self.last_token - first) / (n - 1) as f64
+            } else {
+                0.0
+            },
+            finish: self.finish.expect("retired with a reason"),
+            tokens: self.tokens,
+        }
+    }
+
+    /// Give the original request back for re-admission elsewhere
+    /// (fleet re-route after a replica death). Partial tokens are
+    /// discarded — the request regenerates from its prompt on the new
+    /// replica, keeping its queue-assigned id and original arrival, so
+    /// exactly one response is ever produced per id.
+    pub(crate) fn into_request(self) -> Request {
+        self.req
+    }
+}
+
+/// Immediate empty response for a zero-budget request: it completes at
+/// admission, claiming neither a slot nor KV pages.
+pub(crate) fn empty_response(req: &Request, now: f64) -> Response {
+    Response {
+        id: req.id,
+        tokens: Vec::new(),
+        latency: now - req.arrival,
+        queue_delay: now - req.arrival,
+        ttft: 0.0,
+        tpot: 0.0,
+        finish: FinishReason::MaxTokens,
+    }
 }
 
 /// The serving coordinator. Generic over the engine shape: a single-
@@ -148,6 +293,9 @@ pub struct Server<E: ServingEngine = Engine> {
     engine: E,
     queue: RequestQueue,
     config: SchedulerConfig,
+    /// The admission decision (extracted from the old `SchedPolicy`
+    /// match arms; fleets consume the same trait).
+    admission: Box<dyn AdmissionPolicy>,
     /// Serving clock (seconds): wall-clock work + simulated device time.
     clock: f64,
     /// Whether the HBM-derived KV budget has been installed.
@@ -160,10 +308,18 @@ impl<E: ServingEngine> Server<E> {
         Server {
             engine,
             queue: RequestQueue::new(),
+            admission: config.policy.admission(),
             config,
             clock: 0.0,
             budget_installed: false,
         }
+    }
+
+    /// New server from the unified [`ServeConfig`] builder (validated
+    /// through its single typed-error gate).
+    pub fn from_config(engine: E, config: &ServeConfig) -> Result<Server<E>> {
+        config.validate()?;
+        Ok(Server::new(engine, config.scheduler_config()))
     }
 
     /// The underlying engine (for breakdown inspection).
@@ -233,13 +389,10 @@ impl<E: ServingEngine> Server<E> {
 
         loop {
             // --- Admission ---------------------------------------------
-            // Continuous: fill any free slot. Static: only open a fresh
-            // round once every slot has retired.
-            let round_open = match self.config.policy {
-                SchedPolicy::Continuous => true,
-                SchedPolicy::Static => active.is_empty(),
-            };
-            if round_open {
+            // The policy trait decides whether new requests may join the
+            // in-flight set this tick (continuous: always; static: only
+            // once every slot has retired).
+            if self.admission.admit_now(active.len()) {
                 while active.len() < slots {
                     let Some(head) = self.queue.head() else { break };
                     if head.arrival > self.clock {
@@ -251,15 +404,7 @@ impl<E: ServingEngine> Server<E> {
                         // Nothing to generate: complete immediately,
                         // claiming neither a slot nor KV pages.
                         let req = self.queue.pop().expect("head exists");
-                        responses.push(Response {
-                            id: req.id,
-                            tokens: Vec::new(),
-                            latency: self.clock - req.arrival,
-                            queue_delay: self.clock - req.arrival,
-                            ttft: 0.0,
-                            tpot: 0.0,
-                            finish: FinishReason::MaxTokens,
-                        });
+                        responses.push(empty_response(&req, self.clock));
                         continue;
                     }
                     // Page-granular KV admission: reserve the worst case
@@ -282,15 +427,7 @@ impl<E: ServingEngine> Server<E> {
                     let req = self.queue.pop().expect("head exists");
                     self.engine.start_seq(req.id, &req.prompt)?;
                     reserved_pages += need;
-                    active.push(InFlight {
-                        admitted: self.clock,
-                        first_token: None,
-                        last_token: self.clock,
-                        tokens: Vec::new(),
-                        reserved_pages: need,
-                        finish: None,
-                        req,
-                    });
+                    active.push(InFlight::admit(req, self.clock, need));
                 }
             }
             if active.is_empty() {
@@ -326,29 +463,7 @@ impl<E: ServingEngine> Server<E> {
 
             // --- Outcomes ----------------------------------------------
             for (slot, outcome) in active.iter_mut().zip(&outcomes) {
-                debug_assert_eq!(slot.req.id, outcome.seq_id, "outcome order");
-                match outcome.event {
-                    StepEvent::Prefill { .. } => {}
-                    StepEvent::Token(t) => {
-                        if slot.first_token.is_none() {
-                            slot.first_token = Some(self.clock);
-                        }
-                        slot.tokens.push(t);
-                        slot.last_token = self.clock;
-                        sink(TokenEvent {
-                            request_id: slot.req.id,
-                            token: t,
-                            index: slot.tokens.len() - 1,
-                            time: self.clock,
-                        });
-                        if slot.req.eos_token == Some(t) {
-                            slot.finish = Some(FinishReason::Eos);
-                        } else if slot.tokens.len() >= slot.req.max_new_tokens {
-                            slot.finish = Some(FinishReason::MaxTokens);
-                        }
-                    }
-                    StepEvent::CacheFull => slot.finish = Some(FinishReason::CacheFull),
-                }
+                slot.apply(outcome, self.clock, &mut sink);
             }
 
             // --- Retire finished sequences immediately -----------------
@@ -362,21 +477,7 @@ impl<E: ServingEngine> Server<E> {
                 self.engine.finish_seq(slot.req.id)?;
                 reserved_pages -= slot.reserved_pages;
                 total_tokens += slot.tokens.len() as u64;
-                let first = slot.first_token.unwrap_or(self.clock);
-                let n = slot.tokens.len();
-                responses.push(Response {
-                    id: slot.req.id,
-                    latency: self.clock - slot.req.arrival,
-                    queue_delay: slot.admitted - slot.req.arrival,
-                    ttft: first - slot.req.arrival,
-                    tpot: if n > 1 {
-                        (slot.last_token - first) / (n - 1) as f64
-                    } else {
-                        0.0
-                    },
-                    finish: slot.finish.expect("retired with a reason"),
-                    tokens: slot.tokens,
-                });
+                responses.push(slot.into_response(self.clock));
             }
         }
 
@@ -394,8 +495,9 @@ impl<E: ServingEngine> Server<E> {
 }
 
 /// Simulated (device-model) seconds accumulated in a breakdown: total
-/// minus the measured share.
-fn simulated_total(b: &super::metrics::Breakdown) -> f64 {
+/// minus the measured share. Shared with the fleet's per-replica tick
+/// accounting.
+pub(crate) fn simulated_total(b: &super::metrics::Breakdown) -> f64 {
     let measured: f64 = super::metrics::Component::all()
         .iter()
         .map(|&c| b.measured_seconds(c))
@@ -417,6 +519,33 @@ mod tests {
 
     fn server(mode: WeightMode) -> Server {
         server_with(mode, SchedulerConfig::continuous(4))
+    }
+
+    #[test]
+    fn admission_trait_matches_policy_semantics() {
+        let s = SchedPolicy::Static.admission();
+        assert!(s.admit_now(0), "static opens an empty round");
+        assert!(!s.admit_now(1), "static never admits mid-round");
+        assert_eq!(s.label(), "static");
+        let c = SchedPolicy::Continuous.admission();
+        assert!(c.admit_now(0) && c.admit_now(5), "continuous always admits");
+        assert_eq!(c.label(), "continuous");
+    }
+
+    #[test]
+    fn from_config_runs_the_typed_validator() {
+        let cfg = ModelConfig::test_tiny();
+        let engine = Engine::build(&cfg, 11, WeightMode::Bf16Resident).unwrap();
+        assert!(matches!(
+            Server::from_config(engine, &ServeConfig::new().slots(0)),
+            Err(Error::Config(_))
+        ));
+        let engine = Engine::build(&cfg, 11, WeightMode::Bf16Resident).unwrap();
+        let mut s = Server::from_config(engine, &ServeConfig::new().slots(2)).unwrap();
+        s.submit(Request::new(vec![1, 2], 3)).unwrap();
+        let report = s.drain().unwrap();
+        assert_eq!(report.responses.len(), 1);
+        assert_eq!(report.responses[0].tokens.len(), 3);
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub enum Error {
     /// Invalid CLI or API argument.
     InvalidArgument(String),
 
+    /// A serving configuration failed validation (the `ServeConfig`
+    /// builder centralizes flag/knob checks behind this variant).
+    Config(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -88,6 +92,7 @@ impl std::fmt::Display for Error {
             Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
             Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
             Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Config(m) => write!(f, "invalid serve configuration: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }

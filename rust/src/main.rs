@@ -22,7 +22,8 @@ use dfloat11::cli::Args;
 use dfloat11::codec::{codec_by_name, CompressedTensor, DecodeOpts};
 use dfloat11::container::{ContainerReader, ContainerWriter};
 use dfloat11::coordinator::{
-    trace, Component, Engine, Request, SchedPolicy, SchedulerConfig, Server, ServingEngine,
+    trace, Component, Engine, Fleet, LeastLoaded, RejectReason, ReplicaHealth, Request, Response,
+    RoundRobin, RouterPolicy, SchedPolicy, ServeConfig, Server, ServingEngine, SessionAffinity,
     ShardedEngine, WeightMode,
 };
 use dfloat11::entropy::ComponentHistograms;
@@ -59,6 +60,15 @@ fn usage() -> ! {
                                  shard s's compute (default on; needs --shards)\n\
                    --from PATH   serve weights out of a .df11 container\n\
                                  (pass the matching --model/--scale)\n\
+                   --replicas N  replicate the engine N times behind the\n\
+                                 fleet admission router (1 = plain server)\n\
+                   --router rr|least-loaded|session  fleet routing policy\n\
+                                 (default rr; needs --replicas)\n\
+                   --queue-cap N bound the fleet admission queue; overflow\n\
+                                 arrivals are rejected, not queued\n\
+                   --kill R@T    mark fleet replica R dead at T seconds\n\
+                                 (in-flight work re-routes; needs --replicas)\n\
+                   --drain R@T   drain fleet replica R at T seconds\n\
          estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
          decode    --in PATH [--threads T] [--verify]  decode a .df11 container;\n\
                    --verify checks bit-identity vs --model/--scale/--seed"
@@ -171,26 +181,53 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.get_parse_or("shards", 1usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
+    let replicas = args.get_parse_or("replicas", 1usize)?;
+    // `--slots` is the decode-slot count; `--batch` survives as an alias.
+    let slots = args.get_parse_or("slots", args.get_parse_or("batch", 4usize)?)?;
     let cfg = scaled_config(args, 24)?;
-    // Shard overlap only exists with >1 shard; an explicit --pipeline
-    // on a single-box serve would silently do nothing, so reject it
-    // (same convention as the other meaningless flag combinations).
-    if args.get("pipeline").is_some() && shards <= 1 {
-        return Err(Error::InvalidArgument(
-            "--pipeline overlaps shard decode with the previous shard's compute; \
-             it needs --shards N (N > 1)"
-                .into(),
-        ));
-    }
-    let pipeline = match args.get_or("pipeline", "on").as_str() {
-        "on" | "true" => true,
-        "off" | "false" => false,
+    let policy = match args.get_or("sched", "continuous").as_str() {
+        "static" => SchedPolicy::Static,
+        "continuous" => SchedPolicy::Continuous,
         other => {
             return Err(Error::InvalidArgument(format!(
-                "unknown --pipeline {other} (want on|off)"
+                "unknown scheduler {other} (want static|continuous)"
             )))
         }
     };
+    let mut sconfig = ServeConfig::new()
+        .policy(policy)
+        .slots(slots)
+        .shards(shards)
+        .replicas(replicas);
+    if let Some(p) = args.get("pipeline") {
+        sconfig = sconfig.pipeline(match p {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => {
+                return Err(Error::InvalidArgument(format!(
+                    "unknown --pipeline {other} (want on|off)"
+                )))
+            }
+        });
+    }
+    if args.get("queue-cap").is_some() {
+        sconfig = sconfig.queue_capacity(args.get_parse_or("queue-cap", 0usize)?);
+    }
+    // One typed validator for every knob combination: the old ad-hoc
+    // checks (`--pipeline` without `--shards`, zero slots, ...) live in
+    // `ServeConfig::validate` now, shared with `Server::from_config`
+    // and `Fleet::new`.
+    sconfig.validate()?;
+    // The fleet-only flags would silently do nothing on a plain server
+    // — reject them (same convention as the other meaningless flag
+    // combinations).
+    for flag in ["router", "queue-cap", "kill", "drain"] {
+        if args.get(flag).is_some() && replicas <= 1 {
+            return Err(Error::InvalidArgument(format!(
+                "--{flag} drives the replicated fleet; it needs --replicas N (N > 1)"
+            )));
+        }
+    }
     // `--format` is the sharded-weights knob (bf16|df11); `--mode` the
     // single-box one (bf16|df11|offload). They are aliases for the
     // weight format, so passing both would make one silently win —
@@ -226,12 +263,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         if shards > 1 {
             let plan = serve_plan(args, &cfg, shards, ShardFormat::Df11)?;
-            let mut engine = ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
-            engine.set_pipeline(pipeline);
-            return run_server(engine, args, &cfg);
+            let pipeline = sconfig.pipeline_enabled();
+            return serve_dispatch(args, &cfg, &sconfig, || {
+                let mut engine =
+                    ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
+                engine.set_pipeline(pipeline);
+                Ok(engine)
+            });
         }
-        let engine = Engine::build_from_container(&cfg, Path::new(from))?;
-        return run_server(engine, args, &cfg);
+        return serve_dispatch(args, &cfg, &sconfig, || {
+            Engine::build_from_container(&cfg, Path::new(from))
+        });
     }
     if shards > 1 {
         let (mode, format) = match mode_name.as_str() {
@@ -244,9 +286,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         };
         let plan = serve_plan(args, &cfg, shards, format)?;
-        let mut engine = ShardedEngine::build(&cfg, seed, mode, &plan)?;
-        engine.set_pipeline(pipeline);
-        return run_server(engine, args, &cfg);
+        let pipeline = sconfig.pipeline_enabled();
+        return serve_dispatch(args, &cfg, &sconfig, || {
+            let mut engine = ShardedEngine::build(&cfg, seed, mode.clone(), &plan)?;
+            engine.set_pipeline(pipeline);
+            Ok(engine)
+        });
     }
     let mode = match mode_name.as_str() {
         "bf16" => WeightMode::Bf16Resident,
@@ -257,7 +302,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         other => return Err(Error::InvalidArgument(format!("unknown mode {other}"))),
     };
-    run_server(Engine::build(&cfg, seed, mode)?, args, &cfg)
+    serve_dispatch(args, &cfg, &sconfig, || Engine::build(&cfg, seed, mode.clone()))
+}
+
+/// One engine per serving surface: `--replicas 1` drives the engine
+/// through the single [`Server`] tick loop, `--replicas N` builds N
+/// identical engines and drives them through the [`Fleet`] router.
+fn serve_dispatch<E, F>(
+    args: &Args,
+    cfg: &ModelConfig,
+    sconfig: &ServeConfig,
+    mut build: F,
+) -> Result<()>
+where
+    E: ServingEngine,
+    F: FnMut() -> Result<E>,
+{
+    if sconfig.replicas > 1 {
+        run_fleet(args, cfg, sconfig, build)
+    } else {
+        run_server(build()?, args, cfg, sconfig)
+    }
 }
 
 /// Layer-sharding plan for `serve --shards N` (ranges drive the
@@ -274,26 +339,62 @@ fn serve_plan(
     plan_layer_sharding(cfg, &device, shards, format)
 }
 
-/// Drive any [`ServingEngine`] — single-box or sharded — through the
-/// scheduler and print the serving report (plus a `tokens-crc32`
-/// digest of every response's token stream, so CI can assert sharded
-/// and unsharded runs emit bit-identical output).
-fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -> Result<()> {
+/// The serve workload: a replayed `--trace` file or a synthetic
+/// staggered batch (shared by the single server and the fleet, so
+/// their `tokens-crc32` digests are comparable).
+fn serve_workload(args: &Args) -> Result<Vec<Request>> {
     let requests = args.get_parse_or("requests", 8usize)?;
-    // `--slots` is the decode-slot count; `--batch` survives as an alias.
-    let slots = args.get_parse_or("slots", args.get_parse_or("batch", 4usize)?)?;
     let new_tokens = args.get_parse_or("tokens", 8usize)?;
-    let threads = args.get_parse_or("threads", 0usize)?;
     let stagger = args.get_parse_or("stagger", 0.0f64)?;
-    let policy = match args.get_or("sched", "continuous").as_str() {
-        "static" => SchedPolicy::Static,
-        "continuous" => SchedPolicy::Continuous,
-        other => {
-            return Err(Error::InvalidArgument(format!(
-                "unknown scheduler {other} (want static|continuous)"
-            )))
+    if let Some(path) = args.get("trace") {
+        trace::load_trace(Path::new(path))
+    } else {
+        Ok(trace::staggered(requests, stagger, 4, &[new_tokens]))
+    }
+}
+
+/// Output digest: CRC-32 over (id, tokens) sorted by id — identical
+/// workloads must yield identical digests regardless of engine shape,
+/// scheduler, or fleet size (the shard-smoke and fleet-smoke CI gates
+/// compare these).
+fn tokens_crc32(responses: &[Response]) -> u32 {
+    let mut responses: Vec<_> = responses.iter().collect();
+    responses.sort_by_key(|r| r.id);
+    let mut hasher = dfloat11::crc32::Hasher::new();
+    for r in &responses {
+        hasher.update(&r.id.to_le_bytes());
+        for &t in &r.tokens {
+            hasher.update(&t.to_le_bytes());
         }
+    }
+    hasher.finalize()
+}
+
+/// Parse a `REPLICA@SECONDS` failure-injection spec (e.g. `--kill 0@0.001`).
+fn parse_replica_at(spec: &str, flag: &str) -> Result<(usize, f64)> {
+    let bad = || {
+        Error::InvalidArgument(format!(
+            "--{flag} wants REPLICA@SECONDS (e.g. 0@0.001), got {spec:?}"
+        ))
     };
+    let (r, t) = spec.split_once('@').ok_or_else(bad)?;
+    let replica = r.trim().parse::<usize>().map_err(|_| bad())?;
+    let at = t.trim().parse::<f64>().map_err(|_| bad())?;
+    Ok((replica, at))
+}
+
+/// Drive any [`ServingEngine`] — single-box or sharded — through the
+/// scheduler and print the serving report (plus the `tokens-crc32`
+/// digest, so CI can assert sharded and unsharded runs emit
+/// bit-identical output).
+fn run_server<E: ServingEngine>(
+    mut engine: E,
+    args: &Args,
+    cfg: &ModelConfig,
+    sconfig: &ServeConfig,
+) -> Result<()> {
+    let threads = args.get_parse_or("threads", 0usize)?;
+    let slots = sconfig.slots;
     // `--threads T` builds a dedicated persistent pool of that width;
     // 0 keeps the crate-global per-core pool (the hint then defaults to
     // the pool's full width).
@@ -302,27 +403,17 @@ fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -
     }
     engine.set_decode_threads(threads);
     println!(
-        "serving {} ({} params, source {}, {policy:?} scheduler, {slots} slots, {} decode \
+        "serving {} ({} params, source {}, {:?} scheduler, {slots} slots, {} decode \
          threads, {} shard(s))",
         cfg.name,
         cfg.num_params(),
         engine.source_label(),
+        sconfig.policy,
         engine.decode_threads(),
         engine.num_shards(),
     );
-    let mut server = Server::new(
-        engine,
-        SchedulerConfig {
-            max_batch: slots,
-            policy,
-            ..SchedulerConfig::default()
-        },
-    );
-    let workload = if let Some(path) = args.get("trace") {
-        trace::load_trace(Path::new(path))?
-    } else {
-        trace::staggered(requests, stagger, 4, &[new_tokens])
-    };
+    let mut server = Server::from_config(engine, sconfig)?;
+    let workload = serve_workload(args)?;
     let submitted = workload.len();
     for req in workload {
         let at = req.arrival;
@@ -358,19 +449,7 @@ fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -
         report.occupancy.peak,
         report.occupancy.ticks,
     );
-    // Output digest: CRC-32 over (id, tokens) sorted by id — identical
-    // workloads must yield identical digests regardless of engine
-    // shape or scheduler (the shard-smoke CI gate compares these).
-    let mut responses: Vec<_> = report.responses.iter().collect();
-    responses.sort_by_key(|r| r.id);
-    let mut hasher = dfloat11::crc32::Hasher::new();
-    for r in &responses {
-        hasher.update(&r.id.to_le_bytes());
-        for &t in &r.tokens {
-            hasher.update(&t.to_le_bytes());
-        }
-    }
-    println!("tokens-crc32 {:#010x}", hasher.finalize());
+    println!("tokens-crc32 {:#010x}", tokens_crc32(&report.responses));
     let bd = server.engine().breakdown();
     let decompress = bd.measured_seconds(Component::Decompress);
     if decompress > 0.0 {
@@ -395,6 +474,145 @@ fn run_server<E: ServingEngine>(mut engine: E, args: &Args, cfg: &ModelConfig) -
             fmt::seconds(s.compute_seconds),
         );
     }
+    Ok(())
+}
+
+/// Drive a replicated fleet of engines through the admission router
+/// and print the fleet report. The `tokens-crc32` digest uses the same
+/// algorithm as `run_server`, so CI can assert a 2-replica fleet and a
+/// single server emit bit-identical output for the same workload.
+fn run_fleet<E, F>(args: &Args, cfg: &ModelConfig, sconfig: &ServeConfig, mut build: F) -> Result<()>
+where
+    E: ServingEngine,
+    F: FnMut() -> Result<E>,
+{
+    let threads = args.get_parse_or("threads", 0usize)?;
+    let router_name = args.get_or("router", "rr");
+    let router: Box<dyn RouterPolicy> = match router_name.as_str() {
+        "rr" | "round-robin" => Box::new(RoundRobin::new()),
+        "least-loaded" | "ll" => Box::new(LeastLoaded::new()),
+        "session" | "session-affinity" => Box::new(SessionAffinity::new()),
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown router {other} (want rr|least-loaded|session)"
+            )))
+        }
+    };
+    let mut engines = Vec::with_capacity(sconfig.replicas);
+    for _ in 0..sconfig.replicas {
+        let mut engine = build()?;
+        if threads > 0 {
+            engine.set_decode_pool(WorkerPool::new(threads));
+        }
+        engine.set_decode_threads(threads);
+        engines.push(engine);
+    }
+    println!(
+        "fleet: {} x {} ({} params, source {}, {:?} scheduler, {} slots/replica, router {})",
+        sconfig.replicas,
+        cfg.name,
+        cfg.num_params(),
+        engines[0].source_label(),
+        sconfig.policy,
+        sconfig.slots,
+        router.name(),
+    );
+    let mut fleet = Fleet::new(engines, *sconfig, router)?;
+    if let Some(spec) = args.get("kill") {
+        let (replica, at) = parse_replica_at(spec, "kill")?;
+        fleet.kill_at(replica, at)?;
+    }
+    if let Some(spec) = args.get("drain") {
+        let (replica, at) = parse_replica_at(spec, "drain")?;
+        fleet.set_health_at(replica, ReplicaHealth::Draining, at)?;
+    }
+    let workload = serve_workload(args)?;
+    let submitted = workload.len();
+    let sticky = matches!(router_name.as_str(), "session" | "session-affinity");
+    for (i, mut req) in workload.into_iter().enumerate() {
+        if sticky && req.session.is_none() {
+            // Synthetic workloads get a few concurrent "users" so the
+            // sticky router has sessions to pin.
+            req = req.with_session(i as u64 % (2 * sconfig.replicas as u64));
+        }
+        let at = req.arrival;
+        fleet.submit_at(req, at)?;
+    }
+    let report = fleet.drain()?;
+    if report.offered() != submitted {
+        return Err(Error::Scheduler(format!(
+            "{} of {submitted} requests accounted for (completed + rejected)",
+            report.offered()
+        )));
+    }
+    println!(
+        "fleet served {}/{submitted} requests ({} rejected), {} tokens in {} -> goodput {:.2} tok/s",
+        report.responses.len(),
+        report.rejections.len(),
+        report.total_tokens,
+        fmt::seconds(report.total_seconds),
+        report.goodput(),
+    );
+    println!(
+        "latency p50 {} p95 {}; queue delay mean {:.6} s; tpot mean {:.6} s",
+        fmt::seconds(report.latency.percentile(50.0)),
+        fmt::seconds(report.latency.percentile(95.0)),
+        report.queue_delay.mean(),
+        report.tpot.mean(),
+    );
+    println!(
+        "ttft mean {:.6} s (p50 {:.6}, p95 {:.6})",
+        report.ttft.mean(),
+        report.ttft.percentile(50.0),
+        report.ttft.percentile(95.0),
+    );
+    println!(
+        "occupancy mean {:.2}/{} slots (peak {}) over {} ticks",
+        report.occupancy.mean(),
+        report.occupancy.slots,
+        report.occupancy.peak,
+        report.occupancy.ticks,
+    );
+    for r in &report.per_replica {
+        println!(
+            "  {} [{}]: {} routed, {} tokens, {} ticks, peak {} seqs",
+            r.label,
+            r.health.label(),
+            r.routed,
+            r.tokens,
+            r.ticks,
+            r.peak_active,
+        );
+    }
+    for e in &report.health_events {
+        println!(
+            "health: replica {} -> {} at {} ({} in-flight re-routed)",
+            e.replica,
+            e.health.label(),
+            fmt::seconds(e.time),
+            e.rerouted,
+        );
+    }
+    let reroutes = report.routes.iter().filter(|r| r.reroute).count();
+    if reroutes > 0 {
+        println!("re-routed admissions: {reroutes}");
+    }
+    if !report.rejections.is_empty() {
+        let count = |reason: RejectReason| {
+            report
+                .rejections
+                .iter()
+                .filter(|r| r.reason == reason)
+                .count()
+        };
+        println!(
+            "rejections: queue-full {}, unschedulable {}, no-healthy-replica {}",
+            count(RejectReason::QueueFull),
+            count(RejectReason::Unschedulable),
+            count(RejectReason::NoHealthyReplica),
+        );
+    }
+    println!("tokens-crc32 {:#010x}", tokens_crc32(&report.responses));
     Ok(())
 }
 

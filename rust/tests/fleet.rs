@@ -1,0 +1,438 @@
+//! Fleet-scale replicated serving, end to end.
+//!
+//! The fleet must preserve the paper's losslessness guarantee across
+//! every deployment shape: tokens are bit-identical whether a request
+//! is served by one box or routed across N replicas by any
+//! `RouterPolicy`, from BF16, DF11, or container-backed weights — even
+//! when a replica dies mid-flight and its work is re-routed.
+
+use dfloat11::container::write_df11_model;
+use dfloat11::coordinator::{
+    Engine, Fleet, FleetReport, LeastLoaded, RejectReason, ReplicaHealth, Request, RoundRobin,
+    RouterPolicy, ServeConfig, SessionAffinity, SubmitOutcome, WeightMode,
+};
+use dfloat11::dfloat11::Df11Model;
+use dfloat11::error::Error;
+use dfloat11::model::init::generate_model_weights;
+use dfloat11::model::ModelConfig;
+use dfloat11::proptest_lite::{check, Config};
+use std::path::PathBuf;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::test_tiny()
+}
+
+enum Source {
+    Bf16,
+    Df11,
+    Container(PathBuf),
+}
+
+fn build_engine(cfg: &ModelConfig, seed: u64, src: &Source) -> Engine {
+    match src {
+        Source::Bf16 => Engine::build(cfg, seed, WeightMode::Bf16Resident).unwrap(),
+        Source::Df11 => Engine::build(cfg, seed, WeightMode::Df11).unwrap(),
+        Source::Container(path) => Engine::build_from_container(cfg, path).unwrap(),
+    }
+}
+
+fn router_by(name: &str) -> Box<dyn RouterPolicy> {
+    match name {
+        "rr" => Box::new(RoundRobin::new()),
+        "least-loaded" => Box::new(LeastLoaded::new()),
+        "session" => Box::new(SessionAffinity::new()),
+        other => panic!("unknown router {other}"),
+    }
+}
+
+/// Deterministic mixed workload; `sessions > 0` stamps session keys so
+/// the sticky router has something to pin.
+fn workload(n: usize, sessions: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..3).map(|t| ((i * 13 + t * 5) % 50 + 1) as u32).collect();
+            let mut r = Request::new(prompt, 2 + i % 3);
+            if sessions > 0 {
+                r = r.with_session(i as u64 % sessions);
+            }
+            r
+        })
+        .collect()
+}
+
+fn run_fleet(
+    cfg: &ModelConfig,
+    seed: u64,
+    src: &Source,
+    n: usize,
+    router: &str,
+    config: ServeConfig,
+    workload: &[Request],
+) -> FleetReport {
+    let engines: Vec<Engine> = (0..n).map(|_| build_engine(cfg, seed, src)).collect();
+    let mut fleet = Fleet::new(engines, config.replicas(n), router_by(router)).unwrap();
+    for r in workload {
+        let at = r.arrival;
+        fleet.submit_at(r.clone(), at).unwrap();
+    }
+    fleet.drain().unwrap()
+}
+
+/// Tokens per request id, for order-independent comparison.
+fn tokens_by_id(report: &FleetReport) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<(u64, Vec<u32>)> = report
+        .responses
+        .iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+/// THE fleet-losslessness matrix: replica counts {1, 2, 4} x weight
+/// sources {bf16, df11, container} x all three router policies emit
+/// tokens bit-identical to a single BF16 replica.
+#[test]
+fn fleet_tokens_bit_identical_across_replica_counts_sources_and_routers() {
+    let cfg = tiny();
+    let seed = 13;
+    let work = workload(6, 3);
+
+    // Container-backed replicas read the same weights from disk.
+    let raw = generate_model_weights(&cfg, seed);
+    let model = Df11Model::compress_from_weights(cfg.name.clone(), raw).unwrap();
+    let dir = std::env::temp_dir().join("df11_fleet_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("fleet_{}.df11", std::process::id()));
+    write_df11_model(&path, &model).unwrap();
+
+    let reference = tokens_by_id(&run_fleet(
+        &cfg,
+        seed,
+        &Source::Bf16,
+        1,
+        "rr",
+        ServeConfig::new().slots(2),
+        &work,
+    ));
+    assert_eq!(reference.len(), 6);
+
+    for src in [Source::Bf16, Source::Df11, Source::Container(path.clone())] {
+        for n in [1usize, 2, 4] {
+            for router in ["rr", "least-loaded", "session"] {
+                let report =
+                    run_fleet(&cfg, seed, &src, n, router, ServeConfig::new().slots(2), &work);
+                assert!(report.rejections.is_empty());
+                assert_eq!(
+                    tokens_by_id(&report),
+                    reference,
+                    "{n} replicas, router {router}"
+                );
+                // Every admission went to a live replica in range.
+                assert!(report.routes.iter().all(|r| r.replica < n));
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+
+    // Static admission through the fleet agrees too.
+    let report = run_fleet(
+        &cfg,
+        seed,
+        &Source::Df11,
+        2,
+        "rr",
+        ServeConfig::new().static_batch().slots(2),
+        &work,
+    );
+    assert_eq!(tokens_by_id(&report), reference, "static fleet");
+}
+
+/// Session-affinity stickiness property: with every replica healthy
+/// and slots to spare, all requests sharing a session key land on one
+/// replica — the key's stable preferred replica.
+#[test]
+fn prop_session_affinity_is_sticky() {
+    let cfg = tiny();
+    check(
+        "session-stickiness",
+        Config {
+            cases: 6,
+            max_size: 32,
+            ..Config::default()
+        },
+        |g| {
+            let n = g.usize_in(1, 4);
+            let sessions = g.usize_in(1, 4) as u64;
+            let n_reqs = g.usize_in(4, 8);
+            // Ample slots: the preferred replica is always a candidate.
+            let config = ServeConfig::new().slots(n_reqs);
+            let work = workload(n_reqs, sessions);
+            let report = run_fleet(&cfg, 7, &Source::Bf16, n, "session", config, &work);
+            if report.responses.len() != n_reqs {
+                return Err("lost responses".into());
+            }
+            // Ids are queue-assigned in submit order: request i -> id i+1,
+            // session i % sessions.
+            for route in &report.routes {
+                let session = (route.request_id - 1) % sessions;
+                let want = SessionAffinity::preferred(session, n);
+                if route.replica != want {
+                    return Err(format!(
+                        "session {session} routed to replica {} (preferred {want}) \
+                         with {n} replicas",
+                        route.replica
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Routing never targets a dead replica: mark one dead up front and
+/// every admission must land elsewhere, with all work completing.
+#[test]
+fn least_loaded_never_routes_to_dead_replica() {
+    let cfg = tiny();
+    let work = workload(9, 0);
+    let engines: Vec<Engine> = (0..3)
+        .map(|_| Engine::build(&cfg, 3, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(2).replicas(3),
+        Box::new(LeastLoaded::new()),
+    )
+    .unwrap();
+    fleet.set_health(1, ReplicaHealth::Dead).unwrap();
+    assert_eq!(fleet.replica_health(1), Some(ReplicaHealth::Dead));
+    for r in &work {
+        fleet.submit(r.clone()).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+    assert_eq!(report.responses.len(), 9);
+    assert!(!report.routes.is_empty());
+    assert!(
+        report.routes.iter().all(|r| r.replica != 1),
+        "no admission may target the dead replica"
+    );
+    // A draining replica is also never routed to.
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| Engine::build(&cfg, 3, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(2).replicas(2),
+        Box::new(LeastLoaded::new()),
+    )
+    .unwrap();
+    fleet.set_health(0, ReplicaHealth::Draining).unwrap();
+    for r in &work {
+        fleet.submit(r.clone()).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+    assert_eq!(report.responses.len(), 9);
+    assert!(report.routes.iter().all(|r| r.replica == 1));
+}
+
+/// Backpressure is a typed outcome on both submit paths: closed-loop
+/// submits past the bound reject at the door, and open-loop arrivals
+/// past the bound reject during the drain — never a panic, and the
+/// accepted work still completes.
+#[test]
+fn bounded_queue_rejects_with_typed_outcome() {
+    let cfg = tiny();
+    let config = ServeConfig::new().slots(1).replicas(2).queue_capacity(2);
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| Engine::build(&cfg, 5, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(engines, config, Box::new(RoundRobin::new())).unwrap();
+
+    // Closed loop: 4 submits now against a capacity of 2.
+    let mut door_rejects = 0;
+    for r in workload(4, 0) {
+        match fleet.submit(r).unwrap() {
+            SubmitOutcome::Enqueued(id) => assert!(id > 0),
+            SubmitOutcome::Rejected(rej) => {
+                assert_eq!(rej.reason, RejectReason::QueueFull);
+                door_rejects += 1;
+            }
+            SubmitOutcome::Deferred => panic!("now-arrivals are not deferred"),
+        }
+    }
+    assert_eq!(door_rejects, 2, "capacity 2 admits 2 of 4 immediate submits");
+
+    // Open loop: 4 more arriving together later; the queue is drained
+    // by then but still only holds 2.
+    for r in workload(4, 0) {
+        assert_eq!(
+            fleet.submit_at(r, 1e6).unwrap(),
+            SubmitOutcome::Deferred,
+            "future arrivals park until the clock reaches them"
+        );
+    }
+    let report = fleet.drain().unwrap();
+    assert_eq!(
+        report.responses.len() + report.rejections.len(),
+        8,
+        "every offered request is accounted for"
+    );
+    assert_eq!(report.responses.len(), 4);
+    assert_eq!(report.rejections.len(), 4);
+    assert!(report
+        .rejections
+        .iter()
+        .all(|r| r.reason == RejectReason::QueueFull));
+}
+
+/// With every replica dead, accepted work is rejected with a typed
+/// reason instead of wedging the drain loop.
+#[test]
+fn all_replicas_dead_rejects_gracefully() {
+    let cfg = tiny();
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| Engine::build(&cfg, 5, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(2).replicas(2),
+        Box::new(RoundRobin::new()),
+    )
+    .unwrap();
+    fleet.set_health(0, ReplicaHealth::Dead).unwrap();
+    fleet.set_health(1, ReplicaHealth::Dead).unwrap();
+    for r in workload(3, 0) {
+        fleet.submit(r).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+    assert!(report.responses.is_empty());
+    assert_eq!(report.rejections.len(), 3);
+    assert!(report
+        .rejections
+        .iter()
+        .all(|r| r.reason == RejectReason::NoHealthyReplica));
+    // Dead replicas cannot rejoin.
+    assert!(matches!(
+        fleet.set_health(0, ReplicaHealth::Healthy),
+        Err(Error::Scheduler(_))
+    ));
+}
+
+/// A request whose worst-case KV demand exceeds every replica's whole
+/// budget is rejected as unschedulable (the single-server path returns
+/// a typed error; the fleet keeps serving everyone else).
+#[test]
+fn oversized_request_is_rejected_unschedulable() {
+    let cfg = tiny();
+    let page_tokens = 16u64;
+    let resident = Engine::build(&cfg, 5, WeightMode::Bf16Resident)
+        .unwrap()
+        .resident_weight_bytes();
+    // Budget leaves exactly one 16-token KV page per replica.
+    let budget = resident + page_tokens * cfg.kv_bytes_per_token();
+    let config = ServeConfig::new()
+        .slots(2)
+        .replicas(2)
+        .hbm_budget(budget)
+        .page_tokens(page_tokens);
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| Engine::build(&cfg, 5, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(engines, config, Box::new(LeastLoaded::new())).unwrap();
+    // Fits: 2 prompt + 4 new - 1 = 5 worst-case tokens -> 1 page.
+    fleet.submit(Request::new(vec![1, 2], 4)).unwrap();
+    // Can never fit: worst case 21 tokens -> 2 pages > 1 total.
+    fleet.submit(Request::new(vec![3, 4], 19)).unwrap();
+    let report = fleet.drain().unwrap();
+    assert_eq!(report.responses.len(), 1);
+    assert_eq!(report.rejections.len(), 1);
+    assert_eq!(report.rejections[0].reason, RejectReason::Unschedulable);
+    assert_eq!(report.rejections[0].id, 2);
+}
+
+/// Replica-death regression: killing a replica mid-run re-routes its
+/// in-flight work under the *original* queue-assigned ids — every id
+/// appears in exactly one response, and the tokens are bit-identical
+/// to an undisturbed fleet (regeneration restarts from the prompt).
+#[test]
+fn replica_death_reroutes_without_duplicate_responses() {
+    let cfg = tiny();
+    let work = workload(8, 0);
+    let reference = tokens_by_id(&run_fleet(
+        &cfg,
+        21,
+        &Source::Bf16,
+        2,
+        "rr",
+        ServeConfig::new().slots(4),
+        &work,
+    ));
+
+    let engines: Vec<Engine> = (0..2)
+        .map(|_| Engine::build(&cfg, 21, WeightMode::Bf16Resident).unwrap())
+        .collect();
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(4).replicas(2),
+        Box::new(RoundRobin::new()),
+    )
+    .unwrap();
+    // Fires at the first loop turn after the first decode tick (any
+    // real tick advances the clock past 1e-12), while all 8 requests
+    // are still in flight: 4 on each replica.
+    fleet.kill_at(0, 1e-12).unwrap();
+    for r in &work {
+        fleet.submit(r.clone()).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+
+    assert_eq!(report.responses.len(), 8, "no request is lost");
+    let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (1..=8).collect::<Vec<u64>>(), "each id answers once");
+    assert_eq!(tokens_by_id(&report), reference, "re-route is lossless");
+
+    assert_eq!(report.health_events.len(), 1);
+    let death = &report.health_events[0];
+    assert_eq!(death.replica, 0);
+    assert_eq!(death.health, ReplicaHealth::Dead);
+    assert_eq!(death.rerouted, 4, "replica 0 held half the fleet's work");
+    let reroutes = report.routes.iter().filter(|r| r.reroute).count();
+    assert_eq!(reroutes, 4, "each re-queued request is re-admitted once");
+    assert!(report
+        .routes
+        .iter()
+        .filter(|r| r.reroute)
+        .all(|r| r.replica == 1));
+    assert_eq!(report.per_replica[0].health, ReplicaHealth::Dead);
+    // Completed-token accounting lands on the surviving replica.
+    assert_eq!(report.per_replica[1].tokens, report.total_tokens);
+}
+
+/// Ids stay queue-owned across every fleet submit path.
+#[test]
+fn fleet_rejects_preset_ids() {
+    let cfg = tiny();
+    let engines = vec![Engine::build(&cfg, 5, WeightMode::Bf16Resident).unwrap()];
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().replicas(1),
+        Box::new(RoundRobin::new()),
+    )
+    .unwrap();
+    let mut r = Request::new(vec![1], 1);
+    r.id = 7;
+    assert!(fleet.submit(r.clone()).is_err());
+    assert!(fleet.submit_at(r, 2.0).is_err(), "deferred path checks too");
+    // Config mismatches are typed Config errors.
+    let engines = vec![Engine::build(&cfg, 5, WeightMode::Bf16Resident).unwrap()];
+    assert!(matches!(
+        Fleet::new(
+            engines,
+            ServeConfig::new().replicas(2),
+            Box::new(RoundRobin::new())
+        ),
+        Err(Error::Config(_))
+    ));
+}
