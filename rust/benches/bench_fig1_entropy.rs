@@ -4,10 +4,20 @@
 //! (both near-incompressible), exponent ≈ 2.6 of 8 bits. We reproduce
 //! it on the synthetic weights that stand in for the checkpoints (and
 //! in doing so validate the substitution itself — see DESIGN.md).
+//!
+//! A second section closes the loop from bound to codec: an auto
+//! [`CodecSelector`] pass over a fully-generated scaled model reports,
+//! per tensor, the achieved bits/weight of the winning codec against
+//! the measured component entropy — the tracked Shannon-bound gap.
+//!
+//! Pass `--json PATH` (or set `DF11_BENCH_JSON`) to also write the
+//! measurements as `BENCH_fig1.json`.
 
+use dfloat11::bench_harness::json::{write_artifact, Json};
 use dfloat11::bench_harness::Table;
+use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
 use dfloat11::entropy::ComponentHistograms;
-use dfloat11::model::init::generate_weights;
+use dfloat11::model::init::{generate_model_weights, generate_weights};
 use dfloat11::model::{zoo, WeightSpec};
 
 fn main() {
@@ -19,6 +29,7 @@ fn main() {
         "H(mantissa)/7",
         "optimal bits/w",
     ]);
+    let mut zoo_rows: Vec<Json> = Vec::new();
     for cfg in zoo::table1_llms() {
         let mut hist = ComponentHistograms::new();
         // Sample each distinct matrix kind, weighted implicitly by using
@@ -38,6 +49,17 @@ fn main() {
             hist.record_weights(&w);
         }
         let e = hist.entropy();
+        zoo_rows.push(
+            Json::obj()
+                .field("model", Json::str(&cfg.name))
+                .field("sign_bits", Json::num(e.sign_bits))
+                .field("exponent_bits", Json::num(e.exponent_bits))
+                .field("mantissa_bits", Json::num(e.mantissa_bits))
+                .field(
+                    "optimal_bits_per_weight",
+                    Json::num(e.optimal_bits_per_weight()),
+                ),
+        );
         table.row(&[
             cfg.name.clone(),
             format!("{:.3}", e.sign_bits),
@@ -52,4 +74,51 @@ fn main() {
          component); sign/mantissa near their widths. DF11's ~11 effective \
          bits ≈ 1 + 2.6 + 7 + container overhead."
     );
+
+    // Achieved vs optimal: auto-select a codec per tensor on a fully
+    // generated scaled model and measure the gap to the Shannon bound.
+    println!("\n## Achieved bits vs entropy (auto selection, scaled model)\n");
+    let cfg = zoo::llama31_8b().scaled_down(8);
+    let weights = generate_model_weights(&cfg, 42);
+    let selector = CodecSelector::new(SelectionPolicy::Auto);
+    let (_, report) = selector
+        .select_model(weights.iter().map(|(spec, w)| {
+            (
+                spec.group.as_str(),
+                spec.name.as_str(),
+                &spec.shape[..],
+                &w[..],
+            )
+        }))
+        .expect("auto selection");
+    let mut gaps = Table::new(&["tensor", "codec", "achieved bits/w", "entropy", "gap"]);
+    for t in &report.tensors {
+        gaps.row(&[
+            t.name.clone(),
+            t.codec.label().to_string(),
+            format!("{:.3}", t.achieved_bits_per_weight()),
+            format!("{:.3}", t.optimal_bits_per_weight),
+            format!("{:+.3}", t.gap_bits()),
+        ]);
+    }
+    gaps.print();
+    println!(
+        "\naggregate: {:.3} bits/w achieved vs {:.3} optimal (gap {:+.3} bits/w, \
+         ratio {:.2}%)",
+        report.achieved_bits_per_weight(),
+        report.optimal_bits_per_weight(),
+        report.aggregate_gap_bits(),
+        report.ratio_percent()
+    );
+
+    let artifact = Json::obj()
+        .field("bench", Json::str("fig1_entropy"))
+        .field("model", Json::str(&cfg.name))
+        .field("zoo_entropy", Json::Array(zoo_rows))
+        .field("selection", report.to_json());
+    match write_artifact("fig1", &artifact) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("artifact write failed: {e}"),
+    }
 }

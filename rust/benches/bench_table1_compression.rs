@@ -9,8 +9,14 @@
 //! Also prints the in-tree classical baseline (rANS, nvCOMP-style) on
 //! the same bytes. zlib/zstd are not in the vendored dependency set, so
 //! the ZipNN-style general-codec comparison uses rANS alone.
+//!
+//! Pass `--json PATH` (or set `DF11_BENCH_JSON`) to also write the
+//! measurements — including the per-tensor auto-selection report with
+//! achieved bits vs entropy — as `BENCH_table1.json`.
 
+use dfloat11::bench_harness::json::{write_artifact, Json};
 use dfloat11::bench_harness::{Bencher, Table};
+use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
 use dfloat11::model::init::{generate_model_weights, sample_model_stats};
 use dfloat11::model::zoo;
 use dfloat11::Df11Tensor;
@@ -41,9 +47,18 @@ fn main() {
         "paper bits",
     ]);
 
+    let mut sampled_rows: Vec<Json> = Vec::new();
     for (cfg, &(_, p_ratio, p_bits)) in zoo::table1_llms().iter().zip(PAPER) {
         let s = sample_model_stats(cfg, 128 * 1024, 42).expect("sample stats");
         let orig = cfg.bf16_bytes() as f64 / 1e9;
+        sampled_rows.push(
+            Json::obj()
+                .field("model", Json::str(&cfg.name))
+                .field("ratio_percent", Json::num(s.ratio_percent))
+                .field("bits_per_weight", Json::num(s.bits_per_weight))
+                .field("paper_ratio_percent", Json::num(p_ratio))
+                .field("paper_bits_per_weight", Json::num(p_bits)),
+        );
         table.row(&[
             cfg.name.clone(),
             "sampled".into(),
@@ -108,4 +123,58 @@ fn main() {
         "\npaper: DF11 ~68% vs nvCOMP ANS ~79%; generic codecs do not exploit \
          the exponent/mantissa split."
     );
+
+    // Per-tensor auto selection on the measured model: the winning
+    // codec per tensor plus the tracked gap to the Shannon bound.
+    println!("\n## Auto codec selection (measured model)\n");
+    let selector = CodecSelector::new(SelectionPolicy::Auto);
+    let (_, report) = selector
+        .select_model(weights.iter().map(|(spec, w)| {
+            (
+                spec.group.as_str(),
+                spec.name.as_str(),
+                &spec.shape[..],
+                &w[..],
+            )
+        }))
+        .expect("auto selection");
+    let wins: Vec<String> = report
+        .wins()
+        .iter()
+        .map(|(id, n)| format!("{} x{n}", id.label()))
+        .collect();
+    println!(
+        "auto: {:.3} bits/w achieved vs {:.3} optimal (gap {:+.3}), ratio \
+         {:.2}%, wins: {}",
+        report.achieved_bits_per_weight(),
+        report.optimal_bits_per_weight(),
+        report.aggregate_gap_bits(),
+        report.ratio_percent(),
+        wins.join(", ")
+    );
+
+    let artifact = Json::obj()
+        .field("bench", Json::str("table1_compression"))
+        .field("sampled", Json::Array(sampled_rows))
+        .field(
+            "measured",
+            Json::obj()
+                .field("model", Json::str(&cfg.name))
+                .field("original_bytes", Json::int(orig))
+                .field("compressed_bytes", Json::int(comp))
+                .field(
+                    "ratio_percent",
+                    Json::num(100.0 * comp as f64 / orig as f64),
+                )
+                .field(
+                    "bits_per_weight",
+                    Json::num(comp as f64 * 8.0 / (orig as f64 / 2.0)),
+                ),
+        )
+        .field("selection", report.to_json());
+    match write_artifact("table1", &artifact) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("artifact write failed: {e}"),
+    }
 }

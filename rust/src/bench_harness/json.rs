@@ -1,0 +1,202 @@
+//! Minimal JSON emission for machine-readable bench artifacts.
+//!
+//! The vendored dependency set has no `serde`, so the `BENCH_*.json`
+//! trajectory files are built from this hand-rolled value tree. Only
+//! emission is supported — nothing in the crate parses JSON — and the
+//! output is deterministic: object keys keep insertion order.
+//!
+//! Artifact routing is shared by every bench binary:
+//! `--json <path>` writes the summary to an explicit file, and the
+//! `DF11_BENCH_JSON` environment variable routes it either to a
+//! directory (the file is named `BENCH_<bench>.json` inside it) or,
+//! when the value ends in `.json`, to that exact path.
+
+use crate::error::Result;
+use std::path::PathBuf;
+
+/// A JSON value tree (emission only).
+#[derive(Clone, Debug)]
+pub enum Json {
+    /// `null` (also what non-finite numbers render as).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number; NaN/infinity render as `null`.
+    Num(f64),
+    /// A string (escaped on render).
+    Str(String),
+    /// An array.
+    Array(Vec<Json>),
+    /// An object; keys keep insertion order.
+    Object(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object builder.
+    pub fn obj() -> Json {
+        Json::Object(Vec::new())
+    }
+
+    /// Insert a field (object values only; panics otherwise — misuse is
+    /// a bench-author bug, not a runtime condition).
+    pub fn field(mut self, key: &str, value: Json) -> Json {
+        match &mut self {
+            Json::Object(fields) => fields.push((key.to_string(), value)),
+            _ => panic!("Json::field on a non-object"),
+        }
+        self
+    }
+
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// A numeric value.
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    /// An integer value (exact for |v| < 2^53).
+    pub fn int(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Object(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Resolve where bench `bench` should write its JSON artifact, if
+/// anywhere: `--json <path>` on the command line wins, then the
+/// `DF11_BENCH_JSON` environment variable (a `.json` file path, or a
+/// directory that receives `BENCH_<bench>.json`). `None` means the run
+/// was not asked for an artifact.
+pub fn artifact_path(bench: &str) -> Option<PathBuf> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next().map(PathBuf::from);
+        }
+        if let Some(path) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(path));
+        }
+    }
+    let env = std::env::var("DF11_BENCH_JSON").ok()?;
+    let p = PathBuf::from(&env);
+    if env.ends_with(".json") {
+        Some(p)
+    } else {
+        Some(p.join(format!("BENCH_{bench}.json")))
+    }
+}
+
+/// Write bench `bench`'s artifact if the run asked for one; returns the
+/// path written. Parent directories are created as needed.
+pub fn write_artifact(bench: &str, value: &Json) -> Result<Option<PathBuf>> {
+    let Some(path) = artifact_path(bench) else {
+        return Ok(None);
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&path, value.render())?;
+    Ok(Some(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars_and_nesting() {
+        let j = Json::obj()
+            .field("name", Json::str("fig1"))
+            .field("bits", Json::num(2.6))
+            .field("count", Json::int(3))
+            .field("ok", Json::Bool(true))
+            .field("none", Json::Null)
+            .field("rows", Json::Array(vec![Json::num(1.0), Json::num(2.5)]));
+        assert_eq!(
+            j.render(),
+            r#"{"name":"fig1","bits":2.6,"count":3,"ok":true,"none":null,"rows":[1,2.5]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings_and_maps_non_finite_to_null() {
+        let j = Json::Array(vec![
+            Json::str("a\"b\\c\nd"),
+            Json::num(f64::NAN),
+            Json::num(f64::INFINITY),
+        ]);
+        assert_eq!(j.render(), r#"["a\"b\\c\nd",null,null]"#);
+    }
+
+    #[test]
+    fn env_routes_to_directory_or_file() {
+        // artifact_path reads process-global state; only exercise the
+        // pure suffix logic here via the env fallback shape.
+        let dir = PathBuf::from("/tmp/artifacts");
+        assert_eq!(
+            dir.join(format!("BENCH_{}.json", "fig1")),
+            PathBuf::from("/tmp/artifacts/BENCH_fig1.json")
+        );
+    }
+}

@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+pub mod json;
+
 /// Result of benchmarking one closure.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

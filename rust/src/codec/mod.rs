@@ -1,4 +1,4 @@
-//! The unified compression API: one [`Codec`] trait, three codecs.
+//! The unified compression API: one [`Codec`] trait, four codecs.
 //!
 //! Historically the crate grew three inconsistent compression surfaces:
 //! `dfloat11::compress_weights` + `decompress_sequential`, the free
@@ -10,7 +10,10 @@
 //!   verbatim sign/mantissa), sequential or parallel decode via
 //!   [`DecodeOpts::threads`];
 //! * [`RansCodec`] — the nvCOMP-style byte-oriented rANS baseline;
-//! * [`RawBf16Codec`] — the identity baseline (stored BF16 bits).
+//! * [`RawBf16Codec`] — the identity baseline (stored BF16 bits);
+//! * [`SplitStreamCodec`] — three packed planes (sign / Huffman-coded
+//!   exponent / mantissa), each coded at its own width, reaching
+//!   1 + H(exp) + 7 bits per weight (see [`split_stream`]).
 //!
 //! Every codec produces a [`CompressedTensor`], the unit the
 //! [`crate::container`] module serializes into `.df11` block payloads
@@ -26,6 +29,11 @@ use crate::gpu_sim::KernelConfig;
 use crate::runtime::pool::WorkerPool;
 use std::sync::Arc;
 
+pub mod select;
+pub mod split_stream;
+
+pub use split_stream::{SplitStreamTensor, SPLIT_CHUNK_ELEMS};
+
 /// On-disk codec identifier — the byte stored in every container index
 /// entry. Stable across versions; never reuse a value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -37,6 +45,8 @@ pub enum CodecId {
     Df11 = 1,
     /// Byte-oriented rANS (the nvCOMP-style baseline).
     Rans = 2,
+    /// Split-stream: packed sign/mantissa planes + Huffman exponents.
+    SplitStream = 3,
 }
 
 impl CodecId {
@@ -46,6 +56,7 @@ impl CodecId {
             0 => Ok(CodecId::RawBf16),
             1 => Ok(CodecId::Df11),
             2 => Ok(CodecId::Rans),
+            3 => Ok(CodecId::SplitStream),
             other => Err(Error::UnknownCodec(other)),
         }
     }
@@ -61,6 +72,7 @@ impl CodecId {
             CodecId::RawBf16 => "raw-bf16",
             CodecId::Df11 => "df11",
             CodecId::Rans => "rans",
+            CodecId::SplitStream => "split",
         }
     }
 }
@@ -167,6 +179,8 @@ pub enum CompressedTensor {
     Rans(RansTensor),
     /// Raw BF16 bits.
     RawBf16(RawTensor),
+    /// Split-stream planes (packed sign/mantissa + Huffman exponents).
+    SplitStream(SplitStreamTensor),
 }
 
 /// A borrowed view of a compressed tensor — what the container writer
@@ -179,6 +193,8 @@ pub enum CompressedRef<'a> {
     Rans(&'a RansTensor),
     /// Raw BF16 payload.
     RawBf16(&'a RawTensor),
+    /// Split-stream payload.
+    SplitStream(&'a SplitStreamTensor),
 }
 
 impl CompressedTensor {
@@ -188,6 +204,7 @@ impl CompressedTensor {
             CompressedTensor::Df11(t) => CompressedRef::Df11(t),
             CompressedTensor::Rans(t) => CompressedRef::Rans(t),
             CompressedTensor::RawBf16(t) => CompressedRef::RawBf16(t),
+            CompressedTensor::SplitStream(t) => CompressedRef::SplitStream(t),
         }
     }
 
@@ -207,6 +224,7 @@ impl CompressedTensor {
             CompressedTensor::Df11(t) => t.shape(),
             CompressedTensor::Rans(t) => &t.shape,
             CompressedTensor::RawBf16(t) => &t.shape,
+            CompressedTensor::SplitStream(t) => t.shape(),
         }
     }
 
@@ -221,6 +239,7 @@ impl CompressedTensor {
             CompressedTensor::Df11(t) => t.compressed_bytes(),
             CompressedTensor::Rans(t) => t.encoded.len() as u64 + t.model.table_bytes(),
             CompressedTensor::RawBf16(t) => t.bits.len() as u64 * 2,
+            CompressedTensor::SplitStream(t) => t.compressed_bytes(),
         }
     }
 
@@ -268,6 +287,13 @@ impl CompressedTensor {
                 }
                 Ok(())
             }
+            CompressedTensor::SplitStream(t) => {
+                if opts.width() > 1 && t.num_elements() >= PARALLEL_MIN_ELEMENTS {
+                    t.decompress_into(out, opts.threads, &opts.pool_handle())
+                } else {
+                    t.decompress_sequential_into(out)
+                }
+            }
         }
     }
 
@@ -286,6 +312,7 @@ impl CompressedRef<'_> {
             CompressedRef::Df11(_) => CodecId::Df11,
             CompressedRef::Rans(_) => CodecId::Rans,
             CompressedRef::RawBf16(_) => CodecId::RawBf16,
+            CompressedRef::SplitStream(_) => CodecId::SplitStream,
         }
     }
 
@@ -295,6 +322,7 @@ impl CompressedRef<'_> {
             CompressedRef::Df11(t) => t.num_elements(),
             CompressedRef::Rans(t) => t.num_elements,
             CompressedRef::RawBf16(t) => t.bits.len(),
+            CompressedRef::SplitStream(t) => t.num_elements(),
         }
     }
 
@@ -304,6 +332,7 @@ impl CompressedRef<'_> {
             CompressedRef::Df11(t) => t.shape(),
             CompressedRef::Rans(t) => &t.shape,
             CompressedRef::RawBf16(t) => &t.shape,
+            CompressedRef::SplitStream(t) => t.shape(),
         }
     }
 }
@@ -465,21 +494,65 @@ impl Codec for RawBf16Codec {
     }
 }
 
-/// Codec instance by CLI name (`df11`, `rans`, `raw`/`raw-bf16`).
+/// Split-stream: three packed planes, Huffman-coded exponents — the
+/// closest codec in the menu to the component Shannon bound.
+#[derive(Clone, Debug, Default)]
+pub struct SplitStreamCodec {
+    /// Decode options (`threads > 1` selects pooled chunk decode).
+    pub opts: DecodeOpts,
+}
+
+impl SplitStreamCodec {
+    /// A codec decoding on up to `threads` pool workers (`1` =
+    /// sequential, `0` = the pool's full width).
+    pub fn with_threads(threads: usize) -> SplitStreamCodec {
+        SplitStreamCodec {
+            opts: DecodeOpts::with_threads(threads),
+        }
+    }
+}
+
+impl Codec for SplitStreamCodec {
+    fn name(&self) -> &'static str {
+        "split"
+    }
+
+    fn id(&self) -> CodecId {
+        CodecId::SplitStream
+    }
+
+    fn compress_shaped(&self, weights: &[Bf16], shape: &[usize]) -> Result<CompressedTensor> {
+        validate_shape(weights, shape)?;
+        let t = SplitStreamTensor::compress_shaped(weights, shape)?;
+        Ok(CompressedTensor::SplitStream(t))
+    }
+
+    fn decompress_into(&self, parts: &CompressedTensor, out: &mut [Bf16]) -> Result<()> {
+        self.check_parts(parts)?;
+        parts.decompress_into(out, &self.opts)
+    }
+}
+
+/// Codec instance by CLI name (`df11`, `rans`, `raw`/`raw-bf16`,
+/// `split`/`split-stream`).
 pub fn codec_by_name(name: &str, opts: DecodeOpts) -> Result<Box<dyn Codec>> {
     match name {
         "df11" => Ok(Box::new(Df11Codec { opts })),
         "rans" => Ok(Box::new(RansCodec)),
         "raw" | "raw-bf16" | "bf16" => Ok(Box::new(RawBf16Codec)),
+        "split" | "split-stream" => Ok(Box::new(SplitStreamCodec { opts })),
         other => Err(Error::InvalidArgument(format!("unknown codec {other:?}"))),
     }
 }
 
-/// All codecs, for sweeps and property tests.
+/// All codecs, for sweeps, property tests, and the selector menu.
+/// Compressing codecs come before `raw` so selection tie-breaks never
+/// pick the identity codec over a compressing one.
 pub fn all_codecs() -> Vec<Box<dyn Codec>> {
     vec![
         Box::new(Df11Codec::default()),
         Box::new(RansCodec),
+        Box::new(SplitStreamCodec::default()),
         Box::new(RawBf16Codec),
     ]
 }
@@ -569,7 +642,12 @@ mod tests {
 
     #[test]
     fn codec_id_byte_roundtrip() {
-        for id in [CodecId::RawBf16, CodecId::Df11, CodecId::Rans] {
+        for id in [
+            CodecId::RawBf16,
+            CodecId::Df11,
+            CodecId::Rans,
+            CodecId::SplitStream,
+        ] {
             assert_eq!(CodecId::from_u8(id.as_u8()).unwrap(), id);
         }
         assert!(matches!(

@@ -1,0 +1,531 @@
+//! Per-tensor codec selection: trial-compress the menu, track the gap
+//! to the Shannon bound.
+//!
+//! The `.df11` container has tagged a codec id per block since v2, but
+//! `compress` always applied one global codec. This module closes that
+//! gap (ROADMAP item 3): a [`CodecSelector`] trial-compresses each
+//! tensor against the full menu — raw, DF11, rANS, split-stream —
+//! under a [`SelectionPolicy`] and emits a [`SelectionReport`]
+//! recording, per tensor, the winning codec, the achieved bits/weight,
+//! and the measured component Shannon bound from
+//! [`crate::entropy::ComponentHistograms`]. The report is both the
+//! CLI's `--codec auto` output and the `BENCH_fig1.json` artifact
+//! body, so "how far from optimal" is a tracked number instead of a
+//! bench printout.
+//!
+//! Because `auto` picks the per-tensor minimum over the same menu any
+//! fixed codec draws from, an auto container can never exceed the best
+//! single global codec on the same model — the acceptance property
+//! pinned by `selection_beats_every_global_codec` below.
+
+use crate::bf16::Bf16;
+use crate::codec::{all_codecs, codec_by_name, Codec, CodecId, CompressedTensor, DecodeOpts};
+use crate::entropy::ComponentHistograms;
+use crate::error::{Error, Result};
+
+use crate::bench_harness::json::Json;
+
+/// How the selector picks a codec for each tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectionPolicy {
+    /// Smallest serialized payload wins, per tensor.
+    Auto,
+    /// Every tensor uses one fixed codec (the legacy `--codec NAME`
+    /// behaviour, expressed as a degenerate selection).
+    Fixed(CodecId),
+    /// Smallest payload wins, but only if it saves at least
+    /// `min_percent` of the raw BF16 bytes — otherwise the tensor is
+    /// stored raw. Guards against paying entropy-coding decode cost
+    /// for tensors that barely compress (e.g. near-uniform bits).
+    MinGain {
+        /// Required saving vs raw, in percent of the original bytes.
+        min_percent: f64,
+    },
+}
+
+impl SelectionPolicy {
+    /// Parse a CLI spec: `auto`, a fixed codec name (`df11`, `rans`,
+    /// `raw`, `split`), or `min-gain[:PERCENT]` (default 5%).
+    pub fn parse(spec: &str) -> Result<SelectionPolicy> {
+        if spec == "auto" {
+            return Ok(SelectionPolicy::Auto);
+        }
+        if let Some(rest) = spec.strip_prefix("min-gain") {
+            let min_percent = match rest.strip_prefix(':') {
+                None if rest.is_empty() => 5.0,
+                Some(p) => p.parse::<f64>().map_err(|_| {
+                    Error::InvalidArgument(format!("bad min-gain threshold {p:?}"))
+                })?,
+                _ => {
+                    return Err(Error::InvalidArgument(format!(
+                        "unknown codec policy {spec:?}"
+                    )))
+                }
+            };
+            if !(0.0..=100.0).contains(&min_percent) {
+                return Err(Error::InvalidArgument(format!(
+                    "min-gain threshold {min_percent} outside 0..=100"
+                )));
+            }
+            return Ok(SelectionPolicy::MinGain { min_percent });
+        }
+        let codec = codec_by_name(spec, DecodeOpts::default())?;
+        Ok(SelectionPolicy::Fixed(codec.id()))
+    }
+
+    /// Report label.
+    pub fn label(&self) -> String {
+        match self {
+            SelectionPolicy::Auto => "auto".to_string(),
+            SelectionPolicy::Fixed(id) => id.label().to_string(),
+            SelectionPolicy::MinGain { min_percent } => format!("min-gain:{min_percent}"),
+        }
+    }
+}
+
+/// One trial: what a codec would cost for a tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateTrial {
+    /// The codec tried.
+    pub codec: CodecId,
+    /// Its serialized payload bytes.
+    pub compressed_bytes: u64,
+}
+
+impl CandidateTrial {
+    /// Achieved bits per weight for `num_elements` weights.
+    pub fn bits_per_weight(&self, num_elements: u64) -> f64 {
+        self.compressed_bytes as f64 * 8.0 / num_elements.max(1) as f64
+    }
+}
+
+/// The selection record for one tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSelection {
+    /// Group the tensor belongs to.
+    pub group: String,
+    /// Tensor name.
+    pub name: String,
+    /// Element count.
+    pub num_elements: u64,
+    /// The winning codec.
+    pub codec: CodecId,
+    /// Original BF16 bytes.
+    pub original_bytes: u64,
+    /// Winning payload bytes.
+    pub compressed_bytes: u64,
+    /// Measured component Shannon bound (H(sign)+H(exp)+H(mantissa)).
+    pub optimal_bits_per_weight: f64,
+    /// Every codec tried, in menu order.
+    pub candidates: Vec<CandidateTrial>,
+}
+
+impl TensorSelection {
+    /// Achieved bits per weight under the winning codec.
+    pub fn achieved_bits_per_weight(&self) -> f64 {
+        self.compressed_bytes as f64 * 8.0 / self.num_elements.max(1) as f64
+    }
+
+    /// Gap to the Shannon bound, bits per weight (achieved − optimal).
+    pub fn gap_bits(&self) -> f64 {
+        self.achieved_bits_per_weight() - self.optimal_bits_per_weight
+    }
+}
+
+/// The selection report for a whole model: per-tensor winners plus the
+/// aggregate achieved-vs-optimal accounting.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionReport {
+    /// Policy label the selection ran under.
+    pub policy: String,
+    /// Per-tensor records, in compression order.
+    pub tensors: Vec<TensorSelection>,
+}
+
+impl SelectionReport {
+    /// Total original BF16 bytes.
+    pub fn total_original_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.original_bytes).sum()
+    }
+
+    /// Total winning payload bytes.
+    pub fn total_compressed_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.compressed_bytes).sum()
+    }
+
+    /// Total elements.
+    pub fn total_elements(&self) -> u64 {
+        self.tensors.iter().map(|t| t.num_elements).sum()
+    }
+
+    /// Aggregate achieved bits per weight.
+    pub fn achieved_bits_per_weight(&self) -> f64 {
+        self.total_compressed_bytes() as f64 * 8.0 / self.total_elements().max(1) as f64
+    }
+
+    /// Element-weighted aggregate Shannon bound.
+    pub fn optimal_bits_per_weight(&self) -> f64 {
+        let n = self.total_elements().max(1) as f64;
+        self.tensors
+            .iter()
+            .map(|t| t.optimal_bits_per_weight * t.num_elements as f64)
+            .sum::<f64>()
+            / n
+    }
+
+    /// Aggregate gap to the Shannon bound, bits per weight.
+    pub fn aggregate_gap_bits(&self) -> f64 {
+        self.achieved_bits_per_weight() - self.optimal_bits_per_weight()
+    }
+
+    /// Compression ratio (compressed / original, percent).
+    pub fn ratio_percent(&self) -> f64 {
+        self.total_compressed_bytes() as f64 * 100.0 / self.total_original_bytes().max(1) as f64
+    }
+
+    /// Total bytes the model would cost under each *single* global
+    /// codec (summing that codec's trial across all tensors), in menu
+    /// order. Only meaningful when every tensor trialed the full menu.
+    pub fn global_codec_totals(&self) -> Vec<(CodecId, u64)> {
+        let mut totals: Vec<(CodecId, u64)> = Vec::new();
+        for t in &self.tensors {
+            for c in &t.candidates {
+                match totals.iter_mut().find(|(id, _)| *id == c.codec) {
+                    Some((_, sum)) => *sum += c.compressed_bytes,
+                    None => totals.push((c.codec, c.compressed_bytes)),
+                }
+            }
+        }
+        totals
+    }
+
+    /// The best single global codec and its total bytes.
+    pub fn best_global_codec(&self) -> Option<(CodecId, u64)> {
+        self.global_codec_totals()
+            .into_iter()
+            .min_by_key(|&(_, bytes)| bytes)
+    }
+
+    /// How many tensors each codec won, in menu order.
+    pub fn wins(&self) -> Vec<(CodecId, usize)> {
+        let mut wins: Vec<(CodecId, usize)> = Vec::new();
+        for t in &self.tensors {
+            match wins.iter_mut().find(|(id, _)| *id == t.codec) {
+                Some((_, n)) => *n += 1,
+                None => wins.push((t.codec, 1)),
+            }
+        }
+        wins
+    }
+
+    /// The report as a JSON value — the `BENCH_fig1.json` body: one
+    /// record per tensor (winner, achieved vs optimal bits, gap) plus
+    /// the aggregate gap.
+    pub fn to_json(&self) -> Json {
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                let candidates: Vec<Json> = t
+                    .candidates
+                    .iter()
+                    .map(|c| {
+                        Json::obj()
+                            .field("codec", Json::str(c.codec.label()))
+                            .field("compressed_bytes", Json::int(c.compressed_bytes))
+                            .field(
+                                "bits_per_weight",
+                                Json::num(c.bits_per_weight(t.num_elements)),
+                            )
+                    })
+                    .collect();
+                Json::obj()
+                    .field("group", Json::str(&t.group))
+                    .field("name", Json::str(&t.name))
+                    .field("num_elements", Json::int(t.num_elements))
+                    .field("codec", Json::str(t.codec.label()))
+                    .field("compressed_bytes", Json::int(t.compressed_bytes))
+                    .field(
+                        "achieved_bits_per_weight",
+                        Json::num(t.achieved_bits_per_weight()),
+                    )
+                    .field(
+                        "optimal_bits_per_weight",
+                        Json::num(t.optimal_bits_per_weight),
+                    )
+                    .field("gap_bits", Json::num(t.gap_bits()))
+                    .field("candidates", Json::Array(candidates))
+            })
+            .collect();
+        Json::obj()
+            .field("policy", Json::str(&self.policy))
+            .field("tensors", Json::Array(tensors))
+            .field(
+                "achieved_bits_per_weight",
+                Json::num(self.achieved_bits_per_weight()),
+            )
+            .field(
+                "optimal_bits_per_weight",
+                Json::num(self.optimal_bits_per_weight()),
+            )
+            .field("aggregate_gap_bits", Json::num(self.aggregate_gap_bits()))
+            .field("ratio_percent", Json::num(self.ratio_percent()))
+    }
+}
+
+/// Trial-compresses tensors against the codec menu under a policy.
+pub struct CodecSelector {
+    policy: SelectionPolicy,
+}
+
+impl CodecSelector {
+    /// A selector under `policy`.
+    pub fn new(policy: SelectionPolicy) -> CodecSelector {
+        CodecSelector { policy }
+    }
+
+    /// The policy this selector runs under.
+    pub fn policy(&self) -> SelectionPolicy {
+        self.policy
+    }
+
+    /// The menu, in trial (and tie-break) order. Real codecs come
+    /// before `raw` so an exact byte tie never picks the identity
+    /// codec over a compressing one.
+    pub fn menu(&self) -> Vec<Box<dyn Codec>> {
+        match self.policy {
+            // A fixed policy compresses once — no trials to run.
+            SelectionPolicy::Fixed(id) => all_codecs()
+                .into_iter()
+                .filter(|c| c.id() == id)
+                .collect(),
+            _ => all_codecs(),
+        }
+    }
+
+    /// Select and compress one tensor: trial the menu, pick per the
+    /// policy, and return the winning payload with its record.
+    pub fn select_shaped(
+        &self,
+        group: &str,
+        name: &str,
+        weights: &[Bf16],
+        shape: &[usize],
+    ) -> Result<(CompressedTensor, TensorSelection)> {
+        let mut hist = ComponentHistograms::new();
+        hist.record_weights(weights);
+        let optimal = hist.entropy().optimal_bits_per_weight();
+
+        let mut candidates = Vec::new();
+        let mut best: Option<(usize, CompressedTensor)> = None;
+        for codec in self.menu() {
+            let parts = codec.compress_shaped(weights, shape)?;
+            let bytes = parts.compressed_bytes();
+            candidates.push(CandidateTrial {
+                codec: codec.id(),
+                compressed_bytes: bytes,
+            });
+            let better = match &best {
+                None => true,
+                // Strict `<`: ties keep the earlier menu entry, so the
+                // winner is deterministic in menu order.
+                Some((bi, _)) => bytes < candidates[*bi].compressed_bytes,
+            };
+            if better {
+                best = Some((candidates.len() - 1, parts));
+            }
+        }
+        let (mut winner_idx, mut winner) =
+            best.ok_or_else(|| Error::InvalidArgument("empty codec menu".into()))?;
+
+        if let SelectionPolicy::MinGain { min_percent } = self.policy {
+            let original = weights.len() as u64 * 2;
+            let saved =
+                original.saturating_sub(candidates[winner_idx].compressed_bytes) as f64 * 100.0;
+            if candidates[winner_idx].codec != CodecId::RawBf16
+                && saved < min_percent * original.max(1) as f64
+            {
+                // Not worth the decode cost: store raw instead.
+                let raw_idx = candidates
+                    .iter()
+                    .position(|c| c.codec == CodecId::RawBf16)
+                    .ok_or_else(|| Error::InvalidArgument("menu has no raw codec".into()))?;
+                winner = codec_by_name("raw", DecodeOpts::default())?
+                    .compress_shaped(weights, shape)?;
+                winner_idx = raw_idx;
+            }
+        }
+
+        let record = TensorSelection {
+            group: group.to_string(),
+            name: name.to_string(),
+            num_elements: weights.len() as u64,
+            codec: candidates[winner_idx].codec,
+            original_bytes: weights.len() as u64 * 2,
+            compressed_bytes: candidates[winner_idx].compressed_bytes,
+            optimal_bits_per_weight: optimal,
+            candidates,
+        };
+        Ok((winner, record))
+    }
+
+    /// Select and compress a whole model: `(group, name, shape,
+    /// weights)` tuples in order. Returns the payloads (container
+    /// push order) and the model-level report.
+    pub fn select_model<'w>(
+        &self,
+        tensors: impl IntoIterator<Item = (&'w str, &'w str, &'w [usize], &'w [Bf16])>,
+    ) -> Result<(Vec<CompressedTensor>, SelectionReport)> {
+        let mut parts = Vec::new();
+        let mut report = SelectionReport {
+            policy: self.policy.label(),
+            tensors: Vec::new(),
+        };
+        for (group, name, shape, weights) in tensors {
+            let (t, record) = self.select_shaped(group, name, weights, shape)?;
+            parts.push(t);
+            report.tensors.push(record);
+        }
+        Ok((parts, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    /// Weights whose 16-bit patterns are uniform noise: nothing in the
+    /// menu can beat storing them raw.
+    fn uniform_bits(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Bf16::from_bits(rng.next_index(1 << 16) as u16))
+            .collect()
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(SelectionPolicy::parse("auto").unwrap(), SelectionPolicy::Auto);
+        assert_eq!(
+            SelectionPolicy::parse("df11").unwrap(),
+            SelectionPolicy::Fixed(CodecId::Df11)
+        );
+        assert_eq!(
+            SelectionPolicy::parse("split").unwrap(),
+            SelectionPolicy::Fixed(CodecId::SplitStream)
+        );
+        assert_eq!(
+            SelectionPolicy::parse("min-gain").unwrap(),
+            SelectionPolicy::MinGain { min_percent: 5.0 }
+        );
+        assert_eq!(
+            SelectionPolicy::parse("min-gain:12.5").unwrap(),
+            SelectionPolicy::MinGain { min_percent: 12.5 }
+        );
+        assert!(SelectionPolicy::parse("min-gain:200").is_err());
+        assert!(SelectionPolicy::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn auto_picks_the_smallest_candidate() {
+        let ws = gaussian_weights(40_000, 1);
+        let sel = CodecSelector::new(SelectionPolicy::Auto);
+        let (parts, record) = sel.select_shaped("g", "t", &ws, &[ws.len()]).unwrap();
+        assert_eq!(parts.codec_id(), record.codec);
+        assert_eq!(record.candidates.len(), 4, "full menu trialed");
+        let min = record
+            .candidates
+            .iter()
+            .map(|c| c.compressed_bytes)
+            .min()
+            .unwrap();
+        assert_eq!(record.compressed_bytes, min);
+        assert_eq!(parts.compressed_bytes(), min);
+        // Gaussian weights: the split-stream planes win (1 + H(e) + 7
+        // beats DF11's 8 + H(e) + aux).
+        assert_eq!(record.codec, CodecId::SplitStream);
+        assert!(record.gap_bits() >= 0.0, "cannot beat the Shannon bound");
+        assert!(record.gap_bits() < 1.0, "gap {}", record.gap_bits());
+    }
+
+    #[test]
+    fn fixed_policy_compresses_only_its_codec() {
+        let ws = gaussian_weights(2_000, 2);
+        let sel = CodecSelector::new(SelectionPolicy::Fixed(CodecId::Rans));
+        let (parts, record) = sel.select_shaped("g", "t", &ws, &[ws.len()]).unwrap();
+        assert_eq!(parts.codec_id(), CodecId::Rans);
+        assert_eq!(record.codec, CodecId::Rans);
+        assert_eq!(record.candidates.len(), 1);
+    }
+
+    #[test]
+    fn min_gain_falls_back_to_raw_on_incompressible_bits() {
+        let ws = uniform_bits(8_000, 3);
+        let sel = CodecSelector::new(SelectionPolicy::MinGain { min_percent: 5.0 });
+        let (parts, record) = sel.select_shaped("g", "t", &ws, &[ws.len()]).unwrap();
+        assert_eq!(parts.codec_id(), CodecId::RawBf16);
+        assert_eq!(record.codec, CodecId::RawBf16);
+        assert_eq!(record.compressed_bytes, ws.len() as u64 * 2);
+        // Gaussian weights clear any reasonable threshold.
+        let ws = gaussian_weights(40_000, 4);
+        let (parts, _) = sel.select_shaped("g", "t", &ws, &[ws.len()]).unwrap();
+        assert_ne!(parts.codec_id(), CodecId::RawBf16);
+    }
+
+    #[test]
+    fn selection_beats_every_global_codec() {
+        // The acceptance property: per-tensor minima can never sum to
+        // more than the best single global codec.
+        let sel = CodecSelector::new(SelectionPolicy::Auto);
+        let tensors: Vec<(String, Vec<Bf16>)> = (0..4)
+            .map(|i| (format!("t{i}"), gaussian_weights(3_000 + i * 500, i as u64)))
+            .collect();
+        let shapes: Vec<Vec<usize>> = tensors.iter().map(|(_, w)| vec![w.len()]).collect();
+        let (_, report) = sel
+            .select_model(
+                tensors
+                    .iter()
+                    .zip(&shapes)
+                    .map(|((name, w), shape)| ("g", name.as_str(), &shape[..], &w[..])),
+            )
+            .unwrap();
+        let (best_id, best_total) = report.best_global_codec().unwrap();
+        assert!(
+            report.total_compressed_bytes() <= best_total,
+            "auto {} > best global {} ({})",
+            report.total_compressed_bytes(),
+            best_total,
+            best_id.label()
+        );
+        assert_eq!(report.tensors.len(), 4);
+        assert!(report.aggregate_gap_bits() >= 0.0);
+    }
+
+    #[test]
+    fn report_json_has_per_tensor_gap_fields() {
+        let ws = gaussian_weights(5_000, 6);
+        let sel = CodecSelector::new(SelectionPolicy::Auto);
+        let (_, report) = sel
+            .select_model([("g", "embed.tok", &[ws.len()][..], &ws[..])])
+            .unwrap();
+        let rendered = report.to_json().render();
+        for key in [
+            "\"policy\":\"auto\"",
+            "\"name\":\"embed.tok\"",
+            "achieved_bits_per_weight",
+            "optimal_bits_per_weight",
+            "aggregate_gap_bits",
+            "candidates",
+        ] {
+            assert!(rendered.contains(key), "missing {key} in {rendered}");
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! The split-stream entropy codec (`CodecId::SplitStream`).
+//!
+//! DF11 stores the sign and mantissa *interleaved* as one
+//! `PackedSignMantissa` byte per weight — 8 bits for 8 bits, no gain —
+//! and entropy-codes only the exponent. Huff-LLM and "Approaching
+//! Shannon Bound with Lossless LLM Weight Compression" (PAPERS.md)
+//! split the three BF16 fields into three *independent planes* instead:
+//!
+//! * **sign plane** — 1 bit per weight, packed (signs are near-uniform,
+//!   so 1 bit is already its entropy);
+//! * **exponent plane** — Huffman-coded at its ~2.6-bit entropy with
+//!   the same canonical, length-limited codebook machinery as DF11;
+//! * **mantissa plane** — 7 bits per weight, packed (near-uniform).
+//!
+//! The packed planes waste nothing on byte alignment, so the format
+//! reaches `1 + H(exp) + 7` bits/weight — the component Shannon bound
+//! of [`crate::entropy::ComponentEntropy::optimal_bits_per_weight`]
+//! whenever sign and mantissa are incompressible — while DF11 pays
+//! `8 + H(exp)` plus its kernel auxiliary tables. The price is decode
+//! locality: where DF11's gap arrays index the stream every
+//! `bytes_per_thread`, this codec records one **chunk start** (exact
+//! bit offset) every [`SPLIT_CHUNK_ELEMS`] weights, so the worker pool
+//! decodes chunks concurrently into disjoint output windows; sign and
+//! mantissa bits are random-access by construction (fixed width).
+//!
+//! Decode allocates nothing: the hierarchical LUT is built once when
+//! the tensor is constructed (compression or container read), and
+//! [`SplitStreamTensor::decompress_into`] runs entirely on caller
+//! buffers and stack state — the same discipline as
+//! [`crate::ans::rans::rans_decode_bf16_into`].
+
+use crate::bf16::Bf16;
+use crate::error::{Error, Result};
+use crate::huffman::decode::LutDecoder;
+use crate::huffman::{BitReader, BitWriter, Codebook, HierarchicalLut};
+use crate::runtime::pool::{self, WorkerPool};
+
+/// Elements per exponent-stream chunk: each chunk's first-codeword bit
+/// offset is recorded at compression time, giving the pooled decoder an
+/// entry point every `SPLIT_CHUNK_ELEMS` weights. 16Ki elements keeps
+/// the side table under 0.004 bits/weight while still yielding enough
+/// chunks to saturate the pool on serving-sized tensors.
+pub const SPLIT_CHUNK_ELEMS: usize = 16 * 1024;
+
+/// A split-stream compressed tensor: three planes plus the exponent
+/// codebook and chunk table.
+#[derive(Clone, Debug)]
+pub struct SplitStreamTensor {
+    shape: Vec<usize>,
+    num_elements: usize,
+    /// Elements per chunk (serialized so future writers can tune it).
+    chunk_elems: usize,
+    /// Canonical Huffman codebook over exponent bytes.
+    codebook: Codebook,
+    /// Huffman-coded exponent plane, MSB-first.
+    exp_stream: Vec<u8>,
+    /// Exact bit length of `exp_stream`.
+    exp_bits: u64,
+    /// Bit offset of each chunk's first codeword (`chunk_starts[0] == 0`).
+    chunk_starts: Vec<u64>,
+    /// Packed sign bits, MSB-first, 1 bit per weight.
+    sign_plane: Vec<u8>,
+    /// Packed mantissa bits, MSB-first, 7 bits per weight.
+    mantissa_plane: Vec<u8>,
+    /// Decode LUT hierarchy, rebuilt on construction (never serialized).
+    lut: HierarchicalLut,
+}
+
+/// Packed byte length of `n` sign bits.
+fn sign_plane_len(n: usize) -> usize {
+    n.div_ceil(8)
+}
+
+/// Packed byte length of `n` 7-bit mantissas.
+fn mantissa_plane_len(n: usize) -> usize {
+    (n * 7).div_ceil(8)
+}
+
+impl SplitStreamTensor {
+    /// Compress a shaped BF16 slice into three planes.
+    pub fn compress_shaped(weights: &[Bf16], shape: &[usize]) -> Result<SplitStreamTensor> {
+        if weights.is_empty() {
+            return Err(Error::InvalidArgument("empty tensor".into()));
+        }
+        let n = weights.len();
+        let mut freqs = [0u64; 256];
+        for w in weights {
+            freqs[w.exponent() as usize] += 1;
+        }
+        let codebook = Codebook::from_frequencies(&freqs)?;
+        let words = codebook.canonical().words();
+
+        // Exponent plane: concatenated codewords, recording the exact
+        // bit position at every chunk boundary (the pooled decoder's
+        // entry points).
+        let mut ew = BitWriter::with_capacity(n / 2 + 16);
+        let mut chunk_starts = Vec::with_capacity(n.div_ceil(SPLIT_CHUNK_ELEMS));
+        let mut sw = BitWriter::with_capacity(sign_plane_len(n));
+        let mut mw = BitWriter::with_capacity(mantissa_plane_len(n));
+        for (i, w) in weights.iter().enumerate() {
+            if i % SPLIT_CHUNK_ELEMS == 0 {
+                chunk_starts.push(ew.bit_len());
+            }
+            let cw = words[w.exponent() as usize];
+            ew.push(cw.bits, cw.len);
+            sw.push(w.sign() as u32, 1);
+            mw.push(w.mantissa() as u32, 7);
+        }
+        let (exp_stream, exp_bits) = ew.finish();
+        let (sign_plane, _) = sw.finish();
+        let (mantissa_plane, _) = mw.finish();
+        let lut = HierarchicalLut::build(&codebook)?;
+        Ok(SplitStreamTensor {
+            shape: shape.to_vec(),
+            num_elements: n,
+            chunk_elems: SPLIT_CHUNK_ELEMS,
+            codebook,
+            exp_stream,
+            exp_bits,
+            chunk_starts,
+            sign_plane,
+            mantissa_plane,
+            lut,
+        })
+    }
+
+    /// Rebuild a tensor from serialized parts (the container read path),
+    /// validating every structural invariant before the LUT is built.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        shape: Vec<usize>,
+        num_elements: usize,
+        chunk_elems: usize,
+        code_lengths: &[u8; 256],
+        exp_stream: Vec<u8>,
+        exp_bits: u64,
+        chunk_starts: Vec<u64>,
+        sign_plane: Vec<u8>,
+        mantissa_plane: Vec<u8>,
+    ) -> Result<SplitStreamTensor> {
+        if num_elements == 0 {
+            return Err(Error::container("split-stream tensor has no elements"));
+        }
+        let numel: usize = shape.iter().product();
+        if numel != num_elements {
+            return Err(Error::container(format!(
+                "split-stream shape {shape:?} does not match {num_elements} elements"
+            )));
+        }
+        if chunk_elems == 0 {
+            return Err(Error::container("split-stream chunk size is zero"));
+        }
+        if chunk_starts.len() != num_elements.div_ceil(chunk_elems) {
+            return Err(Error::container(format!(
+                "split-stream has {} chunk starts for {} elements ({} per chunk)",
+                chunk_starts.len(),
+                num_elements,
+                chunk_elems
+            )));
+        }
+        if chunk_starts.first() != Some(&0) {
+            return Err(Error::container("split-stream chunk table must start at bit 0"));
+        }
+        if chunk_starts.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::container(
+                "split-stream chunk starts must be strictly increasing",
+            ));
+        }
+        if exp_bits > exp_stream.len() as u64 * 8 {
+            return Err(Error::container(format!(
+                "split-stream claims {exp_bits} exponent bits in {} bytes",
+                exp_stream.len()
+            )));
+        }
+        if chunk_starts.last().copied().unwrap_or(0) >= exp_bits {
+            return Err(Error::container(
+                "split-stream chunk start past the exponent stream end",
+            ));
+        }
+        if sign_plane.len() != sign_plane_len(num_elements) {
+            return Err(Error::container(format!(
+                "split-stream sign plane is {} bytes for {num_elements} elements",
+                sign_plane.len()
+            )));
+        }
+        if mantissa_plane.len() != mantissa_plane_len(num_elements) {
+            return Err(Error::container(format!(
+                "split-stream mantissa plane is {} bytes for {num_elements} elements",
+                mantissa_plane.len()
+            )));
+        }
+        let codebook = Codebook::from_lengths(code_lengths)?;
+        let lut = HierarchicalLut::build(&codebook)?;
+        Ok(SplitStreamTensor {
+            shape,
+            num_elements,
+            chunk_elems,
+            codebook,
+            exp_stream,
+            exp_bits,
+            chunk_starts,
+            sign_plane,
+            mantissa_plane,
+            lut,
+        })
+    }
+
+    /// Logical shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Element count.
+    pub fn num_elements(&self) -> usize {
+        self.num_elements
+    }
+
+    /// Elements per exponent-stream chunk.
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+
+    /// The exponent codebook.
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    /// The Huffman-coded exponent plane.
+    pub fn exp_stream(&self) -> &[u8] {
+        &self.exp_stream
+    }
+
+    /// Exact bit length of the exponent plane.
+    pub fn exp_bits(&self) -> u64 {
+        self.exp_bits
+    }
+
+    /// Per-chunk first-codeword bit offsets.
+    pub fn chunk_starts(&self) -> &[u64] {
+        &self.chunk_starts
+    }
+
+    /// Packed sign plane.
+    pub fn sign_plane(&self) -> &[u8] {
+        &self.sign_plane
+    }
+
+    /// Packed mantissa plane.
+    pub fn mantissa_plane(&self) -> &[u8] {
+        &self.mantissa_plane
+    }
+
+    /// Serialized payload bytes — matches the container's split-stream
+    /// frame exactly: code lengths, exponent stream (bit length + byte
+    /// length + bytes), chunk table (elems-per-chunk + count + offsets),
+    /// and the two packed planes (length + bytes each).
+    pub fn compressed_bytes(&self) -> u64 {
+        256
+            + (8 + 8 + self.exp_stream.len() as u64)
+            + (4 + 4 + self.chunk_starts.len() as u64 * 8)
+            + (8 + self.sign_plane.len() as u64)
+            + (8 + self.mantissa_plane.len() as u64)
+    }
+
+    /// Decompress into a caller buffer. `threads`/`pool` follow the
+    /// DF11 convention: a width hint of 1 decodes inline, otherwise
+    /// chunks are decoded concurrently on the pool into disjoint,
+    /// position-derived output windows (work placement can never move
+    /// an output bit).
+    pub fn decompress_into(
+        &self,
+        out: &mut [Bf16],
+        threads: usize,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        if out.len() != self.num_elements {
+            return Err(Error::ShapeMismatch(format!(
+                "output {} != elements {}",
+                out.len(),
+                self.num_elements
+            )));
+        }
+        let num_chunks = self.chunk_starts.len();
+        let hint = match threads {
+            0 => pool.width(),
+            n => n,
+        };
+        let width = pool::effective_width(hint, num_chunks, out.len()).min(pool.width());
+        if width <= 1 || num_chunks <= 1 {
+            return self.decompress_sequential_into(out);
+        }
+        // Chunk windows are fixed-size by construction, so the split
+        // points depend only on the chunk table — never on scheduling.
+        let mut jobs: Vec<(usize, usize, &mut [Bf16])> = Vec::with_capacity(num_chunks);
+        let mut rest: &mut [Bf16] = out;
+        for c in 0..num_chunks {
+            let lo = c * self.chunk_elems;
+            let take = self.chunk_elems.min(self.num_elements - lo);
+            let (head, tail) = rest.split_at_mut(take);
+            jobs.push((c, lo, head));
+            rest = tail;
+        }
+        pool.scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(jobs.len());
+            for (c, lo, window) in jobs {
+                handles.push(scope.spawn(move || self.decode_chunk(c, lo, window)));
+            }
+            for h in handles {
+                h.join()??;
+            }
+            Ok(())
+        })
+    }
+
+    /// Decompress inline on the calling thread — no pool involved, so
+    /// small-tensor dispatch never has to spawn the global pool.
+    pub fn decompress_sequential_into(&self, out: &mut [Bf16]) -> Result<()> {
+        if out.len() != self.num_elements {
+            return Err(Error::ShapeMismatch(format!(
+                "output {} != elements {}",
+                out.len(),
+                self.num_elements
+            )));
+        }
+        for c in 0..self.chunk_starts.len() {
+            let lo = c * self.chunk_elems;
+            let hi = ((c + 1) * self.chunk_elems).min(self.num_elements);
+            self.decode_chunk(c, lo, &mut out[lo..hi])?;
+        }
+        Ok(())
+    }
+
+    /// Decode chunk `c` (elements `lo..lo + window.len()`): walk the
+    /// exponent codewords from the chunk's recorded bit offset and merge
+    /// each symbol with its fixed-offset sign and mantissa bits.
+    fn decode_chunk(&self, c: usize, lo: usize, window: &mut [Bf16]) -> Result<()> {
+        let end_bit = self
+            .chunk_starts
+            .get(c + 1)
+            .copied()
+            .unwrap_or(self.exp_bits);
+        let mut exp = BitReader::at(&self.exp_stream, self.chunk_starts[c], self.exp_bits);
+        let mut sign = BitReader::at(&self.sign_plane, lo as u64, self.num_elements as u64);
+        let mut mantissa = BitReader::at(
+            &self.mantissa_plane,
+            lo as u64 * 7,
+            self.num_elements as u64 * 7,
+        );
+        let dec = LutDecoder::new(&self.lut);
+        for slot in window.iter_mut() {
+            let e = dec.decode_one(&mut exp)?;
+            let s = sign.read(1) as u8;
+            let m = mantissa.read(7) as u8;
+            *slot = Bf16::from_parts(e, (s << 7) | m);
+        }
+        // The chunk must land exactly on the next chunk's recorded
+        // start (or the stream end): a corrupted stream that still
+        // decodes the right symbol *count* fails here.
+        if exp.position() != end_bit {
+            return Err(Error::corrupt(format!(
+                "split-stream chunk {c} ended at bit {}, expected {end_bit}",
+                exp.position()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n];
+        rng.fill_gaussian_f32(&mut xs, 0.02);
+        xs.into_iter().map(Bf16::from_f32).collect()
+    }
+
+    #[test]
+    fn roundtrips_across_sizes_and_widths() {
+        for n in [1usize, 7, 100, SPLIT_CHUNK_ELEMS - 1, SPLIT_CHUNK_ELEMS + 1, 70_000] {
+            let ws = gaussian_weights(n, n as u64 + 1);
+            let t = SplitStreamTensor::compress_shaped(&ws, &[n]).unwrap();
+            assert_eq!(t.num_elements(), n);
+            assert_eq!(t.chunk_starts().len(), n.div_ceil(SPLIT_CHUNK_ELEMS));
+            for threads in [1usize, 2, 8] {
+                let pool = WorkerPool::global();
+                let mut out = vec![Bf16::from_bits(0); n];
+                t.decompress_into(&mut out, threads, &pool).unwrap();
+                assert_eq!(out, ws, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn beats_df11_payload_size_on_gaussian_weights() {
+        // The whole point of the split planes: 1 + H(exp) + 7 bits per
+        // weight instead of DF11's 8 + H(exp) plus kernel tables.
+        let ws = gaussian_weights(120_000, 3);
+        let split = SplitStreamTensor::compress_shaped(&ws, &[ws.len()]).unwrap();
+        let df11 = crate::dfloat11::Df11Tensor::compress(&ws).unwrap();
+        assert!(
+            split.compressed_bytes() < df11.compressed_bytes(),
+            "split {} >= df11 {}",
+            split.compressed_bytes(),
+            df11.compressed_bytes()
+        );
+        // And it sits close to the component Shannon bound.
+        let bits_per_weight = split.compressed_bytes() as f64 * 8.0 / ws.len() as f64;
+        let optimal = crate::entropy::component_entropy(&ws).optimal_bits_per_weight();
+        assert!(
+            bits_per_weight - optimal < 0.5,
+            "achieved {bits_per_weight:.3} vs optimal {optimal:.3}"
+        );
+    }
+
+    #[test]
+    fn special_values_roundtrip() {
+        let mut ws = gaussian_weights(2_000, 7);
+        ws[0] = Bf16::from_f32(f32::NAN);
+        ws[1] = Bf16::from_f32(f32::INFINITY);
+        ws[2] = Bf16::from_f32(f32::NEG_INFINITY);
+        ws[3] = Bf16::from_bits(0x0001);
+        ws[4] = Bf16::from_bits(0x8000);
+        let t = SplitStreamTensor::compress_shaped(&ws, &[ws.len()]).unwrap();
+        let pool = WorkerPool::global();
+        let mut out = vec![Bf16::from_bits(0); ws.len()];
+        t.decompress_into(&mut out, 1, &pool).unwrap();
+        assert_eq!(out, ws);
+    }
+
+    #[test]
+    fn from_parts_validates_structure() {
+        let ws = gaussian_weights(1_000, 9);
+        let t = SplitStreamTensor::compress_shaped(&ws, &[1_000]).unwrap();
+        let ok = SplitStreamTensor::from_parts(
+            vec![1_000],
+            1_000,
+            t.chunk_elems(),
+            t.codebook().lengths(),
+            t.exp_stream().to_vec(),
+            t.exp_bits(),
+            t.chunk_starts().to_vec(),
+            t.sign_plane().to_vec(),
+            t.mantissa_plane().to_vec(),
+        )
+        .unwrap();
+        let pool = WorkerPool::global();
+        let mut out = vec![Bf16::from_bits(0); 1_000];
+        ok.decompress_into(&mut out, 1, &pool).unwrap();
+        assert_eq!(out, ws);
+
+        // Shape mismatch, bad chunk table, short planes: all typed.
+        let parts = |shape: Vec<usize>, n, chunks: Vec<u64>, sp: Vec<u8>, mp: Vec<u8>| {
+            SplitStreamTensor::from_parts(
+                shape,
+                n,
+                t.chunk_elems(),
+                t.codebook().lengths(),
+                t.exp_stream().to_vec(),
+                t.exp_bits(),
+                chunks,
+                sp,
+                mp,
+            )
+        };
+        let sp = t.sign_plane().to_vec();
+        let mp = t.mantissa_plane().to_vec();
+        assert!(parts(vec![999], 1_000, t.chunk_starts().to_vec(), sp.clone(), mp.clone()).is_err());
+        assert!(parts(vec![1_000], 1_000, vec![1], sp.clone(), mp.clone()).is_err());
+        assert!(parts(vec![1_000], 1_000, t.chunk_starts().to_vec(), vec![0; 3], mp.clone()).is_err());
+        assert!(parts(vec![1_000], 1_000, t.chunk_starts().to_vec(), sp, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_detected() {
+        let ws = gaussian_weights(5_000, 11);
+        let t = SplitStreamTensor::compress_shaped(&ws, &[5_000]).unwrap();
+        // Claim fewer exponent bits than the symbols need: the decoder
+        // either hits a LUT overrun or misses the end-position check.
+        let bad = SplitStreamTensor::from_parts(
+            vec![5_000],
+            5_000,
+            t.chunk_elems(),
+            t.codebook().lengths(),
+            t.exp_stream().to_vec(),
+            t.exp_bits() - 1,
+            t.chunk_starts().to_vec(),
+            t.sign_plane().to_vec(),
+            t.mantissa_plane().to_vec(),
+        )
+        .unwrap();
+        let pool = WorkerPool::global();
+        let mut out = vec![Bf16::from_bits(0); 5_000];
+        assert!(bad.decompress_into(&mut out, 1, &pool).is_err());
+    }
+
+    #[test]
+    fn wrong_output_size_rejected() {
+        let ws = gaussian_weights(100, 13);
+        let t = SplitStreamTensor::compress_shaped(&ws, &[100]).unwrap();
+        let pool = WorkerPool::global();
+        let mut out = vec![Bf16::from_bits(0); 99];
+        assert!(t.decompress_into(&mut out, 1, &pool).is_err());
+    }
+}

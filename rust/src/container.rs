@@ -13,7 +13,7 @@
 //! │ entry count u32                                        │
 //! │ index entry × count:                                   │
 //! │   group name, tensor name           len u64 + bytes    │
-//! │   codec id u8       (0 raw-bf16, 1 df11, 2 rans)       │
+//! │   codec id u8  (0 raw-bf16, 1 df11, 2 rans, 3 split)   │
 //! │   ndim u32, dims u64[ndim]                             │
 //! │   num_elements u64                                     │
 //! │   payload offset u64 (absolute), payload len u64       │
@@ -27,6 +27,8 @@
 //! │         5-bit-packed gaps, block output positions)     │
 //! │   rans: normalized freq table u16[256] + byte stream   │
 //! │   raw:  BF16 bits u16[num_elements], little-endian     │
+//! │   split: code lengths u8[256], exponent bit length +   │
+//! │         stream, chunk table, sign + mantissa planes    │
 //! └────────────────────────────────────────────────────────┘
 //! ```
 //!
@@ -38,7 +40,9 @@
 //! layout is version 2.
 
 use crate::bf16::Bf16;
-use crate::codec::{CodecId, CompressedRef, CompressedTensor, DecodeOpts, RansTensor, RawTensor};
+use crate::codec::{
+    CodecId, CompressedRef, CompressedTensor, DecodeOpts, RansTensor, RawTensor, SplitStreamTensor,
+};
 use crate::crc32::Hasher;
 use crate::dfloat11::stats::CompressionStats;
 use crate::dfloat11::{serial, Df11Model};
@@ -255,7 +259,10 @@ impl<'a> ContainerWriter<'a> {
 
     /// Queue an opaque payload under a raw codec id. Exists for
     /// forward-compat tooling and the unknown-codec test path; readers
-    /// fail with [`Error::UnknownCodec`] when the block is read.
+    /// fail with [`Error::UnknownCodec`] when the block is read. Ids
+    /// already assigned to a [`CodecId`] are rejected here — an opaque
+    /// payload under a known id would parse as garbage (or fail as
+    /// corruption) instead of surfacing the forward-compat error.
     #[doc(hidden)]
     pub fn push_opaque(
         &mut self,
@@ -264,7 +271,14 @@ impl<'a> ContainerWriter<'a> {
         codec_id: u8,
         shape: Vec<usize>,
         bytes: &'a [u8],
-    ) {
+    ) -> Result<()> {
+        if let Ok(id) = CodecId::from_u8(codec_id) {
+            return Err(Error::InvalidArgument(format!(
+                "opaque codec id {codec_id} collides with assigned codec {}; \
+                 queue typed tensors with `push`",
+                id.label()
+            )));
+        }
         self.entries.push((
             group.to_string(),
             name.to_string(),
@@ -274,6 +288,7 @@ impl<'a> ContainerWriter<'a> {
                 bytes,
             },
         ));
+        Ok(())
     }
 
     fn entry_meta(&self, pending: &Pending<'a>) -> (u8, Vec<usize>, u64) {
@@ -413,6 +428,24 @@ fn write_payload(w: &mut impl Write, pending: &Pending<'_>) -> Result<()> {
             }
             Ok(())
         }
+        Pending::Tensor(CompressedRef::SplitStream(t)) => {
+            // Frame layout mirrors `SplitStreamTensor::compressed_bytes`
+            // exactly; keep the two in sync.
+            w.write_all(t.codebook().lengths())?;
+            w_u64(w, t.exp_bits())?;
+            w_u64(w, t.exp_stream().len() as u64)?;
+            w.write_all(t.exp_stream())?;
+            w_u32(w, t.chunk_elems() as u32)?;
+            w_u32(w, t.chunk_starts().len() as u32)?;
+            for &s in t.chunk_starts() {
+                w_u64(w, s)?;
+            }
+            w_u64(w, t.sign_plane().len() as u64)?;
+            w.write_all(t.sign_plane())?;
+            w_u64(w, t.mantissa_plane().len() as u64)?;
+            w.write_all(t.mantissa_plane())?;
+            Ok(())
+        }
         Pending::Opaque { bytes, .. } => {
             w.write_all(bytes)?;
             Ok(())
@@ -485,6 +518,85 @@ fn read_payload(entry: &IndexEntry, bytes: &[u8]) -> Result<CompressedTensor> {
                 shape: entry.shape.clone(),
                 bits,
             }))
+        }
+        CodecId::SplitStream => {
+            let mut r: &[u8] = bytes;
+            let mut code_lengths = [0u8; 256];
+            read_exact_or(&mut r, &mut code_lengths, "split-stream code lengths")?;
+            let mut b8 = [0u8; 8];
+            let mut b4 = [0u8; 4];
+            read_exact_or(&mut r, &mut b8, "split-stream exponent bit length")?;
+            let exp_bits = u64::from_le_bytes(b8);
+            read_exact_or(&mut r, &mut b8, "split-stream exponent stream length")?;
+            let exp_len = u64::from_le_bytes(b8);
+            // Guard every length against the remaining payload before
+            // allocating: the payload is CRC-checked but the CRC only
+            // proves the bytes match what was written, not that a
+            // future/hostile writer wrote sane lengths.
+            if exp_len > r.len() as u64 {
+                return Err(Error::container(format!(
+                    "tensor {}: split-stream exponent stream length {exp_len} \
+                     exceeds payload",
+                    entry.name
+                )));
+            }
+            let mut exp_stream = vec![0u8; exp_len as usize];
+            read_exact_or(&mut r, &mut exp_stream, "split-stream exponent stream")?;
+            read_exact_or(&mut r, &mut b4, "split-stream chunk size")?;
+            let chunk_elems = u32::from_le_bytes(b4) as usize;
+            read_exact_or(&mut r, &mut b4, "split-stream chunk count")?;
+            let num_chunks = u32::from_le_bytes(b4) as u64;
+            if num_chunks * 8 > r.len() as u64 {
+                return Err(Error::container(format!(
+                    "tensor {}: split-stream chunk table of {num_chunks} exceeds payload",
+                    entry.name
+                )));
+            }
+            let mut chunk_starts = Vec::with_capacity(num_chunks as usize);
+            for _ in 0..num_chunks {
+                read_exact_or(&mut r, &mut b8, "split-stream chunk table")?;
+                chunk_starts.push(u64::from_le_bytes(b8));
+            }
+            read_exact_or(&mut r, &mut b8, "split-stream sign plane length")?;
+            let sign_len = u64::from_le_bytes(b8);
+            if sign_len > r.len() as u64 {
+                return Err(Error::container(format!(
+                    "tensor {}: split-stream sign plane length {sign_len} exceeds payload",
+                    entry.name
+                )));
+            }
+            let mut sign_plane = vec![0u8; sign_len as usize];
+            read_exact_or(&mut r, &mut sign_plane, "split-stream sign plane")?;
+            read_exact_or(&mut r, &mut b8, "split-stream mantissa plane length")?;
+            let mantissa_len = u64::from_le_bytes(b8);
+            if mantissa_len > r.len() as u64 {
+                return Err(Error::container(format!(
+                    "tensor {}: split-stream mantissa plane length {mantissa_len} \
+                     exceeds payload",
+                    entry.name
+                )));
+            }
+            let mut mantissa_plane = vec![0u8; mantissa_len as usize];
+            read_exact_or(&mut r, &mut mantissa_plane, "split-stream mantissa plane")?;
+            if !r.is_empty() {
+                return Err(Error::container(format!(
+                    "tensor {}: {} trailing payload bytes",
+                    entry.name,
+                    r.len()
+                )));
+            }
+            let t = SplitStreamTensor::from_parts(
+                entry.shape.clone(),
+                entry.num_elements as usize,
+                chunk_elems,
+                &code_lengths,
+                exp_stream,
+                exp_bits,
+                chunk_starts,
+                sign_plane,
+                mantissa_plane,
+            )?;
+            Ok(CompressedTensor::SplitStream(t))
         }
     }
 }
@@ -827,7 +939,7 @@ mod tests {
         }
         let path = temp_path("all_codecs");
         let summary = writer.write_to(&path).unwrap();
-        assert_eq!(summary.tensors, 3);
+        assert_eq!(summary.tensors, 4);
         assert_eq!(
             summary.total_bytes(),
             std::fs::metadata(&path).unwrap().len()
@@ -836,7 +948,7 @@ mod tests {
         let reader = ContainerReader::open(&path).unwrap();
         assert_eq!(reader.model_name(), "unit");
         assert_eq!(reader.version(), CONTAINER_VERSION);
-        assert_eq!(reader.entries().len(), 3);
+        assert_eq!(reader.entries().len(), 4);
         let group = reader.read_group("g").unwrap();
         for (name, t) in &group.tensors {
             let got = t.decompress(&DecodeOpts::default()).unwrap();
@@ -920,11 +1032,23 @@ mod tests {
     fn unknown_codec_is_typed_and_lazy() {
         let payload = vec![0xABu8; 64];
         let mut writer = ContainerWriter::new("opaque");
-        writer.push_opaque("g", "t", 0x7F, vec![32], &payload);
+        // Assigned ids are rejected up front — id 3 is split-stream now,
+        // no longer a free forward-compat slot.
+        for taken in [0u8, 1, 2, 3] {
+            assert!(
+                matches!(
+                    writer.push_opaque("g", "t", taken, vec![32], &payload),
+                    Err(Error::InvalidArgument(_))
+                ),
+                "codec id {taken} must be rejected as opaque"
+            );
+        }
+        writer.push_opaque("g", "t", 0x7F, vec![32], &payload).unwrap();
         let path = temp_path("opaque");
         writer.write_to(&path).unwrap();
         // The header parses (codec ids are opaque until a block is read)…
         let reader = ContainerReader::open(&path).unwrap();
+        assert_eq!(reader.entries().len(), 1, "rejected pushes queue nothing");
         assert_eq!(reader.entries()[0].codec_id, 0x7F);
         // …and reading the block reports the unknown codec.
         assert!(matches!(

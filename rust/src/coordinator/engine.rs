@@ -2254,6 +2254,49 @@ mod tests {
             "rans container serving must stop allocating after warmup"
         );
         std::fs::remove_file(&path).ok();
+
+        // And for `--codec split` container serving: the split-stream
+        // decoder's LUT is built once at container read, so the fetch
+        // path decodes straight into pooled scratch — steady state
+        // allocates nothing, and the logits match BF16 bitwise.
+        use crate::codec::SplitStreamCodec;
+        let mut writer = crate::container::ContainerWriter::new(cfg.name.clone());
+        let split_parts: Vec<_> = raw
+            .iter()
+            .map(|(spec, w)| {
+                (
+                    spec.group.clone(),
+                    spec.name.clone(),
+                    SplitStreamCodec::default()
+                        .compress_shaped(w, &[spec.shape[0], spec.shape[1]])
+                        .unwrap(),
+                )
+            })
+            .collect();
+        for (group, name, t) in &split_parts {
+            writer.push(group, name, t.view());
+        }
+        let path = dir.join(format!("split_scratch_{}.df11", std::process::id()));
+        writer.write_to(&path).unwrap();
+
+        let mut split = Engine::build_from_container(&cfg, &path).unwrap();
+        split.reset(1);
+        bf16.reset(1);
+        assert_eq!(
+            split.step(&[1]).unwrap(),
+            bf16.step(&[1]).unwrap(),
+            "split-stream container logits must match bf16 bitwise"
+        );
+        let warm = split.scratch_allocations();
+        for t in 0..5u32 {
+            split.step(&[t]).unwrap();
+        }
+        assert_eq!(
+            split.scratch_allocations(),
+            warm,
+            "split-stream container serving must stop allocating after warmup"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     /// Drive one sequence through the lifecycle API to completion.

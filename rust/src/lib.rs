@@ -44,7 +44,8 @@ pub mod rng;
 pub mod runtime;
 
 pub use bf16::Bf16;
-pub use codec::{Codec, CodecId, CompressedTensor, DecodeOpts};
+pub use codec::select::{CodecSelector, SelectionPolicy, SelectionReport};
+pub use codec::{Codec, CodecId, CompressedTensor, DecodeOpts, SplitStreamTensor};
 pub use container::{ContainerReader, ContainerWriter};
 pub use dfloat11::{Df11Model, Df11Tensor};
 pub use error::{Error, Result};

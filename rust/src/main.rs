@@ -19,7 +19,8 @@
 
 use dfloat11::bench_harness::fmt;
 use dfloat11::cli::Args;
-use dfloat11::codec::{codec_by_name, CompressedTensor, DecodeOpts};
+use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
+use dfloat11::codec::DecodeOpts;
 use dfloat11::container::{ContainerReader, ContainerWriter};
 use dfloat11::coordinator::{
     trace, Component, Engine, Fleet, LeastLoaded, RejectReason, ReplicaHealth, Request, Response,
@@ -39,7 +40,10 @@ fn usage() -> ! {
     eprintln!(
         "usage: dfloat11 <compress|inspect|serve|estimate|decode> [options]\n\
          \n\
-         compress  --model NAME --scale N --seed S --codec df11|rans|raw\n\
+         compress  --model NAME --scale N --seed S\n\
+                   --codec df11|rans|raw|split|auto|min-gain[:PCT]\n\
+                   (auto trial-compresses the menu per tensor and keeps\n\
+                   the smallest; min-gain falls back to raw under PCT%)\n\
                    --out PATH                         synthesize + compress to a container\n\
          inspect   PATH | --in PATH                   stats for a .df11 container\n\
          serve     --requests N --slots S --mode bf16|df11|offload\n\
@@ -105,28 +109,70 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let seed = args.get_parse_or("seed", 42u64)?;
     let out = args.get_or("out", "/tmp/model.df11");
     let cfg = scaled_config(args, 8)?;
-    let codec = codec_by_name(&args.get_or("codec", "df11"), DecodeOpts::default())?;
+    let policy = SelectionPolicy::parse(&args.get_or("codec", "df11"))?;
+    let selector = CodecSelector::new(policy);
     println!(
-        "model: {} ({} params), codec {}",
+        "model: {} ({} params), codec policy {}",
         cfg.name,
         cfg.num_params(),
-        codec.name()
+        policy.label()
     );
 
     let t0 = std::time::Instant::now();
-    let mut parts: Vec<(String, String, CompressedTensor)> = Vec::new();
-    for (spec, w) in generate_model_weights(&cfg, seed) {
-        let t = codec.compress_shaped(&w, &[spec.shape[0], spec.shape[1]])?;
-        parts.push((spec.group, spec.name, t));
-    }
+    let weights = generate_model_weights(&cfg, seed);
+    let (parts, report) = selector.select_model(weights.iter().map(|(spec, w)| {
+        (
+            spec.group.as_str(),
+            spec.name.as_str(),
+            &spec.shape[..],
+            &w[..],
+        )
+    }))?;
     let mut stats = dfloat11::dfloat11::CompressionStats::new(0, 0, 0);
     let mut writer = ContainerWriter::new(cfg.name.clone());
-    for (group, name, t) in &parts {
+    for (t, record) in parts.iter().zip(&report.tensors) {
         stats = stats.merge(&t.stats());
-        writer.push(group, name, t.view());
+        writer.push(&record.group, &record.name, t.view());
     }
     let summary = writer.write_to(Path::new(&out))?;
     println!("compressed in {:.2}s: {stats}", t0.elapsed().as_secs_f64());
+    // Fixed policies have one foregone winner per tensor — the
+    // per-tensor selection breakdown only means something when the
+    // selector actually trialed a menu.
+    if !matches!(policy, SelectionPolicy::Fixed(_)) {
+        for t in &report.tensors {
+            println!(
+                "  {:<28} -> {:<5} {:>5.2} bits/w (entropy {:.2}, gap {:+.2})",
+                t.name,
+                t.codec.label(),
+                t.achieved_bits_per_weight(),
+                t.optimal_bits_per_weight,
+                t.gap_bits()
+            );
+        }
+        let wins: Vec<String> = report
+            .wins()
+            .iter()
+            .map(|(id, n)| format!("{} x{n}", id.label()))
+            .collect();
+        println!("codec wins: {}", wins.join(", "));
+        if let Some((id, bytes)) = report.best_global_codec() {
+            println!(
+                "selected {} vs best single codec {} ({}): saves {}",
+                fmt::bytes(report.total_compressed_bytes()),
+                fmt::bytes(bytes),
+                id.label(),
+                fmt::bytes(bytes.saturating_sub(report.total_compressed_bytes()))
+            );
+        }
+    }
+    println!(
+        "ratio {:.2}%  {:.2} bits/w vs entropy {:.2} (gap {:+.3} bits/w)",
+        report.ratio_percent(),
+        report.achieved_bits_per_weight(),
+        report.optimal_bits_per_weight(),
+        report.aggregate_gap_bits()
+    );
     println!(
         "saved {out}: {} tensors, {} header + {} payload",
         summary.tensors,
@@ -159,14 +205,20 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let group = group?;
         for (name, t) in &group.tensors {
             let w = t.decompress(&DecodeOpts::default())?;
-            hist.record_weights(&w);
+            let mut th = ComponentHistograms::new();
+            th.record_weights(&w);
+            hist.merge(&th);
             let s = t.stats();
+            // Gap = achieved bits/weight minus this tensor's measured
+            // component Shannon bound.
+            let gap = s.bits_per_weight() - th.entropy().optimal_bits_per_weight();
             println!(
-                "  {name:<28} {:>9} {:>10} elems  ratio {:>6.2}%  {:>5.2} bits/w",
+                "  {name:<28} {:>9} {:>10} elems  ratio {:>6.2}%  {:>5.2} bits/w  gap {:+.2}",
                 t.codec_id().label(),
                 t.num_elements(),
                 s.ratio_percent(),
-                s.bits_per_weight()
+                s.bits_per_weight(),
+                gap
             );
         }
     }

@@ -116,7 +116,9 @@ fn unknown_codec_id_is_a_typed_error() {
     let opaque = vec![0x5Au8; 128];
     let mut writer = ContainerWriter::new("future");
     writer.push("g", "ok", good.view());
-    writer.push_opaque("g", "future_block", 0x7F, vec![64], &opaque);
+    writer
+        .push_opaque("g", "future_block", 0x7F, vec![64], &opaque)
+        .unwrap();
     let path = temp_path("unknown_codec");
     writer.write_to(&path).unwrap();
     // The index itself parses — codec ids are validated lazily so old
@@ -305,7 +307,7 @@ fn mixed_codec_container_roundtrips() {
     writer.write_to(&path).unwrap();
     let reader = ContainerReader::open(&path).unwrap();
     let group = reader.read_group("g").unwrap();
-    assert_eq!(group.tensors.len(), 3);
+    assert_eq!(group.tensors.len(), 4);
     for (name, t) in &group.tensors {
         assert_eq!(
             t.decompress(&DecodeOpts::with_threads(2)).unwrap(),
@@ -315,7 +317,7 @@ fn mixed_codec_container_roundtrips() {
     }
     // Index metadata reflects the codec mix.
     let ids: Vec<u8> = reader.entries().iter().map(|e| e.codec_id).collect();
-    assert_eq!(ids.len(), 3);
-    assert!(ids.contains(&0) && ids.contains(&1) && ids.contains(&2));
+    assert_eq!(ids.len(), 4);
+    assert!(ids.contains(&0) && ids.contains(&1) && ids.contains(&2) && ids.contains(&3));
     std::fs::remove_file(&path).ok();
 }

@@ -12,7 +12,8 @@
 //! rebuilds it through `ContainerWriter` and compares bytes.
 
 use dfloat11::bf16::Bf16;
-use dfloat11::codec::{Codec, DecodeOpts, RansCodec};
+use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
+use dfloat11::codec::{Codec, DecodeOpts, RansCodec, SplitStreamCodec};
 use dfloat11::container::{ContainerReader, ContainerWriter, CONTAINER_VERSION};
 use dfloat11::crc32::Hasher;
 use dfloat11::Df11Tensor;
@@ -166,6 +167,19 @@ fn golden_weights_survive_every_codec_path() {
         .collect();
     assert_eq!(crc_of(&rans), GOLDEN_WEIGHTS_CRC32, "rans path");
 
+    // Split-stream codec (packed planes + Huffman exponents).
+    let split: Vec<Vec<Bf16>> = source
+        .iter()
+        .map(|w| {
+            SplitStreamCodec::default()
+                .compress(w)
+                .unwrap()
+                .decompress(&DecodeOpts::default())
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(crc_of(&split), GOLDEN_WEIGHTS_CRC32, "split-stream path");
+
     // DF11 payloads through a container: write, then range-read back
     // in scrambled order.
     let dir = std::env::temp_dir().join("df11_golden_it");
@@ -189,6 +203,35 @@ fn golden_weights_survive_every_codec_path() {
         crc_of(&by_index),
         GOLDEN_WEIGHTS_CRC32,
         "df11 container range-read path"
+    );
+    std::fs::remove_file(&path).ok();
+
+    // Auto-selected payloads through a container: each tensor carries
+    // its per-tensor winning codec, and the mixed-codec container must
+    // still decode to the pinned CRC.
+    let selector = CodecSelector::new(SelectionPolicy::Auto);
+    let mut writer = ContainerWriter::new(GOLDEN_MODEL_NAME);
+    for (&(group, name, shape, _), w) in GOLDEN_TENSORS.iter().zip(&source) {
+        let (t, record) = selector.select_shaped(group, name, w, shape).unwrap();
+        assert_eq!(t.codec_id(), record.codec, "record tracks the payload");
+        writer.push(group, name, t.view());
+    }
+    let path = dir.join(format!("auto_{}.df11", std::process::id()));
+    writer.write_to(&path).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    let auto_decoded: Vec<Vec<Bf16>> = (0..GOLDEN_TENSORS.len())
+        .map(|i| {
+            reader
+                .read_tensor_at(i)
+                .unwrap()
+                .decompress(&DecodeOpts::with_threads(2))
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(
+        crc_of(&auto_decoded),
+        GOLDEN_WEIGHTS_CRC32,
+        "auto mixed-codec container path"
     );
     std::fs::remove_file(&path).ok();
 }

@@ -232,13 +232,16 @@ fn prop_compressed_size_bounds() {
     });
 }
 
-/// Every codec roundtrips bit-exactly through the on-disk container:
-/// compress → write container → stream back → decompress equals the
-/// source, and a corrupted payload CRC fails with a typed validation
-/// error (never a panic).
+/// Every codec roundtrips bit-exactly through the on-disk container —
+/// including mixed-codec containers whose per-tensor codecs are sampled
+/// at random and a block picked by the `auto` selector: compress →
+/// write container → stream back → decompress equals the source, and a
+/// corrupted payload CRC fails with a typed validation error (never a
+/// panic).
 #[test]
 fn prop_container_roundtrip() {
     use dfloat11::codec::all_codecs;
+    use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
     use dfloat11::codec::DecodeOpts;
     use dfloat11::container::{ContainerReader, ContainerWriter};
     use dfloat11::error::Error;
@@ -258,10 +261,30 @@ fn prop_container_roundtrip() {
             .map(|c| c.compress(&ws).map(|p| (c.name(), p)))
             .collect::<Result<_, _>>()
             .map_err(|e| e.to_string())?;
+        // A mixed group whose per-tensor codecs are sampled at random,
+        // plus a block picked by the auto selector.
+        let mixed: Vec<(String, dfloat11::CompressedTensor)> = (0..3)
+            .map(|i| {
+                let c = &codecs[g.usize_in(0, codecs.len() - 1)];
+                c.compress(&ws).map(|p| (format!("mixed.t{i}"), p))
+            })
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        let selector = CodecSelector::new(SelectionPolicy::Auto);
+        let (auto_parts, record) = selector
+            .select_shaped("auto", "auto.t", &ws, &[n])
+            .map_err(|e| e.to_string())?;
+        if auto_parts.codec_id() != record.codec {
+            return Err("selection record disagrees with the payload codec".into());
+        }
         let mut writer = ContainerWriter::new("prop");
         for (name, p) in &parts {
             writer.push(name, name, p.view());
         }
+        for (name, p) in &mixed {
+            writer.push("mixed", name, p.view());
+        }
+        writer.push("auto", "auto.t", auto_parts.view());
         let summary = writer.write_to(&path).map_err(|e| e.to_string())?;
 
         // Roundtrip: stream groups back, decompress, compare bit-exact.
