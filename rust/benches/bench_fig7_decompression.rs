@@ -11,7 +11,11 @@
 //! plus the *modelled* PCIe transfer time for the same matrices, and
 //! the analytic A100 projection of the DF11 kernel.
 
+//! Pass `--json PATH` (or set `DF11_BENCH_JSON`) to also write the
+//! measurements as `BENCH_fig7.json`.
+
 use dfloat11::ans::{compress_bf16_generic, rans_decode};
+use dfloat11::bench_harness::json::{write_artifact, Json};
 use dfloat11::bench_harness::{fmt, Bencher, Table};
 use dfloat11::bf16::Bf16;
 use dfloat11::dfloat11::decompress::decompress_sequential_into;
@@ -46,6 +50,8 @@ fn main() {
         "vs sequential",
         "phase1 + phase2",
     ]);
+    let mut size_rows: Vec<Json> = Vec::new();
+    let mut sweep_rows: Vec<Json> = Vec::new();
 
     for log2 in [16u32, 18, 20, 22] {
         let n = 1usize << log2;
@@ -81,6 +87,15 @@ fn main() {
                 format!("{:.2}x", r_seq.mean / r_par.mean),
                 fmt::phase_split(stats.phase1_seconds, stats.phase2_seconds),
             ]);
+            sweep_rows.push(
+                Json::obj()
+                    .field("log2_elements", Json::int(log2 as u64))
+                    .field("threads", Json::int(threads as u64))
+                    .field("parallel_s", Json::num(r_par.mean))
+                    .field("vs_sequential", Json::num(r_seq.mean / r_par.mean))
+                    .field("phase1_s", Json::num(stats.phase1_seconds))
+                    .field("phase2_s", Json::num(stats.phase2_seconds)),
+            );
         }
 
         // rANS baseline.
@@ -105,6 +120,16 @@ fn main() {
             fmt::throughput_bps(a100_thpt),
             format!("{:.1}x", a100_thpt / pcie_thpt),
         ]);
+        size_rows.push(
+            Json::obj()
+                .field("log2_elements", Json::int(log2 as u64))
+                .field("kernel_s", Json::num(r_kernel.mean))
+                .field("sequential_s", Json::num(r_seq.mean))
+                .field("rans_s", Json::num(r_ans.mean))
+                .field("pcie_model_s", Json::num(t_pcie))
+                .field("a100_est_bps", Json::num(a100_thpt))
+                .field("a100_vs_pcie", Json::num(a100_thpt / pcie_thpt)),
+        );
     }
     table.print();
     println!("\n## Parallel two-phase pipeline — thread sweep\n");
@@ -125,6 +150,7 @@ fn main() {
         "persistent speedup",
     ]);
     let warm = WorkerPool::new(8);
+    let mut resident_rows: Vec<Json> = Vec::new();
     for log2 in [13u32, 14, 15] {
         // 8k–32k elements = 16–64 KiB of BF16: all at or under 64 KiB.
         let n = 1usize << log2;
@@ -154,6 +180,13 @@ fn main() {
             fmt::throughput_bps(bf16_bytes as f64 / r_spawn.mean),
             format!("{:.2}x", r_spawn.mean / r_pool.mean),
         ]);
+        resident_rows.push(
+            Json::obj()
+                .field("log2_elements", Json::int(log2 as u64))
+                .field("persistent_pool_s", Json::num(r_pool.mean))
+                .field("per_call_spawn_s", Json::num(r_spawn.mean))
+                .field("persistent_speedup", Json::num(r_spawn.mean / r_pool.mean)),
+        );
         assert!(
             r_pool.mean <= r_spawn.mean,
             "persistent pool must beat per-call spawn on {n}-element blocks \
@@ -176,4 +209,16 @@ fn main() {
          kernel resident: per-call worker spawn/join is the Huff-LLM-style \
          overhead the pool amortizes away."
     );
+
+    let artifact = Json::obj()
+        .field("bench", Json::str("fig7"))
+        .field("provenance", Json::str("measured"))
+        .field("decompress_vs_size", Json::Array(size_rows))
+        .field("thread_sweep", Json::Array(sweep_rows))
+        .field("persistent_pool", Json::Array(resident_rows));
+    match write_artifact("fig7", &artifact) {
+        Ok(Some(path)) => println!("wrote {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("artifact write failed: {e}"),
+    }
 }

@@ -100,6 +100,12 @@ pub struct DecodeOpts {
     /// crate-global pool ([`WorkerPool::global`]); the serving engine
     /// passes its configured pool here.
     pub pool: Option<Arc<WorkerPool>>,
+    /// Whether a cold container fetch may submit read-ahead for the
+    /// payload ranges that follow it to the I/O prefetch ring (see
+    /// [`crate::io::ring`]). On by default; a no-op on non-ring
+    /// backends. The latency benches turn it off to isolate the
+    /// fetch-then-decode baseline from the overlapped pipeline.
+    pub prefetch: bool,
 }
 
 impl Default for DecodeOpts {
@@ -107,6 +113,7 @@ impl Default for DecodeOpts {
         DecodeOpts {
             threads: 1,
             pool: None,
+            prefetch: true,
         }
     }
 }
@@ -117,6 +124,7 @@ impl DecodeOpts {
         DecodeOpts {
             threads,
             pool: None,
+            prefetch: true,
         }
     }
 
@@ -125,7 +133,14 @@ impl DecodeOpts {
         DecodeOpts {
             threads,
             pool: Some(pool),
+            prefetch: true,
         }
+    }
+
+    /// The same options with ring read-ahead disabled.
+    pub fn without_prefetch(mut self) -> DecodeOpts {
+        self.prefetch = false;
+        self
     }
 
     /// The pool decodes run on (explicit handle or the crate-global).

@@ -47,9 +47,11 @@ use crate::crc32::Hasher;
 use crate::dfloat11::stats::CompressionStats;
 use crate::dfloat11::{serial, Df11Model};
 use crate::error::{Error, Result};
+use crate::io::ring::{IoRing, RingDriver, RingStats, Submission, RING_DEPTH};
+use crate::io::{ByteRange, ByteSource, IoBackend, MmapSource, PayloadBytes, ReadSource};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Container magic.
 pub const CONTAINER_MAGIC: &[u8; 4] = b"DF1C";
@@ -632,7 +634,13 @@ impl ContainerGroup {
 /// read (and CRC-checked) on demand with a seek, so groups can be
 /// fetched in any order without loading the whole file.
 pub struct ContainerReader {
-    file: Mutex<BufReader<std::fs::File>>,
+    /// The payload transport (see [`crate::io`]): buffered reads, a
+    /// zero-copy mapping, or the read source underneath a ring.
+    source: Arc<dyn ByteSource>,
+    /// Present only for [`IoBackend::Ring`]: the submission/completion
+    /// ring payload reads and prefetches go through.
+    ring: Option<IoRing>,
+    backend: IoBackend,
     model_name: String,
     version: u32,
     entries: Vec<IndexEntry>,
@@ -656,8 +664,27 @@ impl std::fmt::Debug for ContainerReader {
 }
 
 impl ContainerReader {
-    /// Open a container and validate its header.
+    /// Open a container with the default buffered-read payload backend
+    /// and validate its header.
     pub fn open(path: &Path) -> Result<ContainerReader> {
+        Self::open_with(path, IoBackend::Read)
+    }
+
+    /// Open a container with an explicit payload [`IoBackend`]. The
+    /// ring backend gets a background reader thread; use
+    /// [`ContainerReader::open_with_driver`] for the deterministic
+    /// synchronous executor.
+    pub fn open_with(path: &Path, backend: IoBackend) -> Result<ContainerReader> {
+        Self::open_with_driver(path, backend, RingDriver::Background)
+    }
+
+    /// Open a container choosing both the payload backend and — for
+    /// the ring backend — the completion driver.
+    pub fn open_with_driver(
+        path: &Path,
+        backend: IoBackend,
+        driver: RingDriver,
+    ) -> Result<ContainerReader> {
         let file = std::fs::File::open(path)?;
         let mut r = BufReader::new(file);
         let mut h = Hasher::new();
@@ -752,8 +779,22 @@ impl ContainerReader {
                 group_names.push(e.group.clone());
             }
         }
+        // The header is parsed; hand payload reads to the chosen
+        // transport (the ring layers its submission queue over the
+        // plain read source).
+        drop(r);
+        let source: Arc<dyn ByteSource> = match backend {
+            IoBackend::Mmap => Arc::new(MmapSource::open(path)?),
+            IoBackend::Read | IoBackend::Ring => Arc::new(ReadSource::open(path)?),
+        };
+        let ring = match backend {
+            IoBackend::Ring => Some(IoRing::new(source.clone(), RING_DEPTH, driver)),
+            _ => None,
+        };
         Ok(ContainerReader {
-            file: Mutex::new(r),
+            source,
+            ring,
+            backend,
             model_name,
             version,
             entries,
@@ -833,19 +874,19 @@ impl ContainerReader {
             Ok(mut log) => log.push(idx),
             Err(poisoned) => poisoned.into_inner().push(idx),
         }
-        let mut buf = vec![0u8; entry.len as usize];
-        {
-            let mut f = self
-                .file
-                .lock()
-                .map_err(|_| Error::Runtime("container reader lock poisoned".into()))?;
-            f.seek(SeekFrom::Start(entry.offset))?;
-            read_exact_or(
-                &mut *f,
-                &mut buf,
-                &format!("payload for tensor {}", entry.name),
-            )?;
-        }
+        let range = ByteRange {
+            offset: entry.offset,
+            len: entry.len,
+        };
+        let what = format!("payload for tensor {}", entry.name);
+        // Ring-backed readers consume the prefetched completion (or
+        // read through); the other backends fetch straight from the
+        // source — borrowed from the mapping on mmap, so the bytes are
+        // CRC-checked and parsed with no intermediate copy.
+        let buf: PayloadBytes<'_> = match &self.ring {
+            Some(ring) => PayloadBytes::Owned(ring.fetch(idx as u64, range, &what)?),
+            None => self.source.fetch(range, &what)?,
+        };
         let computed = crate::crc32::crc32(&buf);
         if computed != entry.crc32 {
             return Err(Error::container(format!(
@@ -892,6 +933,45 @@ impl ContainerReader {
     /// Stream groups one at a time in stored order.
     pub fn groups(&self) -> impl Iterator<Item = Result<ContainerGroup>> + '_ {
         self.group_names.iter().map(move |g| self.read_group(g))
+    }
+
+    /// The payload transport this reader was opened with.
+    pub fn io_backend(&self) -> IoBackend {
+        self.backend
+    }
+
+    /// Submit range reads for the given entry indices to the prefetch
+    /// ring (best effort: already-outstanding tags and submissions
+    /// past the bounded window are skipped). Returns how many were
+    /// accepted; a no-op (0) on non-ring backends.
+    pub fn prefetch(&self, indices: &[usize]) -> usize {
+        let Some(ring) = &self.ring else { return 0 };
+        let mut accepted = 0;
+        for &i in indices {
+            let Some(e) = self.entries.get(i) else { continue };
+            if ring.submit(Submission {
+                tag: i as u64,
+                group: e.group.clone(),
+                range: ByteRange {
+                    offset: e.offset,
+                    len: e.len,
+                },
+            }) {
+                accepted += 1;
+            }
+        }
+        accepted
+    }
+
+    /// The prefetch ring's counters (`None` on non-ring backends).
+    pub fn ring_stats(&self) -> Option<RingStats> {
+        self.ring.as_ref().map(|r| r.stats())
+    }
+
+    /// The ring itself (`None` on non-ring backends) — test hook for
+    /// driving completion order explicitly.
+    pub fn ring(&self) -> Option<&IoRing> {
+        self.ring.as_ref()
     }
 }
 

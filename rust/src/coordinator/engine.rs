@@ -26,6 +26,7 @@ use crate::container::ContainerReader;
 use crate::dfloat11::{Df11Model, Df11Tensor};
 use crate::error::{Error, Result};
 use crate::gpu_sim::{Device, HbmAllocator, TransferModel};
+use crate::io::IoBackend;
 use crate::kvcache::KvCacheManager;
 use crate::model::init::generate_model_weights;
 use crate::model::ModelConfig;
@@ -648,24 +649,35 @@ impl WeightSource for OffloadSource {
 pub struct ContainerSource {
     reader: ContainerReader,
     index: HashMap<String, usize>,
+    /// The indexed entry indices in container (on-disk) order — the
+    /// ring prefetcher walks this to submit the ranges that follow a
+    /// cold fetch, so block `i+1`'s reads overlap block `i`'s decode.
+    ordered: Vec<usize>,
     cache: Mutex<HashMap<usize, Arc<CompressedTensor>>>,
 }
 
+/// How many upcoming payload ranges a cold fetch submits to the ring.
+/// One transformer block is seven payloads; eight keeps the next block
+/// fully in flight while the current one decodes.
+const RING_PREFETCH_WINDOW: usize = 8;
+
 impl ContainerSource {
-    /// Open a container as a weight source.
+    /// Open a container as a weight source (buffered-read payloads).
     pub fn open(path: &Path) -> Result<ContainerSource> {
-        let reader = ContainerReader::open(path)?;
-        let index = reader
+        Self::open_with(path, IoBackend::Read)
+    }
+
+    /// Open a container as a weight source with an explicit payload
+    /// [`IoBackend`].
+    pub fn open_with(path: &Path, io: IoBackend) -> Result<ContainerSource> {
+        let reader = ContainerReader::open_with(path, io)?;
+        let index: HashMap<String, usize> = reader
             .entries()
             .iter()
             .enumerate()
             .map(|(i, e)| (e.name.clone(), i))
             .collect();
-        Ok(ContainerSource {
-            reader,
-            index,
-            cache: Mutex::new(HashMap::new()),
-        })
+        Ok(Self::from_parts(reader, index))
     }
 
     /// Open a container restricted to a set of groups — a shard's
@@ -674,7 +686,18 @@ impl ContainerSource {
     /// typed error, so a shard can never materialize weights beyond
     /// its `ShardPlan` slice.
     pub fn open_scoped(path: &Path, groups: &[String]) -> Result<ContainerSource> {
-        let reader = ContainerReader::open(path)?;
+        Self::open_scoped_with(path, groups, IoBackend::Read)
+    }
+
+    /// [`ContainerSource::open_scoped`] with an explicit payload
+    /// [`IoBackend`]. A scoped ring source only ever submits its own
+    /// groups' ranges, so prefetch respects shard isolation too.
+    pub fn open_scoped_with(
+        path: &Path,
+        groups: &[String],
+        io: IoBackend,
+    ) -> Result<ContainerSource> {
+        let reader = ContainerReader::open_with(path, io)?;
         for g in groups {
             if !reader.group_names().iter().any(|have| have == g) {
                 return Err(Error::InvalidArgument(format!(
@@ -683,18 +706,25 @@ impl ContainerSource {
                 )));
             }
         }
-        let index = reader
+        let index: HashMap<String, usize> = reader
             .entries()
             .iter()
             .enumerate()
             .filter(|(_, e)| groups.iter().any(|g| *g == e.group))
             .map(|(i, e)| (e.name.clone(), i))
             .collect();
-        Ok(ContainerSource {
+        Ok(Self::from_parts(reader, index))
+    }
+
+    fn from_parts(reader: ContainerReader, index: HashMap<String, usize>) -> ContainerSource {
+        let mut ordered: Vec<usize> = index.values().copied().collect();
+        ordered.sort_unstable();
+        ContainerSource {
             reader,
             index,
+            ordered,
             cache: Mutex::new(HashMap::new()),
-        })
+        }
     }
 
     /// The underlying streaming reader.
@@ -702,7 +732,30 @@ impl ContainerSource {
         &self.reader
     }
 
-    fn tensor(&self, name: &str) -> Result<Arc<CompressedTensor>> {
+    /// Submit read-ahead for the (uncached) indexed entries that
+    /// follow `idx` in container order — a no-op on non-ring backends
+    /// and for ranges already in flight.
+    fn prefetch_after(&self, idx: usize) {
+        if self.reader.io_backend() != IoBackend::Ring {
+            return;
+        }
+        let Some(pos) = self.ordered.iter().position(|&i| i == idx) else {
+            return;
+        };
+        let cached: Vec<usize> = match self.cache.lock() {
+            Ok(c) => c.keys().copied().collect(),
+            Err(_) => return,
+        };
+        let window: Vec<usize> = self.ordered[pos + 1..]
+            .iter()
+            .copied()
+            .filter(|i| !cached.contains(i))
+            .take(RING_PREFETCH_WINDOW)
+            .collect();
+        self.reader.prefetch(&window);
+    }
+
+    fn tensor(&self, name: &str, prefetch: bool) -> Result<Arc<CompressedTensor>> {
         let &idx = self
             .index
             .get(name)
@@ -714,6 +767,12 @@ impl ContainerSource {
             .get(&idx)
         {
             return Ok(t.clone());
+        }
+        // Cold fetch: put the ranges after this one in flight first,
+        // so their disk time hides behind this payload's CRC + parse +
+        // decode instead of serializing in front of the next fetch.
+        if prefetch {
+            self.prefetch_after(idx);
         }
         let t = Arc::new(self.reader.read_tensor_at(idx)?);
         let mut cache = self
@@ -740,7 +799,7 @@ impl WeightSource for ContainerSource {
         // that to Decompress so the Figure-6 breakdown still sums to
         // wall time on the first pass over each block.
         let t_load = Instant::now();
-        let tensor = self.tensor(name)?;
+        let tensor = self.tensor(name, opts.prefetch)?;
         let load = t_load.elapsed().as_secs_f64();
         let mut cost = match &*tensor {
             CompressedTensor::Df11(t) => decode_df11_tensor(t, opts, staging)?,
@@ -1083,7 +1142,18 @@ impl Engine {
     /// container (streamed through [`ContainerSource`], decompressed
     /// into the reusable scratch pool per fetch), on the native backend.
     pub fn build_from_container(config: &ModelConfig, path: &Path) -> Result<Engine> {
-        let source = ContainerSource::open(path)?;
+        Self::build_from_container_with(config, path, IoBackend::Read)
+    }
+
+    /// [`Engine::build_from_container`] with an explicit payload
+    /// [`IoBackend`] (the serve `--io` knob): buffered reads, the
+    /// zero-copy mapping, or the prefetch ring.
+    pub fn build_from_container_with(
+        config: &ModelConfig,
+        path: &Path,
+        io: IoBackend,
+    ) -> Result<Engine> {
+        let source = ContainerSource::open_with(path, io)?;
         // Validate upfront that the container covers this config.
         for spec in config.weight_inventory() {
             match source.reader().entries().iter().find(|e| e.name == spec.name) {
@@ -1167,6 +1237,7 @@ impl Engine {
         DecodeOpts {
             threads: self.decode_threads,
             pool: self.pool.clone(),
+            prefetch: true,
         }
     }
 

@@ -37,6 +37,7 @@ use super::engine::{
 use super::metrics::{Breakdown, Component, ShardStat};
 use crate::dfloat11::Df11Model;
 use crate::error::{Error, Result};
+use crate::io::IoBackend;
 use crate::model::init::generate_model_weights;
 use crate::model::ModelConfig;
 use crate::multi_gpu::{activation_hop_seconds, shard_layer_ranges, ShardPlan};
@@ -232,13 +233,25 @@ impl ShardedEngine {
         path: &Path,
         plan: &ShardPlan,
     ) -> Result<ShardedEngine> {
+        Self::build_from_container_with(config, path, plan, IoBackend::Read)
+    }
+
+    /// [`ShardedEngine::build_from_container`] with an explicit payload
+    /// [`IoBackend`] — every shard's scoped source uses the same
+    /// backend (each ring prefetches only its own shard's ranges).
+    pub fn build_from_container_with(
+        config: &ModelConfig,
+        path: &Path,
+        plan: &ShardPlan,
+        io: IoBackend,
+    ) -> Result<ShardedEngine> {
         config.validate()?;
         let ranges = validate_plan(config, plan)?;
         let inventory = config.weight_inventory();
         let mut sources: Vec<Box<dyn WeightSource>> = Vec::with_capacity(ranges.len());
         for s in 0..ranges.len() {
             let groups = shard_groups(config, s, &ranges);
-            let source = ContainerSource::open_scoped(path, &groups)?;
+            let source = ContainerSource::open_scoped_with(path, &groups, io)?;
             // The shard's slice of the inventory must be present with
             // matching element counts (same check as the unsharded
             // container build, scoped to this shard).

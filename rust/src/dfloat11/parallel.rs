@@ -169,9 +169,12 @@ pub fn decompress_pooled_into(
         } else {
             pool.scope(|scope| -> Result<()> {
                 let count_stripe = &count_stripe;
-                let mut handles = Vec::with_capacity(stripes.len());
-                for (base, stripe) in stripes {
-                    handles.push(scope.spawn(move || count_stripe(base, stripe)));
+                let total = stripes.len();
+                let mut handles = Vec::with_capacity(total);
+                // Pin stripe i to the socket owning slice i/total of
+                // the output (placement only; bits are unaffected).
+                for (i, (base, stripe)) in stripes.into_iter().enumerate() {
+                    handles.push(scope.spawn_pinned(i, total, move || count_stripe(base, stripe)));
                 }
                 for h in handles {
                     h.join()??;
@@ -269,9 +272,10 @@ pub fn decompress_pooled_into(
         } else {
             pool.scope(|scope| -> Result<()> {
                 let decode_stripe = &decode_stripe;
-                let mut handles = Vec::with_capacity(jobs.len());
-                for job in jobs {
-                    handles.push(scope.spawn(move || decode_stripe(job)));
+                let total = jobs.len();
+                let mut handles = Vec::with_capacity(total);
+                for (i, job) in jobs.into_iter().enumerate() {
+                    handles.push(scope.spawn_pinned(i, total, move || decode_stripe(job)));
                 }
                 for h in handles {
                     h.join()??;

@@ -1,0 +1,359 @@
+//! Container payload I/O backends: buffered reads, zero-copy mmap, and
+//! the submission/completion prefetch ring.
+//!
+//! The serve hot path used to copy every compressed payload through
+//! buffered `read` calls inside [`crate::container::ContainerReader`]
+//! before the decode pool ever saw a byte. This module abstracts that
+//! byte-fetch step behind [`ByteSource`] so the reader can swap the
+//! transport without touching the format:
+//!
+//! | backend | transport                  | payload bytes            |
+//! |---------|----------------------------|--------------------------|
+//! | `read`  | seek + `read_exact`        | owned (one copy)         |
+//! | `mmap`  | one `mmap(2)` of the file  | borrowed from the map    |
+//! | `ring`  | [`ring::IoRing`] over read | owned, read ahead        |
+//!
+//! The mmap backend is a thin, `cfg(unix)`-gated shim over the raw
+//! `mmap`/`munmap` symbols (the crate is dependency-free, so there is
+//! no `libc` crate to lean on); on non-unix targets it degrades to one
+//! up-front buffered read of the whole file, which still hands out
+//! borrowed (copy-free) per-payload slices. Every backend turns a
+//! range that runs past EOF — or a mapping the file shrank underneath
+//! — into a typed [`Error::InvalidContainer`], never a fault.
+
+pub mod ring;
+
+use crate::error::{Error, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Which payload transport a container reader uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoBackend {
+    /// Buffered seek-and-read per payload (the portable default).
+    Read,
+    /// One shared read-only mapping; payload slices are borrowed
+    /// straight from it — no copy between file and decoder input.
+    Mmap,
+    /// Submission/completion ring over buffered reads: payload ranges
+    /// are read ahead on a reader thread while earlier blocks decode.
+    Ring,
+}
+
+impl IoBackend {
+    /// Every backend, in CLI/doc order.
+    pub const ALL: [IoBackend; 3] = [IoBackend::Read, IoBackend::Mmap, IoBackend::Ring];
+
+    /// Parse a `--io` flag value.
+    pub fn parse(s: &str) -> Result<IoBackend> {
+        match s {
+            "read" => Ok(IoBackend::Read),
+            "mmap" => Ok(IoBackend::Mmap),
+            "ring" => Ok(IoBackend::Ring),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown io backend {other} (want read|mmap|ring)"
+            ))),
+        }
+    }
+
+    /// The flag spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoBackend::Read => "read",
+            IoBackend::Mmap => "mmap",
+            IoBackend::Ring => "ring",
+        }
+    }
+}
+
+impl std::fmt::Display for IoBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A half-open byte range `[offset, offset + len)` in the backing file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ByteRange {
+    /// Absolute file offset of the first byte.
+    pub offset: u64,
+    /// Range length in bytes.
+    pub len: u64,
+}
+
+impl ByteRange {
+    /// One past the last byte, or `None` on overflow (a corrupt index
+    /// can carry offsets near `u64::MAX`; that must fail typed, not
+    /// wrap).
+    pub fn end(self) -> Option<u64> {
+        self.offset.checked_add(self.len)
+    }
+}
+
+/// Payload bytes handed back by a [`ByteSource`]: borrowed straight
+/// from an mmap mapping (zero-copy) or owned (buffered read, ring
+/// completion). Dereferences to `&[u8]` either way, so payload parsing
+/// is transport-blind.
+pub enum PayloadBytes<'a> {
+    /// A slice borrowed from the source's mapping.
+    Borrowed(&'a [u8]),
+    /// Bytes the source copied out of the file.
+    Owned(Vec<u8>),
+}
+
+impl PayloadBytes<'_> {
+    /// The bytes, copied out if still borrowed.
+    pub fn into_owned(self) -> Vec<u8> {
+        match self {
+            PayloadBytes::Borrowed(b) => b.to_vec(),
+            PayloadBytes::Owned(v) => v,
+        }
+    }
+}
+
+impl std::ops::Deref for PayloadBytes<'_> {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            PayloadBytes::Borrowed(b) => b,
+            PayloadBytes::Owned(v) => v,
+        }
+    }
+}
+
+/// A random-access byte transport for container payloads.
+pub trait ByteSource: Send + Sync {
+    /// Backing length in bytes observed at open time.
+    fn len(&self) -> u64;
+
+    /// Whether the backing file was empty at open time.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch one range. `what` names the payload for error messages.
+    /// A range past EOF (or past a mapping the file shrank underneath)
+    /// is a typed [`Error::InvalidContainer`].
+    fn fetch(&self, range: ByteRange, what: &str) -> Result<PayloadBytes<'_>>;
+
+    /// Which backend this source implements.
+    fn backend(&self) -> IoBackend;
+}
+
+fn range_end(range: ByteRange, what: &str) -> Result<u64> {
+    range
+        .end()
+        .ok_or_else(|| Error::container(format!("{what}: byte range overflows")))
+}
+
+/// The buffered-read backend: seek + `read_exact` per payload, the
+/// behavior `ContainerReader` always had.
+pub struct ReadSource {
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl ReadSource {
+    /// Open `path` for per-payload range reads.
+    pub fn open(path: &Path) -> Result<ReadSource> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(ReadSource {
+            file: Mutex::new(file),
+            len,
+        })
+    }
+}
+
+impl ByteSource for ReadSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn fetch(&self, range: ByteRange, what: &str) -> Result<PayloadBytes<'_>> {
+        range_end(range, what)?;
+        let mut buf = vec![0u8; range.len as usize];
+        let mut f = self
+            .file
+            .lock()
+            .map_err(|_| Error::Runtime("read source lock poisoned".into()))?;
+        f.seek(SeekFrom::Start(range.offset))?;
+        match f.read_exact(&mut buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Err(Error::container(format!("{what} truncated")))
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Ok(PayloadBytes::Owned(buf))
+    }
+
+    fn backend(&self) -> IoBackend {
+        IoBackend::Read
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    //! The unix mmap shim. The crate links the platform C library
+    //! through `std` already, so the two symbols are declared by hand
+    //! instead of pulling in the `libc` crate.
+
+    use crate::error::{Error, Result};
+    use core::ffi::c_void;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    // POSIX values shared by every unix target we build on.
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only private mapping of a whole file.
+    pub struct Mapping {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned for its whole lifetime.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        pub fn map(file: &std::fs::File, len: u64) -> Result<Mapping> {
+            if len == 0 {
+                // mmap(2) rejects zero-length maps; an empty file is
+                // just an empty slice.
+                return Ok(Mapping {
+                    ptr: core::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                mmap(
+                    core::ptr::null_mut(),
+                    len as usize,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(Error::Io(std::io::Error::last_os_error()));
+            }
+            Ok(Mapping {
+                ptr,
+                len: len as usize,
+            })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                &[]
+            } else {
+                // Safe: the pointer came from a successful PROT_READ
+                // mapping of exactly `len` bytes that lives until Drop.
+                unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+            }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                unsafe { munmap(self.ptr, self.len) };
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    //! Non-unix fallback: one up-front buffered read of the whole
+    //! file. Per-payload fetches still borrow (copy-free) from it.
+
+    use crate::error::Result;
+    use std::io::Read;
+
+    pub struct Mapping {
+        buf: Vec<u8>,
+    }
+
+    impl Mapping {
+        pub fn map(file: &std::fs::File, len: u64) -> Result<Mapping> {
+            let mut f = file.try_clone()?;
+            let mut buf = Vec::with_capacity(len as usize);
+            f.read_to_end(&mut buf)?;
+            Ok(Mapping { buf })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            &self.buf
+        }
+    }
+}
+
+/// The zero-copy backend: payload slices are borrowed straight from a
+/// read-only mapping of the container file.
+pub struct MmapSource {
+    /// Kept open to detect a file that shrank after mapping: touching
+    /// mapped pages past the new EOF would fault (SIGBUS), so fetches
+    /// re-check the file length and fail typed instead.
+    file: File,
+    map: sys::Mapping,
+    len: u64,
+}
+
+impl MmapSource {
+    /// Map `path` read-only.
+    pub fn open(path: &Path) -> Result<MmapSource> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        let map = sys::Mapping::map(&file, len)?;
+        Ok(MmapSource { file, map, len })
+    }
+}
+
+impl ByteSource for MmapSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn fetch(&self, range: ByteRange, what: &str) -> Result<PayloadBytes<'_>> {
+        let end = range_end(range, what)?;
+        if end > self.len {
+            return Err(Error::container(format!("{what} truncated")));
+        }
+        // A shrunken file leaves the tail of the mapping backed by
+        // nothing; detect it up front (best effort — the check and the
+        // copy are not atomic, but every test-reachable shrink is
+        // caught here as a typed error rather than UB).
+        let now = self.file.metadata()?.len();
+        if end > now {
+            return Err(Error::container(format!(
+                "{what}: mapping shrank underneath the read \
+                 (file is now {now} bytes, range ends at {end})"
+            )));
+        }
+        Ok(PayloadBytes::Borrowed(
+            &self.map.as_slice()[range.offset as usize..end as usize],
+        ))
+    }
+
+    fn backend(&self) -> IoBackend {
+        IoBackend::Mmap
+    }
+}

@@ -1,0 +1,360 @@
+//! An io_uring-style submission/completion ring for container range
+//! reads.
+//!
+//! The ring decouples *when a payload's bytes leave the disk* from
+//! *when the decoder consumes them*: the prefetch pipeline submits
+//! block `i+1`'s ranges while block `i` decodes on the worker pool, so
+//! cold-pass I/O hides behind decode instead of serializing ahead of
+//! it.
+//!
+//! ```text
+//! submit(Submission { group, range }) ──▶ submission queue (bounded)
+//!                                             │  reader thread
+//!                                             ▼  (or sync executor)
+//!                          completion map: tag → Completion { payload }
+//!                                             │
+//! fetch(tag, range) ◀──────────────────────────┘
+//! ```
+//!
+//! Two drivers share one data structure:
+//!
+//! * [`RingDriver::Background`] — a dedicated reader thread drains the
+//!   submission queue; completions land whenever the disk returns.
+//! * [`RingDriver::Synchronous`] — nothing runs until a consumer asks;
+//!   `fetch` then executes queued submissions **in submission order**
+//!   on the calling thread, so tests are bit-for-bit reproducible.
+//!
+//! Completions are keyed by tag, not position, so *completion order
+//! can never affect what a consumer decodes* — the ring-order property
+//! test scrambles completion order and asserts token bit-identity.
+//! A demand fetch whose tag was never submitted (or got rejected by
+//! the bounded window) reads straight through to the source; the ring
+//! only ever accelerates, it cannot wedge.
+
+use super::{ByteRange, ByteSource, IoBackend};
+use crate::error::{Error, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Default bound on outstanding ring entries (queued + executing +
+/// completed-but-unconsumed). One transformer block is seven payloads;
+/// sixteen covers a full block of read-ahead plus the block in hand.
+pub const RING_DEPTH: usize = 16;
+
+/// One queued range read. The `group` names the container group the
+/// range belongs to (observability: prefetch audits report per-group
+/// submissions); the `tag` identifies the completion.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    /// Completion key — the container entry index.
+    pub tag: u64,
+    /// Container group the range belongs to.
+    pub group: String,
+    /// The payload's byte range.
+    pub range: ByteRange,
+}
+
+/// A finished read, keyed by the submission's tag.
+pub struct Completion {
+    /// The submission's tag.
+    pub tag: u64,
+    /// The submission's group.
+    pub group: String,
+    /// The bytes — or the typed error the read hit (a failed prefetch
+    /// parks its error here and surfaces it when the tag is consumed).
+    pub payload: Result<Vec<u8>>,
+}
+
+/// How completions get produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingDriver {
+    /// A background reader thread drains the submission queue.
+    Background,
+    /// Queued submissions execute in submission order on the consuming
+    /// thread — deterministic, for tests.
+    Synchronous,
+}
+
+/// Ring observability counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingStats {
+    /// Submissions accepted into the queue.
+    pub submitted: u64,
+    /// Reads finished (successfully or not).
+    pub completed: u64,
+    /// Demand fetches served from a ring completion.
+    pub ring_hits: u64,
+    /// Demand fetches that bypassed the ring (tag never submitted).
+    pub direct_reads: u64,
+    /// Submissions rejected because the in-flight window was full.
+    pub rejected: u64,
+}
+
+struct RingState {
+    queued: VecDeque<Submission>,
+    /// Tags the background thread is reading right now.
+    executing: HashSet<u64>,
+    done: HashMap<u64, Completion>,
+    shutdown: bool,
+}
+
+impl RingState {
+    fn outstanding(&self) -> usize {
+        self.queued.len() + self.executing.len() + self.done.len()
+    }
+
+    fn pending(&self, tag: u64) -> bool {
+        self.executing.contains(&tag) || self.queued.iter().any(|s| s.tag == tag)
+    }
+}
+
+struct RingInner {
+    source: Arc<dyn ByteSource>,
+    depth: usize,
+    state: Mutex<RingState>,
+    /// Signals the reader thread that submissions arrived (or shutdown).
+    submitted_cv: Condvar,
+    /// Signals consumers that a completion landed.
+    completed_cv: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    ring_hits: AtomicU64,
+    direct_reads: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl RingInner {
+    fn read(&self, sub: &Submission) -> Completion {
+        let what = format!("group {} payload (ring tag {})", sub.group, sub.tag);
+        let payload = self
+            .source
+            .fetch(sub.range, &what)
+            .map(|bytes| bytes.into_owned());
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        Completion {
+            tag: sub.tag,
+            group: sub.group.clone(),
+            payload,
+        }
+    }
+
+    fn lock(&self) -> Result<std::sync::MutexGuard<'_, RingState>> {
+        self.state
+            .lock()
+            .map_err(|_| Error::Runtime("io ring state poisoned".into()))
+    }
+}
+
+fn reader_main(inner: Arc<RingInner>) {
+    loop {
+        let sub = {
+            let mut st = match inner.state.lock() {
+                Ok(st) => st,
+                // A consumer panicked while holding the lock; there is
+                // nobody left to serve.
+                Err(_) => return,
+            };
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(s) = st.queued.pop_front() {
+                    st.executing.insert(s.tag);
+                    break s;
+                }
+                st = match inner.submitted_cv.wait(st) {
+                    Ok(st) => st,
+                    Err(_) => return,
+                };
+            }
+        };
+        let completion = inner.read(&sub);
+        let Ok(mut st) = inner.state.lock() else {
+            return;
+        };
+        st.executing.remove(&sub.tag);
+        st.done.insert(sub.tag, completion);
+        inner.completed_cv.notify_all();
+    }
+}
+
+/// The submission/completion ring. See the module docs for the model.
+pub struct IoRing {
+    inner: Arc<RingInner>,
+    driver: RingDriver,
+    reader: Option<thread::JoinHandle<()>>,
+}
+
+impl IoRing {
+    /// A ring over `source` with the given in-flight window and driver.
+    pub fn new(source: Arc<dyn ByteSource>, depth: usize, driver: RingDriver) -> IoRing {
+        let inner = Arc::new(RingInner {
+            source,
+            depth: depth.max(1),
+            state: Mutex::new(RingState {
+                queued: VecDeque::new(),
+                executing: HashSet::new(),
+                done: HashMap::new(),
+                shutdown: false,
+            }),
+            submitted_cv: Condvar::new(),
+            completed_cv: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            ring_hits: AtomicU64::new(0),
+            direct_reads: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        let reader = match driver {
+            RingDriver::Background => {
+                let i = inner.clone();
+                Some(
+                    thread::Builder::new()
+                        .name("df11-io-ring".into())
+                        .spawn(move || reader_main(i))
+                        .expect("spawn io ring reader"),
+                )
+            }
+            RingDriver::Synchronous => None,
+        };
+        IoRing {
+            inner,
+            driver,
+            reader,
+        }
+    }
+
+    /// Which driver produces completions.
+    pub fn driver(&self) -> RingDriver {
+        self.driver
+    }
+
+    /// Queue one range read. Returns `false` (a best-effort no-op)
+    /// when the tag is already outstanding or the bounded in-flight
+    /// window is full — prefetch must never block the consumer.
+    pub fn submit(&self, sub: Submission) -> bool {
+        let Ok(mut st) = self.inner.lock() else {
+            return false;
+        };
+        if st.done.contains_key(&sub.tag) || st.pending(sub.tag) {
+            return false;
+        }
+        if st.outstanding() >= self.inner.depth {
+            self.inner.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        st.queued.push_back(sub);
+        self.inner.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.submitted_cv.notify_one();
+        true
+    }
+
+    /// Consume the completion for `tag`, producing it if necessary:
+    /// from the completion map when the read already landed, by
+    /// executing queued submissions in order (synchronous driver), by
+    /// waiting (background driver), or — when the tag was never
+    /// submitted — by reading straight through to the source.
+    pub fn fetch(&self, tag: u64, range: ByteRange, what: &str) -> Result<Vec<u8>> {
+        let mut st = self.inner.lock()?;
+        loop {
+            if let Some(c) = st.done.remove(&tag) {
+                self.inner.ring_hits.fetch_add(1, Ordering::Relaxed);
+                return c.payload;
+            }
+            if !st.pending(tag) {
+                break;
+            }
+            match self.driver {
+                RingDriver::Synchronous => {
+                    // Deterministic executor: run the oldest queued
+                    // submission on this thread. Reads happen outside
+                    // the lock, exactly in submission order.
+                    let Some(sub) = st.queued.pop_front() else {
+                        // Pending but not queued cannot happen without
+                        // a background thread; fall through to the
+                        // direct read.
+                        break;
+                    };
+                    drop(st);
+                    let completion = self.inner.read(&sub);
+                    st = self.inner.lock()?;
+                    st.done.insert(sub.tag, completion);
+                }
+                RingDriver::Background => {
+                    st = self
+                        .inner
+                        .completed_cv
+                        .wait(st)
+                        .map_err(|_| Error::Runtime("io ring state poisoned".into()))?;
+                }
+            }
+        }
+        drop(st);
+        self.inner.direct_reads.fetch_add(1, Ordering::Relaxed);
+        Ok(self.inner.source.fetch(range, what)?.into_owned())
+    }
+
+    /// Execute one *specific* queued submission right now, out of
+    /// order, parking its completion. Returns `false` if the tag is
+    /// not queued. Test hook: the ring-order property test uses this
+    /// to complete submissions in adversarial permutations.
+    pub fn force_complete(&self, tag: u64) -> bool {
+        let Ok(mut st) = self.inner.lock() else {
+            return false;
+        };
+        let Some(pos) = st.queued.iter().position(|s| s.tag == tag) else {
+            return false;
+        };
+        let sub = st.queued.remove(pos).expect("indexed entry present");
+        drop(st);
+        let completion = self.inner.read(&sub);
+        if let Ok(mut st) = self.inner.lock() {
+            st.done.insert(sub.tag, completion);
+            self.inner.completed_cv.notify_all();
+        }
+        true
+    }
+
+    /// Tags of every submission still queued (oldest first).
+    pub fn queued_tags(&self) -> Vec<u64> {
+        match self.inner.lock() {
+            Ok(st) => st.queued.iter().map(|s| s.tag).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Outstanding entries (queued + executing + unconsumed).
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().map(|st| st.outstanding()).unwrap_or(0)
+    }
+
+    /// Observability counters.
+    pub fn stats(&self) -> RingStats {
+        RingStats {
+            submitted: self.inner.submitted.load(Ordering::Relaxed),
+            completed: self.inner.completed.load(Ordering::Relaxed),
+            ring_hits: self.inner.ring_hits.load(Ordering::Relaxed),
+            direct_reads: self.inner.direct_reads.load(Ordering::Relaxed),
+            rejected: self.inner.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The backend of the source underneath the ring.
+    pub fn source_backend(&self) -> IoBackend {
+        self.inner.source.backend()
+    }
+}
+
+impl Drop for IoRing {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.inner.state.lock() {
+            st.shutdown = true;
+        }
+        self.inner.submitted_cv.notify_all();
+        if let Some(h) = self.reader.take() {
+            let _unused = h.join();
+        }
+    }
+}

@@ -34,6 +34,7 @@ pub mod entropy;
 pub mod error;
 pub mod gpu_sim;
 pub mod huffman;
+pub mod io;
 pub mod kvcache;
 pub mod model;
 pub mod multi_gpu;
@@ -49,4 +50,5 @@ pub use codec::{Codec, CodecId, CompressedTensor, DecodeOpts, SplitStreamTensor}
 pub use container::{ContainerReader, ContainerWriter};
 pub use dfloat11::{Df11Model, Df11Tensor};
 pub use error::{Error, Result};
+pub use io::IoBackend;
 pub use runtime::pool::{auto_threads, WorkerPool};

@@ -33,7 +33,7 @@ use dfloat11::gpu_sim::Device;
 use dfloat11::model::init::generate_model_weights;
 use dfloat11::model::{zoo, ModelConfig};
 use dfloat11::multi_gpu::{min_gpus, plan_layer_sharding, ShardFormat};
-use dfloat11::WorkerPool;
+use dfloat11::{IoBackend, WorkerPool};
 use std::path::Path;
 
 fn usage() -> ! {
@@ -64,6 +64,9 @@ fn usage() -> ! {
                                  shard s's compute (default on; needs --shards)\n\
                    --from PATH   serve weights out of a .df11 container\n\
                                  (pass the matching --model/--scale)\n\
+                   --io read|mmap|ring  container payload backend (needs\n\
+                                 --from): buffered reads, zero-copy mmap,\n\
+                                 or the async prefetch ring (default read)\n\
                    --replicas N  replicate the engine N times behind the\n\
                                  fleet admission router (1 = plain server)\n\
                    --router rr|least-loaded|session  fleet routing policy\n\
@@ -300,6 +303,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "unknown format {mode_name} (want bf16|df11; offload is --mode only)"
         )));
     }
+    // `--io` picks the container payload backend, so it only means
+    // something when serving `--from` a container.
+    let io = match args.get("io") {
+        Some(s) => IoBackend::parse(s)?,
+        None => IoBackend::Read,
+    };
+    if args.get("io").is_some() && args.get("from").is_none() {
+        return Err(Error::InvalidArgument(
+            "--io selects the container payload backend; it needs --from PATH".into(),
+        ));
+    }
     if let Some(from) = args.get("from") {
         // Serve straight out of a .df11 container (streamed, CRC-checked,
         // decompressed into the engine's reusable scratch pool). The
@@ -317,14 +331,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let plan = serve_plan(args, &cfg, shards, ShardFormat::Df11)?;
             let pipeline = sconfig.pipeline_enabled();
             return serve_dispatch(args, &cfg, &sconfig, || {
-                let mut engine =
-                    ShardedEngine::build_from_container(&cfg, Path::new(from), &plan)?;
+                let mut engine = ShardedEngine::build_from_container_with(
+                    &cfg,
+                    Path::new(from),
+                    &plan,
+                    io,
+                )?;
                 engine.set_pipeline(pipeline);
                 Ok(engine)
             });
         }
         return serve_dispatch(args, &cfg, &sconfig, || {
-            Engine::build_from_container(&cfg, Path::new(from))
+            Engine::build_from_container_with(&cfg, Path::new(from), io)
         });
     }
     if shards > 1 {

@@ -44,13 +44,28 @@
 //! used by the scheduling-equivalence tests to prove bit-identity is
 //! placement-independent, and as the control arm of the fairness
 //! benchmarks.
+//!
+//! ## NUMA-style pinning (`DF11_POOL_PIN`)
+//!
+//! Setting `DF11_POOL_PIN=S` (S > 1 sockets) stripes the workers into
+//! `S` contiguous socket groups. Pinned submissions
+//! ([`PoolScope::spawn_pinned`] — the DF11 two-phase pipeline routes
+//! each chunk stripe this way) land on the socket that owns the
+//! stripe's slice of the output, idle workers prefer stealing within
+//! their own socket, and every cross-socket steal is counted and
+//! charged [`NUMA_HOP_SECONDS`] on a simulated hop clock (the same
+//! discipline as the sharded engine's activation hops — this host has
+//! one memory domain, so remote-socket traffic is modelled, not
+//! measured). Pinning only moves *where* a stripe runs; output windows
+//! are position-derived, so decoded bits are identical with pinning
+//! on, off, or misconfigured.
 
 use crate::error::{Error, Result};
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 use std::time::Duration;
@@ -64,6 +79,12 @@ pub const MAX_WORKERS: usize = 64;
 /// worker costs about as much as the decode itself, so the effective
 /// width degrades toward 1 for small tensors regardless of the request.
 pub const MIN_ELEMENTS_PER_WORKER: usize = 1024;
+
+/// Simulated cost of one cross-socket steal (a remote-NUMA cacheline
+/// round trip is ~2-3x a local one; this charges the difference per
+/// stolen stripe on the same modelled-clock discipline as the sharded
+/// engine's activation hops).
+pub const NUMA_HOP_SECONDS: f64 = 2.0e-7;
 
 static AUTO_THREADS: OnceLock<usize> = OnceLock::new();
 
@@ -115,8 +136,14 @@ struct Shared {
     work_cond: Condvar,
     /// Whether idle workers may take jobs from other workers' deques.
     stealing: bool,
+    /// Simulated socket count for NUMA-style pinning (1 = pinning
+    /// off). Workers are striped into `sockets` contiguous groups.
+    sockets: usize,
     /// Round-robin cursor for external submissions.
     next_deque: AtomicUsize,
+    /// Cross-socket steals observed (each one is charged
+    /// [`NUMA_HOP_SECONDS`] on the simulated hop clock).
+    cross_socket_steals: AtomicU64,
     /// Workers currently running (drops to 0 after shutdown joins).
     live_workers: AtomicUsize,
 }
@@ -139,6 +166,12 @@ impl Shared {
         })
     }
 
+    /// The socket a worker index belongs to: contiguous stripes, so
+    /// socket `k` owns workers `[ceil(k*W/S), ceil((k+1)*W/S))`.
+    fn socket_of(&self, worker: usize) -> usize {
+        worker * self.sockets / self.deques.len()
+    }
+
     fn push(&self, job: Job) {
         let idx = match self.current_worker() {
             // Nested spawns stay on the spawning worker's deque so it
@@ -147,6 +180,26 @@ impl Shared {
             Some(i) => i,
             None => self.next_deque.fetch_add(1, Ordering::Relaxed) % self.deques.len(),
         };
+        self.enqueue(idx, job);
+    }
+
+    /// Route a pinned submission: stripe `stripe` of `total` lands on
+    /// the deque of a worker in the socket that owns that slice of the
+    /// output, spreading stripes round-robin *within* the socket. With
+    /// `sockets == 1` this degrades to plain round-robin placement.
+    fn push_pinned(&self, job: Job, stripe: usize, total: usize) {
+        let width = self.deques.len();
+        let total = total.max(1);
+        let socket = (stripe.min(total - 1)) * self.sockets / total;
+        // Socket k's worker range mirrors `socket_of`'s striping.
+        let lo = (socket * width).div_ceil(self.sockets);
+        let hi = ((socket + 1) * width).div_ceil(self.sockets);
+        let span = (hi - lo).max(1);
+        let idx = lo + self.next_deque.fetch_add(1, Ordering::Relaxed) % span;
+        self.enqueue(idx.min(width - 1), job);
+    }
+
+    fn enqueue(&self, idx: usize, job: Job) {
         // Increment `ready` strictly *before* the job becomes visible:
         // a pop always happens after its push, so every decrement in
         // `note_taken` is matched by an earlier increment and the
@@ -168,7 +221,9 @@ impl Shared {
 
     /// Take one job: own deque first (newest), then — when stealing is
     /// permitted — the oldest job of another worker's deque. External
-    /// threads (`me == None`) only ever steal.
+    /// threads (`me == None`) only ever steal. Under pinning
+    /// (`sockets > 1`) a worker scans its own socket's deques before
+    /// crossing sockets, and each cross-socket steal is counted.
     fn find_job(&self, me: Option<usize>, allow_steal: bool) -> Option<Job> {
         if let Some(i) = me {
             if let Some(j) = self.deques[i].lock().expect("pool deque poisoned").pop_back() {
@@ -181,14 +236,39 @@ impl Shared {
         }
         let n = self.deques.len();
         let start = me.map(|i| i + 1).unwrap_or(0);
-        for k in 0..n {
-            let t = (start + k) % n;
-            if Some(t) == me {
-                continue;
-            }
-            if let Some(j) = self.deques[t].lock().expect("pool deque poisoned").pop_front() {
-                self.note_taken();
-                return Some(j);
+        let my_socket = me.map(|i| self.socket_of(i));
+        let pinned = self.sockets > 1 && my_socket.is_some();
+        // Under pinning: pass 0 scans same-socket victims only, pass 1
+        // crosses sockets and charges the simulated NUMA hop. Without
+        // pinning (or from an external helper thread) a single pass
+        // scans everyone.
+        let passes: &[Option<bool>] = if pinned {
+            &[Some(true), Some(false)]
+        } else {
+            &[None]
+        };
+        for want_local in passes {
+            for k in 0..n {
+                let t = (start + k) % n;
+                if Some(t) == me {
+                    continue;
+                }
+                let local = my_socket == Some(self.socket_of(t));
+                if let Some(w) = want_local {
+                    if *w != local {
+                        continue;
+                    }
+                }
+                if let Some(j) = self.deques[t].lock().expect("pool deque poisoned").pop_front() {
+                    self.note_taken();
+                    // Only worker-to-worker thefts across a socket
+                    // boundary count as hops; external helper threads
+                    // have no home socket to hop from.
+                    if pinned && !local {
+                        self.cross_socket_steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Some(j);
+                }
             }
         }
         None
@@ -255,6 +335,16 @@ fn configured_global_width() -> usize {
         .unwrap_or_else(auto_threads)
 }
 
+/// Simulated socket count from `DF11_POOL_PIN` (unset, unparsable, or
+/// `<= 1` all mean pinning off).
+fn configured_pin_sockets() -> usize {
+    std::env::var("DF11_POOL_PIN")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&s| s > 1)
+        .unwrap_or(1)
+}
+
 impl WorkerPool {
     /// A pool of `width` workers with stealing enabled.
     pub fn new(width: usize) -> Arc<WorkerPool> {
@@ -263,9 +353,19 @@ impl WorkerPool {
 
     /// A pool of `width` workers (clamped to `[1, MAX_WORKERS]`),
     /// optionally with stealing disabled (each task then runs on the
-    /// worker whose deque it was pushed to).
+    /// worker whose deque it was pushed to). The simulated socket
+    /// count comes from `DF11_POOL_PIN` (see [`Self::with_pinning`]).
     pub fn with_config(width: usize, stealing: bool) -> Arc<WorkerPool> {
+        Self::with_pinning(width, stealing, configured_pin_sockets())
+    }
+
+    /// A pool with an explicit simulated socket count (`sockets <= 1`
+    /// disables pinning; more sockets than workers clamps to one
+    /// worker per socket). Tests use this to exercise pinning without
+    /// touching the process environment.
+    pub fn with_pinning(width: usize, stealing: bool, sockets: usize) -> Arc<WorkerPool> {
         let width = width.clamp(1, MAX_WORKERS);
+        let sockets = sockets.clamp(1, width);
         let shared = Arc::new(Shared {
             deques: (0..width).map(|_| Mutex::new(VecDeque::new())).collect(),
             state: Mutex::new(PoolState {
@@ -274,7 +374,9 @@ impl WorkerPool {
             }),
             work_cond: Condvar::new(),
             stealing,
+            sockets,
             next_deque: AtomicUsize::new(0),
+            cross_socket_steals: AtomicU64::new(0),
             live_workers: AtomicUsize::new(width),
         });
         let handles = (0..width)
@@ -320,6 +422,22 @@ impl WorkerPool {
     /// Whether idle workers steal from other workers' deques.
     pub fn stealing(&self) -> bool {
         self.shared.stealing
+    }
+
+    /// Simulated socket count (1 = pinning off).
+    pub fn pin_sockets(&self) -> usize {
+        self.shared.sockets
+    }
+
+    /// Cross-socket steals observed since the pool started.
+    pub fn cross_socket_steals(&self) -> u64 {
+        self.shared.cross_socket_steals.load(Ordering::Relaxed)
+    }
+
+    /// Total simulated NUMA-hop seconds charged to cross-socket
+    /// steals (same modelled-clock discipline as shard hops).
+    pub fn simulated_numa_hop_seconds(&self) -> f64 {
+        self.cross_socket_steals() as f64 * NUMA_HOP_SECONDS
     }
 
     /// Workers currently running.
@@ -409,6 +527,36 @@ impl<'scope, 'env> PoolScope<'scope, 'env> {
         T: Send + 'scope,
         F: FnOnce() -> T + Send + 'scope,
     {
+        self.spawn_routed(f, None)
+    }
+
+    /// Like [`Self::spawn`], but pin the task as stripe `stripe` of
+    /// `total`: under `DF11_POOL_PIN` the job is routed to the socket
+    /// owning that slice of the output instead of the spawning
+    /// worker's deque. Placement-only — results are bit-identical to
+    /// an unpinned spawn.
+    pub fn spawn_pinned<T, F>(
+        &'scope self,
+        stripe: usize,
+        total: usize,
+        f: F,
+    ) -> TaskHandle<'scope, T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        self.spawn_routed(f, Some((stripe, total)))
+    }
+
+    fn spawn_routed<T, F>(
+        &'scope self,
+        f: F,
+        pin: Option<(usize, usize)>,
+    ) -> TaskHandle<'scope, T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
         let slot = Arc::new(TaskSlot {
             state: Mutex::new(SlotState::Pending),
             cond: Condvar::new(),
@@ -450,7 +598,12 @@ impl<'scope, 'env> PoolScope<'scope, 'env> {
         let job: Job = unsafe {
             std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
         };
-        self.shared.push(job);
+        match pin {
+            Some((stripe, total)) if self.shared.sockets > 1 => {
+                self.shared.push_pinned(job, stripe, total)
+            }
+            _ => self.shared.push(job),
+        }
         TaskHandle {
             slot,
             shared: self.shared,

@@ -1,0 +1,339 @@
+//! Cross-backend container I/O: the golden fixture must decode to the
+//! pinned CRC through every payload backend (buffered read, zero-copy
+//! mmap, prefetch ring) × decode path (serial, pooled), corruption must
+//! surface as the same typed errors on the new backends as on the old
+//! one, ring completion order must never affect a decoded bit, and
+//! NUMA-style pool pinning must change placement only — never output.
+
+use dfloat11::bf16::Bf16;
+use dfloat11::codec::{Codec, DecodeOpts, Df11Codec};
+use dfloat11::container::{ContainerReader, ContainerWriter};
+use dfloat11::coordinator::{ContainerSource, WeightSource};
+use dfloat11::crc32::Hasher;
+use dfloat11::error::Error;
+use dfloat11::io::ring::RingDriver;
+use dfloat11::rng::Rng;
+use dfloat11::{IoBackend, WorkerPool};
+use std::path::PathBuf;
+
+/// Pinned CRC-32 of the golden fixture's decoded weights (see
+/// `tests/golden.rs` — the constant must match there and here).
+const GOLDEN_WEIGHTS_CRC32: u32 = 0x5fa90c47;
+const GOLDEN_TENSOR_COUNT: usize = 5;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden.df11")
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("df11_io_backends_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.df11", std::process::id()))
+}
+
+fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    xs.into_iter().map(Bf16::from_f32).collect()
+}
+
+/// CRC-32 over tensors' BF16 bits in the given order.
+fn crc_of(tensors: &[Vec<Bf16>]) -> u32 {
+    let mut h = Hasher::new();
+    for t in tensors {
+        for w in t {
+            h.update(&w.to_bits().to_le_bytes());
+        }
+    }
+    h.finalize()
+}
+
+/// Deterministic Fisher–Yates permutation of `0..n` (LCG-driven).
+fn permuted(n: usize, seed: u32) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut s = seed;
+    for i in (1..n).rev() {
+        s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+        let j = s as usize % (i + 1);
+        order.swap(i, j);
+    }
+    order
+}
+
+/// A 4-group DF11 container in a temp file (the fixture holds raw-bf16
+/// payloads; pooled-decode coverage needs real DF11 streams).
+fn write_df11_grouped(tag: &str) -> (PathBuf, Vec<Vec<Bf16>>) {
+    let mut writer = ContainerWriter::new("io-backends");
+    let mut expect = Vec::new();
+    for (g, n, seed) in [
+        ("embed", 40_000usize, 21u64),
+        ("block.0", 50_000, 22),
+        ("block.1", 50_000, 23),
+        ("lm_head", 45_000, 24),
+    ] {
+        let ws = gaussian_weights(n, seed);
+        let t = Df11Codec::default().compress(&ws).unwrap();
+        writer.push(g, &format!("{g}.w"), t.view());
+        expect.push(ws);
+    }
+    let path = temp_path(tag);
+    writer.write_to(&path).unwrap();
+    (path, expect)
+}
+
+#[test]
+fn golden_crc_is_identical_across_all_backends() {
+    for backend in IoBackend::ALL {
+        let reader = ContainerReader::open_with(&fixture_path(), backend)
+            .unwrap_or_else(|e| panic!("open {backend}: {e}"));
+        assert_eq!(reader.io_backend(), backend);
+        let decoded: Vec<Vec<Bf16>> = (0..GOLDEN_TENSOR_COUNT)
+            .map(|i| {
+                reader
+                    .read_tensor_at(i)
+                    .unwrap()
+                    .decompress(&DecodeOpts::default())
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(
+            crc_of(&decoded),
+            GOLDEN_WEIGHTS_CRC32,
+            "backend {backend} drifted from the pinned golden CRC"
+        );
+    }
+}
+
+#[test]
+fn df11_payloads_roundtrip_on_every_backend_and_decode_path() {
+    let (path, expect) = write_df11_grouped("paths");
+    for backend in IoBackend::ALL {
+        let pool = WorkerPool::with_config(4, true);
+        let serial = DecodeOpts::default();
+        let pooled = DecodeOpts::with_pool(4, pool);
+        for (label, opts) in [("serial", &serial), ("pooled", &pooled)] {
+            let reader = ContainerReader::open_with(&path, backend).unwrap();
+            let decoded: Vec<Vec<Bf16>> = (0..expect.len())
+                .map(|i| reader.read_tensor_at(i).unwrap().decompress(opts).unwrap())
+                .collect();
+            assert_eq!(
+                decoded, expect,
+                "backend {backend} × {label} decode is not bit-identical"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ring_completion_order_never_affects_decoded_bits() {
+    // Adversarial completion orders on the deterministic synchronous
+    // driver: submit every payload range, force-complete them in a
+    // seeded permutation, consume in another permutation — the decoded
+    // bits must be the pinned golden bits every time, because
+    // completions are keyed by tag, never by position.
+    for seed in 1u32..=6 {
+        let reader = ContainerReader::open_with_driver(
+            &fixture_path(),
+            IoBackend::Ring,
+            RingDriver::Synchronous,
+        )
+        .unwrap();
+        let all: Vec<usize> = (0..GOLDEN_TENSOR_COUNT).collect();
+        assert_eq!(reader.prefetch(&all), GOLDEN_TENSOR_COUNT);
+        let ring = reader.ring().expect("ring backend has a ring");
+        assert_eq!(ring.queued_tags().len(), GOLDEN_TENSOR_COUNT);
+
+        for &i in &permuted(GOLDEN_TENSOR_COUNT, seed) {
+            assert!(ring.force_complete(i as u64), "tag {i} was queued");
+        }
+        let mut decoded: Vec<Vec<Bf16>> = vec![Vec::new(); GOLDEN_TENSOR_COUNT];
+        for &i in &permuted(GOLDEN_TENSOR_COUNT, seed.wrapping_mul(31).wrapping_add(7)) {
+            decoded[i] = reader
+                .read_tensor_at(i)
+                .unwrap()
+                .decompress(&DecodeOpts::default())
+                .unwrap();
+        }
+        assert_eq!(
+            crc_of(&decoded),
+            GOLDEN_WEIGHTS_CRC32,
+            "completion order (seed {seed}) changed decoded bits"
+        );
+        let stats = reader.ring_stats().unwrap();
+        assert_eq!(stats.submitted, GOLDEN_TENSOR_COUNT as u64);
+        assert_eq!(stats.ring_hits, GOLDEN_TENSOR_COUNT as u64);
+        assert_eq!(stats.direct_reads, 0);
+    }
+}
+
+#[test]
+fn ring_prefetch_pipeline_serves_identical_weights() {
+    // The engine-facing path: a ring-backed ContainerSource with
+    // prefetch on must hand the decoder the same widened weights as the
+    // plain buffered-read source, and the ring must actually have been
+    // used (submissions and hits observed).
+    let (path, _) = write_df11_grouped("pipeline");
+    let names = ["embed.w", "block.0.w", "block.1.w", "lm_head.w"];
+
+    let baseline = ContainerSource::open(&path).unwrap();
+    let ring = ContainerSource::open_with(&path, IoBackend::Ring).unwrap();
+    let mut staging = Vec::new();
+    for name in names {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        baseline
+            .fetch_into(name, &DecodeOpts::default(), &mut staging, &mut a)
+            .unwrap();
+        ring.fetch_into(name, &DecodeOpts::default(), &mut staging, &mut b)
+            .unwrap();
+        assert_eq!(a, b, "ring-served weights differ for {name}");
+    }
+    let stats = ring.reader().ring_stats().unwrap();
+    assert!(stats.submitted > 0, "prefetch never submitted");
+    assert!(stats.ring_hits > 0, "no fetch was served from the ring");
+
+    // Prefetch off: the same bits, with the ring bypassed for
+    // read-ahead (demand fetches may still consume it).
+    let cold = ContainerSource::open_with(&path, IoBackend::Ring).unwrap();
+    for name in names {
+        let mut out = Vec::new();
+        cold.fetch_into(
+            name,
+            &DecodeOpts::default().without_prefetch(),
+            &mut staging,
+            &mut out,
+        )
+        .unwrap();
+        assert!(!out.is_empty());
+    }
+    assert_eq!(cold.reader().ring_stats().unwrap().submitted, 0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_payload_is_typed_on_every_backend() {
+    for backend in IoBackend::ALL {
+        let (path, _) = write_df11_grouped(&format!("trunc_{backend}"));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        let reader = ContainerReader::open_with(&path, backend).unwrap();
+        // The intact first group still reads; the cut one fails typed.
+        assert!(reader.read_group("embed").is_ok(), "backend {backend}");
+        let err = reader.read_group("lm_head").unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidContainer(_)),
+            "backend {backend}: got {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Byte position of entry `k`'s offset field inside the header (same
+/// walk as `tests/container.rs`).
+fn offset_field_pos(reader: &ContainerReader, k: usize) -> usize {
+    let mut pos = 4 + 4; // magic + version
+    pos += 8 + reader.model_name().len(); // name
+    pos += 4; // entry count
+    for (i, e) in reader.entries().iter().enumerate() {
+        pos += 8 + e.group.len(); // group
+        pos += 8 + e.name.len(); // tensor name
+        pos += 1; // codec id
+        pos += 4 + 8 * e.shape.len(); // ndim + dims
+        pos += 8; // num_elements
+        if i == k {
+            return pos;
+        }
+        pos += 8 + 8 + 4; // offset + len + crc
+    }
+    panic!("entry {k} out of range");
+}
+
+fn header_len(reader: &ContainerReader) -> usize {
+    let last = reader.entries().len() - 1;
+    offset_field_pos(reader, last) + 8 + 8 + 4 + 4
+}
+
+#[test]
+fn range_past_eof_is_typed_on_every_backend() {
+    // A CRC-valid index whose payload range points past EOF: the mmap
+    // backend must refuse (not fault), and a ring prefetch of the bogus
+    // range must park the typed error and surface it on consume.
+    for backend in IoBackend::ALL {
+        let (path, _) = write_df11_grouped(&format!("eof_{backend}"));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let reader = ContainerReader::open(&path).unwrap();
+        let k = reader.entries().len() - 1; // lm_head
+        let pos = offset_field_pos(&reader, k);
+        let hdr_len = header_len(&reader);
+        drop(reader);
+        let bogus = bytes.len() as u64 + 4096;
+        bytes[pos..pos + 8].copy_from_slice(&bogus.to_le_bytes());
+        let crc = dfloat11::crc32::crc32(&bytes[..hdr_len - 4]);
+        bytes[hdr_len - 4..hdr_len].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let reader = ContainerReader::open_with(&path, backend).unwrap();
+        if backend == IoBackend::Ring {
+            // Put the poisoned range in flight first — the error must
+            // arrive through the completion path too.
+            reader.prefetch(&[k]);
+        }
+        let err = reader.read_group("lm_head").unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidContainer(_)),
+            "backend {backend}: got {err}"
+        );
+        assert!(reader.read_group("embed").is_ok(), "backend {backend}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn mmap_shrunk_underneath_a_read_is_a_typed_error() {
+    // Truncate the file *after* the mapping exists: touching the dead
+    // tail of the map would be a fault, so the source must detect the
+    // shrink and fail typed instead.
+    let (path, _) = write_df11_grouped("shrink");
+    let full = std::fs::metadata(&path).unwrap().len();
+    let reader = ContainerReader::open_with(&path, IoBackend::Mmap).unwrap();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(full - 64).unwrap();
+    drop(f);
+    let err = reader.read_group("lm_head").unwrap_err();
+    assert!(matches!(err, Error::InvalidContainer(_)), "got {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pinned_pool_decode_is_bit_identical_and_counts_hops() {
+    // NUMA-style pinning only moves which worker runs a stripe; every
+    // socket configuration must decode the exact same bits, and the
+    // hop clock must be exactly steals × the per-hop constant. The
+    // tensors here sit above the parallel-decode threshold, so the
+    // pinned two-phase pipeline genuinely runs.
+    let (path, expect) = write_df11_grouped("pinned");
+    for sockets in [1usize, 2, 4] {
+        let pool = WorkerPool::with_pinning(8, true, sockets);
+        assert_eq!(pool.pin_sockets(), sockets);
+        let opts = DecodeOpts::with_pool(0, pool.clone());
+        let reader = ContainerReader::open(&path).unwrap();
+        let decoded: Vec<Vec<Bf16>> = (0..expect.len())
+            .map(|i| reader.read_tensor_at(i).unwrap().decompress(&opts).unwrap())
+            .collect();
+        assert_eq!(
+            decoded, expect,
+            "pinning with {sockets} sockets changed decoded bits"
+        );
+        let hops = pool.cross_socket_steals();
+        let per_hop = dfloat11::runtime::pool::NUMA_HOP_SECONDS;
+        assert_eq!(pool.simulated_numa_hop_seconds(), hops as f64 * per_hop);
+        if sockets == 1 {
+            assert_eq!(hops, 0, "an unpinned pool cannot hop sockets");
+        }
+    }
+    // More sockets than workers clamps to one worker per socket.
+    assert_eq!(WorkerPool::with_pinning(2, true, 8).pin_sockets(), 2);
+    std::fs::remove_file(&path).ok();
+}
