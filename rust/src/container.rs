@@ -106,15 +106,42 @@ fn r_u64(r: &mut impl Read, h: &mut Hasher, what: &str) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn r_str(r: &mut impl Read, h: &mut Hasher, what: &str) -> Result<String> {
+fn r_str(
+    r: &mut (impl Read + Seek),
+    h: &mut Hasher,
+    what: &str,
+    file_len: u64,
+) -> Result<String> {
     let len = r_u64(r, h, what)?;
     if len > NAME_CAP {
         return Err(Error::container(format!("{what} length {len} exceeds cap")));
+    }
+    // Validate the claimed length against the bytes actually left in
+    // the file *before* allocating: NAME_CAP bounds the allocation,
+    // but an untrusted length field must fail typed up front, never be
+    // the thing the allocator or a short read trips over.
+    let pos = r.stream_position()?;
+    let fits = pos
+        .checked_add(len)
+        .map(|end| end <= file_len)
+        .unwrap_or(false);
+    if !fits {
+        return Err(Error::container(format!(
+            "{what} length {len} exceeds remaining file bytes"
+        )));
     }
     let mut buf = vec![0u8; len as usize];
     read_exact_or(r, &mut buf, what)?;
     h.update(&buf);
     String::from_utf8(buf).map_err(|_| Error::container(format!("{what} not utf8")))
+}
+
+/// Checked conversion for serialized u32 count fields: a value that
+/// would truncate becomes a typed error instead of silently writing a
+/// wrong header the reader would then trust.
+fn u32_field(v: u64, what: &str) -> Result<u32> {
+    u32::try_from(v)
+        .map_err(|_| Error::InvalidArgument(format!("{what} {v} overflows a u32 container field")))
 }
 
 /// CRC-tracking writer (header and payload checksums).
@@ -317,14 +344,14 @@ impl<'a> ContainerWriter<'a> {
         w.write_all(CONTAINER_MAGIC)?;
         w_u32(w, CONTAINER_VERSION)?;
         w_str(w, &self.model_name)?;
-        w_u32(w, self.entries.len() as u32)?;
+        w_u32(w, u32_field(self.entries.len() as u64, "entry count")?)?;
         let mut offset = base;
         for ((group, name, pending), &(len, crc)) in self.entries.iter().zip(payloads) {
             let (codec_id, shape, num_elements) = self.entry_meta(pending);
             w_str(w, group)?;
             w_str(w, name)?;
             w.write_all(&[codec_id])?;
-            w_u32(w, shape.len() as u32)?;
+            w_u32(w, u32_field(shape.len() as u64, "ndim")?)?;
             for &d in &shape {
                 w_u64(w, d as u64)?;
             }
@@ -437,8 +464,8 @@ fn write_payload(w: &mut impl Write, pending: &Pending<'_>) -> Result<()> {
             w_u64(w, t.exp_bits())?;
             w_u64(w, t.exp_stream().len() as u64)?;
             w.write_all(t.exp_stream())?;
-            w_u32(w, t.chunk_elems() as u32)?;
-            w_u32(w, t.chunk_starts().len() as u32)?;
+            w_u32(w, u32_field(t.chunk_elems() as u64, "split-stream chunk elems")?)?;
+            w_u32(w, u32_field(t.chunk_starts().len() as u64, "split-stream chunk count")?)?;
             for &s in t.chunk_starts() {
                 w_u64(w, s)?;
             }
@@ -686,6 +713,10 @@ impl ContainerReader {
         driver: RingDriver,
     ) -> Result<ContainerReader> {
         let file = std::fs::File::open(path)?;
+        // The actual byte count on disk: every untrusted length field
+        // in the header is validated against it before any allocation
+        // or payload read trusts it.
+        let file_len = file.metadata()?.len();
         let mut r = BufReader::new(file);
         let mut h = Hasher::new();
 
@@ -708,15 +739,15 @@ impl ContainerReader {
         if version != CONTAINER_VERSION {
             return Err(Error::UnsupportedVersion(version, CONTAINER_VERSION));
         }
-        let model_name = r_str(&mut r, &mut h, "model name")?;
+        let model_name = r_str(&mut r, &mut h, "model name", file_len)?;
         let count = r_u32(&mut r, &mut h, "entry count")?;
         if count > ENTRY_CAP {
             return Err(Error::container(format!("{count} index entries exceeds cap")));
         }
         let mut entries = Vec::with_capacity(count as usize);
         for _ in 0..count {
-            let group = r_str(&mut r, &mut h, "group name")?;
-            let name = r_str(&mut r, &mut h, "tensor name")?;
+            let group = r_str(&mut r, &mut h, "group name", file_len)?;
+            let name = r_str(&mut r, &mut h, "tensor name", file_len)?;
             let mut codec = [0u8; 1];
             read_exact_or(&mut r, &mut codec, "index entry")?;
             h.update(&codec);
@@ -771,6 +802,25 @@ impl ContainerReader {
             return Err(Error::container(format!(
                 "header crc mismatch: stored {stored:#010x}, computed {computed:#010x}"
             )));
+        }
+
+        // A CRC-consistent header can still describe payloads the file
+        // does not contain (hostile or truncated-after-write). Pin
+        // every entry's byte range inside the file now, so no later
+        // fetch ever sizes a buffer from an unverified length field.
+        for e in &entries {
+            let end = e.offset.checked_add(e.len).ok_or_else(|| {
+                Error::container(format!(
+                    "tensor {}: payload range {}+{} overflows",
+                    e.name, e.offset, e.len
+                ))
+            })?;
+            if end > file_len {
+                return Err(Error::container(format!(
+                    "tensor {}: payload range {}..{end} exceeds file size {file_len}",
+                    e.name, e.offset
+                )));
+            }
         }
 
         let mut group_names: Vec<String> = Vec::new();

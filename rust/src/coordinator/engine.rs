@@ -143,6 +143,19 @@ pub trait ServingEngine {
     /// Per-shard placement/timing stats (empty for a single-box
     /// engine — its breakdown *is* the whole story).
     fn shard_stats(&self) -> Vec<ShardStat>;
+
+    /// Arrange for shard `shard` to fail with a typed
+    /// [`Error::ShardFailed`] once more than `after_ticks` decode
+    /// ticks have run — the deterministic chaos hook behind
+    /// `serve --fail-shard` and the fuzz harness. The default rejects
+    /// injection; [`Engine`] (as shard 0) and
+    /// [`crate::coordinator::ShardedEngine`] support it.
+    fn inject_shard_failure(&mut self, shard: usize, after_ticks: u64) -> Result<()> {
+        let _ = (shard, after_ticks);
+        Err(Error::InvalidArgument(
+            "this engine does not support shard-failure injection".into(),
+        ))
+    }
 }
 
 /// Greedy generation for a fixed set of prompts over any serving
@@ -1034,6 +1047,12 @@ pub struct Engine {
     /// tick's active order; empty when no row sampled). The sharding
     /// bit-identity suite compares these across engine shapes.
     last_logits: Vec<f32>,
+    /// Deterministic failure injection (`serve --fail-shard`, the fuzz
+    /// harness): once more than this many decode ticks have run,
+    /// `decode_step` fails typed with [`Error::ShardFailed`].
+    inject_fail_after: Option<u64>,
+    /// Decode ticks seen (drives the injection trigger).
+    ticks_seen: u64,
     /// Latency accounting (Figure 6's breakdown).
     pub breakdown: Breakdown,
 }
@@ -1134,6 +1153,8 @@ impl Engine {
             slot_buffers_created: 0,
             kv_budget: None,
             last_logits: Vec::new(),
+            inject_fail_after: None,
+            ticks_seen: 0,
             breakdown: Breakdown::default(),
         })
     }
@@ -1462,6 +1483,16 @@ impl Engine {
                 return Err(Error::InvalidArgument(format!(
                     "sequence {id} listed twice in one decode step"
                 )));
+            }
+        }
+
+        // Failure injection fires at the top of the tick, before any
+        // KV claim or cache mutation, so a killed engine leaves no
+        // half-applied state behind for the fleet to re-route around.
+        self.ticks_seen += 1;
+        if let Some(after) = self.inject_fail_after {
+            if self.ticks_seen > after {
+                return Err(Error::shard_failed(0, "injected shard failure"));
             }
         }
 
@@ -1903,6 +1934,16 @@ impl ServingEngine for Engine {
 
     fn shard_stats(&self) -> Vec<ShardStat> {
         Vec::new()
+    }
+
+    fn inject_shard_failure(&mut self, shard: usize, after_ticks: u64) -> Result<()> {
+        if shard != 0 {
+            return Err(Error::InvalidArgument(format!(
+                "fail-shard: shard {shard} out of range for a single-box engine"
+            )));
+        }
+        self.inject_fail_after = Some(after_ticks);
+        Ok(())
     }
 }
 

@@ -293,6 +293,23 @@ pub struct RouteEvent {
     pub reroute: bool,
 }
 
+/// One absorbed replica-engine failure. When a replica's engine errors
+/// mid-serve (a shard dying surfaces [`crate::error::Error::ShardFailed`],
+/// a corrupt container a typed `InvalidContainer`/`CorruptStream`), the
+/// fleet records the failure here, marks the replica `Dead`, re-queues
+/// its in-flight work, and keeps serving — graceful degradation instead
+/// of a wedged drain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaFailure {
+    /// Serving-clock time of the failure.
+    pub time: f64,
+    /// Fleet index of the replica that failed.
+    pub replica: usize,
+    /// Rendered form of the typed error that killed it
+    /// (e.g. `shard 1 failed: …`).
+    pub error: String,
+}
+
 /// One health transition.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct HealthEvent {
@@ -334,6 +351,9 @@ pub struct FleetReport {
     pub routes: Vec<RouteEvent>,
     /// Every health transition, in time order.
     pub health_events: Vec<HealthEvent>,
+    /// Replica-engine failures absorbed by graceful degradation, in
+    /// time order (each also produced a `Dead` health event).
+    pub failures: Vec<ReplicaFailure>,
     /// Per-replica summaries.
     pub per_replica: Vec<ReplicaReport>,
     /// Total serving-clock seconds for the run.
@@ -447,6 +467,8 @@ pub struct Fleet<E: ServingEngine> {
     rejections: Vec<Rejection>,
     routes: Vec<RouteEvent>,
     health_events: Vec<HealthEvent>,
+    /// Replica-engine failures absorbed so far (graceful degradation).
+    failures: Vec<ReplicaFailure>,
     /// Scheduled health transitions `(time, replica, health)`.
     transitions: Vec<(f64, usize, ReplicaHealth)>,
     /// Ids that have been admitted at least once (re-route detection).
@@ -486,6 +508,7 @@ impl<E: ServingEngine> Fleet<E> {
             rejections: Vec::new(),
             routes: Vec::new(),
             health_events: Vec::new(),
+            failures: Vec::new(),
             transitions: Vec::new(),
             routed_once: HashSet::new(),
             budget_installed: false,
@@ -793,7 +816,20 @@ impl<E: ServingEngine> Fleet<E> {
                 let need = self.replicas[chosen]
                     .pages_to_admit(worst)
                     .expect("candidate had pages");
-                self.replicas[chosen].engine.start_seq(req.id, &req.prompt)?;
+                if let Err(e) = self.replicas[chosen].engine.start_seq(req.id, &req.prompt) {
+                    // The replica broke at admission: put the request
+                    // back at the queue head, absorb the typed failure
+                    // (replica -> Dead, its in-flight re-queued), and
+                    // let the next pass route around the dead box.
+                    self.queue.requeue_front(req)?;
+                    self.failures.push(ReplicaFailure {
+                        time: self.clock,
+                        replica: chosen,
+                        error: e.to_string(),
+                    });
+                    self.set_health(chosen, ReplicaHealth::Dead)?;
+                    continue;
+                }
                 self.replicas[chosen].reserved_pages += need;
                 self.replicas[chosen].routed += 1;
                 let reroute = !self.routed_once.insert(req.id);
@@ -813,17 +849,29 @@ impl<E: ServingEngine> Fleet<E> {
             // clock advances by the slowest replica (they run in
             // parallel across boxes).
             let mut ticked: Vec<(usize, Vec<StepOutcome>)> = Vec::new();
+            let mut failed: Vec<(usize, Error)> = Vec::new();
             let mut max_tick_seconds = 0.0f64;
             let mut fleet_active = 0usize;
             for (i, r) in self.replicas.iter_mut().enumerate() {
                 if r.health == ReplicaHealth::Dead || r.active.is_empty() {
                     continue;
                 }
-                fleet_active += r.active.len();
                 let ids: Vec<u64> = r.active.iter().map(|a| a.req.id).collect();
                 let sim_before = simulated_total(r.engine.breakdown());
                 let t0 = Instant::now();
-                let outcomes = r.engine.decode_step(&ids)?;
+                let outcomes = match r.engine.decode_step(&ids) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        // The engine died mid-tick (a shard failure
+                        // surfaces typed `Error::ShardFailed`, a corrupt
+                        // container a typed parse error). Absorb it
+                        // below — mark Dead, re-queue its in-flight —
+                        // instead of wedging the whole fleet drain.
+                        failed.push((i, e));
+                        continue;
+                    }
+                };
+                fleet_active += r.active.len();
                 let wall = t0.elapsed().as_secs_f64();
                 let sim_after = simulated_total(r.engine.breakdown());
                 max_tick_seconds = max_tick_seconds.max(wall + (sim_after - sim_before).max(0.0));
@@ -832,7 +880,26 @@ impl<E: ServingEngine> Fleet<E> {
                 ticked.push((i, outcomes));
             }
 
+            let had_failures = !failed.is_empty();
+            for (i, e) in failed {
+                self.failures.push(ReplicaFailure {
+                    time: self.clock,
+                    replica: i,
+                    error: e.to_string(),
+                });
+                // Same path as an operator kill: drain the replica's
+                // slots back onto the queue head under their original
+                // ids (no id can ever produce two responses).
+                self.set_health(i, ReplicaHealth::Dead)?;
+            }
+
             if ticked.is_empty() {
+                if had_failures {
+                    // Every working replica this tick failed; the
+                    // re-queued requests re-route (or are rejected
+                    // typed) on the next admission pass.
+                    continue;
+                }
                 if self.queue.head().is_some() {
                     // Zero in-flight work, an arrived request, and no
                     // admission: only a deferring router can get here.
@@ -910,6 +977,7 @@ impl<E: ServingEngine> Fleet<E> {
             rejections: std::mem::take(&mut self.rejections),
             routes: std::mem::take(&mut self.routes),
             health_events: std::mem::take(&mut self.health_events),
+            failures: std::mem::take(&mut self.failures),
             responses,
         })
     }

@@ -47,8 +47,8 @@ pub use engine::{
 };
 pub use fleet::{
     goodput_sweep, Fleet, FleetReport, HealthEvent, LeastLoaded, RejectReason, Rejection,
-    ReplicaHealth, ReplicaReport, ReplicaView, RoundRobin, RouteEvent, RouterPolicy,
-    SessionAffinity, SubmitOutcome,
+    ReplicaFailure, ReplicaHealth, ReplicaReport, ReplicaView, RoundRobin, RouteEvent,
+    RouterPolicy, SessionAffinity, SubmitOutcome,
 };
 pub use metrics::{Breakdown, Component, GoodputPoint, LatencyStats, OccupancyStats, ShardStat};
 pub use queue::RequestQueue;

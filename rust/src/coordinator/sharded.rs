@@ -169,6 +169,13 @@ pub struct ShardedEngine {
     pool: Option<Arc<WorkerPool>>,
     /// Serial-vs-pipelined simulated tick accounting.
     clock: ShardTickClock,
+    /// Deterministic failure injection (`serve --fail-shard`, the fuzz
+    /// harness): `(shard, after_ticks)` — once more than `after_ticks`
+    /// decode ticks have run, `decode_step` fails typed with
+    /// [`Error::ShardFailed`] naming that shard.
+    inject_failure: Option<(usize, u64)>,
+    /// Decode ticks seen (drives the injection trigger).
+    ticks_seen: u64,
 }
 
 impl ShardedEngine {
@@ -322,6 +329,8 @@ impl ShardedEngine {
             pipeline: true,
             pool: None,
             clock: ShardTickClock::default(),
+            inject_failure: None,
+            ticks_seen: 0,
         })
     }
 
@@ -443,6 +452,16 @@ impl ServingEngine for ShardedEngine {
             }
         }
 
+        // Failure injection fires at the top of the tick, before any
+        // shard claims KV, so a killed shard leaves no half-committed
+        // cross-shard state for the fleet to re-route around.
+        self.ticks_seen += 1;
+        if let Some((shard, after)) = self.inject_failure {
+            if self.ticks_seen > after {
+                return Err(Error::shard_failed(shard, "injected shard failure"));
+            }
+        }
+
         // Phase A: claim this tick's cache position on *every* shard —
         // all budgets are pre-checked so the extension commits on all
         // shards or none — and pick the fed token.
@@ -457,8 +476,12 @@ impl ServingEngine for ShardedEngine {
                 events[i] = Some(StepEvent::CacheFull);
                 continue;
             }
-            for shard in &mut self.shards {
-                shard.kv_extend(id)?;
+            for (s, shard) in self.shards.iter_mut().enumerate() {
+                // The budget was pre-checked on every shard, so a
+                // failing commit is a broken shard, not backpressure.
+                shard
+                    .kv_extend(id)
+                    .map_err(|e| Error::shard_failed(s, e))?;
             }
             let st = &self.seqs[&id];
             let tok = if st.pos < st.prompt.len() {
@@ -488,7 +511,9 @@ impl ServingEngine for ShardedEngine {
             // then consumes the prefetched scratches instead of paying
             // the decode on the critical path. Output identity is
             // untouched: prefetch only moves *when* a block is decoded.
-            let mut x = self.shards[0].shard_embed(&toks)?;
+            let mut x = self.shards[0]
+                .shard_embed(&toks)
+                .map_err(|e| Error::shard_failed(0, e))?;
             let n_shards = self.shards.len();
             // Resolve the overlap pool once per tick, and only when the
             // pipeline can actually overlap something (the None ->
@@ -510,10 +535,12 @@ impl ServingEngine for ShardedEngine {
                             let computed = cur.shard_blocks(&act_ids, &mut x);
                             (computed, overlap.join())
                         });
-                        computed?;
-                        prefetch?;
+                        computed.map_err(|e| Error::shard_failed(s, e))?;
+                        prefetch.map_err(|e| Error::shard_failed(s + 1, e))?;
                     }
-                    None => cur.shard_blocks(&act_ids, &mut x)?,
+                    None => cur
+                        .shard_blocks(&act_ids, &mut x)
+                        .map_err(|e| Error::shard_failed(s, e))?,
                 }
                 if s + 1 < n_shards {
                     let bytes = (n * d * 2) as u64;
@@ -529,7 +556,9 @@ impl ServingEngine for ShardedEngine {
                 st.pos + 1 >= st.prompt.len()
             });
             let logits = if sampling {
-                self.shards[n_shards - 1].shard_head(&x, n)?
+                self.shards[n_shards - 1]
+                    .shard_head(&x, n)
+                    .map_err(|e| Error::shard_failed(n_shards - 1, e))?
             } else {
                 Vec::new()
             };
@@ -689,6 +718,17 @@ impl ServingEngine for ShardedEngine {
                 }
             })
             .collect()
+    }
+
+    fn inject_shard_failure(&mut self, shard: usize, after_ticks: u64) -> Result<()> {
+        if shard >= self.shards.len() {
+            return Err(Error::InvalidArgument(format!(
+                "fail-shard: shard {shard} out of range for {} shards",
+                self.shards.len()
+            )));
+        }
+        self.inject_failure = Some((shard, after_ticks));
+        Ok(())
     }
 }
 

@@ -51,6 +51,12 @@ pub enum Error {
     /// Coordinator-level scheduling error.
     Scheduler(String),
 
+    /// A shard engine failed mid-serve. The fleet keys graceful
+    /// degradation on this variant: the owning replica is marked
+    /// `Dead`, its in-flight work is re-queued, and serving continues
+    /// on the surviving replicas instead of wedging the drain.
+    ShardFailed { shard: usize, reason: String },
+
     /// Invalid CLI or API argument.
     InvalidArgument(String),
 
@@ -91,6 +97,9 @@ impl std::fmt::Display for Error {
             }
             Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
             Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::ShardFailed { shard, reason } => {
+                write!(f, "shard {shard} failed: {reason}")
+            }
             Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
             Error::Config(m) => write!(f, "invalid serve configuration: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -122,6 +131,16 @@ impl Error {
     /// Shorthand for invalid-container errors.
     pub fn container(msg: impl Into<String>) -> Self {
         Error::InvalidContainer(msg.into())
+    }
+
+    /// Shorthand for shard-failure errors; `cause` keeps the
+    /// underlying error's rendered form so nothing is lost when the
+    /// fleet absorbs the failure.
+    pub fn shard_failed(shard: usize, cause: impl std::fmt::Display) -> Self {
+        Error::ShardFailed {
+            shard,
+            reason: cause.to_string(),
+        }
     }
 }
 
@@ -161,6 +180,13 @@ mod tests {
     fn helpers_build_expected_variants() {
         assert!(matches!(Error::corrupt("x"), Error::CorruptStream(_)));
         assert!(matches!(Error::container("x"), Error::InvalidContainer(_)));
+    }
+
+    #[test]
+    fn shard_failed_is_typed_and_stable() {
+        let e = Error::shard_failed(2, Error::corrupt("bad block"));
+        assert!(matches!(e, Error::ShardFailed { shard: 2, .. }));
+        assert_eq!(e.to_string(), "shard 2 failed: corrupt DF11 stream: bad block");
     }
 
     #[test]

@@ -1,0 +1,612 @@
+//! The container-bytes fuzz corpus: reference artifact, format-aware
+//! patching, recipe replay, and the accept/reject oracle.
+//!
+//! The oracle ([`check_bytes`]) is the heart of the harness. For a
+//! candidate byte buffer it demands, across **all three** `--io`
+//! backends:
+//!
+//! 1. **No panic** — every outcome is `Ok` or a typed [`crate::error::Error`].
+//! 2. **No silent corruption** — a payload that decodes successfully
+//!    must be bit-identical to the reference tensor of the same name
+//!    (the format carries CRCs precisely so this holds).
+//! 3. **Backend parity** — read, mmap, and ring must agree outcome-
+//!    for-outcome on every entry; a mutation must never be rejected by
+//!    one transport and accepted (or decoded differently) by another.
+//!
+//! Generic byte mutations mostly die on the header CRC, which is
+//! correct but shallow. [`HeaderMap`] + [`reseal_header`] /
+//! [`reseal_payload`] let structured cases patch hostile values into
+//! individual index fields and re-checksum, so the fuzz reaches the
+//! validation *behind* the CRCs (range checks, caps, shape/element
+//! consistency). The same primitives power [`apply_recipe`], the tiny
+//! text language the checked-in regression corpus
+//! (`rust/tests/fuzz_corpus/*.case`) is written in.
+
+use crate::bf16::Bf16;
+use crate::codec::{all_codecs, DecodeOpts};
+use crate::container::{ContainerReader, ContainerWriter};
+use crate::crc32::crc32;
+use crate::io::ring::RingDriver;
+use crate::io::IoBackend;
+use crate::rng::Rng;
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::mutate::Mutator;
+
+/// Hostile length-field values for structured patches: zero, one, the
+/// u32/u64 boundaries, and the container payload cap.
+const HOSTILE_U64: [u64; 5] = [0, 1, u32::MAX as u64, u64::MAX, 1u64 << 40];
+
+/// A pristine container plus the ground truth needed to judge mutated
+/// copies of it.
+pub struct ReferenceContainer {
+    /// The serialized container, exactly as written to disk.
+    pub bytes: Vec<u8>,
+    /// `(group, tensor name, original weights)` for every entry.
+    pub tensors: Vec<(String, String, Vec<Bf16>)>,
+    /// Header size in bytes (payloads start here).
+    pub header_bytes: u64,
+}
+
+impl ReferenceContainer {
+    /// Ground-truth weights for `name`, if it is a reference tensor.
+    pub fn expected(&self, name: &str) -> Option<&[Bf16]> {
+        self.tensors
+            .iter()
+            .find(|(_, n, _)| n == name)
+            .map(|(_, _, v)| v.as_slice())
+    }
+}
+
+fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n];
+    rng.fill_gaussian_f32(&mut xs, 0.02);
+    xs.into_iter().map(Bf16::from_f32).collect()
+}
+
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_path(tag: &str) -> std::io::Result<PathBuf> {
+    let dir = std::env::temp_dir().join("df11_fuzz");
+    std::fs::create_dir_all(&dir)?;
+    let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    Ok(dir.join(format!("{tag}_{}_{seq}.df11", std::process::id())))
+}
+
+/// Build the deterministic reference container: one tensor per codec
+/// (df11, rans, split, raw-bf16 — entry index 2 is the split-stream
+/// frame the plane-length recipes target), split across two groups.
+pub fn reference_container(seed: u64) -> ReferenceContainer {
+    let codecs = all_codecs();
+    let mut parts = Vec::with_capacity(codecs.len());
+    for (i, c) in codecs.iter().enumerate() {
+        let ws = gaussian_weights(1_000 + i * 500, seed.wrapping_add(i as u64));
+        let t = c
+            .compress(&ws)
+            .expect("reference corpus: codec compression cannot fail");
+        let group = if i < 2 { "g0" } else { "g1" };
+        parts.push((group, format!("t{i}.{}", c.name()), t, ws));
+    }
+    let mut writer = ContainerWriter::new("fuzz-ref");
+    for (group, name, t, _) in &parts {
+        writer.push(group, name, t.view());
+    }
+    let path = scratch_path("reference").expect("fuzz scratch dir");
+    let summary = writer.write_to(&path).expect("reference container write");
+    let bytes = std::fs::read(&path).expect("reference container read-back");
+    std::fs::remove_file(&path).ok();
+    ReferenceContainer {
+        bytes,
+        tensors: parts
+            .into_iter()
+            .map(|(g, n, _, ws)| (g.to_string(), n, ws))
+            .collect(),
+        header_bytes: summary.header_bytes,
+    }
+}
+
+/// Byte offsets of one entry's fixed-width index fields.
+#[derive(Clone, Copy, Debug)]
+pub struct EntryMap {
+    /// Offset of the codec-id byte.
+    pub codec_off: usize,
+    /// Offset of the `num_elements` u64.
+    pub numel_off: usize,
+    /// Offset of the payload-offset u64.
+    pub offset_off: usize,
+    /// Offset of the payload-length u64.
+    pub len_off: usize,
+    /// Offset of the payload crc32 u32.
+    pub crc_off: usize,
+}
+
+/// Byte offsets of every patchable header field in a pristine
+/// container, computed by [`map_header`]. All offsets index into the
+/// *unmutated* buffer; apply patches before any truncation.
+#[derive(Clone, Debug)]
+pub struct HeaderMap {
+    /// Offset of the model-name length u64 (always 8).
+    pub name_len_off: usize,
+    /// Offset of the entry-count u32.
+    pub entry_count_off: usize,
+    /// Per-entry field offsets, in index order.
+    pub entries: Vec<EntryMap>,
+    /// Offset of the trailing header crc32.
+    pub header_crc_off: usize,
+    /// Total header size (crc included).
+    pub header_bytes: usize,
+}
+
+fn rd_u32(bytes: &[u8], off: usize) -> Result<u32, String> {
+    let b = bytes
+        .get(off..off + 4)
+        .ok_or_else(|| format!("map: u32 at {off} out of bounds"))?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn rd_u64(bytes: &[u8], off: usize) -> Result<u64, String> {
+    let b = bytes
+        .get(off..off + 8)
+        .ok_or_else(|| format!("map: u64 at {off} out of bounds"))?;
+    let mut a = [0u8; 8];
+    a.copy_from_slice(b);
+    Ok(u64::from_le_bytes(a))
+}
+
+/// Write a little-endian u64 at `off` (bounds-checked).
+pub fn patch_u64(bytes: &mut [u8], off: usize, v: u64) -> Result<(), String> {
+    bytes
+        .get_mut(off..off + 8)
+        .ok_or_else(|| format!("patch: u64 at {off} out of bounds"))?
+        .copy_from_slice(&v.to_le_bytes());
+    Ok(())
+}
+
+/// Write a little-endian u32 at `off` (bounds-checked).
+pub fn patch_u32(bytes: &mut [u8], off: usize, v: u32) -> Result<(), String> {
+    bytes
+        .get_mut(off..off + 4)
+        .ok_or_else(|| format!("patch: u32 at {off} out of bounds"))?
+        .copy_from_slice(&v.to_le_bytes());
+    Ok(())
+}
+
+/// Parse a pristine container header into field offsets. This is a
+/// second, independent implementation of the header walk — kept
+/// deliberately separate from `ContainerReader` so a reader bug cannot
+/// blind the fuzzer that is supposed to find it.
+pub fn map_header(bytes: &[u8]) -> Result<HeaderMap, String> {
+    if bytes.get(..4) != Some(b"DF1C".as_slice()) {
+        return Err("map: not a DF1C container".into());
+    }
+    let name_len = rd_u64(bytes, 8)?;
+    let mut cur = 16usize
+        .checked_add(name_len as usize)
+        .ok_or("map: name length overflows")?;
+    let entry_count_off = cur;
+    let count = rd_u32(bytes, cur)?;
+    cur += 4;
+    let mut entries = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        // group name, tensor name: len u64 + bytes each
+        for _ in 0..2 {
+            let len = rd_u64(bytes, cur)?;
+            cur = cur
+                .checked_add(8 + len as usize)
+                .ok_or("map: name length overflows")?;
+        }
+        let codec_off = cur;
+        cur += 1;
+        let ndim = rd_u32(bytes, cur)?;
+        cur += 4 + 8 * ndim as usize;
+        let numel_off = cur;
+        let offset_off = cur + 8;
+        let len_off = cur + 16;
+        let crc_off = cur + 24;
+        cur += 28;
+        entries.push(EntryMap {
+            codec_off,
+            numel_off,
+            offset_off,
+            len_off,
+            crc_off,
+        });
+    }
+    if cur + 4 > bytes.len() {
+        return Err("map: header overruns file".into());
+    }
+    Ok(HeaderMap {
+        name_len_off: 8,
+        entry_count_off,
+        entries,
+        header_crc_off: cur,
+        header_bytes: cur + 4,
+    })
+}
+
+/// Recompute and patch the trailing header CRC so a structured patch
+/// survives the checksum gate and reaches the validation behind it.
+pub fn reseal_header(bytes: &mut [u8], map: &HeaderMap) -> Result<(), String> {
+    if map.header_crc_off > bytes.len() {
+        return Err("reseal: header crc offset out of bounds".into());
+    }
+    let crc = crc32(&bytes[..map.header_crc_off]);
+    patch_u32(bytes, map.header_crc_off, crc)
+}
+
+/// Recompute entry `idx`'s payload CRC from its *current* offset/len
+/// fields (so a patched payload is "authentic" and its parse-time
+/// validation, not the checksum, must reject it). Call
+/// [`reseal_header`] afterwards — the payload CRC lives inside the
+/// checksummed header.
+pub fn reseal_payload(bytes: &mut [u8], map: &HeaderMap, idx: usize) -> Result<(), String> {
+    let e = map
+        .entries
+        .get(idx)
+        .ok_or_else(|| format!("reseal: no entry {idx}"))?;
+    let (offset_off, len_off, crc_off) = (e.offset_off, e.len_off, e.crc_off);
+    let offset = rd_u64(bytes, offset_off)?;
+    let len = rd_u64(bytes, len_off)?;
+    let end = offset
+        .checked_add(len)
+        .filter(|&end| end <= bytes.len() as u64)
+        .ok_or_else(|| format!("reseal: entry {idx} range {offset}+{len} out of bounds"))?;
+    let crc = crc32(&bytes[offset as usize..end as usize]);
+    patch_u32(bytes, crc_off, crc)
+}
+
+fn parse_u64(s: &str) -> Result<u64, String> {
+    let parsed = match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse(),
+    };
+    parsed.map_err(|_| format!("recipe: bad number {s:?}"))
+}
+
+/// Apply a regression-corpus recipe to pristine container bytes.
+///
+/// Recipes are line-oriented; `#` starts a comment. Field offsets come
+/// from [`map_header`] on the input bytes, so patches must precede any
+/// `truncate`. Ops:
+///
+/// ```text
+/// entry-len <idx> <u64>        patch entry payload length
+/// entry-offset <idx> <u64>     patch entry payload offset
+/// entry-numel <idx> <u64>      patch entry element count
+/// entry-codec <idx> <u8>       patch entry codec id
+/// entry-count <u32>            patch the index entry count
+/// name-len <u64>               patch the model-name length
+/// payload-u64 <idx> <rel> <u64>  patch a u64 inside entry idx's
+///                                payload, rel bytes past its offset
+/// truncate <len>               cut the file to len bytes
+/// reseal-payload <idx>         recompute entry idx's payload crc
+/// reseal-header                recompute the header crc
+/// ```
+pub fn apply_recipe(bytes: &mut Vec<u8>, recipe: &str) -> Result<(), String> {
+    let map = map_header(bytes)?;
+    let entry = |idx: usize| -> Result<EntryMap, String> {
+        map.entries
+            .get(idx)
+            .copied()
+            .ok_or_else(|| format!("recipe: no entry {idx}"))
+    };
+    for raw in recipe.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut tok = line.split_whitespace();
+        let op = tok.next().unwrap_or("");
+        let mut arg = || -> Result<u64, String> {
+            parse_u64(tok.next().ok_or_else(|| format!("recipe: {op}: missing arg"))?)
+        };
+        match op {
+            "entry-len" => {
+                let (i, v) = (arg()? as usize, arg()?);
+                patch_u64(bytes, entry(i)?.len_off, v)?;
+            }
+            "entry-offset" => {
+                let (i, v) = (arg()? as usize, arg()?);
+                patch_u64(bytes, entry(i)?.offset_off, v)?;
+            }
+            "entry-numel" => {
+                let (i, v) = (arg()? as usize, arg()?);
+                patch_u64(bytes, entry(i)?.numel_off, v)?;
+            }
+            "entry-codec" => {
+                let (i, v) = (arg()? as usize, arg()?);
+                let off = entry(i)?.codec_off;
+                *bytes
+                    .get_mut(off)
+                    .ok_or_else(|| format!("recipe: codec offset {off} out of bounds"))? =
+                    v as u8;
+            }
+            "entry-count" => {
+                let v = arg()?;
+                patch_u32(bytes, map.entry_count_off, v as u32)?;
+            }
+            "name-len" => {
+                let v = arg()?;
+                patch_u64(bytes, map.name_len_off, v)?;
+            }
+            "payload-u64" => {
+                let (i, rel, v) = (arg()? as usize, arg()?, arg()?);
+                let base = rd_u64(bytes, entry(i)?.offset_off)?;
+                let off = base
+                    .checked_add(rel)
+                    .filter(|&o| o <= usize::MAX as u64)
+                    .ok_or("recipe: payload offset overflows")? as usize;
+                patch_u64(bytes, off, v)?;
+            }
+            "truncate" => {
+                let v = arg()? as usize;
+                bytes.truncate(v);
+            }
+            "reseal-payload" => {
+                let i = arg()? as usize;
+                reseal_payload(bytes, &map, i)?;
+            }
+            "reseal-header" => reseal_header(bytes, &map)?,
+            other => return Err(format!("recipe: unknown op {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+/// Per-case oracle outcome counts (first backend's view; parity makes
+/// the others identical).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CaseReport {
+    /// Header parse succeeded.
+    pub opened: bool,
+    /// Entries rejected with a typed error.
+    pub rejected: u64,
+    /// Entries that decoded bit-identically to the reference.
+    pub identical: u64,
+}
+
+/// Aggregate over a fuzz run, for test-side reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FuzzSummary {
+    /// Cases executed.
+    pub cases: u32,
+    /// Cases where the header itself was rejected.
+    pub open_rejected: u32,
+    /// Typed per-entry rejections across all cases.
+    pub entry_rejections: u64,
+    /// Bit-identical decodes across all cases.
+    pub identical_decodes: u64,
+}
+
+/// Open `path` with one backend and record each entry's outcome:
+/// `None` (typed rejection) or the decoded weights. `Err` means the
+/// oracle itself failed — a successful decode diverged from reference.
+fn run_backend(
+    path: &std::path::Path,
+    backend: IoBackend,
+    reference: &ReferenceContainer,
+) -> Result<Option<Vec<Option<Vec<Bf16>>>>, String> {
+    let reader = match ContainerReader::open_with_driver(path, backend, RingDriver::Synchronous) {
+        Ok(r) => r,
+        // A typed open error is a valid rejection of the whole file.
+        Err(_) => return Ok(None),
+    };
+    // Push every range through the prefetch ring first (a no-op on the
+    // other backends) so hostile-but-CRC-valid ranges exercise the
+    // submission/completion path, not just direct reads.
+    let indices: Vec<usize> = (0..reader.entries().len()).collect();
+    reader.prefetch(&indices);
+    let mut outcomes = Vec::with_capacity(indices.len());
+    for i in indices {
+        let name = reader.entries()[i].name.clone();
+        let decoded = reader
+            .read_tensor_at(i)
+            .and_then(|t| t.decompress(&DecodeOpts::default()));
+        match decoded {
+            Err(_) => outcomes.push(None),
+            Ok(vals) => {
+                if let Some(expected) = reference.expected(&name) {
+                    if vals != expected {
+                        return Err(format!(
+                            "silent corruption: tensor {name} decoded {} elements \
+                             that differ from reference ({backend:?})",
+                            vals.len()
+                        ));
+                    }
+                }
+                outcomes.push(Some(vals));
+            }
+        }
+    }
+    Ok(Some(outcomes))
+}
+
+/// The fuzz oracle: write `bytes` to a scratch file and demand
+/// panic-free, corruption-free, backend-identical handling across
+/// every [`IoBackend`]. See the module docs for the three invariants.
+pub fn check_bytes(
+    tag: &str,
+    bytes: &[u8],
+    reference: &ReferenceContainer,
+) -> Result<CaseReport, String> {
+    let path = scratch_path(tag).map_err(|e| format!("scratch file: {e}"))?;
+    std::fs::write(&path, bytes).map_err(|e| format!("scratch write: {e}"))?;
+    let mut first: Option<(IoBackend, Option<Vec<Option<Vec<Bf16>>>>)> = None;
+    for backend in IoBackend::ALL {
+        let outcome = match run_backend(&path, backend, reference) {
+            Ok(o) => o,
+            Err(e) => {
+                std::fs::remove_file(&path).ok();
+                return Err(e);
+            }
+        };
+        match &first {
+            None => first = Some((backend, outcome)),
+            Some((first_backend, first_outcome)) => {
+                if *first_outcome != outcome {
+                    std::fs::remove_file(&path).ok();
+                    return Err(format!(
+                        "backend parity: {first_backend:?} and {backend:?} disagree"
+                    ));
+                }
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    let (_, outcome) = first.expect("IoBackend::ALL is non-empty");
+    Ok(match outcome {
+        None => CaseReport::default(),
+        Some(entries) => CaseReport {
+            opened: true,
+            rejected: entries.iter().filter(|o| o.is_none()).count() as u64,
+            identical: entries.iter().filter(|o| o.is_some()).count() as u64,
+        },
+    })
+}
+
+/// One format-aware hostile patch: a boundary value into a random
+/// index field, optionally resealed so it penetrates the header CRC.
+fn structured_patch(
+    bytes: &mut [u8],
+    map: &HeaderMap,
+    rng: &mut Rng,
+) -> Result<String, String> {
+    let idx = rng.next_index(map.entries.len());
+    let e = map.entries[idx];
+    let hostile = match rng.next_below(7) {
+        i @ 0..=4 => HOSTILE_U64[i as usize],
+        5 => bytes.len() as u64,
+        _ => bytes.len() as u64 + 1,
+    };
+    let desc = match rng.next_below(6) {
+        0 => {
+            patch_u64(bytes, e.len_off, hostile)?;
+            format!("entry-len[{idx}]={hostile}")
+        }
+        1 => {
+            patch_u64(bytes, e.offset_off, hostile)?;
+            format!("entry-offset[{idx}]={hostile}")
+        }
+        2 => {
+            patch_u64(bytes, e.numel_off, hostile)?;
+            format!("entry-numel[{idx}]={hostile}")
+        }
+        3 => {
+            // Only ids 0..=3 are assigned; anything else must surface
+            // as a typed unknown-codec error, never a misparse.
+            let id = 4 + (rng.next_u32() % 252) as u8;
+            bytes[e.codec_off] = id;
+            format!("entry-codec[{idx}]={id}")
+        }
+        4 => {
+            patch_u32(bytes, map.entry_count_off, hostile as u32)?;
+            format!("entry-count={}", hostile as u32)
+        }
+        _ => {
+            patch_u64(bytes, map.name_len_off, hostile)?;
+            format!("name-len={hostile}")
+        }
+    };
+    // Half the time, reseal so the patch reaches post-CRC validation.
+    if rng.next_below(2) == 0 {
+        reseal_header(bytes, map)?;
+        Ok(format!("{desc} resealed"))
+    } else {
+        Ok(desc)
+    }
+}
+
+/// Run `cases` container fuzz cases from `seed`: ~70% generic byte
+/// mutations (CRC and truncation paths), ~30% structured header
+/// patches (the validation behind the CRCs). Returns the aggregate or
+/// the first failing case, described well enough to reproduce.
+pub fn fuzz_container_cases(seed: u64, cases: u32) -> Result<FuzzSummary, String> {
+    let reference = reference_container(seed);
+    let map = map_header(&reference.bytes)?;
+    let mut rng = Rng::new(seed ^ 0x5EED_F0CC);
+    let mut summary = FuzzSummary {
+        cases,
+        ..FuzzSummary::default()
+    };
+    for case in 0..cases {
+        let mut bytes = reference.bytes.clone();
+        let desc = if rng.next_below(10) < 7 {
+            let mut m = Mutator::new(rng.next_u64());
+            let n = 1 + rng.next_index(3);
+            m.mutate_n(&mut bytes, n)
+        } else {
+            structured_patch(&mut bytes, &map, &mut rng)
+                .map_err(|e| format!("seed {seed} case {case}: {e}"))?
+        };
+        let report = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            check_bytes(&format!("case{case}"), &bytes, &reference)
+        }))
+        .map_err(|_| format!("seed {seed} case {case} [{desc}]: reader PANICKED"))?
+        .map_err(|e| format!("seed {seed} case {case} [{desc}]: {e}"))?;
+        if report.opened {
+            summary.entry_rejections += report.rejected;
+            summary.identical_decodes += report.identical;
+        } else {
+            summary.open_rejected += 1;
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_container_is_pristine_and_mapped() {
+        let r = reference_container(11);
+        assert_eq!(r.tensors.len(), 4);
+        let map = map_header(&r.bytes).unwrap();
+        assert_eq!(map.entries.len(), 4);
+        assert_eq!(map.header_bytes as u64, r.header_bytes);
+        // Unmutated bytes must sail through the oracle: everything
+        // opens, nothing is rejected, every entry decodes identically.
+        let report = check_bytes("pristine", &r.bytes, &r).unwrap();
+        assert!(report.opened);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.identical, 4);
+    }
+
+    #[test]
+    fn reseal_header_restores_validity_after_patch() {
+        let r = reference_container(12);
+        let map = map_header(&r.bytes).unwrap();
+        let mut bytes = r.bytes.clone();
+        // Patch numel to itself (a no-op value): resealing must keep
+        // the container fully valid.
+        let numel = rd_u64(&bytes, map.entries[0].numel_off).unwrap();
+        patch_u64(&mut bytes, map.entries[0].numel_off, numel).unwrap();
+        reseal_header(&mut bytes, &map).unwrap();
+        assert_eq!(bytes, r.bytes, "no-op patch + reseal is byte-identical");
+    }
+
+    #[test]
+    fn recipe_ops_patch_and_reseal() {
+        let r = reference_container(13);
+        let mut bytes = r.bytes.clone();
+        apply_recipe(
+            &mut bytes,
+            "# hostile length, resealed\nentry-len 0 1099511627776\nreseal-header\n",
+        )
+        .unwrap();
+        let report = check_bytes("recipe_unit", &bytes, &r).unwrap();
+        // The resealed hostile length must die at open (range check),
+        // not open and then over-allocate.
+        assert!(!report.opened);
+    }
+
+    #[test]
+    fn unknown_recipe_op_is_rejected() {
+        let r = reference_container(14);
+        let mut bytes = r.bytes.clone();
+        assert!(apply_recipe(&mut bytes, "frobnicate 1 2\n").is_err());
+    }
+}

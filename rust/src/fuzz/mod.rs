@@ -1,0 +1,61 @@
+//! Structured fuzzing for the untrusted surfaces of the stack.
+//!
+//! The paper's promise is bit-for-bit losslessness, which makes the
+//! `.df11` container a long-lived storage artifact that must survive
+//! hostile bytes (ZipNN and chd-rs treat their compressed formats the
+//! same way — chd-rs ships cargo-fuzz targets for its file reader).
+//! This crate is dependency-free, so instead of libFuzzer this module
+//! is a seeded-RNG structured fuzz harness that runs as a normal
+//! `cargo test`:
+//!
+//! * [`mutate`] — the mutation engine: byte flips, truncations,
+//!   length-field splices, block shuffles over arbitrary bytes.
+//! * [`corpus`] — the container-bytes corpus: a deterministic
+//!   reference container covering **all four codecs**, a header map
+//!   for format-aware hostile patches (CRC-resealed, so they reach
+//!   the validation *behind* the checksums), a recipe language for
+//!   checked-in regression cases, and the oracle: every mutated
+//!   container, opened through **all three I/O backends**, must be
+//!   rejected typed or decode bit-identically — never panic, never
+//!   silently accept corruption, never diverge across backends.
+//! * [`trace`] — the scheduler-trace corpus: random arrival /
+//!   kill / drain / shard-failure interleavings replayed through
+//!   [`crate::coordinator::Server`] and [`crate::coordinator::Fleet`],
+//!   checked against the scheduler invariants (no duplicate response
+//!   ids, no lost requests, no token divergence vs an unperturbed
+//!   run).
+//!
+//! Case budgets are bounded by default and raised in CI via
+//! `DF11_FUZZ_CASES` (see [`case_budget`]); every bug the harness has
+//! found is pinned by a recipe in `rust/tests/fuzz_corpus/`.
+
+pub mod corpus;
+pub mod mutate;
+pub mod trace;
+
+pub use corpus::{
+    apply_recipe, check_bytes, fuzz_container_cases, map_header, reference_container,
+    FuzzSummary, HeaderMap, ReferenceContainer,
+};
+pub use mutate::Mutator;
+pub use trace::{fuzz_fleet_traces, fuzz_server_traces, TraceSummary};
+
+/// Per-run case budget: `DF11_FUZZ_CASES` when set and parseable,
+/// otherwise `default_cases`. The bounded `cargo test` passes use
+/// small defaults; the `fuzz-smoke` CI job raises the env var.
+pub fn case_budget(default_cases: u32) -> u32 {
+    match std::env::var("DF11_FUZZ_CASES") {
+        Ok(v) => v.trim().parse().unwrap_or(default_cases),
+        Err(_) => default_cases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn case_budget_defaults_without_env() {
+        // The env var is unset in unit-test runs unless CI sets it;
+        // either way the result is a positive budget.
+        assert!(super::case_budget(7) >= 1);
+    }
+}

@@ -1,0 +1,353 @@
+//! Scheduler-trace fuzzing: random arrival / kill / drain /
+//! shard-failure interleavings replayed through [`Server`] and
+//! [`Fleet`], checked against the scheduler invariants.
+//!
+//! The invariants (the same ones `tests/fleet.rs` pins for specific
+//! scenarios, here demanded of *every* random interleaving):
+//!
+//! * **No lost requests** — every submitted request ends in exactly
+//!   one response or one typed rejection (`offered() == submitted`).
+//! * **No duplicate response ids** — an id answers at most once, and
+//!   never both answers and rejects.
+//! * **No token divergence** — a completed response's tokens are
+//!   bit-identical to the same prompt served by an unperturbed
+//!   single-box server (the paper's losslessness guarantee must
+//!   survive re-routing, preemption pressure, and shard failure).
+//! * **No wedge** — `drain` returns; replica death and injected
+//!   [`crate::error::Error::ShardFailed`] degrade the fleet instead of
+//!   stalling or erroring it out.
+
+use crate::coordinator::{
+    Engine, Fleet, LeastLoaded, ReplicaHealth, Request, RoundRobin, RouterPolicy, SchedulerConfig,
+    ServeConfig, Server, ServingEngine, SessionAffinity, SubmitOutcome, WeightMode,
+};
+use crate::model::ModelConfig;
+use crate::rng::Rng;
+use std::collections::{HashMap, HashSet};
+use std::panic::AssertUnwindSafe;
+
+/// Aggregate over a trace-fuzz run, for test-side reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    /// Cases executed.
+    pub cases: u32,
+    /// Responses across all cases.
+    pub responses: u64,
+    /// Typed rejections across all cases.
+    pub rejections: u64,
+    /// Replica failures absorbed (injected shard failures that fired).
+    pub replica_failures: u64,
+    /// Responses token-checked against the reference by exact id.
+    pub exact_checked: u64,
+}
+
+fn router_by(name: &str) -> Box<dyn RouterPolicy> {
+    match name {
+        "rr" => Box::new(RoundRobin::new()),
+        "least-loaded" => Box::new(LeastLoaded::new()),
+        _ => Box::new(SessionAffinity::new()),
+    }
+}
+
+/// A random workload whose prompts are pairwise distinct (the first
+/// token encodes the request index), so reference streams can be
+/// matched back even when queue-assigned ids are not observable.
+fn random_workload(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut prompt = vec![i as u32 + 1];
+            for _ in 0..1 + rng.next_index(3) {
+                prompt.push(rng.next_u32() % 50 + 1);
+            }
+            let mut r = Request::new(prompt, 1 + rng.next_index(3));
+            if rng.next_below(2) == 0 {
+                r = r.with_session(rng.next_below(3));
+            }
+            r
+        })
+        .collect()
+}
+
+/// Ground truth: each request served alone-in-spirit on a single
+/// healthy continuous server with slots for everyone. Returns tokens
+/// per workload index.
+fn reference_tokens(
+    cfg: &ModelConfig,
+    model_seed: u64,
+    workload: &[Request],
+) -> Result<Vec<Vec<u32>>, String> {
+    let engine = Engine::build(cfg, model_seed, WeightMode::Bf16Resident)
+        .map_err(|e| format!("reference engine: {e}"))?;
+    let mut server = Server::new(engine, SchedulerConfig::continuous(workload.len().max(1)));
+    let mut ids = Vec::with_capacity(workload.len());
+    for r in workload {
+        ids.push(
+            server
+                .submit(r.clone())
+                .map_err(|e| format!("reference submit: {e}"))?,
+        );
+    }
+    let report = server.drain().map_err(|e| format!("reference drain: {e}"))?;
+    let by_id: HashMap<u64, Vec<u32>> = report
+        .responses
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    ids.iter()
+        .map(|id| {
+            by_id
+                .get(id)
+                .cloned()
+                .ok_or_else(|| format!("reference run lost request id {id}"))
+        })
+        .collect()
+}
+
+/// Fuzz the fleet: random replica counts, routers, slot counts, queue
+/// bounds, arrival times, kill/drain schedules, and injected shard
+/// failures — every interleaving must satisfy the module invariants.
+pub fn fuzz_fleet_traces(seed: u64, cases: u32) -> Result<TraceSummary, String> {
+    let cfg = ModelConfig::test_tiny();
+    let mut rng = Rng::new(seed ^ 0x7ACE_F1EE);
+    let mut summary = TraceSummary {
+        cases,
+        ..TraceSummary::default()
+    };
+    for case in 0..cases {
+        let model_seed = 1 + rng.next_below(4);
+        let n_replicas = 2 + rng.next_index(2);
+        let router = ["rr", "least-loaded", "session"][rng.next_index(3)];
+        let slots = 1 + rng.next_index(2);
+        let queue_cap = if rng.next_below(4) == 0 {
+            Some(2 + rng.next_index(3))
+        } else {
+            None
+        };
+        let n_reqs = 4 + rng.next_index(5);
+        let work = random_workload(&mut rng, n_reqs);
+        let arrivals: Vec<f64> = (0..n_reqs)
+            .map(|_| {
+                if rng.next_below(2) == 0 {
+                    0.0
+                } else {
+                    rng.next_f64() * 2e-3
+                }
+            })
+            .collect();
+        let inject = rng.next_below(3) == 0;
+        let inject_after = 1 + rng.next_below(3);
+        let n_events = rng.next_index(3);
+
+        let desc = format!(
+            "seed {seed} case {case}: {n_replicas} replicas, router {router}, \
+             slots {slots}, cap {queue_cap:?}, {n_reqs} reqs, inject {inject}, \
+             {n_events} events"
+        );
+
+        let reference = reference_tokens(&cfg, model_seed, &work)
+            .map_err(|e| format!("{desc}: {e}"))?;
+
+        let mut engines = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            engines.push(
+                Engine::build(&cfg, model_seed, WeightMode::Bf16Resident)
+                    .map_err(|e| format!("{desc}: engine build: {e}"))?,
+            );
+        }
+        if inject {
+            engines[0]
+                .inject_shard_failure(0, inject_after)
+                .map_err(|e| format!("{desc}: injection: {e}"))?;
+        }
+        let mut config = ServeConfig::new().slots(slots).replicas(n_replicas);
+        if let Some(cap) = queue_cap {
+            config = config.queue_capacity(cap);
+        }
+        let mut fleet = Fleet::new(engines, config, router_by(router))
+            .map_err(|e| format!("{desc}: fleet build: {e}"))?;
+        for _ in 0..n_events {
+            let replica = rng.next_index(n_replicas);
+            let health = if rng.next_below(2) == 0 {
+                ReplicaHealth::Dead
+            } else {
+                ReplicaHealth::Draining
+            };
+            let at = rng.next_f64() * 2e-3;
+            fleet
+                .set_health_at(replica, health, at)
+                .map_err(|e| format!("{desc}: schedule: {e}"))?;
+        }
+
+        // Submit in nondecreasing arrival order, tracking ids where the
+        // outcome exposes them (deferred arrivals get theirs later).
+        let mut order: Vec<usize> = (0..n_reqs).collect();
+        order.sort_by(|&a, &b| arrivals[a].partial_cmp(&arrivals[b]).expect("finite"));
+        let mut known: HashMap<u64, usize> = HashMap::new();
+        for &i in &order {
+            match fleet
+                .submit_at(work[i].clone(), arrivals[i])
+                .map_err(|e| format!("{desc}: submit: {e}"))?
+            {
+                SubmitOutcome::Enqueued(id) => {
+                    known.insert(id, i);
+                }
+                SubmitOutcome::Deferred | SubmitOutcome::Rejected(_) => {}
+            }
+        }
+
+        let report = std::panic::catch_unwind(AssertUnwindSafe(|| fleet.drain()))
+            .map_err(|_| format!("{desc}: drain PANICKED"))?
+            .map_err(|e| format!("{desc}: drain wedged/errored: {e}"))?;
+
+        // Invariant: no lost requests.
+        if report.offered() != n_reqs {
+            return Err(format!(
+                "{desc}: {} responses + {} rejections != {n_reqs} submitted",
+                report.responses.len(),
+                report.rejections.len()
+            ));
+        }
+        // Invariant: unique response ids, never both answered and
+        // rejected (door rejections carry id 0 — no id was assigned).
+        let mut answered: HashSet<u64> = HashSet::new();
+        for r in &report.responses {
+            if !answered.insert(r.id) {
+                return Err(format!("{desc}: duplicate response id {}", r.id));
+            }
+        }
+        for r in &report.rejections {
+            if r.id != 0 && answered.contains(&r.id) {
+                return Err(format!("{desc}: id {} both answered and rejected", r.id));
+            }
+        }
+        // Invariant: no token divergence. Exact by id where observable;
+        // deferred ids match against the unconsumed reference streams
+        // (prompts are distinct, so a stream mismatch cannot hide).
+        let mut unmatched: Vec<&Vec<u32>> = Vec::new();
+        let consumed: HashSet<usize> = report
+            .responses
+            .iter()
+            .filter_map(|r| known.get(&r.id).copied())
+            .collect();
+        for (i, tokens) in reference.iter().enumerate() {
+            if !consumed.contains(&i) {
+                unmatched.push(tokens);
+            }
+        }
+        for r in &report.responses {
+            match known.get(&r.id) {
+                Some(&i) => {
+                    if r.tokens != reference[i] {
+                        return Err(format!(
+                            "{desc}: token divergence on id {} (request {i})",
+                            r.id
+                        ));
+                    }
+                    summary.exact_checked += 1;
+                }
+                None => {
+                    let Some(pos) = unmatched.iter().position(|t| **t == r.tokens) else {
+                        return Err(format!(
+                            "{desc}: id {} produced tokens matching no reference stream",
+                            r.id
+                        ));
+                    };
+                    unmatched.swap_remove(pos);
+                }
+            }
+        }
+        summary.responses += report.responses.len() as u64;
+        summary.rejections += report.rejections.len() as u64;
+        summary.replica_failures += report.failures.len() as u64;
+    }
+    Ok(summary)
+}
+
+/// Fuzz the single-box server: random policies, batch sizes, and
+/// arrival traces. Everything completes, ids are unique, and tokens
+/// are bit-identical to the unperturbed reference.
+pub fn fuzz_server_traces(seed: u64, cases: u32) -> Result<TraceSummary, String> {
+    let cfg = ModelConfig::test_tiny();
+    let mut rng = Rng::new(seed ^ 0x5E4E_77AC);
+    let mut summary = TraceSummary {
+        cases,
+        ..TraceSummary::default()
+    };
+    for case in 0..cases {
+        let model_seed = 1 + rng.next_below(4);
+        let static_batch = rng.next_below(2) == 0;
+        let max_batch = 1 + rng.next_index(3);
+        let n_reqs = 3 + rng.next_index(4);
+        let work = random_workload(&mut rng, n_reqs);
+        let mut arrivals: Vec<f64> = (0..n_reqs)
+            .map(|_| {
+                if rng.next_below(2) == 0 {
+                    0.0
+                } else {
+                    rng.next_f64() * 2e-3
+                }
+            })
+            .collect();
+        arrivals.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let desc = format!(
+            "seed {seed} case {case}: static {static_batch}, batch {max_batch}, \
+             {n_reqs} reqs"
+        );
+
+        let reference = reference_tokens(&cfg, model_seed, &work)
+            .map_err(|e| format!("{desc}: {e}"))?;
+        let engine = Engine::build(&cfg, model_seed, WeightMode::Bf16Resident)
+            .map_err(|e| format!("{desc}: engine build: {e}"))?;
+        let sched = if static_batch {
+            SchedulerConfig::static_batch(max_batch)
+        } else {
+            SchedulerConfig::continuous(max_batch)
+        };
+        let mut server = Server::new(engine, sched);
+        let mut ids = Vec::with_capacity(n_reqs);
+        for (i, r) in work.iter().enumerate() {
+            ids.push(
+                server
+                    .submit_at(r.clone(), arrivals[i])
+                    .map_err(|e| format!("{desc}: submit: {e}"))?,
+            );
+        }
+        let report = std::panic::catch_unwind(AssertUnwindSafe(|| server.drain()))
+            .map_err(|_| format!("{desc}: drain PANICKED"))?
+            .map_err(|e| format!("{desc}: drain wedged/errored: {e}"))?;
+        if report.responses.len() != n_reqs {
+            return Err(format!(
+                "{desc}: {} of {n_reqs} requests answered",
+                report.responses.len()
+            ));
+        }
+        let mut answered: HashSet<u64> = HashSet::new();
+        for r in &report.responses {
+            if !answered.insert(r.id) {
+                return Err(format!("{desc}: duplicate response id {}", r.id));
+            }
+            let Some(i) = ids.iter().position(|id| *id == r.id) else {
+                return Err(format!("{desc}: response for unknown id {}", r.id));
+            };
+            if r.tokens != reference[i] {
+                return Err(format!("{desc}: token divergence on id {}", r.id));
+            }
+            summary.exact_checked += 1;
+        }
+        summary.responses += report.responses.len() as u64;
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_workload_prompts_are_distinct() {
+        let mut rng = Rng::new(2);
+        let work = random_workload(&mut rng, 8);
+        let prompts: HashSet<Vec<u32>> = work.iter().map(|r| r.prompt.clone()).collect();
+        assert_eq!(prompts.len(), 8);
+    }
+}

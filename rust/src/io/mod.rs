@@ -173,7 +173,14 @@ impl ByteSource for ReadSource {
     }
 
     fn fetch(&self, range: ByteRange, what: &str) -> Result<PayloadBytes<'_>> {
-        range_end(range, what)?;
+        let end = range_end(range, what)?;
+        // Reject past-EOF ranges *before* allocating: a hostile index
+        // can claim a payload near the 1 TiB cap, and the allocation
+        // itself must never be the failure mode (typed error parity
+        // with the mmap backend's bounds check).
+        if end > self.len {
+            return Err(Error::container(format!("{what} truncated")));
+        }
         let mut buf = vec![0u8; range.len as usize];
         let mut f = self
             .file

@@ -32,6 +32,7 @@ pub mod crc32;
 pub mod dfloat11;
 pub mod entropy;
 pub mod error;
+pub mod fuzz;
 pub mod gpu_sim;
 pub mod huffman;
 pub mod io;

@@ -76,6 +76,9 @@ fn usage() -> ! {
                    --kill R@T    mark fleet replica R dead at T seconds\n\
                                  (in-flight work re-routes; needs --replicas)\n\
                    --drain R@T   drain fleet replica R at T seconds\n\
+                   --fail-shard S@K  inject a typed shard-S failure on\n\
+                                 replica 0 after K decode ticks (needs\n\
+                                 --replicas; the fleet degrades + re-routes)\n\
          estimate  --model NAME --device NAME --gpus N --format bf16|df11\n\
          decode    --in PATH [--threads T] [--verify]  decode a .df11 container;\n\
                    --verify checks bit-identity vs --model/--scale/--seed"
@@ -276,7 +279,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The fleet-only flags would silently do nothing on a plain server
     // — reject them (same convention as the other meaningless flag
     // combinations).
-    for flag in ["router", "queue-cap", "kill", "drain"] {
+    for flag in ["router", "queue-cap", "kill", "drain", "fail-shard"] {
         if args.get(flag).is_some() && replicas <= 1 {
             return Err(Error::InvalidArgument(format!(
                 "--{flag} drives the replicated fleet; it needs --replicas N (N > 1)"
@@ -440,6 +443,20 @@ fn tokens_crc32(responses: &[Response]) -> u32 {
     hasher.finalize()
 }
 
+/// Parse a `SHARD@TICKS` shard-failure spec (e.g. `--fail-shard 0@2`).
+fn parse_shard_at(spec: &str) -> Result<(usize, u64)> {
+    let bad = || {
+        Error::InvalidArgument(format!(
+            "--fail-shard wants SHARD@TICKS (e.g. 0@2), got {spec:?}"
+        ))
+    };
+    let (s, t) = spec.split_once('@').ok_or_else(bad)?;
+    Ok((
+        s.trim().parse::<usize>().map_err(|_| bad())?,
+        t.trim().parse::<u64>().map_err(|_| bad())?,
+    ))
+}
+
 /// Parse a `REPLICA@SECONDS` failure-injection spec (e.g. `--kill 0@0.001`).
 fn parse_replica_at(spec: &str, flag: &str) -> Result<(usize, f64)> {
     let bad = || {
@@ -577,6 +594,13 @@ where
         engine.set_decode_threads(threads);
         engines.push(engine);
     }
+    // Deterministic shard-failure injection on replica 0: the shard
+    // dies typed mid-serve and the fleet's degradation path (absorb,
+    // mark Dead, re-route) carries the rest of the run.
+    if let Some(spec) = args.get("fail-shard") {
+        let (shard, after) = parse_shard_at(spec)?;
+        engines[0].inject_shard_failure(shard, after)?;
+    }
     println!(
         "fleet: {} x {} ({} params, source {}, {:?} scheduler, {} slots/replica, router {})",
         sconfig.replicas,
@@ -661,6 +685,14 @@ where
             e.health.label(),
             fmt::seconds(e.time),
             e.rerouted,
+        );
+    }
+    for fail in &report.failures {
+        println!(
+            "failure: replica {} at {}: {}",
+            fail.replica,
+            fmt::seconds(fail.time),
+            fail.error,
         );
     }
     let reroutes = report.routes.iter().filter(|r| r.reroute).count();

@@ -8,10 +8,20 @@
 //! structures through the public KernelInput API.
 
 use dfloat11::bf16::Bf16;
+use dfloat11::container::write_df11_model;
+use dfloat11::coordinator::{
+    Engine, Fleet, ReplicaHealth, Request, RoundRobin, SchedulerConfig, ServeConfig, Server,
+    ServingEngine, ShardedEngine, WeightMode,
+};
 use dfloat11::dfloat11::serial::{read_tensor, write_tensor};
-use dfloat11::dfloat11::Df11Tensor;
-use dfloat11::gpu_sim::{DecompressKernel, KernelInput};
+use dfloat11::dfloat11::{Df11Model, Df11Tensor};
+use dfloat11::error::Error;
+use dfloat11::fuzz::{check_bytes, map_header, reference_container};
+use dfloat11::gpu_sim::{DecompressKernel, Device, KernelInput};
 use dfloat11::huffman::lut::HierarchicalLut;
+use dfloat11::model::init::generate_model_weights;
+use dfloat11::model::ModelConfig;
+use dfloat11::multi_gpu::{plan_layer_sharding, ShardFormat};
 use dfloat11::proptest_lite::{check, Config};
 use dfloat11::rng::Rng;
 
@@ -186,4 +196,211 @@ fn edge_containers() {
         .collect();
     let t = Df11Tensor::compress(&ws).unwrap();
     assert_eq!(t.decompress().unwrap(), ws);
+}
+
+// ---------------------------------------------------------------------------
+// Container-level and fleet-level degradation (the hardening PR's
+// graceful-degradation surface): corruption in a mixed-codec container
+// is detected identically across every I/O backend, a fleet survives a
+// replica whose container is corrupt, and injected shard failures are
+// typed — never a panic, never a wedge, never silently-wrong tokens.
+// ---------------------------------------------------------------------------
+
+fn temp_model_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("df11_failure_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.df11", std::process::id()))
+}
+
+/// Corrupt each entry of a mixed-codec container (df11, rans,
+/// split-stream, raw-bf16) in turn: every backend must reject exactly
+/// the corrupted entry with a typed error, decode the other three
+/// identically to the reference, and agree with the other backends.
+#[test]
+fn mixed_codec_payload_corruption_detected_across_backends() {
+    let reference = reference_container(21);
+    let map = map_header(&reference.bytes).unwrap();
+    assert_eq!(map.entries.len(), 4, "one entry per codec");
+    for (i, e) in map.entries.iter().enumerate() {
+        let field = |at: usize| {
+            let b: [u8; 8] = reference.bytes[at..at + 8].try_into().unwrap();
+            u64::from_le_bytes(b)
+        };
+        let off = field(e.offset_off);
+        let len = field(e.len_off);
+        assert!(len > 0, "entry {i} has a payload to corrupt");
+        let mut bytes = reference.bytes.clone();
+        let mid = (off + len / 2) as usize;
+        bytes[mid] ^= 0x10;
+        let report = check_bytes(&format!("mixed{i}"), &bytes, &reference)
+            .unwrap_or_else(|e| panic!("codec entry {i}: {e}"));
+        assert!(report.opened, "header is untouched, open must succeed");
+        assert_eq!(report.rejected, 1, "entry {i}: exactly the corrupted payload is rejected");
+        assert_eq!(report.identical, 3, "entry {i}: the other codecs still decode clean");
+    }
+}
+
+/// A fleet with one corrupt-container replica degrades instead of
+/// wedging: the bad replica dies typed mid-serve (container payloads
+/// are fetched lazily, so the build succeeds and the CRC mismatch
+/// fires during decode), its requests re-route to the healthy replica,
+/// and every token stream matches the single-healthy-server reference.
+#[test]
+fn fleet_corrupt_replica_degrades_gracefully() {
+    let cfg = ModelConfig::test_tiny();
+    let seed = 9u64;
+    let raw = generate_model_weights(&cfg, seed);
+    let model = Df11Model::compress_from_weights(cfg.name.clone(), raw).unwrap();
+    let good_path = temp_model_path("good");
+    let bad_path = temp_model_path("bad");
+    write_df11_model(&good_path, &model).unwrap();
+    let summary = write_df11_model(&bad_path, &model).unwrap();
+
+    // Flip one payload byte past the header: open + header CRC still
+    // pass, the damage only surfaces when that group is fetched.
+    let mut bytes = std::fs::read(&bad_path).unwrap();
+    let header = summary.header_bytes as usize;
+    let mid = header + (bytes.len() - header) / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&bad_path, &bytes).unwrap();
+
+    let n_reqs = 6usize;
+    let workload: Vec<Vec<u32>> = (0..n_reqs).map(|i| vec![i as u32 + 1, 3]).collect();
+
+    // Reference: one healthy server over the pristine container.
+    let mut reference: Vec<Vec<u32>> = {
+        let engine = Engine::build_from_container(&cfg, &good_path).unwrap();
+        let mut server = Server::new(engine, SchedulerConfig::continuous(n_reqs));
+        for prompt in &workload {
+            server.submit(Request::new(prompt.clone(), 4)).unwrap();
+        }
+        let report = server.drain().unwrap();
+        report.responses.iter().map(|r| r.tokens.clone()).collect()
+    };
+    reference.sort();
+
+    let engines = vec![
+        Engine::build_from_container(&cfg, &bad_path).unwrap(),
+        Engine::build_from_container(&cfg, &good_path).unwrap(),
+    ];
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(4).replicas(2),
+        Box::new(RoundRobin::new()),
+    )
+    .unwrap();
+    for prompt in &workload {
+        fleet.submit(Request::new(prompt.clone(), 4)).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+
+    assert_eq!(report.responses.len(), n_reqs, "no request lost to the corrupt replica");
+    assert!(!report.failures.is_empty(), "the corrupt replica's death is recorded");
+    assert_eq!(report.failures[0].replica, 0);
+    assert!(
+        report.failures[0].error.contains("crc"),
+        "typed corruption error, got: {}",
+        report.failures[0].error
+    );
+    assert_eq!(report.per_replica[0].health, ReplicaHealth::Dead);
+    let mut got: Vec<Vec<u32>> = report.responses.iter().map(|r| r.tokens.clone()).collect();
+    got.sort();
+    assert_eq!(got, reference, "degraded fleet tokens match the healthy reference");
+
+    let _ = std::fs::remove_file(&good_path);
+    let _ = std::fs::remove_file(&bad_path);
+}
+
+/// Injected shard failures are first-class typed errors on both engine
+/// shapes, out-of-range shards are rejected up front, and a fleet
+/// absorbs a sharded replica's mid-serve death without losing tokens.
+#[test]
+fn shard_failure_injection_is_typed_and_fleet_absorbs_it() {
+    let cfg = ModelConfig::test_tiny();
+    let seed = 11u64;
+    let plan = plan_layer_sharding(&cfg, &Device::a100_80g(), 2, ShardFormat::Df11).unwrap();
+
+    // Sharded engine: out-of-range rejected, in-range fires typed
+    // naming the shard.
+    let mut sharded = ShardedEngine::build(&cfg, seed, WeightMode::Bf16Resident, &plan).unwrap();
+    assert!(matches!(
+        sharded.inject_shard_failure(5, 1),
+        Err(Error::InvalidArgument(_))
+    ));
+    sharded.inject_shard_failure(1, 2).unwrap();
+    sharded.start_seq(1, &[1, 2, 3]).unwrap();
+    let mut saw = None;
+    for _ in 0..8 {
+        match sharded.decode_step(&[1]) {
+            Ok(_) => continue,
+            Err(e) => {
+                saw = Some(e);
+                break;
+            }
+        }
+    }
+    match saw.expect("injected failure fires within the tick budget") {
+        Error::ShardFailed { shard, reason } => {
+            assert_eq!(shard, 1);
+            assert!(reason.contains("injected"), "reason: {reason}");
+        }
+        other => panic!("expected ShardFailed, got: {other}"),
+    }
+
+    // Single-box engine: only shard 0 exists.
+    let mut engine = Engine::build(&cfg, seed, WeightMode::Bf16Resident).unwrap();
+    assert!(matches!(
+        engine.inject_shard_failure(1, 0),
+        Err(Error::InvalidArgument(_))
+    ));
+    engine.inject_shard_failure(0, 0).unwrap();
+    engine.start_seq(1, &[1, 2]).unwrap();
+    assert!(matches!(
+        engine.decode_step(&[1]),
+        Err(Error::ShardFailed { shard: 0, .. })
+    ));
+
+    // Fleet of sharded replicas: replica 0's shard 1 dies after one
+    // tick; the fleet re-routes and finishes with reference tokens.
+    let n_reqs = 4usize;
+    let workload: Vec<Vec<u32>> = (0..n_reqs).map(|i| vec![i as u32 + 1]).collect();
+    let mut reference: Vec<Vec<u32>> = {
+        let healthy = Engine::build(&cfg, seed, WeightMode::Bf16Resident).unwrap();
+        let mut server = Server::new(healthy, SchedulerConfig::continuous(n_reqs));
+        for prompt in &workload {
+            server.submit(Request::new(prompt.clone(), 3)).unwrap();
+        }
+        let report = server.drain().unwrap();
+        report.responses.iter().map(|r| r.tokens.clone()).collect()
+    };
+    reference.sort();
+
+    let mut failing = ShardedEngine::build(&cfg, seed, WeightMode::Bf16Resident, &plan).unwrap();
+    failing.inject_shard_failure(1, 1).unwrap();
+    let engines = vec![
+        failing,
+        ShardedEngine::build(&cfg, seed, WeightMode::Bf16Resident, &plan).unwrap(),
+    ];
+    let mut fleet = Fleet::new(
+        engines,
+        ServeConfig::new().slots(4).replicas(2),
+        Box::new(RoundRobin::new()),
+    )
+    .unwrap();
+    for prompt in &workload {
+        fleet.submit(Request::new(prompt.clone(), 3)).unwrap();
+    }
+    let report = fleet.drain().unwrap();
+    assert_eq!(report.responses.len(), n_reqs, "no request lost to the shard failure");
+    assert!(!report.failures.is_empty());
+    assert_eq!(report.failures[0].replica, 0);
+    assert!(
+        report.failures[0].error.contains("shard 1 failed"),
+        "typed shard error surfaces in the fleet report, got: {}",
+        report.failures[0].error
+    );
+    assert_eq!(report.per_replica[0].health, ReplicaHealth::Dead);
+    let mut got: Vec<Vec<u32>> = report.responses.iter().map(|r| r.tokens.clone()).collect();
+    got.sort();
+    assert_eq!(got, reference, "sharded fleet degrades losslessly");
 }

@@ -1,0 +1,114 @@
+//! The structured fuzz harness, bounded for normal `cargo test`.
+//!
+//! Three corpora, one acceptance bar: zero panics, zero
+//! silent-corruption acceptances, zero backend divergence, zero
+//! scheduler-invariant violations. The extended-budget pass is the
+//! same code with `DF11_FUZZ_CASES` raised (the `fuzz-smoke` CI job);
+//! every bug the harness has found is pinned forever by a recipe in
+//! `tests/fuzz_corpus/`.
+
+use dfloat11::fuzz::{
+    apply_recipe, case_budget, check_bytes, fuzz_container_cases, fuzz_fleet_traces,
+    fuzz_server_traces, reference_container,
+};
+use std::path::Path;
+
+/// One knob scales every corpus: `DF11_FUZZ_CASES` is the container
+/// budget; the trace corpora (which build engines per case) take a
+/// proportional share.
+fn budgets() -> (u32, u32, u32) {
+    let container = case_budget(48);
+    let fleet = (container / 6).max(4);
+    let server = (container / 4).max(6);
+    (container, fleet, server)
+}
+
+/// Container-bytes corpus: seeded generic mutations + structured
+/// CRC-resealed header patches over all four codecs, judged across
+/// all three I/O backends.
+#[test]
+fn container_fuzz_bounded() {
+    let (cases, _, _) = budgets();
+    let summary = fuzz_container_cases(42, cases)
+        .unwrap_or_else(|e| panic!("container fuzz failed: {e}"));
+    assert_eq!(summary.cases, cases);
+    // The harness must actually be rejecting things: a run where every
+    // mutation sailed through means the oracle went blind.
+    assert!(
+        summary.open_rejected as u64 + summary.entry_rejections > 0,
+        "no mutation was rejected across {cases} cases: {summary:?}"
+    );
+}
+
+/// Replay the checked-in regression corpus: every `.case` recipe (and
+/// any raw `.bin` crash artifact) must be handled typed, identically
+/// across backends, and must actually trigger a rejection — a case
+/// that decodes fully clean pins nothing.
+#[test]
+fn corpus_recipes_replay_clean() {
+    let reference = reference_container(42);
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fuzz_corpus");
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .expect("corpus directory is checked in")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    paths.sort();
+    let mut ran = 0u32;
+    for path in paths {
+        let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let bytes = match ext {
+            "case" => {
+                let recipe = std::fs::read_to_string(&path).expect("readable recipe");
+                let mut b = reference.bytes.clone();
+                apply_recipe(&mut b, &recipe).unwrap_or_else(|e| panic!("{name}: {e}"));
+                b
+            }
+            "bin" => std::fs::read(&path).expect("readable crash artifact"),
+            _ => continue,
+        };
+        let report = check_bytes(&format!("corpus{ran}"), &bytes, &reference)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            !report.opened || report.rejected > 0,
+            "{name}: decoded fully clean — this corpus case pins nothing"
+        );
+        ran += 1;
+    }
+    assert!(ran >= 8, "expected the 8 seed corpus cases, replayed {ran}");
+}
+
+/// Scheduler-trace corpus, fleet level: random routers, health
+/// schedules, queue bounds, and injected shard failures, with the
+/// no-lost-requests / unique-ids / token-identity invariants.
+#[test]
+fn fleet_trace_fuzz_bounded() {
+    let (_, cases, _) = budgets();
+    let summary =
+        fuzz_fleet_traces(42, cases).unwrap_or_else(|e| panic!("fleet trace fuzz failed: {e}"));
+    assert_eq!(summary.cases, cases);
+    assert!(
+        summary.responses > 0,
+        "no trace completed any request: {summary:?}"
+    );
+    assert!(
+        summary.exact_checked > 0,
+        "no response was token-checked by exact id: {summary:?}"
+    );
+}
+
+/// Scheduler-trace corpus, single-box level: random policies, batch
+/// sizes, and arrival traces — everything completes with reference
+/// tokens.
+#[test]
+fn server_trace_fuzz_bounded() {
+    let (_, _, cases) = budgets();
+    let summary =
+        fuzz_server_traces(42, cases).unwrap_or_else(|e| panic!("server trace fuzz failed: {e}"));
+    assert_eq!(summary.cases, cases);
+    assert!(summary.responses > 0 && summary.exact_checked == summary.responses);
+}
