@@ -50,6 +50,7 @@ fn run(
             policy,
             hbm_bytes,
             page_tokens: 16,
+            ..SchedulerConfig::default()
         },
     );
     for r in workload {

@@ -18,15 +18,44 @@ use dfloat11::ans::{compress_bf16_generic, rans_decode};
 use dfloat11::bench_harness::json::{write_artifact, Json};
 use dfloat11::bench_harness::{fmt, Bencher, Table};
 use dfloat11::bf16::Bf16;
-use dfloat11::dfloat11::decompress::decompress_sequential_into;
+use dfloat11::coordinator::{
+    BlockCacheMode, Engine, Request, SchedulerConfig, Server, WeightMode,
+};
+use dfloat11::crc32::Hasher;
+use dfloat11::dfloat11::decompress::{
+    decompress_sequential_hierarchical_into, decompress_sequential_into,
+};
 use dfloat11::dfloat11::parallel::{decompress_parallel_into, decompress_pooled_into};
 use dfloat11::gpu_sim::timing::TimingModel;
 use dfloat11::gpu_sim::{Device, TransferModel};
 use dfloat11::model::init::generate_weights;
-use dfloat11::model::WeightSpec;
+use dfloat11::model::{ModelConfig, WeightSpec};
 use dfloat11::{Df11Tensor, WorkerPool};
 
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// CRC-32 over a decoded buffer's BF16 bits (little-endian).
+fn bits_crc(ws: &[Bf16]) -> u32 {
+    let mut h = Hasher::new();
+    for w in ws {
+        h.update(&w.to_bits().to_le_bytes());
+    }
+    h.finalize()
+}
+
+/// Token digest in request-id order, like the CLI's `tokens-crc32`.
+fn tokens_crc(report: &dfloat11::coordinator::ServeReport) -> u32 {
+    let mut responses: Vec<_> = report.responses.iter().collect();
+    responses.sort_by_key(|r| r.id);
+    let mut h = Hasher::new();
+    for r in &responses {
+        h.update(&r.id.to_le_bytes());
+        for t in &r.tokens {
+            h.update(&t.to_le_bytes());
+        }
+    }
+    h.finalize()
+}
 
 fn main() {
     println!("# Figure 7 — decompression vs transfer vs ANS (sliced lm_head matrices)\n");
@@ -135,6 +164,146 @@ fn main() {
     println!("\n## Parallel two-phase pipeline — thread sweep\n");
     sweep.print();
 
+    // ---- Multi-symbol fast path vs hierarchical fallback ------------
+    // Same stream, same output buffer, two resolvers: the flat 16-bit
+    // multi-symbol table vs the forced hierarchical byte-walk (the path
+    // any codebook outside the fast constraints takes). Decoded bits
+    // must be identical — the fast table is an optimization, never a
+    // format — and the fast path must be strictly faster (the CI
+    // `decode-perf-smoke` job runs this section).
+    println!("\n## Sequential decode — multi-symbol fast path vs hierarchical fallback\n");
+    let mut fastpath = Table::new(&[
+        "elements",
+        "fast path",
+        "hierarchical",
+        "fast speedup",
+        "crc32 (both)",
+    ]);
+    let mut fastpath_rows: Vec<Json> = Vec::new();
+    for log2 in [18u32, 20] {
+        let n = 1usize << log2;
+        let spec = WeightSpec {
+            name: format!("lm_head.fastslice{log2}"),
+            group: "lm_head".into(),
+            shape: [1, n],
+            fan_in: 4096,
+        };
+        let w = generate_weights(&spec, 29);
+        let t = Df11Tensor::compress(&w).unwrap();
+        let mut out = vec![Bf16::from_bits(0); n];
+        let r_fast = bench.bench("fast", || decompress_sequential_into(&t, &mut out).unwrap());
+        assert_eq!(out, w, "fast path must stay bit-exact");
+        let crc_fast = bits_crc(&out);
+        let r_hier = bench.bench("hier", || {
+            decompress_sequential_hierarchical_into(&t, &mut out).unwrap()
+        });
+        assert_eq!(out, w, "hierarchical fallback must stay bit-exact");
+        let crc_hier = bits_crc(&out);
+        assert_eq!(crc_fast, crc_hier, "fast and hierarchical CRCs diverged");
+        assert!(
+            r_fast.mean < r_hier.mean,
+            "the multi-symbol fast path must beat the hierarchical walk at \
+             n=2^{log2} ({:.1}us vs {:.1}us)",
+            r_fast.mean * 1e6,
+            r_hier.mean * 1e6
+        );
+        let bf16_bytes = (n * 2) as u64;
+        fastpath.row(&[
+            format!("2^{log2}"),
+            fmt::throughput_bps(bf16_bytes as f64 / r_fast.mean),
+            fmt::throughput_bps(bf16_bytes as f64 / r_hier.mean),
+            format!("{:.2}x", r_hier.mean / r_fast.mean),
+            format!("{crc_fast:#010x}"),
+        ]);
+        fastpath_rows.push(
+            Json::obj()
+                .field("log2_elements", Json::int(log2 as u64))
+                .field("fast_s", Json::num(r_fast.mean))
+                .field("hierarchical_s", Json::num(r_hier.mean))
+                .field("fast_speedup", Json::num(r_hier.mean / r_fast.mean))
+                .field("crc32", Json::int(crc_fast as u64)),
+        );
+    }
+    fastpath.print();
+
+    // ---- Decoded-block cache (serving) ------------------------------
+    // The same workload served cache-off vs cache-on (a capacity that
+    // holds the whole model): warm ticks skip Huffman decode entirely
+    // and charge a simulated HBM read instead, so the simulated serve
+    // clock drops while the token digest stays bit-identical.
+    println!("\n## Decoded-block cache — cache-off vs cache-on serving\n");
+    let cache_cfg = ModelConfig {
+        name: "fig7-cache".into(),
+        vocab_size: 256,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 256,
+        max_seq_len: 64,
+        tie_embeddings: false,
+    };
+    let workload: Vec<Request> = (0..4)
+        .map(|i| Request::new(vec![(i * 7 % 50 + 1) as u32, 2, 3], 6))
+        .collect();
+    let serve = |cache: BlockCacheMode| {
+        let engine = Engine::build(&cache_cfg, 53, WeightMode::Df11).unwrap();
+        let mut server = Server::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 2,
+                block_cache: cache,
+                ..SchedulerConfig::default()
+            },
+        );
+        for r in &workload {
+            server.submit(r.clone()).unwrap();
+        }
+        server.drain().unwrap()
+    };
+    let off = serve(BlockCacheMode::Off);
+    let on = serve(BlockCacheMode::Bytes(1 << 30));
+    assert_eq!(
+        tokens_crc(&off),
+        tokens_crc(&on),
+        "block cache changed served tokens"
+    );
+    let stats = on.block_cache.expect("cache-on run reports stats");
+    assert!(stats.hits > 0, "warm cache-on serving must hit");
+    let mut cache_table = Table::new(&[
+        "mode",
+        "hits",
+        "misses",
+        "evictions",
+        "sim serve time",
+        "tokens-crc32",
+    ]);
+    cache_table.row(&[
+        "off".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        fmt::seconds(off.total_seconds),
+        format!("{:#010x}", tokens_crc(&off)),
+    ]);
+    cache_table.row(&[
+        "on (1 GiB)".into(),
+        stats.hits.to_string(),
+        stats.misses.to_string(),
+        stats.evictions.to_string(),
+        fmt::seconds(on.total_seconds),
+        format!("{:#010x}", tokens_crc(&on)),
+    ]);
+    cache_table.print();
+    let cache_json = Json::obj()
+        .field("hits", Json::int(stats.hits))
+        .field("misses", Json::int(stats.misses))
+        .field("evictions", Json::int(stats.evictions))
+        .field("capacity_bytes", Json::int(stats.capacity))
+        .field("cache_off_sim_s", Json::num(off.total_seconds))
+        .field("cache_on_sim_s", Json::num(on.total_seconds))
+        .field("tokens_crc32", Json::int(tokens_crc(&off) as u64));
+
     // ---- Persistent pool vs per-call spawn --------------------------
     // The resident-decoder claim: on small blocks, per-call worker
     // spawn/join dominates the decode itself. The persistent-pool arm
@@ -215,6 +384,8 @@ fn main() {
         .field("provenance", Json::str("measured"))
         .field("decompress_vs_size", Json::Array(size_rows))
         .field("thread_sweep", Json::Array(sweep_rows))
+        .field("decode_fast_path", Json::Array(fastpath_rows))
+        .field("block_cache", cache_json)
         .field("persistent_pool", Json::Array(resident_rows));
     match write_artifact("fig7", &artifact) {
         Ok(Some(path)) => println!("wrote {}", path.display()),

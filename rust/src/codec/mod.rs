@@ -27,7 +27,7 @@ use crate::dfloat11::{CompressionStats, Df11Tensor};
 use crate::error::{Error, Result};
 use crate::gpu_sim::KernelConfig;
 use crate::runtime::pool::WorkerPool;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 pub mod select;
 pub mod split_stream;
@@ -77,15 +77,33 @@ impl CodecId {
     }
 }
 
-/// Tensors below this element count decode sequentially even when a
-/// worker pool is requested. The persistent pool removed the per-call
-/// thread spawn/join that used to dominate small decodes; what remains
-/// is queue-push + wake + scan-barrier coordination, a few
-/// microseconds — about what the sequential decoder needs for ~32k
-/// elements. The serving engine and the codec dispatch share this
-/// cutoff (it is half the pre-pool value: persistence made parallel
-/// decode profitable on smaller blocks).
+/// Default for [`parallel_min_elements`]: tensors below this element
+/// count decode sequentially even when a worker pool is requested. The
+/// persistent pool removed the per-call thread spawn/join that used to
+/// dominate small decodes; what remains is queue-push + wake +
+/// scan-barrier coordination, a few microseconds — about what the
+/// sequential decoder needs for ~32k elements. The serving engine and
+/// the codec dispatch share this cutoff (it is half the pre-pool
+/// value: persistence made parallel decode profitable on smaller
+/// blocks).
 pub const PARALLEL_MIN_ELEMENTS: usize = 32 * 1024;
+
+/// Small-tensor sequential-decode cutoff, with a `DF11_PARALLEL_MIN`
+/// env override (mirroring `DF11_POOL_WIDTH`): the multi-symbol fast
+/// path lowered the per-symbol decode cost, so deployments can tune
+/// where coordination overhead stops paying without recompiling.
+/// Unset, unparsable, or zero values fall back to
+/// [`PARALLEL_MIN_ELEMENTS`]. Read once and cached for the process.
+pub fn parallel_min_elements() -> usize {
+    static CUTOFF: OnceLock<usize> = OnceLock::new();
+    *CUTOFF.get_or_init(|| {
+        std::env::var("DF11_PARALLEL_MIN")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(PARALLEL_MIN_ELEMENTS)
+    })
+}
 
 /// Decode-time options shared by all codecs.
 #[derive(Clone, Debug)]
@@ -278,7 +296,7 @@ impl CompressedTensor {
         }
         match self {
             CompressedTensor::Df11(t) => {
-                if opts.width() > 1 && t.num_elements() >= PARALLEL_MIN_ELEMENTS {
+                if opts.width() > 1 && t.num_elements() >= parallel_min_elements() {
                     let pool = opts.pool_handle();
                     crate::dfloat11::parallel::decompress_pooled_into(
                         t,
@@ -303,7 +321,7 @@ impl CompressedTensor {
                 Ok(())
             }
             CompressedTensor::SplitStream(t) => {
-                if opts.width() > 1 && t.num_elements() >= PARALLEL_MIN_ELEMENTS {
+                if opts.width() > 1 && t.num_elements() >= parallel_min_elements() {
                     t.decompress_into(out, opts.threads, &opts.pool_handle())
                 } else {
                     t.decompress_sequential_into(out)

@@ -28,12 +28,21 @@
 //! [`SplitStreamTensor::decompress_into`] runs entirely on caller
 //! buffers and stack state — the same discipline as
 //! [`crate::ans::rans::rans_decode_bf16_into`].
+//!
+//! The exponent plane decodes through the shared multi-symbol
+//! [`FastLut`] fast path (hierarchical fallback for long codes or
+//! out-of-constraint codebooks), and the fixed-width sign/mantissa
+//! planes stream through word-refilled [`BitCursor`]s instead of
+//! per-element [`BitReader`](crate::huffman::BitReader) bit gathers —
+//! chunk starts are multiples of [`SPLIT_CHUNK_ELEMS`], so both planes
+//! enter every chunk byte-aligned.
 
 use crate::bf16::Bf16;
 use crate::error::{Error, Result};
-use crate::huffman::decode::LutDecoder;
-use crate::huffman::{BitReader, BitWriter, Codebook, HierarchicalLut};
+use crate::huffman::fastlut::{BitCursor, FastLut};
+use crate::huffman::{BitWriter, Codebook, HierarchicalLut};
 use crate::runtime::pool::{self, WorkerPool};
+use std::sync::OnceLock;
 
 /// Elements per exponent-stream chunk: each chunk's first-codeword bit
 /// offset is recorded at compression time, giving the pooled decoder an
@@ -64,6 +73,10 @@ pub struct SplitStreamTensor {
     mantissa_plane: Vec<u8>,
     /// Decode LUT hierarchy, rebuilt on construction (never serialized).
     lut: HierarchicalLut,
+    /// Lazily-built flat multi-symbol fast table (`None` = codebook
+    /// outside the fast-path constraints, decode falls back to the
+    /// hierarchy; never serialized).
+    fast: OnceLock<Option<FastLut>>,
 }
 
 /// Packed byte length of `n` sign bits.
@@ -121,6 +134,7 @@ impl SplitStreamTensor {
             sign_plane,
             mantissa_plane,
             lut,
+            fast: OnceLock::new(),
         })
     }
 
@@ -202,6 +216,7 @@ impl SplitStreamTensor {
             sign_plane,
             mantissa_plane,
             lut,
+            fast: OnceLock::new(),
         })
     }
 
@@ -330,28 +345,78 @@ impl SplitStreamTensor {
         Ok(())
     }
 
+    /// The shared multi-symbol fast table, built on first use (`None`
+    /// when the codebook falls outside the fast-path constraints — the
+    /// decode loop then runs entirely on the hierarchical tables).
+    fn fast_table(&self) -> Option<&FastLut> {
+        self.fast.get_or_init(|| FastLut::try_build(&self.lut)).as_ref()
+    }
+
     /// Decode chunk `c` (elements `lo..lo + window.len()`): walk the
     /// exponent codewords from the chunk's recorded bit offset and merge
     /// each symbol with its fixed-offset sign and mantissa bits.
+    ///
+    /// The exponent walk batches up to 5 symbols per [`FastLut`] window
+    /// (guarded so a batch never crosses the chunk's recorded end bit —
+    /// that boundary is where trailing padding could masquerade as
+    /// codes), and all three planes stream through word-refilled
+    /// [`BitCursor`]s instead of per-element bit gathers.
     fn decode_chunk(&self, c: usize, lo: usize, window: &mut [Bf16]) -> Result<()> {
         let end_bit = self
             .chunk_starts
             .get(c + 1)
             .copied()
             .unwrap_or(self.exp_bits);
-        let mut exp = BitReader::at(&self.exp_stream, self.chunk_starts[c], self.exp_bits);
-        let mut sign = BitReader::at(&self.sign_plane, lo as u64, self.num_elements as u64);
-        let mut mantissa = BitReader::at(
-            &self.mantissa_plane,
-            lo as u64 * 7,
-            self.num_elements as u64 * 7,
-        );
-        let dec = LutDecoder::new(&self.lut);
-        for slot in window.iter_mut() {
-            let e = dec.decode_one(&mut exp)?;
-            let s = sign.read(1) as u8;
-            let m = mantissa.read(7) as u8;
-            *slot = Bf16::from_parts(e, (s << 7) | m);
+        let mut exp = BitCursor::new(&self.exp_stream, self.chunk_starts[c]);
+        let mut sign = BitCursor::new(&self.sign_plane, lo as u64);
+        let mut mantissa = BitCursor::new(&self.mantissa_plane, lo as u64 * 7);
+        let fast = self.fast_table();
+        let total = window.len();
+        let mut i = 0usize;
+        while i < total {
+            exp.refill();
+            if let Some(f) = fast {
+                if i + 5 <= total {
+                    let e = f.lookup_multi(exp.window16());
+                    if e != 0 {
+                        let used = e & 0x1F;
+                        if exp.position() + used <= end_bit {
+                            let count = ((e >> 5) & 0x7) as usize;
+                            let mut se = e >> 8;
+                            for k in 0..count {
+                                sign.refill();
+                                mantissa.refill();
+                                let s = sign.take(1) as u8;
+                                let m = mantissa.take(7) as u8;
+                                window[i + k] = Bf16::from_parts(se as u8, (s << 7) | m);
+                                se >>= 8;
+                            }
+                            i += count;
+                            exp.consume(used as u32);
+                            continue;
+                        }
+                    }
+                }
+            }
+            let (sym, len) = match fast.and_then(|f| f.lookup(exp.window16())) {
+                Some(hit) => hit,
+                None => {
+                    // Slow path also guards corrupt streams that ran dry.
+                    if exp.position() >= end_bit {
+                        return Err(Error::corrupt(format!(
+                            "split-stream chunk {c} exhausted after {i} of {total} elements"
+                        )));
+                    }
+                    self.lut.lookup(exp.window32())?
+                }
+            };
+            exp.consume(len as u32);
+            sign.refill();
+            mantissa.refill();
+            let s = sign.take(1) as u8;
+            let m = mantissa.take(7) as u8;
+            window[i] = Bf16::from_parts(sym, (s << 7) | m);
+            i += 1;
         }
         // The chunk must land exactly on the next chunk's recorded
         // start (or the stream end): a corrupted stream that still

@@ -1,0 +1,396 @@
+//! HBM-budget decoded-block cache.
+//!
+//! Serving decodes every transformer block's weights *per use* (the
+//! paper's §2.3.3 decompress-use-discard flow keeps HBM at the
+//! compressed footprint). But when the installed HBM budget has bytes
+//! left over after the resident compressed weights **and** the
+//! worst-case KV reservation (`slots × max_seq_len`), that headroom is
+//! otherwise idle — admission can never claim it, because the
+//! scheduler reserves KV pages at worst case. [`BlockCache`] spends it
+//! on an LRU of *decoded* block weight buffers: a hit replaces the
+//! whole Huffman decode with a simulated HBM read of the cached f32
+//! weights, charged to the tick clock at [`CACHE_HBM_BW`].
+//!
+//! Correctness stance: the cache stores exact copies of decoded
+//! weights keyed by layer, so any hit is bit-identical to a fresh
+//! decode — eviction schedules can change *when* decode time is spent,
+//! never a bit of what is computed (pinned by the cache property test
+//! and the golden-CRC serve gates).
+//!
+//! Sizing: [`super::engine::ServingEngine::configure_block_cache`]
+//! derives the capacity. `Budget` mode takes
+//! `installed HBM − resident weights − worst-case KV` (so scheduling
+//! is identical cache-on vs cache-off — the KV budget is untouched);
+//! `Bytes` pins an explicit capacity. Shard-scoped engines get one
+//! cache per shard, each sized against that shard's own resident
+//! slice.
+
+use super::engine::{BlockWeightsF32, FetchCost};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Simulated HBM read bandwidth a cache hit is charged at, bytes/s
+/// (an H100-class device; the charge lands on the simulated tick
+/// clock as [`super::metrics::Component::Transfer`] seconds).
+pub const CACHE_HBM_BW: f64 = 2.0e12;
+
+/// Evicted buffers kept around for allocation-free reinsertion.
+const SPARE_BUFFERS: usize = 4;
+
+/// How the serve layer sizes the decoded-block cache
+/// (`serve --block-cache on|off|BYTES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockCacheMode {
+    /// No cache (the default): every block use pays a fresh decode.
+    Off,
+    /// Capacity = installed HBM − resident weights − worst-case KV
+    /// reservation. Needs an HBM budget (`--hbm`) to derive from.
+    Budget,
+    /// Explicit capacity in bytes (no HBM budget required).
+    Bytes(u64),
+}
+
+impl Default for BlockCacheMode {
+    fn default() -> Self {
+        BlockCacheMode::Off
+    }
+}
+
+impl BlockCacheMode {
+    /// Parse the `serve --block-cache` flag: `on` (budget-derived),
+    /// `off`, or an explicit byte count.
+    pub fn parse(s: &str) -> Result<BlockCacheMode> {
+        match s {
+            "on" | "budget" => Ok(BlockCacheMode::Budget),
+            "off" => Ok(BlockCacheMode::Off),
+            other => other
+                .parse::<u64>()
+                .map(BlockCacheMode::Bytes)
+                .map_err(|_| {
+                    Error::InvalidArgument(format!(
+                        "unknown --block-cache {other} (want on|off|BYTES)"
+                    ))
+                }),
+        }
+    }
+
+    /// Display label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            BlockCacheMode::Off => "off".into(),
+            BlockCacheMode::Budget => "budget".into(),
+            BlockCacheMode::Bytes(b) => format!("{b}B"),
+        }
+    }
+}
+
+/// Counters surfaced per engine (and summed across shards) by
+/// [`super::engine::ServingEngine::block_cache_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Block fetches served from the cache.
+    pub hits: u64,
+    /// Block fetches that went to the decoder.
+    pub misses: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+    /// Entries inserted.
+    pub insertions: u64,
+    /// Decoded bytes currently cached.
+    pub bytes: u64,
+    /// Configured capacity in bytes.
+    pub capacity: u64,
+    /// Entries currently cached.
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Sum per-shard stats into a fleet/shard-level view.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.insertions += other.insertions;
+        self.bytes += other.bytes;
+        self.capacity += other.capacity;
+        self.entries += other.entries;
+    }
+}
+
+/// One cached decoded block.
+struct Entry {
+    /// LRU stamp (monotonic access counter).
+    last_use: u64,
+    /// Decoded f32 bytes this entry accounts for.
+    bytes: u64,
+    w: BlockWeightsF32,
+}
+
+struct Inner {
+    entries: HashMap<usize, Entry>,
+    bytes: u64,
+    tick: u64,
+    stats: CacheStats,
+    /// Evicted buffers recycled on insertion (`clone_from` reuses
+    /// their allocations), keeping the steady state allocation-free
+    /// even when the cache thrashes.
+    spare: Vec<BlockWeightsF32>,
+}
+
+/// LRU cache of decoded transformer-block weights, keyed by layer.
+///
+/// Interior mutex: fetches run on pool prefetch workers holding only
+/// `&Engine` fields, exactly like [`super::engine::ScratchPool`].
+pub struct BlockCache {
+    capacity: u64,
+    inner: Mutex<Inner>,
+}
+
+/// Decoded f32 bytes a block's weights occupy.
+fn block_bytes(w: &BlockWeightsF32) -> u64 {
+    ((w.q.len() + w.k.len() + w.v.len() + w.o.len() + w.gate.len() + w.up.len() + w.down.len())
+        * std::mem::size_of::<f32>()) as u64
+}
+
+/// Copy decoded weights between pooled buffers without reallocating
+/// once shapes are warm (`Vec::clone_from` reuses capacity).
+fn copy_block(dst: &mut BlockWeightsF32, src: &BlockWeightsF32) {
+    dst.q.clone_from(&src.q);
+    dst.k.clone_from(&src.k);
+    dst.v.clone_from(&src.v);
+    dst.o.clone_from(&src.o);
+    dst.gate.clone_from(&src.gate);
+    dst.up.clone_from(&src.up);
+    dst.down.clone_from(&src.down);
+}
+
+impl BlockCache {
+    /// An empty cache holding at most `capacity` decoded bytes.
+    pub fn new(capacity: u64) -> BlockCache {
+        BlockCache {
+            capacity,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                stats: CacheStats::default(),
+                spare: Vec::new(),
+            }),
+        }
+    }
+
+    /// Configured capacity in bytes.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Copy layer `layer`'s cached decoded weights into `out` and
+    /// return the simulated HBM-read cost, or record a miss. The copy
+    /// happens under the lock so an eviction racing on another worker
+    /// can never hand out a partially overwritten buffer.
+    pub fn fetch_into(&self, layer: usize, out: &mut BlockWeightsF32) -> Option<FetchCost> {
+        let mut inner = self.inner.lock().expect("block cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.entries.get_mut(&layer) {
+            Some(e) => {
+                e.last_use = tick;
+                let bytes = e.bytes;
+                copy_block(out, &e.w);
+                inner.stats.hits += 1;
+                Some(FetchCost {
+                    transfer_sim: bytes as f64 / CACHE_HBM_BW,
+                    ..FetchCost::default()
+                })
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Whether `layer` is cached (no stats side effects — the prefetch
+    /// pipeline uses this to skip decoding blocks a later fetch will
+    /// hit).
+    pub fn contains(&self, layer: usize) -> bool {
+        self.inner
+            .lock()
+            .expect("block cache poisoned")
+            .entries
+            .contains_key(&layer)
+    }
+
+    /// Cache a freshly decoded block, evicting least-recently-used
+    /// entries until it fits. Blocks larger than the whole capacity
+    /// are not cached; an already-cached layer only refreshes its LRU
+    /// stamp (weights are immutable per layer, so re-copying the same
+    /// bytes would be pure waste).
+    pub fn insert(&self, layer: usize, w: &BlockWeightsF32) {
+        let bytes = block_bytes(w);
+        if bytes == 0 || bytes > self.capacity {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("block cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.get_mut(&layer) {
+            e.last_use = tick;
+            return;
+        }
+        while inner.bytes + bytes > self.capacity {
+            let lru = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&l, _)| l)
+                .expect("bytes > 0 implies entries");
+            let evicted = inner.entries.remove(&lru).expect("key from iteration");
+            inner.bytes -= evicted.bytes;
+            inner.stats.evictions += 1;
+            if inner.spare.len() < SPARE_BUFFERS {
+                inner.spare.push(evicted.w);
+            }
+        }
+        let mut buf = inner.spare.pop().unwrap_or_default();
+        copy_block(&mut buf, w);
+        inner.entries.insert(
+            layer,
+            Entry {
+                last_use: tick,
+                bytes,
+                w: buf,
+            },
+        );
+        inner.bytes += bytes;
+        inner.stats.insertions += 1;
+    }
+
+    /// Current counters (bytes/entries/capacity are point-in-time).
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("block cache poisoned");
+        CacheStats {
+            bytes: inner.bytes,
+            capacity: self.capacity,
+            entries: inner.entries.len() as u64,
+            ..inner.stats
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(n: usize, fill: f32) -> BlockWeightsF32 {
+        BlockWeightsF32 {
+            q: vec![fill; n],
+            k: vec![fill; n],
+            v: vec![fill; n],
+            o: vec![fill; n],
+            gate: vec![fill; n],
+            up: vec![fill; n],
+            down: vec![fill; n],
+        }
+    }
+
+    /// 7 matrices of n floats each.
+    fn bytes_for(n: usize) -> u64 {
+        (7 * n * 4) as u64
+    }
+
+    #[test]
+    fn hit_returns_identical_weights_and_charges_hbm_read() {
+        let cache = BlockCache::new(bytes_for(8) * 2);
+        let w = block(8, 1.5);
+        cache.insert(3, &w);
+        let mut out = BlockWeightsF32::default();
+        let cost = cache.fetch_into(3, &mut out).expect("hit");
+        assert_eq!(out.q, w.q);
+        assert_eq!(out.down, w.down);
+        assert!(cost.transfer_sim > 0.0, "hit pays a simulated HBM read");
+        assert_eq!(cost.decompress, 0.0, "hit never decodes");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 0, 1));
+        assert_eq!(s.bytes, bytes_for(8));
+    }
+
+    #[test]
+    fn miss_is_counted_and_returns_none() {
+        let cache = BlockCache::new(1024);
+        let mut out = BlockWeightsF32::default();
+        assert!(cache.fetch_into(0, &mut out).is_none());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_layer() {
+        // Room for exactly two blocks.
+        let cache = BlockCache::new(bytes_for(4) * 2);
+        cache.insert(0, &block(4, 0.0));
+        cache.insert(1, &block(4, 1.0));
+        // Touch layer 0 so layer 1 is the LRU victim.
+        let mut out = BlockWeightsF32::default();
+        cache.fetch_into(0, &mut out).unwrap();
+        cache.insert(2, &block(4, 2.0));
+        assert!(cache.contains(0), "recently used survives");
+        assert!(!cache.contains(1), "LRU entry evicted");
+        assert!(cache.contains(2));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.bytes, bytes_for(4) * 2);
+    }
+
+    #[test]
+    fn oversized_blocks_and_zero_capacity_are_never_cached() {
+        let cache = BlockCache::new(bytes_for(4) - 1);
+        cache.insert(0, &block(4, 0.5));
+        assert!(!cache.contains(0));
+        assert_eq!(cache.stats().insertions, 0);
+        let none = BlockCache::new(0);
+        none.insert(0, &block(1, 0.5));
+        assert_eq!(none.stats().entries, 0);
+    }
+
+    #[test]
+    fn reinserting_a_cached_layer_only_refreshes_lru() {
+        let cache = BlockCache::new(bytes_for(4) * 2);
+        cache.insert(0, &block(4, 0.0));
+        cache.insert(1, &block(4, 1.0));
+        cache.insert(0, &block(4, 0.0)); // refresh, not duplicate
+        assert_eq!(cache.stats().insertions, 2);
+        cache.insert(2, &block(4, 2.0));
+        assert!(!cache.contains(1), "layer 1 was the LRU after the refresh");
+        assert!(cache.contains(0));
+    }
+
+    #[test]
+    fn mode_parses_the_cli_flag() {
+        assert_eq!(BlockCacheMode::parse("on").unwrap(), BlockCacheMode::Budget);
+        assert_eq!(BlockCacheMode::parse("off").unwrap(), BlockCacheMode::Off);
+        assert_eq!(
+            BlockCacheMode::parse("1048576").unwrap(),
+            BlockCacheMode::Bytes(1 << 20)
+        );
+        assert!(BlockCacheMode::parse("sometimes").is_err());
+        assert_eq!(BlockCacheMode::default(), BlockCacheMode::Off);
+    }
+
+    #[test]
+    fn stats_merge_sums_every_counter() {
+        let mut a = CacheStats {
+            hits: 1,
+            misses: 2,
+            evictions: 3,
+            insertions: 4,
+            bytes: 5,
+            capacity: 6,
+            entries: 7,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.hits, 2);
+        assert_eq!(a.entries, 14);
+    }
+}

@@ -10,6 +10,7 @@
 //! error gate ([`Error::Config`]) that the CLI, `Server::from_config`,
 //! and `Fleet::new` all run through.
 
+use super::block_cache::BlockCacheMode;
 use super::scheduler::{SchedPolicy, SchedulerConfig};
 use crate::error::{Error, Result};
 
@@ -49,6 +50,9 @@ pub struct ServeConfig {
     /// Bound on the fleet admission queue; arrivals past it are
     /// rejected with a typed outcome. `None` = unbounded.
     pub queue_capacity: Option<usize>,
+    /// Decoded-block cache mode (`serve --block-cache`): off, sized
+    /// from leftover HBM budget, or an explicit byte capacity.
+    pub block_cache: BlockCacheMode,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +66,7 @@ impl Default for ServeConfig {
             pipeline: None,
             replicas: 1,
             queue_capacity: None,
+            block_cache: BlockCacheMode::Off,
         }
     }
 }
@@ -135,6 +140,13 @@ impl ServeConfig {
         self
     }
 
+    /// Decoded-block cache mode (off / HBM-budget-derived / explicit
+    /// bytes).
+    pub fn block_cache(mut self, mode: BlockCacheMode) -> ServeConfig {
+        self.block_cache = mode;
+        self
+    }
+
     /// Whether the shard-overlap pipeline is effectively on.
     pub fn pipeline_enabled(&self) -> bool {
         self.pipeline.unwrap_or(true) && self.shards > 1
@@ -171,6 +183,16 @@ impl ServeConfig {
         if self.hbm_bytes == Some(0) {
             return bad("an HBM budget of 0 bytes can never hold weights".into());
         }
+        if self.block_cache == BlockCacheMode::Budget && self.hbm_bytes.is_none() {
+            return bad(
+                "--block-cache on sizes the cache from leftover HBM budget; \
+                 it needs --hbm (or use an explicit --block-cache BYTES)"
+                    .into(),
+            );
+        }
+        if self.block_cache == BlockCacheMode::Bytes(0) {
+            return bad("a block cache of 0 bytes can never hold a block".into());
+        }
         Ok(())
     }
 
@@ -182,6 +204,7 @@ impl ServeConfig {
             policy: self.policy,
             hbm_bytes: self.hbm_bytes,
             page_tokens: self.page_tokens,
+            block_cache: self.block_cache,
         }
     }
 }
@@ -218,6 +241,10 @@ mod tests {
             ServeConfig::new().pipeline(false),
             ServeConfig::new().queue_capacity(0),
             ServeConfig::new().hbm_budget(0),
+            // Budget-derived block cache needs an HBM budget to
+            // derive from; a zero-byte cache is always useless.
+            ServeConfig::new().block_cache(BlockCacheMode::Budget),
+            ServeConfig::new().block_cache(BlockCacheMode::Bytes(0)),
         ];
         for cfg in cases {
             match cfg.validate() {
@@ -227,6 +254,17 @@ mod tests {
         }
         // Pipeline with shards is fine either way.
         ServeConfig::new().shards(2).pipeline(false).validate().unwrap();
+        // Budget-derived cache is fine once an HBM budget exists, and
+        // explicit bytes never need one.
+        ServeConfig::new()
+            .hbm_budget(1 << 30)
+            .block_cache(BlockCacheMode::Budget)
+            .validate()
+            .unwrap();
+        ServeConfig::new()
+            .block_cache(BlockCacheMode::Bytes(1 << 20))
+            .validate()
+            .unwrap();
         assert!(!ServeConfig::new().shards(2).pipeline(false).pipeline_enabled());
         assert!(ServeConfig::new().shards(2).pipeline_enabled(), "default on");
         assert!(!ServeConfig::new().pipeline_enabled(), "off when unsharded");

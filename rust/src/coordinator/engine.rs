@@ -19,6 +19,7 @@
 //! always-available native Rust implementation, or the PJRT executor
 //! running the AOT-compiled JAX artifacts (`runtime::XlaBackend`).
 
+use super::block_cache::{BlockCache, BlockCacheMode, CacheStats};
 use super::metrics::{Breakdown, Component, ShardStat};
 use crate::bf16::Bf16;
 use crate::codec::{CompressedTensor, DecodeOpts};
@@ -155,6 +156,29 @@ pub trait ServingEngine {
         Err(Error::InvalidArgument(
             "this engine does not support shard-failure injection".into(),
         ))
+    }
+
+    /// Enable (or disable) the decoded-block cache
+    /// ([`super::block_cache::BlockCache`]). `Budget` mode sizes the
+    /// cache from the HBM left over after resident weights and the
+    /// worst-case KV reservation for `slots` sequences, so it needs
+    /// [`ServingEngine::install_hbm_budget`] to have run first; the KV
+    /// budget itself is never shrunk — scheduling is identical with
+    /// the cache on or off. The default rejects the knob.
+    fn configure_block_cache(&mut self, mode: BlockCacheMode, slots: usize) -> Result<()> {
+        let _ = slots;
+        match mode {
+            BlockCacheMode::Off => Ok(()),
+            _ => Err(Error::InvalidArgument(
+                "this engine does not support the decoded-block cache".into(),
+            )),
+        }
+    }
+
+    /// Decoded-block cache counters (summed across shards), `None`
+    /// when no cache is configured.
+    fn block_cache_stats(&self) -> Option<CacheStats> {
+        None
     }
 }
 
@@ -491,7 +515,7 @@ fn decode_df11_tensor(
     // worker pool for large tensors, else the optimized sequential
     // decoder (the Algorithm-1-faithful kernel simulation lives in
     // gpu_sim and is exercised by tests/benches).
-    if opts.width() > 1 && tensor.num_elements() >= PARALLEL_MIN_ELEMENTS {
+    if opts.width() > 1 && tensor.num_elements() >= crate::codec::parallel_min_elements() {
         let pool = opts.pool_handle();
         let stats = crate::dfloat11::parallel::decompress_pooled_into(
             tensor,
@@ -1053,13 +1077,16 @@ pub struct Engine {
     inject_fail_after: Option<u64>,
     /// Decode ticks seen (drives the injection trigger).
     ticks_seen: u64,
+    /// Decoded-block cache spending leftover HBM budget on skipped
+    /// decodes (`None` = off, the default).
+    block_cache: Option<BlockCache>,
+    /// The HBM cap last installed via `install_hbm_budget` (sharded
+    /// engines record it through [`Engine::record_installed_hbm`]);
+    /// budget-mode cache sizing derives from it.
+    installed_hbm: Option<u64>,
     /// Latency accounting (Figure 6's breakdown).
     pub breakdown: Breakdown,
 }
-
-/// Small-tensor sequential-decode cutoff, shared with the codec-layer
-/// dispatch so both paths agree (see [`crate::codec::PARALLEL_MIN_ELEMENTS`]).
-const PARALLEL_MIN_ELEMENTS: usize = crate::codec::PARALLEL_MIN_ELEMENTS;
 
 /// One block decoded ahead of need: its layer, and the pooled scratch
 /// plus fetch cost (or the error, surfaced when consumed).
@@ -1155,6 +1182,8 @@ impl Engine {
             last_logits: Vec::new(),
             inject_fail_after: None,
             ticks_seen: 0,
+            block_cache: None,
+            installed_hbm: None,
             breakdown: Breakdown::default(),
         })
     }
@@ -1336,6 +1365,55 @@ impl Engine {
         }
         self.kv_budget = None;
         Ok(())
+    }
+
+    /// Record the per-device HBM cap this engine was budgeted with.
+    /// `install_hbm_budget` calls it; the sharded engine calls it
+    /// directly from its per-shard budget loop (which installs KV
+    /// budgets without going through the single-box trait method).
+    /// Budget-mode block-cache sizing derives from this cap.
+    pub(crate) fn record_installed_hbm(&mut self, hbm_bytes: u64) {
+        self.installed_hbm = Some(hbm_bytes);
+    }
+
+    /// Size and install (or drop) the decoded-block cache — the
+    /// single-box implementation behind
+    /// [`ServingEngine::configure_block_cache`]. Budget mode spends
+    /// `installed HBM − resident weights − worst-case KV for `slots`
+    /// full-length sequences`; the KV budget itself is untouched, so
+    /// admission decisions are identical cache-on vs cache-off.
+    pub fn set_block_cache(&mut self, mode: BlockCacheMode, slots: usize) -> Result<()> {
+        let capacity = match mode {
+            BlockCacheMode::Off => {
+                self.block_cache = None;
+                return Ok(());
+            }
+            BlockCacheMode::Bytes(bytes) => bytes,
+            BlockCacheMode::Budget => {
+                let hbm = self.installed_hbm.ok_or_else(|| {
+                    Error::InvalidArgument(
+                        "block-cache budget mode needs an installed HBM budget (--hbm)".into(),
+                    )
+                })?;
+                let budget = self.kv_budget.as_ref().ok_or_else(|| {
+                    Error::InvalidArgument(
+                        "block-cache budget mode needs the paged KV budget installed".into(),
+                    )
+                })?;
+                let worst_kv = slots as u64
+                    * budget.mgr.pages_for(self.config.max_seq_len as u64)
+                    * budget.mgr.bytes_per_page();
+                hbm.saturating_sub(self.resident_weight_bytes())
+                    .saturating_sub(worst_kv)
+            }
+        };
+        self.block_cache = Some(BlockCache::new(capacity));
+        Ok(())
+    }
+
+    /// Decoded-block cache counters (`None` when the cache is off).
+    pub fn block_cache_stats(&self) -> Option<CacheStats> {
+        self.block_cache.as_ref().map(|c| c.stats())
     }
 
     /// Total pages in the installed KV budget (`None` without one).
@@ -1654,6 +1732,7 @@ impl Engine {
             let source: &dyn WeightSource = self.source.as_ref();
             let scratch_pool = &self.scratch;
             let prefetched = &self.prefetched;
+            let cache = self.block_cache.as_ref();
             let backend = &mut self.backend;
             let seqs = &mut self.seqs;
             let breakdown = &mut self.breakdown;
@@ -1664,7 +1743,7 @@ impl Engine {
             worker_pool.scope(|scope| -> Result<()> {
                 let opts = &opts;
                 let mut pending = Some(scope.spawn(move || {
-                    take_or_fetch(source, scratch_pool, prefetched, first, opts)
+                    take_or_fetch(source, scratch_pool, prefetched, cache, first, opts)
                 }));
                 for l in 0..owned {
                     let (scratch, cost) = pending
@@ -1673,7 +1752,14 @@ impl Engine {
                         .join()??;
                     if l + 1 < owned {
                         pending = Some(scope.spawn(move || {
-                            take_or_fetch(source, scratch_pool, prefetched, first + l + 1, opts)
+                            take_or_fetch(
+                                source,
+                                scratch_pool,
+                                prefetched,
+                                cache,
+                                first + l + 1,
+                                opts,
+                            )
                         }));
                     }
                     cost.charge(breakdown);
@@ -1791,6 +1877,7 @@ impl Engine {
         let source: &dyn WeightSource = self.source.as_ref();
         let scratch_pool = &self.scratch;
         let prefetched = &self.prefetched;
+        let cache = self.block_cache.as_ref();
         let backend = &mut self.backend;
         let k_cache = &mut self.k_cache;
         let v_cache = &mut self.v_cache;
@@ -1799,9 +1886,9 @@ impl Engine {
         let pos = self.pos;
         worker_pool.scope(|scope| -> Result<()> {
             let opts = &opts;
-            let mut pending = Some(
-                scope.spawn(move || take_or_fetch(source, scratch_pool, prefetched, 0, opts)),
-            );
+            let mut pending = Some(scope.spawn(move || {
+                take_or_fetch(source, scratch_pool, prefetched, cache, 0, opts)
+            }));
             for l in 0..n_layers {
                 let (scratch, cost) = pending
                     .take()
@@ -1809,7 +1896,7 @@ impl Engine {
                     .join()??;
                 if l + 1 < n_layers {
                     pending = Some(scope.spawn(move || {
-                        take_or_fetch(source, scratch_pool, prefetched, l + 1, opts)
+                        take_or_fetch(source, scratch_pool, prefetched, cache, l + 1, opts)
                     }));
                 }
                 cost.charge(breakdown);
@@ -1888,6 +1975,7 @@ impl ServingEngine for Engine {
     }
 
     fn install_hbm_budget(&mut self, hbm_bytes: u64, page_tokens: u64) -> Result<()> {
+        self.record_installed_hbm(hbm_bytes);
         let kv = hbm_bytes.saturating_sub(self.resident_weight_bytes());
         self.set_kv_budget(kv, page_tokens.max(1))
     }
@@ -1945,6 +2033,14 @@ impl ServingEngine for Engine {
         self.inject_fail_after = Some(after_ticks);
         Ok(())
     }
+
+    fn configure_block_cache(&mut self, mode: BlockCacheMode, slots: usize) -> Result<()> {
+        Engine::set_block_cache(self, mode, slots)
+    }
+
+    fn block_cache_stats(&self) -> Option<CacheStats> {
+        Engine::block_cache_stats(self)
+    }
 }
 
 /// Fetch all seven matrices of one transformer block — the prefetch
@@ -1954,10 +2050,19 @@ impl ServingEngine for Engine {
 fn fetch_block(
     source: &dyn WeightSource,
     scratch_pool: &ScratchPool,
+    cache: Option<&BlockCache>,
     layer: usize,
     opts: &DecodeOpts,
 ) -> Result<(BlockScratch, FetchCost)> {
     let mut scratch = scratch_pool.checkout();
+    // Cache hit: the decoded weights are copied out of HBM-resident
+    // storage instead of re-running the Huffman decode — bit-identical
+    // by construction (the cache stores exact decode output per layer).
+    if let Some(cache) = cache {
+        if let Some(cost) = cache.fetch_into(layer, &mut scratch.w) {
+            return Ok((scratch, cost));
+        }
+    }
     let g = format!("block.{layer}");
     let mut cost = FetchCost::default();
     {
@@ -1975,6 +2080,9 @@ fn fetch_block(
             cost.merge(&source.fetch_into(&format!("{g}.{suffix}"), opts, staging, out)?);
         }
     }
+    if let Some(cache) = cache {
+        cache.insert(layer, &scratch.w);
+    }
     Ok((scratch, cost))
 }
 
@@ -1987,6 +2095,7 @@ fn take_or_fetch(
     source: &dyn WeightSource,
     scratch_pool: &ScratchPool,
     prefetched: &Mutex<VecDeque<PrefetchedBlock>>,
+    cache: Option<&BlockCache>,
     layer: usize,
     opts: &DecodeOpts,
 ) -> Result<(BlockScratch, FetchCost)> {
@@ -1996,7 +2105,7 @@ fn take_or_fetch(
             return q.remove(i).expect("indexed entry present").1;
         }
     }
-    fetch_block(source, scratch_pool, layer, opts)
+    fetch_block(source, scratch_pool, cache, layer, opts)
 }
 
 /// Everything a pool task needs to decode one engine's owned blocks
@@ -2007,6 +2116,7 @@ pub(crate) struct PrefetchCtx<'a> {
     source: &'a dyn WeightSource,
     scratch: &'a ScratchPool,
     prefetched: &'a Mutex<VecDeque<PrefetchedBlock>>,
+    cache: Option<&'a BlockCache>,
     first: usize,
     owned: usize,
     opts: DecodeOpts,
@@ -2034,10 +2144,12 @@ impl PrefetchCtx<'_> {
                 .expect("prefetch queue poisoned")
                 .iter()
                 .any(|(l, _)| *l == layer);
-            if queued {
+            // A cached layer needs no ahead-of-time decode — the
+            // in-line fetch will hit the cache at HBM-read cost.
+            if queued || self.cache.is_some_and(|c| c.contains(layer)) {
                 continue;
             }
-            let fetched = fetch_block(self.source, self.scratch, layer, &self.opts);
+            let fetched = fetch_block(self.source, self.scratch, self.cache, layer, &self.opts);
             self.prefetched
                 .lock()
                 .expect("prefetch queue poisoned")
@@ -2053,6 +2165,7 @@ impl Engine {
             source: self.source.as_ref(),
             scratch: &self.scratch,
             prefetched: &self.prefetched,
+            cache: self.block_cache.as_ref(),
             first: self.role.first_layer,
             owned: self.role.n_layers,
             opts: self.decode_opts(),
@@ -2178,9 +2291,10 @@ mod tests {
         assert!(df.breakdown.measured_seconds(Component::LmHead) > 0.0);
     }
 
-    /// A config whose larger tensors clear [`PARALLEL_MIN_ELEMENTS`]
-    /// (q/o 64k, gate/up/down/embed/lm_head 128k), so the parallel
-    /// pipeline genuinely runs in the fetch path.
+    /// A config whose larger tensors clear the
+    /// [`crate::codec::parallel_min_elements`] cutoff (q/o 64k,
+    /// gate/up/down/embed/lm_head 128k), so the parallel pipeline
+    /// genuinely runs in the fetch path.
     fn mid() -> ModelConfig {
         ModelConfig {
             name: "mid-parallel".into(),

@@ -32,6 +32,7 @@
 //! equal replica count (`bench_fleet` asserts this; ZipServ makes the
 //! same hardware-aware-compression argument).
 
+use super::block_cache::BlockCacheMode;
 use super::config::ServeConfig;
 use super::engine::{ServingEngine, StepOutcome};
 use super::metrics::{GoodputPoint, LatencyStats, OccupancyStats};
@@ -670,6 +671,14 @@ impl<E: ServingEngine> Fleet<E> {
             for r in &mut self.replicas {
                 r.engine
                     .install_hbm_budget(hbm, self.config.page_tokens.max(1))?;
+            }
+        }
+        // Each replica gets its own decoded-block cache, sized after
+        // its KV budget so budget mode spends only leftover HBM.
+        if self.config.block_cache != BlockCacheMode::Off {
+            for r in &mut self.replicas {
+                r.engine
+                    .configure_block_cache(self.config.block_cache, self.config.slots.max(1))?;
             }
         }
         for r in &mut self.replicas {

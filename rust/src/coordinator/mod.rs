@@ -29,6 +29,7 @@
 //! queue, per-replica health, and re-routing — see the
 //! [`fleet`] module docs.
 
+pub mod block_cache;
 pub mod config;
 pub mod engine;
 pub mod fleet;
@@ -39,6 +40,7 @@ pub mod scheduler;
 pub mod sharded;
 pub mod trace;
 
+pub use block_cache::{BlockCache, BlockCacheMode, CacheStats};
 pub use config::ServeConfig;
 pub use engine::{
     generate_with, Bf16Source, BlockBackend, BlockScratch, BlockWeightsF32, ContainerSource,

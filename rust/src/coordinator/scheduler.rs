@@ -23,6 +23,7 @@
 //! stats. All timing runs on the serving clock (wall-clock measured
 //! work + simulated device time).
 
+use super::block_cache::{BlockCacheMode, CacheStats};
 use super::config::ServeConfig;
 use super::engine::{Engine, ServingEngine, StepEvent, StepOutcome};
 use super::metrics::{LatencyStats, OccupancyStats};
@@ -107,6 +108,9 @@ pub struct SchedulerConfig {
     pub hbm_bytes: Option<u64>,
     /// KV page granularity in tokens (used with `hbm_bytes`).
     pub page_tokens: u64,
+    /// Decoded-block cache mode (leftover-HBM LRU of decoded block
+    /// weights; see [`super::block_cache`]).
+    pub block_cache: BlockCacheMode,
 }
 
 impl Default for SchedulerConfig {
@@ -116,6 +120,7 @@ impl Default for SchedulerConfig {
             policy: SchedPolicy::Continuous,
             hbm_bytes: None,
             page_tokens: 16,
+            block_cache: BlockCacheMode::Off,
         }
     }
 }
@@ -160,6 +165,8 @@ pub struct ServeReport {
     pub tpot: LatencyStats,
     /// Decode-slot occupancy over the run.
     pub occupancy: OccupancyStats,
+    /// Decoded-block cache counters (`None` when the cache is off).
+    pub block_cache: Option<CacheStats>,
 }
 
 impl ServeReport {
@@ -362,6 +369,14 @@ impl<E: ServingEngine> Server<E> {
             self.engine
                 .install_hbm_budget(hbm, self.config.page_tokens.max(1))?;
         }
+        // The cache sizes itself *after* the KV budget exists: budget
+        // mode spends only what remains once resident weights and the
+        // worst-case KV reservation are carved out, so admission
+        // decisions are identical cache-on vs cache-off.
+        if self.config.block_cache != BlockCacheMode::Off {
+            self.engine
+                .configure_block_cache(self.config.block_cache, self.config.max_batch.max(1))?;
+        }
         self.budget_installed = true;
         Ok(())
     }
@@ -489,6 +504,7 @@ impl<E: ServingEngine> Server<E> {
             ttft: LatencyStats::new(responses.iter().map(|r| r.ttft).collect()),
             tpot: LatencyStats::new(responses.iter().map(|r| r.tpot).collect()),
             occupancy,
+            block_cache: self.engine.block_cache_stats(),
             responses,
         })
     }

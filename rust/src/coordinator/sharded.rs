@@ -30,6 +30,7 @@
 //! *its* resident slice, so DF11's freed memory shows up as more
 //! schedulable slots on every shard.
 
+use super::block_cache::{BlockCacheMode, CacheStats};
 use super::engine::{
     Bf16Source, ContainerSource, Df11Source, Engine, NativeBackend, ServingEngine, ShardRole,
     StepEvent, StepOutcome, WeightMode, WeightSource,
@@ -631,6 +632,7 @@ impl ServingEngine for ShardedEngine {
     /// pages on every GPU.
     fn install_hbm_budget(&mut self, hbm_bytes: u64, page_tokens: u64) -> Result<()> {
         for shard in &mut self.shards {
+            shard.record_installed_hbm(hbm_bytes);
             let kv = hbm_bytes.saturating_sub(shard.resident_weight_bytes());
             shard.set_kv_budget(kv, page_tokens.max(1))?;
         }
@@ -729,6 +731,28 @@ impl ServingEngine for ShardedEngine {
         }
         self.inject_failure = Some((shard, after_ticks));
         Ok(())
+    }
+
+    /// One cache per shard, each sized against that shard's own
+    /// resident slice (budget mode reuses the per-GPU HBM cap recorded
+    /// by `install_hbm_budget`).
+    fn configure_block_cache(&mut self, mode: BlockCacheMode, slots: usize) -> Result<()> {
+        for shard in &mut self.shards {
+            shard.set_block_cache(mode, slots)?;
+        }
+        Ok(())
+    }
+
+    /// Counters summed across shards (`None` when no shard has a
+    /// cache).
+    fn block_cache_stats(&self) -> Option<CacheStats> {
+        let mut agg: Option<CacheStats> = None;
+        for shard in &self.shards {
+            if let Some(s) = shard.block_cache_stats() {
+                agg.get_or_insert_with(CacheStats::default).merge(&s);
+            }
+        }
+        agg
     }
 }
 

@@ -8,126 +8,22 @@
 //! is not required. It decodes the same container format.
 //!
 //! Design (see EXPERIMENTS.md §Perf for the measured iteration log):
-//! * 64-bit left-aligned bit-buffer, refilled 32 bits at a time;
-//! * a 16-bit **multi-symbol** fast table: one lookup yields up to 5
-//!   decoded exponents plus the total bit length (typical codes are
-//!   ~2.75 bits, so a window usually holds 5), with a single-symbol
-//!   table and the hierarchical walk as fallbacks for long codes;
+//! * [`BitCursor`]: 64-bit left-aligned bit-buffer, refilled 32 bits
+//!   at a time (word granularity);
+//! * [`FastLut`]: a 16-bit **multi-symbol** fast table — one lookup
+//!   yields up to 5 decoded exponents plus the total bit length
+//!   (typical codes are ~2.75 bits, so a window usually holds 5), with
+//!   a single-symbol table and the hierarchical walk as fallbacks for
+//!   long codes, and a whole-table fallback (`None`) when the codebook
+//!   exceeds the fast-path constraints (see [`crate::huffman::fastlut`]);
 //! * unconditional 5-wide stores (tail slots overwritten next round);
 //! * fused exponent-decode + sign/mantissa merge + store.
 
 use super::format::Df11Tensor;
 use crate::bf16::Bf16;
 use crate::error::{Error, Result};
-use crate::huffman::lut::{HierarchicalLut, LutEntry};
-
-/// A flattened fast-decode table: for each 16-bit window, the decoded
-/// symbol and its length if the code fits in 16 bits, else a marker to
-/// take the slow path.
-pub struct FastTable {
-    /// entry = (symbol << 8) | len, or 0 for slow-path.
-    table: Vec<u16>,
-    /// Multi-symbol entries: up to 5 symbols decoded per 16-bit window.
-    /// Layout: bits 0..=4 total code length, 5..=7 symbol count (1..=5),
-    /// 8.. the symbols (8 bits each). 0 = slow path.
-    multi: Vec<u64>,
-}
-
-impl std::fmt::Debug for FastTable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "FastTable({} entries)", self.table.len())
-    }
-}
-
-/// Window width for the fast table (2^16 entries; multi table 512 KiB).
-/// 14-bit windows were tried (smaller tables) but the build structure
-/// is byte-aligned and the measured difference was within noise.
-const FAST_BITS: u32 = 16;
-
-impl FastTable {
-    /// Build from the hierarchical LUT by probing every 16-bit window.
-    pub fn build(lut: &HierarchicalLut) -> FastTable {
-        let mut table = vec![0u16; 1 << FAST_BITS];
-        // Walk top two LUT levels directly instead of 65536 probes.
-        for b0 in 0..256usize {
-            match lut.entry(0, b0) {
-                LutEntry::Symbol(s) => {
-                    let len = lut.code_lengths()[s as usize];
-                    if len as u32 <= FAST_BITS {
-                        let base = b0 << 8;
-                        let e = ((s as u16) << 8) | len as u16;
-                        for t in table.iter_mut().skip(base).take(256) {
-                            *t = e;
-                        }
-                    }
-                }
-                LutEntry::Pointer(next) => {
-                    for b1 in 0..256usize {
-                        if let LutEntry::Symbol(s) = lut.entry(next as usize, b1) {
-                            let len = lut.code_lengths()[s as usize];
-                            if len as u32 <= FAST_BITS {
-                                table[(b0 << 8) | b1] = ((s as u16) << 8) | len as u16;
-                            }
-                        }
-                    }
-                }
-                LutEntry::Invalid => {}
-            }
-        }
-
-        // Multi-symbol pass: greedily decode up to 3 symbols per window
-        // using only the 16 known bits. A follow-up symbol is valid only
-        // if its code fits entirely inside the remaining known bits.
-        let mut multi = vec![0u64; 1 << FAST_BITS];
-        for w in 0..(1usize << FAST_BITS) {
-            let mut window = w as u16;
-            let mut used: u64 = 0;
-            let mut syms = [0u8; 5];
-            let mut count = 0u64;
-            while count < 5 {
-                let e = table[window as usize];
-                if e == 0 {
-                    break;
-                }
-                let (s, l) = ((e >> 8) as u8, (e & 0xFF) as u64);
-                if used + l > FAST_BITS as u64 {
-                    break;
-                }
-                syms[count as usize] = s;
-                used += l;
-                count += 1;
-                // l can be 16 (a code exactly filling the window).
-                window = if l >= 16 { 0 } else { window << l };
-            }
-            if count > 0 {
-                let mut e = used | (count << 5);
-                for (i, &sy) in syms.iter().enumerate() {
-                    e |= (sy as u64) << (8 + 8 * i);
-                }
-                multi[w] = e;
-            }
-        }
-        FastTable { table, multi }
-    }
-
-    /// Lookup by a 16-bit MSB-aligned window: `Some((symbol, len))` on
-    /// the fast path, `None` when the code is longer than 16 bits.
-    #[inline(always)]
-    pub fn lookup(&self, window16: u16) -> Option<(u8, u8)> {
-        let e = self.table[window16 as usize];
-        if e == 0 {
-            None
-        } else {
-            Some(((e >> 8) as u8, (e & 0xFF) as u8))
-        }
-    }
-
-    /// Multi-symbol lookup: raw packed entry (see field docs); 0 = slow.
-    #[inline(always)]
-    pub fn lookup_multi(&self, window16: u16) -> u64 {
-        self.multi[window16 as usize]
-    }
-}
+use crate::huffman::fastlut::{BitCursor, FastLut};
+use crate::huffman::lut::HierarchicalLut;
 
 /// Sequential streaming decoder over a DF11 tensor.
 pub fn decompress_sequential(tensor: &Df11Tensor) -> Result<Vec<Bf16>> {
@@ -138,6 +34,21 @@ pub fn decompress_sequential(tensor: &Df11Tensor) -> Result<Vec<Bf16>> {
 
 /// Sequential streaming decode into a caller buffer.
 pub fn decompress_sequential_into(tensor: &Df11Tensor, out: &mut [Bf16]) -> Result<()> {
+    decompress_with(tensor, tensor.fast_table(), out)
+}
+
+/// Sequential decode forced through the hierarchical byte-walk only —
+/// the exact path a codebook outside the fast-path constraints takes.
+/// Kept public as the fallback oracle for the property suite and the
+/// Figure-7 fast-vs-hierarchical throughput comparison.
+pub fn decompress_sequential_hierarchical_into(
+    tensor: &Df11Tensor,
+    out: &mut [Bf16],
+) -> Result<()> {
+    decompress_with(tensor, None, out)
+}
+
+fn decompress_with(tensor: &Df11Tensor, fast: Option<&FastLut>, out: &mut [Bf16]) -> Result<()> {
     if out.len() != tensor.num_elements() {
         return Err(Error::ShapeMismatch(format!(
             "output {} != elements {}",
@@ -145,138 +56,92 @@ pub fn decompress_sequential_into(tensor: &Df11Tensor, out: &mut [Bf16]) -> Resu
             tensor.num_elements()
         )));
     }
-    let lut = tensor.lut();
-    let fast = tensor.fast_table();
     decode_stream(
         tensor.encoded(),
         tensor.bit_len(),
-        lut,
+        tensor.lut(),
         fast,
         tensor.packed_sign_mantissa(),
         out,
     )
 }
 
-/// Core streaming loop: 64-bit buffer, refill by whole bytes.
+/// Core streaming loop over a [`BitCursor`]. `fast: None` decodes
+/// entirely through the hierarchical tables (the fallback rule);
+/// `Some` batches up to 5 symbols per multi-symbol window with
+/// per-symbol hierarchical fallback for long codes.
 pub(crate) fn decode_stream(
     encoded: &[u8],
     bit_len: u64,
     lut: &HierarchicalLut,
-    fast: &FastTable,
+    fast: Option<&FastLut>,
     packed_sm: &[u8],
     out: &mut [Bf16],
 ) -> Result<()> {
-    let mut bitbuf: u64 = 0; // bits left-aligned: top `bits` bits valid
-    let mut bits: u32 = 0;
-    let mut byte_pos: usize = 0;
-    let mut consumed: u64 = 0;
+    let mut cur = BitCursor::new(encoded, 0);
     let mut idx: usize = 0;
     let total = out.len();
 
-    // Main loop: decode up to 3 symbols per iteration while at least 3
+    // Main loop: decode up to 5 symbols per iteration while at least 5
     // output slots remain (the tail falls back to symbol-at-a-time so a
     // multi-entry never overshoots `total`).
-    while idx + 5 <= total {
-        if bits <= 32 {
-            if byte_pos + 4 <= encoded.len() {
-                let chunk = u32::from_be_bytes([
-                    encoded[byte_pos],
-                    encoded[byte_pos + 1],
-                    encoded[byte_pos + 2],
-                    encoded[byte_pos + 3],
-                ]);
-                bitbuf |= (chunk as u64) << (32 - bits);
-                byte_pos += 4;
-                bits += 32;
-            } else {
-                while bits <= 56 && byte_pos < encoded.len() {
-                    bitbuf |= (encoded[byte_pos] as u64) << (56 - bits);
-                    byte_pos += 1;
-                    bits += 8;
-                }
-            }
-        }
-        let window16 = (bitbuf >> (64 - FAST_BITS)) as u16;
-        let e = fast.lookup_multi(window16);
-        if e == 0 {
-            // Long code: hierarchical walk for one symbol.
-            if consumed >= bit_len {
-                return Err(Error::corrupt(format!(
-                    "stream exhausted after {idx} of {total} elements"
-                )));
-            }
-            let (symbol, len) = lut.lookup((bitbuf >> 32) as u32)?;
-            bitbuf <<= len as u32;
-            bits = bits.wrapping_sub(len as u32);
-            consumed += len as u64;
-            out[idx] = Bf16::from_parts(symbol, packed_sm[idx]);
-            idx += 1;
-            continue;
-        }
-        let used = (e & 0x1F) as u32;
-        let count = ((e >> 5) & 0x7) as usize;
-        // Unconditional 5-wide store: slots beyond `count` hold garbage
-        // but are overwritten by the next iterations (idx advances by
-        // `count`, and the loop guard keeps idx+5 <= total).
-        let mut se = e >> 8;
-        for k in 0..5 {
-            out[idx + k] = Bf16::from_parts(se as u8, packed_sm[idx + k]);
-            se >>= 8;
-        }
-        idx += count;
-        bitbuf <<= used;
-        bits = bits.wrapping_sub(used);
-        consumed += used as u64;
-    }
-
-    while idx < total {
-        // Refill: splice in 32 bits at once when a whole word is
-        // available (one branch + one load per ~11 symbols at typical
-        // 2.75-bit codes), byte dribble near the buffer end.
-        if bits <= 32 {
-            if byte_pos + 4 <= encoded.len() {
-                let chunk = u32::from_be_bytes([
-                    encoded[byte_pos],
-                    encoded[byte_pos + 1],
-                    encoded[byte_pos + 2],
-                    encoded[byte_pos + 3],
-                ]);
-                bitbuf |= (chunk as u64) << (32 - bits);
-                byte_pos += 4;
-                bits += 32;
-            } else {
-                while bits <= 56 && byte_pos < encoded.len() {
-                    bitbuf |= (encoded[byte_pos] as u64) << (56 - bits);
-                    byte_pos += 1;
-                    bits += 8;
-                }
-            }
-        }
-        let window16 = (bitbuf >> (64 - FAST_BITS)) as u16;
-        let (symbol, len) = match fast.lookup(window16) {
-            Some(hit) => hit,
-            None => {
-                // Slow path also guards corrupt streams that ran dry.
-                if consumed >= bit_len {
+    if let Some(fast) = fast {
+        while idx + 5 <= total {
+            cur.refill();
+            let e = fast.lookup_multi(cur.window16());
+            if e == 0 {
+                // Long code: hierarchical walk for one symbol. The
+                // slow path also guards corrupt streams that ran dry.
+                if cur.position() >= bit_len {
                     return Err(Error::corrupt(format!(
                         "stream exhausted after {idx} of {total} elements"
                     )));
                 }
-                lut.lookup((bitbuf >> 32) as u32)?
+                let (symbol, len) = lut.lookup(cur.window32())?;
+                cur.consume(len as u32);
+                out[idx] = Bf16::from_parts(symbol, packed_sm[idx]);
+                idx += 1;
+                continue;
+            }
+            let used = (e & 0x1F) as u32;
+            let count = ((e >> 5) & 0x7) as usize;
+            // Unconditional 5-wide store: slots beyond `count` hold
+            // garbage but are overwritten by the next iterations (idx
+            // advances by `count`, and the guard keeps idx+5 <= total).
+            let mut se = e >> 8;
+            for k in 0..5 {
+                out[idx + k] = Bf16::from_parts(se as u8, packed_sm[idx + k]);
+                se >>= 8;
+            }
+            idx += count;
+            cur.consume(used);
+        }
+    }
+
+    while idx < total {
+        cur.refill();
+        let (symbol, len) = match fast.and_then(|f| f.lookup(cur.window16())) {
+            Some(hit) => hit,
+            None => {
+                // Slow path also guards corrupt streams that ran dry.
+                if cur.position() >= bit_len {
+                    return Err(Error::corrupt(format!(
+                        "stream exhausted after {idx} of {total} elements"
+                    )));
+                }
+                lut.lookup(cur.window32())?
             }
         };
-        bitbuf <<= len as u32;
-        bits = bits.wrapping_sub(len as u32);
-        consumed += len as u64;
-        let sm = packed_sm[idx];
-        out[idx] = Bf16::from_parts(symbol, sm);
+        cur.consume(len as u32);
+        out[idx] = Bf16::from_parts(symbol, packed_sm[idx]);
         idx += 1;
     }
     // A corrupt (over-claiming) stream decodes garbage but is caught
     // here: the exact bit budget must be consumed.
-    if consumed != bit_len {
+    if cur.position() != bit_len {
         return Err(Error::corrupt(format!(
-            "decoded {total} elements consuming {consumed} bits, stream has {bit_len}"
+            "decoded {total} elements consuming {} bits, stream has {bit_len}",
+            cur.position()
         )));
     }
     Ok(())
@@ -285,6 +150,7 @@ pub(crate) fn decode_stream(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::huffman::fastlut::FAST_BITS;
     use crate::rng::Rng;
 
     fn gaussian_weights(n: usize, seed: u64) -> Vec<Bf16> {
@@ -307,11 +173,24 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_fallback_matches_fast_path() {
+        for n in [1usize, 100, 4096, 50_000] {
+            let ws = gaussian_weights(n, n as u64 + 40);
+            let t = Df11Tensor::compress(&ws).unwrap();
+            let fast = decompress_sequential(&t).unwrap();
+            let mut hier = vec![Bf16::from_bits(0); n];
+            decompress_sequential_hierarchical_into(&t, &mut hier).unwrap();
+            assert_eq!(fast, hier, "fallback decoder diverged at n={n}");
+            assert_eq!(fast, ws);
+        }
+    }
+
+    #[test]
     fn fast_table_agrees_with_hierarchical() {
         let ws = gaussian_weights(100_000, 9);
         let t = Df11Tensor::compress(&ws).unwrap();
         let lut = t.lut();
-        let fast = FastTable::build(lut);
+        let fast = FastLut::build(lut).unwrap();
         let mut rng = Rng::new(10);
         for _ in 0..10_000 {
             let window = rng.next_u32();

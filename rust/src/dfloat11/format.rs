@@ -5,7 +5,7 @@ use super::stats::CompressionStats;
 use crate::bf16::Bf16;
 use crate::error::{Error, Result};
 use crate::gpu_sim::{DecompressKernel, KernelConfig, KernelInput, KernelStats};
-use super::decompress::FastTable;
+use crate::huffman::fastlut::FastLut;
 use crate::huffman::lut::HierarchicalLut;
 use crate::huffman::Codebook;
 use std::sync::OnceLock;
@@ -33,8 +33,10 @@ pub struct Df11Tensor {
     geometry: (usize, usize), // (threads_per_block, bytes_per_thread)
     /// Lazily-built decode LUT hierarchy (rebuilt on load, not stored).
     lut: OnceLock<HierarchicalLut>,
-    /// Lazily-built fast decode table for the sequential hot path.
-    fast: OnceLock<FastTable>,
+    /// Lazily-built flat multi-symbol fast table shared by every hot
+    /// decode path (`None` when the codebook exceeds the fast-path
+    /// constraints — decode then falls back to the hierarchy).
+    fast: OnceLock<Option<FastLut>>,
 }
 
 impl Df11Tensor {
@@ -147,10 +149,14 @@ impl Df11Tensor {
             .get_or_init(|| HierarchicalLut::build(&self.codebook).expect("valid codebook"))
     }
 
-    /// The 16-bit fast decode table (built on first use; see
-    /// [`super::decompress`]).
-    pub fn fast_table(&self) -> &FastTable {
-        self.fast.get_or_init(|| FastTable::build(self.lut()))
+    /// The flat multi-symbol fast table (built on first use). `None`
+    /// when the codebook exceeds the fast-path constraints — callers
+    /// must then decode through [`Df11Tensor::lut`] (the automatic
+    /// fallback rule; see [`crate::huffman::fastlut`]).
+    pub fn fast_table(&self) -> Option<&FastLut> {
+        self.fast
+            .get_or_init(|| FastLut::try_build(self.lut()))
+            .as_ref()
     }
 
     /// Compressed payload size in bytes as stored on device:

@@ -29,18 +29,19 @@
 //! stripe no longer serializes the block: idle workers steal the
 //! remaining stripes.
 //!
-//! Both phases decode with the sequential hot path's machinery (64-bit
-//! bit-buffer + multi-symbol [`FastTable`] windows, hierarchical-LUT
-//! fallback for long codes), so per-thread speed matches the sequential
-//! decoder and the output is **bit-for-bit identical** to
+//! Both phases decode with the sequential hot path's machinery (the
+//! [`BitCursor`] 64-bit bit-buffer + multi-symbol [`FastLut`] windows,
+//! hierarchical-LUT fallback for long codes or for codebooks outside
+//! the fast-path constraints), so per-thread speed matches the
+//! sequential decoder and the output is **bit-for-bit identical** to
 //! [`super::decompress::decompress_sequential`] — enforced by the
 //! property suite, the pool stress suite, and the CI losslessness gate.
 
-use super::decompress::FastTable;
 use super::format::Df11Tensor;
 use crate::bf16::Bf16;
 use crate::error::{Error, Result};
 use crate::gpu_sim::prefix_sum::blelloch_exclusive_scan;
+use crate::huffman::fastlut::{BitCursor, FastLut};
 use crate::huffman::lut::HierarchicalLut;
 use crate::runtime::pool::{self, WorkerPool};
 use std::time::Instant;
@@ -310,87 +311,38 @@ fn chunk_span(c: usize, chunk_bits: u64, gap: u8, bit_len: u64) -> Option<(u64, 
     }
 }
 
-/// Bit cursor positioned at an arbitrary start bit: a left-aligned
-/// 64-bit buffer (same discipline as the sequential decoder), plus the
-/// next byte to load.
-#[inline]
-fn cursor_at(encoded: &[u8], start: u64) -> (u64, u32, usize) {
-    let mut byte_pos = (start / 8) as usize;
-    let mut bitbuf = 0u64;
-    let mut bits = 0u32;
-    while bits <= 56 && byte_pos < encoded.len() {
-        bitbuf |= (encoded[byte_pos] as u64) << (56 - bits);
-        byte_pos += 1;
-        bits += 8;
-    }
-    let skip = (start % 8) as u32;
-    bitbuf <<= skip;
-    bits = bits.saturating_sub(skip);
-    (bitbuf, bits, byte_pos)
-}
-
-/// Refill the bit buffer: splice 32 bits when a whole word is
-/// available, dribble bytes near the buffer end.
-#[inline]
-fn refill(encoded: &[u8], bitbuf: &mut u64, bits: &mut u32, byte_pos: &mut usize) {
-    if *bits > 32 {
-        return;
-    }
-    if *byte_pos + 4 <= encoded.len() {
-        let word = u32::from_be_bytes([
-            encoded[*byte_pos],
-            encoded[*byte_pos + 1],
-            encoded[*byte_pos + 2],
-            encoded[*byte_pos + 3],
-        ]);
-        *bitbuf |= (word as u64) << (32 - *bits);
-        *byte_pos += 4;
-        *bits += 32;
-    } else {
-        while *bits <= 56 && *byte_pos < encoded.len() {
-            *bitbuf |= (encoded[*byte_pos] as u64) << (56 - *bits);
-            *byte_pos += 1;
-            *bits += 8;
-        }
-    }
-}
-
 /// Phase 1 inner loop: count the codewords starting in `[start, end)`.
 fn count_chunk(
     encoded: &[u8],
     lut: &HierarchicalLut,
-    fast: &FastTable,
+    fast: Option<&FastLut>,
     start: u64,
     end: u64,
 ) -> Result<u32> {
-    let (mut bitbuf, mut bits, mut byte_pos) = cursor_at(encoded, start);
-    let mut pos = start;
+    let mut cur = BitCursor::new(encoded, start);
     let mut n = 0u32;
-    while pos < end {
-        refill(encoded, &mut bitbuf, &mut bits, &mut byte_pos);
-        let window16 = (bitbuf >> 48) as u16;
-        let e = fast.lookup_multi(window16);
-        if e != 0 {
-            let used = e & 0x1F;
-            // All codes in the window start before `end` only when the
-            // whole batch fits; a straddling batch falls through to the
-            // one-symbol path so chunk ownership stays exact.
-            if pos + used <= end {
-                n += ((e >> 5) & 0x7) as u32;
-                bitbuf <<= used;
-                bits = bits.wrapping_sub(used as u32);
-                pos += used;
-                continue;
+    while cur.position() < end {
+        cur.refill();
+        if let Some(fast) = fast {
+            let e = fast.lookup_multi(cur.window16());
+            if e != 0 {
+                let used = e & 0x1F;
+                // All codes in the window start before `end` only when
+                // the whole batch fits; a straddling batch falls through
+                // to the one-symbol path so chunk ownership stays exact.
+                if cur.position() + used <= end {
+                    n += ((e >> 5) & 0x7) as u32;
+                    cur.consume(used as u32);
+                    continue;
+                }
             }
         }
-        let (_, len) = match fast.lookup(window16) {
+        let (_, len) = match fast.and_then(|f| f.lookup(cur.window16())) {
             Some(hit) => hit,
-            None => lut.lookup((bitbuf >> 32) as u32)?,
+            None => lut.lookup(cur.window32())?,
         };
         n += 1;
-        bitbuf <<= len as u32;
-        bits = bits.wrapping_sub(len as u32);
-        pos += len as u64;
+        cur.consume(len as u32);
     }
     Ok(n)
 }
@@ -401,51 +353,48 @@ fn count_chunk(
 fn decode_chunk(
     encoded: &[u8],
     lut: &HierarchicalLut,
-    fast: &FastTable,
+    fast: Option<&FastLut>,
     start: u64,
     end: u64,
     sm: &[u8],
     out: &mut [Bf16],
 ) -> Result<()> {
-    let (mut bitbuf, mut bits, mut byte_pos) = cursor_at(encoded, start);
-    let mut pos = start;
+    let mut cur = BitCursor::new(encoded, start);
     let mut i = 0usize;
     let total = out.len();
-    while pos < end {
-        refill(encoded, &mut bitbuf, &mut bits, &mut byte_pos);
-        let window16 = (bitbuf >> 48) as u16;
+    while cur.position() < end {
+        cur.refill();
         if i + 5 <= total {
-            let e = fast.lookup_multi(window16);
-            if e != 0 {
-                let used = e & 0x1F;
-                if pos + used <= end {
-                    // Unconditional 5-wide store; slots past `count` are
-                    // overwritten by later iterations (i + 5 <= total).
-                    let mut se = e >> 8;
-                    for k in 0..5 {
-                        out[i + k] = Bf16::from_parts(se as u8, sm[i + k]);
-                        se >>= 8;
+            if let Some(fast) = fast {
+                let e = fast.lookup_multi(cur.window16());
+                if e != 0 {
+                    let used = e & 0x1F;
+                    if cur.position() + used <= end {
+                        // Unconditional 5-wide store; slots past `count`
+                        // are overwritten by later iterations (i + 5 <=
+                        // total).
+                        let mut se = e >> 8;
+                        for k in 0..5 {
+                            out[i + k] = Bf16::from_parts(se as u8, sm[i + k]);
+                            se >>= 8;
+                        }
+                        i += ((e >> 5) & 0x7) as usize;
+                        cur.consume(used as u32);
+                        continue;
                     }
-                    i += ((e >> 5) & 0x7) as usize;
-                    bitbuf <<= used;
-                    bits = bits.wrapping_sub(used as u32);
-                    pos += used;
-                    continue;
                 }
             }
         }
-        let (symbol, len) = match fast.lookup(window16) {
+        let (symbol, len) = match fast.and_then(|f| f.lookup(cur.window16())) {
             Some(hit) => hit,
-            None => lut.lookup((bitbuf >> 32) as u32)?,
+            None => lut.lookup(cur.window32())?,
         };
         if i >= total {
             return Err(Error::corrupt("phase 2 decoded more elements than phase 1 counted"));
         }
         out[i] = Bf16::from_parts(symbol, sm[i]);
         i += 1;
-        bitbuf <<= len as u32;
-        bits = bits.wrapping_sub(len as u32);
-        pos += len as u64;
+        cur.consume(len as u32);
     }
     if i != total {
         return Err(Error::corrupt(format!(

@@ -60,7 +60,18 @@ impl<'a> BitReader<'a> {
     }
 
     /// Peek up to 32 bits, left-aligned into the *high* bits of the
-    /// return value's low `n` bits; bits past the end read as 0.
+    /// return value's low `n` bits.
+    ///
+    /// **Past-end contract (pinned):** bits at or beyond the last byte
+    /// of `bytes` read as 0 — a peek near the stream tail zero-fills
+    /// rather than failing, and the caller is responsible for not
+    /// *consuming* past `len_bits`. Prefix codes make the zero-fill
+    /// harmless for decode: trailing zeros can never alter which
+    /// codeword the valid leading bits match. [`super::fastlut::BitCursor`]'s
+    /// word-granularity refill implements this exact semantic, so the
+    /// fast path and this reader see identical windows at every
+    /// position including the tail (`bitreader_and_bitcursor_agree_at_tail`
+    /// pins the equivalence).
     ///
     /// This is the "read the next L bits" primitive from Appendix I.
     #[inline]
@@ -211,6 +222,45 @@ mod tests {
         let r = BitReader::new(&bytes, 8);
         // Peeking 32 bits with only 8 available zero-fills.
         assert_eq!(r.peek(32), 0xFF00_0000);
+        // The contract holds at every partial overrun and fully past
+        // the end — never garbage, never a panic.
+        let mut r = BitReader::new(&bytes, 8);
+        r.advance(3);
+        assert_eq!(r.peek(32), 0b11111 << 27);
+        r.advance(5);
+        assert_eq!(r.peek(32), 0);
+        r.advance(32);
+        assert_eq!(r.peek(32), 0);
+    }
+
+    #[test]
+    fn bitreader_and_bitcursor_agree_at_tail() {
+        // The fast path's word-refilled cursor must see the same
+        // zero-filled windows as `peek` at every position, especially
+        // within 64 bits of the end where refill runs out of whole
+        // words and dribbles bytes.
+        use crate::huffman::fastlut::BitCursor;
+        let mut rng = Rng::new(77);
+        let mut bytes = vec![0u8; 19];
+        for b in bytes.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let len_bits = bytes.len() as u64 * 8;
+        for start in 0..len_bits {
+            let r = BitReader::at(&bytes, start, len_bits);
+            let mut c = BitCursor::new(&bytes, start);
+            c.refill();
+            assert_eq!(
+                c.window32(),
+                r.peek(32),
+                "window mismatch at bit {start}"
+            );
+            assert_eq!(
+                c.window16(),
+                (r.peek(32) >> 16) as u16,
+                "16-bit window mismatch at bit {start}"
+            );
+        }
     }
 
     #[test]

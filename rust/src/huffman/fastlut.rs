@@ -1,0 +1,477 @@
+//! The flat multi-symbol fast-decode subsystem.
+//!
+//! [`lut::HierarchicalLut`](super::lut::HierarchicalLut) is the
+//! paper-faithful decoder: compact 256-entry tables resolved one byte
+//! at a time, up to four dependent loads per symbol. That shape is
+//! right for the SRAM model but wrong for a CPU hot loop, where the
+//! byte walk plus [`BitReader::peek`](super::decode::BitReader::peek)'s
+//! per-symbol 40-bit gather dominates decode time. This module is the
+//! throughput decoder every hot path (DF11 sequential, DF11 parallel
+//! phases 1–2, split-stream exponent plane) shares:
+//!
+//! * [`FastLut`] — one flat table indexed by a [`FAST_BITS`]-bit
+//!   MSB-aligned stream window. Each entry packs `(symbol,
+//!   consumed_bits)`; a parallel multi-symbol table packs up to five
+//!   symbols per entry when whole codes fit inside the window, so one
+//!   lookup typically retires ~5 exponents.
+//! * [`BitCursor`] — a branchless 64-bit left-aligned bit buffer with
+//!   word-granularity refill (one 32-bit big-endian splice per ~11
+//!   typical codes), replacing the per-symbol byte gather.
+//!
+//! ## Fast-path constraints and the fallback rule
+//!
+//! The fast path is an *accelerator*, never a semantic fork:
+//!
+//! * **Max code length.** Codes longer than [`MAX_CODE_LEN`] (32 bits)
+//!   are unrepresentable; [`FastLut::build`] rejects such codebooks
+//!   with the typed [`Error::CodeTooLong`], and [`FastLut::try_build`]
+//!   turns that (plus an empty codebook) into `None` so callers fall
+//!   back to the hierarchical decoder wholesale.
+//! * **Table budget.** The window is fixed at [`FAST_BITS`] = 16 bits
+//!   (2^16 entries: 128 KiB single-symbol + 512 KiB multi-symbol).
+//!   Codes of 17–32 bits build fine but cannot be resolved from the
+//!   window alone: their entries stay empty and every lookup miss
+//!   falls back to the hierarchical walk *for that symbol only*.
+//!
+//! So the decode loops are written against `Option<&FastLut>`: `None`
+//! (constraints exceeded) decodes entirely hierarchically, `Some` uses
+//! the table with per-symbol fallback — and the property suite pins
+//! fast == hierarchical == scalar on every path.
+//!
+//! ## Stream-tail semantics
+//!
+//! [`BitCursor`] refill zero-fills past the end of the byte slice,
+//! exactly like [`BitReader::peek`](super::decode::BitReader::peek)
+//! (whose past-end contract is pinned by a regression test). A window
+//! peeked at the stream tail therefore matches between the two
+//! decoders bit for bit, which is what lets the fast and reference
+//! paths agree on corrupt/truncated streams too.
+
+use super::lut::{HierarchicalLut, LutEntry};
+use super::MAX_CODE_LEN;
+use crate::error::{Error, Result};
+
+/// Window width of the fast table: 2^16 entries. 14-bit windows were
+/// tried (smaller tables) but the build structure is byte-aligned and
+/// the measured difference was within noise; 17+ bits doubles the
+/// table budget per bit for few extra multi-symbol hits.
+pub const FAST_BITS: u32 = 16;
+
+/// Most symbols one multi-symbol entry can retire (typical DF11
+/// exponent codes are ~2.75 bits, so a 16-bit window usually holds 5).
+pub const MAX_MULTI_SYMBOLS: usize = 5;
+
+/// A flattened fast-decode table over [`FAST_BITS`]-bit windows.
+///
+/// `table` resolves one `(symbol, consumed_bits)` pair per window;
+/// `multi` packs a greedy batch of up to [`MAX_MULTI_SYMBOLS`] symbols
+/// whose codes fit wholly inside the window. Both use `0` as the
+/// "slow path" marker (no canonical code is 0 bits long, so a real
+/// entry always has a nonzero length field).
+#[derive(Clone)]
+pub struct FastLut {
+    /// entry = `(symbol << 8) | consumed_bits`, or 0 for slow-path.
+    table: Vec<u16>,
+    /// Multi-symbol entries. Layout: bits 0..=4 total consumed bits,
+    /// 5..=7 symbol count (1..=5), 8.. the symbols (8 bits each).
+    /// 0 = slow path.
+    multi: Vec<u64>,
+    /// Longest code in the codebook (for diagnostics and tests).
+    max_len: u32,
+}
+
+impl std::fmt::Debug for FastLut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "FastLut({} entries, max code {} bits)",
+            self.table.len(),
+            self.max_len
+        )
+    }
+}
+
+impl FastLut {
+    /// Build from the hierarchical LUT by walking its top two levels
+    /// (every window a ≤16-bit code can occupy), then greedily packing
+    /// multi-symbol entries. Rejects codebooks whose longest code
+    /// exceeds [`MAX_CODE_LEN`] with [`Error::CodeTooLong`] — the
+    /// fast-path bit accounting (5-bit consumed fields, 32-bit
+    /// windows) is only valid below that bound.
+    pub fn build(lut: &HierarchicalLut) -> Result<FastLut> {
+        let max_len = lut.max_len();
+        if max_len > MAX_CODE_LEN {
+            return Err(Error::CodeTooLong {
+                got: max_len,
+                max: MAX_CODE_LEN,
+            });
+        }
+        let mut table = vec![0u16; 1 << FAST_BITS];
+        for b0 in 0..256usize {
+            match lut.entry(0, b0) {
+                LutEntry::Symbol(s) => {
+                    let len = lut.code_lengths()[s as usize];
+                    if len as u32 <= FAST_BITS {
+                        let base = b0 << 8;
+                        let e = ((s as u16) << 8) | len as u16;
+                        for t in table.iter_mut().skip(base).take(256) {
+                            *t = e;
+                        }
+                    }
+                }
+                LutEntry::Pointer(next) => {
+                    for b1 in 0..256usize {
+                        if let LutEntry::Symbol(s) = lut.entry(next as usize, b1) {
+                            let len = lut.code_lengths()[s as usize];
+                            if len as u32 <= FAST_BITS {
+                                table[(b0 << 8) | b1] = ((s as u16) << 8) | len as u16;
+                            }
+                        }
+                    }
+                }
+                LutEntry::Invalid => {}
+            }
+        }
+
+        // Multi-symbol pass: greedily decode symbols per window using
+        // only the 16 known bits. A follow-up symbol is valid only if
+        // its code fits entirely inside the remaining known bits.
+        let mut multi = vec![0u64; 1 << FAST_BITS];
+        for w in 0..(1usize << FAST_BITS) {
+            let mut window = w as u16;
+            let mut used: u64 = 0;
+            let mut syms = [0u8; MAX_MULTI_SYMBOLS];
+            let mut count = 0u64;
+            while (count as usize) < MAX_MULTI_SYMBOLS {
+                let e = table[window as usize];
+                if e == 0 {
+                    break;
+                }
+                let (s, l) = ((e >> 8) as u8, (e & 0xFF) as u64);
+                if used + l > FAST_BITS as u64 {
+                    break;
+                }
+                syms[count as usize] = s;
+                used += l;
+                count += 1;
+                // l can be 16 (a code exactly filling the window).
+                window = if l >= 16 { 0 } else { window << l };
+            }
+            if count > 0 {
+                let mut e = used | (count << 5);
+                for (i, &sy) in syms.iter().enumerate() {
+                    e |= (sy as u64) << (8 + 8 * i);
+                }
+                multi[w] = e;
+            }
+        }
+        Ok(FastLut {
+            table,
+            multi,
+            max_len,
+        })
+    }
+
+    /// [`FastLut::build`] with the fallback rule applied: `None` when
+    /// the codebook exceeds the fast-path constraints (so the caller
+    /// decodes through the hierarchical tables instead of failing).
+    pub fn try_build(lut: &HierarchicalLut) -> Option<FastLut> {
+        if !Self::supports(lut.max_len()) {
+            return None;
+        }
+        Self::build(lut).ok()
+    }
+
+    /// Whether a codebook with longest code `max_len` is inside the
+    /// fast-path constraints. (Codes longer than [`FAST_BITS`] still
+    /// build — they resolve per symbol through the hierarchical
+    /// fallback — but nothing past [`MAX_CODE_LEN`] is representable.)
+    pub fn supports(max_len: u32) -> bool {
+        max_len > 0 && max_len <= MAX_CODE_LEN
+    }
+
+    /// Longest code in the codebook this table was built from.
+    pub fn max_len(&self) -> u32 {
+        self.max_len
+    }
+
+    /// Lookup by a 16-bit MSB-aligned window: `Some((symbol,
+    /// consumed_bits))` on the fast path, `None` when the code is
+    /// longer than [`FAST_BITS`] (hierarchical fallback) or invalid.
+    #[inline(always)]
+    pub fn lookup(&self, window16: u16) -> Option<(u8, u8)> {
+        let e = self.table[window16 as usize];
+        if e == 0 {
+            None
+        } else {
+            Some(((e >> 8) as u8, (e & 0xFF) as u8))
+        }
+    }
+
+    /// Multi-symbol lookup: the raw packed entry (see the `multi`
+    /// field docs); 0 = slow path.
+    #[inline(always)]
+    pub fn lookup_multi(&self, window16: u16) -> u64 {
+        self.multi[window16 as usize]
+    }
+}
+
+/// A branchless 64-bit bit cursor over an MSB-first stream, positioned
+/// at an arbitrary start bit.
+///
+/// The buffer is left-aligned (top `bits` bits valid). [`refill`]
+/// splices a whole 32-bit big-endian word when one is available and
+/// dribbles bytes near the stream end; past the end it loads nothing,
+/// so the window reads as zero-filled — the exact
+/// [`BitReader::peek`](super::decode::BitReader::peek) tail contract.
+///
+/// [`refill`]: BitCursor::refill
+#[derive(Clone, Debug)]
+pub struct BitCursor<'a> {
+    bytes: &'a [u8],
+    /// Left-aligned bit buffer: top `bits` bits are valid stream bits.
+    bitbuf: u64,
+    /// Valid bit count in `bitbuf`.
+    bits: u32,
+    /// Next byte to load.
+    byte_pos: usize,
+    /// Absolute bit position of the next unconsumed bit.
+    pos: u64,
+}
+
+impl<'a> BitCursor<'a> {
+    /// Cursor over `bytes` starting at absolute bit `start`.
+    #[inline]
+    pub fn new(bytes: &'a [u8], start: u64) -> BitCursor<'a> {
+        let mut byte_pos = (start / 8) as usize;
+        let mut bitbuf = 0u64;
+        let mut bits = 0u32;
+        while bits <= 56 && byte_pos < bytes.len() {
+            bitbuf |= (bytes[byte_pos] as u64) << (56 - bits);
+            byte_pos += 1;
+            bits += 8;
+        }
+        let skip = (start % 8) as u32;
+        bitbuf <<= skip;
+        bits = bits.saturating_sub(skip);
+        BitCursor {
+            bytes,
+            bitbuf,
+            bits,
+            byte_pos,
+            pos: start,
+        }
+    }
+
+    /// Top up the buffer: one 32-bit word splice when available, byte
+    /// dribble near the stream end, nothing (zero-fill) past it.
+    #[inline(always)]
+    pub fn refill(&mut self) {
+        if self.bits > 32 {
+            return;
+        }
+        if self.byte_pos + 4 <= self.bytes.len() {
+            let word = u32::from_be_bytes([
+                self.bytes[self.byte_pos],
+                self.bytes[self.byte_pos + 1],
+                self.bytes[self.byte_pos + 2],
+                self.bytes[self.byte_pos + 3],
+            ]);
+            self.bitbuf |= (word as u64) << (32 - self.bits);
+            self.byte_pos += 4;
+            self.bits += 32;
+        } else {
+            while self.bits <= 56 && self.byte_pos < self.bytes.len() {
+                self.bitbuf |= (self.bytes[self.byte_pos] as u64) << (56 - self.bits);
+                self.byte_pos += 1;
+                self.bits += 8;
+            }
+        }
+    }
+
+    /// The top 16 buffered bits, MSB-aligned (the [`FastLut`] window).
+    #[inline(always)]
+    pub fn window16(&self) -> u16 {
+        (self.bitbuf >> 48) as u16
+    }
+
+    /// The top 32 buffered bits (the hierarchical-LUT window).
+    #[inline(always)]
+    pub fn window32(&self) -> u32 {
+        (self.bitbuf >> 32) as u32
+    }
+
+    /// Consume `n` buffered bits (`n` ≤ 32). On a corrupt stream the
+    /// nominal consumption may exceed what was buffered; the cursor
+    /// tracks position with wrapping arithmetic exactly like the
+    /// historical open-coded loops, and callers catch over-consumption
+    /// with their exact-bit-budget checks.
+    #[inline(always)]
+    pub fn consume(&mut self, n: u32) {
+        self.bitbuf <<= n;
+        self.bits = self.bits.wrapping_sub(n);
+        self.pos += n as u64;
+    }
+
+    /// Read and consume `n` bits (1 ≤ `n` ≤ 32), MSB-first. The caller
+    /// must [`refill`](BitCursor::refill) often enough that `n` bits
+    /// are buffered; past the stream end this returns zero bits.
+    #[inline(always)]
+    pub fn take(&mut self, n: u32) -> u32 {
+        debug_assert!(n >= 1 && n <= 32);
+        let v = (self.bitbuf >> (64 - n)) as u32;
+        self.consume(n);
+        v
+    }
+
+    /// Absolute bit position of the next unconsumed bit.
+    #[inline]
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode::BitReader;
+    use super::super::Codebook;
+    use super::*;
+
+    fn book_from(lengths: &[u8; 256]) -> Codebook {
+        Codebook::from_lengths(lengths).unwrap()
+    }
+
+    #[test]
+    fn fast_lut_agrees_with_hierarchical_on_every_window() {
+        // A mixed (incomplete) book: short, medium, and 16-bit codes,
+        // leaving some windows invalid so the error arm is exercised.
+        let mut lengths = [0u8; 256];
+        lengths[0] = 1;
+        lengths[1] = 2;
+        lengths[2] = 4;
+        lengths[3] = 5;
+        lengths[4] = 5;
+        for s in 5..16 {
+            lengths[s] = 9;
+        }
+        for s in 16..48 {
+            lengths[s] = 16;
+        }
+        let book = book_from(&lengths);
+        let lut = HierarchicalLut::build(&book).unwrap();
+        let fast = FastLut::build(&lut).unwrap();
+        for w in 0..=u16::MAX {
+            let window32 = (w as u32) << 16;
+            match (fast.lookup(w), lut.lookup(window32)) {
+                (Some((fs, fl)), Ok((s, l))) => assert_eq!((fs, fl), (s, l), "window {w:#x}"),
+                (None, Ok((_, l))) => assert!(l as u32 > FAST_BITS, "missed short code at {w:#x}"),
+                (None, Err(_)) => {}
+                (Some(hit), Err(_)) => panic!("fast hit {hit:?} on invalid window {w:#x}"),
+            }
+        }
+    }
+
+    #[test]
+    fn multi_entries_replay_single_lookups() {
+        let mut lengths = [0u8; 256];
+        lengths[7] = 1;
+        lengths[8] = 2;
+        lengths[9] = 3;
+        lengths[10] = 3;
+        let book = book_from(&lengths);
+        let lut = HierarchicalLut::build(&book).unwrap();
+        let fast = FastLut::build(&lut).unwrap();
+        for w in 0..=u16::MAX {
+            let e = fast.lookup_multi(w);
+            if e == 0 {
+                continue;
+            }
+            let used = e & 0x1F;
+            let count = ((e >> 5) & 0x7) as usize;
+            assert!(count >= 1 && count <= MAX_MULTI_SYMBOLS);
+            assert!(used <= FAST_BITS as u64);
+            // Replaying single-symbol lookups must yield the same
+            // symbols and total length.
+            let mut window = w;
+            let mut replay_used = 0u64;
+            for k in 0..count {
+                let (s, l) = fast.lookup(window).expect("multi entry implies fast hits");
+                assert_eq!(s, ((e >> (8 + 8 * k)) & 0xFF) as u8, "window {w:#x} sym {k}");
+                replay_used += l as u64;
+                window = if l >= 16 { 0 } else { window << l };
+            }
+            assert_eq!(replay_used, used, "window {w:#x}");
+        }
+    }
+
+    #[test]
+    fn supports_applies_the_constraint_rule() {
+        assert!(!FastLut::supports(0));
+        assert!(FastLut::supports(1));
+        assert!(FastLut::supports(FAST_BITS));
+        assert!(FastLut::supports(MAX_CODE_LEN));
+        assert!(!FastLut::supports(MAX_CODE_LEN + 1));
+    }
+
+    #[test]
+    fn cursor_matches_bitreader_at_every_offset() {
+        let bytes: Vec<u8> = (0..37u8).map(|b| b.wrapping_mul(0x9D).wrapping_add(3)).collect();
+        let bit_len = bytes.len() as u64 * 8;
+        for start in [0u64, 1, 5, 8, 13, 64, 100, bit_len - 33, bit_len - 1] {
+            let mut cur = BitCursor::new(&bytes, start);
+            let mut r = BitReader::at(&bytes, start, bit_len);
+            cur.refill();
+            assert_eq!(cur.window32(), r.peek(32), "start {start}");
+            // Consume a few odd strides and re-compare.
+            for stride in [3u32, 7, 1, 16, 11] {
+                cur.refill();
+                let got = cur.take(stride);
+                let want = r.peek(stride);
+                r.advance(stride);
+                assert_eq!(got, want, "start {start} stride {stride}");
+                assert_eq!(cur.position(), r.position(), "start {start} stride {stride}");
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_zero_fills_past_end_like_bitreader_peek() {
+        // The stream-tail contract the fast-path refill must match:
+        // bits past the end read as zero, never as an error.
+        let bytes = [0xFFu8, 0xA5];
+        let bit_len = 16u64;
+        let mut cur = BitCursor::new(&bytes, 8);
+        let mut r = BitReader::at(&bytes, 8, bit_len);
+        cur.refill();
+        assert_eq!(cur.window32(), r.peek(32));
+        assert_eq!(cur.window32(), 0xA500_0000);
+        cur.consume(8);
+        r.advance(8);
+        cur.refill();
+        // Fully past the end now: both decoders see all-zero windows.
+        assert_eq!(cur.window32(), 0);
+        assert_eq!(r.peek(32), 0);
+        assert_eq!(cur.take(16), 0);
+        // And a cursor started past the end is all zeros from the off.
+        let mut tail = BitCursor::new(&bytes, 16);
+        tail.refill();
+        assert_eq!(tail.window32(), 0);
+    }
+
+    #[test]
+    fn word_refill_and_dribble_refill_agree() {
+        // 9 bytes: the word path covers the first 8, the dribble path
+        // the tail — consuming across the boundary must be seamless.
+        let bytes = [1u8, 2, 3, 4, 5, 6, 7, 8, 9];
+        let mut cur = BitCursor::new(&bytes, 0);
+        let mut r = BitReader::at(&bytes, 0, 72);
+        for _ in 0..9 {
+            cur.refill();
+            let got = cur.take(8);
+            let want = r.peek(8);
+            r.advance(8);
+            assert_eq!(got, want);
+        }
+        assert_eq!(cur.position(), 72);
+    }
+}

@@ -11,17 +11,21 @@
 //! * [`canonical`] — canonical code assignment from lengths;
 //! * [`encode`] — MSB-first bit-packing encoder;
 //! * [`lut`] — hierarchical 256-entry LUT construction (§2.3.1);
-//! * [`decode`] — bit readers and the scalar/LUT reference decoders.
+//! * [`decode`] — bit readers and the scalar/LUT reference decoders;
+//! * [`fastlut`] — the flat multi-symbol fast-decode table + 64-bit
+//!   bit cursor shared by every throughput decode path.
 
 pub mod canonical;
 pub mod decode;
 pub mod encode;
+pub mod fastlut;
 pub mod lut;
 pub mod tree;
 
 pub use canonical::{CanonicalCode, Codeword};
 pub use decode::{decode_all, BitReader};
 pub use encode::{encode_symbols, BitWriter};
+pub use fastlut::{BitCursor, FastLut, FAST_BITS};
 pub use lut::{HierarchicalLut, LutEntry, LUT_SIZE, POINTER_BASE};
 pub use tree::{code_lengths, code_lengths_limited};
 

@@ -23,9 +23,9 @@ use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
 use dfloat11::codec::DecodeOpts;
 use dfloat11::container::{ContainerReader, ContainerWriter};
 use dfloat11::coordinator::{
-    trace, Component, Engine, Fleet, LeastLoaded, RejectReason, ReplicaHealth, Request, Response,
-    RoundRobin, RouterPolicy, SchedPolicy, ServeConfig, Server, ServingEngine, SessionAffinity,
-    ShardedEngine, WeightMode,
+    trace, BlockCacheMode, Component, Engine, Fleet, LeastLoaded, RejectReason, ReplicaHealth,
+    Request, Response, RoundRobin, RouterPolicy, SchedPolicy, ServeConfig, Server, ServingEngine,
+    SessionAffinity, ShardedEngine, WeightMode,
 };
 use dfloat11::entropy::ComponentHistograms;
 use dfloat11::error::{Error, Result};
@@ -67,6 +67,12 @@ fn usage() -> ! {
                    --io read|mmap|ring  container payload backend (needs\n\
                                  --from): buffered reads, zero-copy mmap,\n\
                                  or the async prefetch ring (default read)\n\
+                   --hbm BYTES   simulated per-replica HBM budget; KV pages\n\
+                                 get whatever remains after resident weights\n\
+                   --block-cache on|off|BYTES  LRU of decoded block weights\n\
+                                 (default off): `on` spends the HBM budget\n\
+                                 left after weights + worst-case KV (needs\n\
+                                 --hbm); BYTES pins an explicit capacity\n\
                    --replicas N  replicate the engine N times behind the\n\
                                  fleet admission router (1 = plain server)\n\
                    --router rr|least-loaded|session  fleet routing policy\n\
@@ -270,6 +276,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.get("queue-cap").is_some() {
         sconfig = sconfig.queue_capacity(args.get_parse_or("queue-cap", 0usize)?);
+    }
+    if args.get("hbm").is_some() {
+        sconfig = sconfig.hbm_budget(args.get_parse_or("hbm", 0u64)?);
+    }
+    if let Some(spec) = args.get("block-cache") {
+        sconfig = sconfig.block_cache(BlockCacheMode::parse(spec)?);
     }
     // One typed validator for every knob combination: the old ad-hoc
     // checks (`--pipeline` without `--shards`, zero slots, ...) live in
@@ -537,6 +549,12 @@ fn run_server<E: ServingEngine>(
         report.occupancy.ticks,
     );
     println!("tokens-crc32 {:#010x}", tokens_crc32(&report.responses));
+    if let Some(cs) = report.block_cache {
+        println!(
+            "block-cache hits={} misses={} evictions={} bytes={} capacity={} entries={}",
+            cs.hits, cs.misses, cs.evictions, cs.bytes, cs.capacity, cs.entries,
+        );
+    }
     let bd = server.engine().breakdown();
     let decompress = bd.measured_seconds(Component::Decompress);
     if decompress > 0.0 {

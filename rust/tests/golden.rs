@@ -15,8 +15,13 @@ use dfloat11::bf16::Bf16;
 use dfloat11::codec::select::{CodecSelector, SelectionPolicy};
 use dfloat11::codec::{Codec, DecodeOpts, RansCodec, SplitStreamCodec};
 use dfloat11::container::{ContainerReader, ContainerWriter, CONTAINER_VERSION};
+use dfloat11::coordinator::{BlockCacheMode, Engine, Request, SchedulerConfig, Server};
 use dfloat11::crc32::Hasher;
+use dfloat11::dfloat11::decompress::{
+    decompress_sequential, decompress_sequential_hierarchical_into,
+};
 use dfloat11::Df11Tensor;
+use dfloat11::IoBackend;
 use std::path::PathBuf;
 
 /// CRC-32 over the concatenated BF16 bits (little-endian) of every
@@ -120,6 +125,28 @@ fn golden_weights_survive_every_codec_path() {
         .collect();
     let serial: Vec<Vec<Bf16>> = df11.iter().map(|t| t.decompress().unwrap()).collect();
     assert_eq!(crc_of(&serial), GOLDEN_WEIGHTS_CRC32, "df11 serial path");
+
+    // The multi-symbol fast path and the forced hierarchical fallback
+    // pin the same CRC: the fast table is an optimization, never a
+    // format change.
+    let fast: Vec<Vec<Bf16>> = df11
+        .iter()
+        .map(|t| decompress_sequential(t).unwrap())
+        .collect();
+    assert_eq!(crc_of(&fast), GOLDEN_WEIGHTS_CRC32, "df11 fast-path serial");
+    let hier: Vec<Vec<Bf16>> = df11
+        .iter()
+        .map(|t| {
+            let mut out = vec![Bf16::from_bits(0); t.num_elements()];
+            decompress_sequential_hierarchical_into(t, &mut out).unwrap();
+            out
+        })
+        .collect();
+    assert_eq!(
+        crc_of(&hier),
+        GOLDEN_WEIGHTS_CRC32,
+        "df11 hierarchical fallback path"
+    );
 
     // DF11 parallel two-phase pipeline (explicit pool width, no
     // small-tensor dispatch shortcut).
@@ -233,6 +260,101 @@ fn golden_weights_survive_every_codec_path() {
         GOLDEN_WEIGHTS_CRC32,
         "auto mixed-codec container path"
     );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Serving losslessness through the decoded-block cache: a
+/// container-backed engine on every `--io` backend, with the cache off,
+/// generously sized, and squeezed into eviction churn, must emit one
+/// identical token digest — and the warm cache must actually hit.
+#[test]
+fn golden_serving_tokens_identical_cache_on_off_across_io_backends() {
+    use dfloat11::dfloat11::Df11Model;
+    use dfloat11::model::init::generate_model_weights;
+    use dfloat11::model::ModelConfig;
+
+    let cfg = ModelConfig::test_tiny();
+    let raw = generate_model_weights(&cfg, 41);
+    let model = Df11Model::compress_from_weights(cfg.name.clone(), raw).unwrap();
+    let dir = std::env::temp_dir().join("df11_golden_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("serve_cache_{}.df11", std::process::id()));
+    dfloat11::container::write_df11_model(&path, &model).unwrap();
+
+    let workload: Vec<Request> = (0..4)
+        .map(|i| Request::new(vec![(i * 13 % 40 + 1) as u32, 3, 9], 3 + i % 3))
+        .collect();
+
+    // Token digest in request-id order, like the CLI's `tokens-crc32`.
+    let token_crc = |report: &dfloat11::coordinator::ServeReport| {
+        let mut responses: Vec<_> = report.responses.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        let mut h = Hasher::new();
+        for r in &responses {
+            h.update(&r.id.to_le_bytes());
+            for t in &r.tokens {
+                h.update(&t.to_le_bytes());
+            }
+        }
+        h.finalize()
+    };
+
+    let run = |io: IoBackend, cache: BlockCacheMode| {
+        let engine = Engine::build_from_container_with(&cfg, &path, io).unwrap();
+        let mut server = Server::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 2,
+                block_cache: cache,
+                ..SchedulerConfig::default()
+            },
+        );
+        for r in &workload {
+            server.submit(r.clone()).unwrap();
+        }
+        server.drain().unwrap()
+    };
+
+    let baseline = run(IoBackend::Read, BlockCacheMode::Off);
+    assert!(baseline.block_cache.is_none());
+    let pinned = token_crc(&baseline);
+
+    for io in IoBackend::ALL {
+        for cache in [
+            BlockCacheMode::Off,
+            BlockCacheMode::Bytes(1 << 30), // everything fits: pure hits after warmup
+            BlockCacheMode::Bytes(16 << 10), // eviction churn
+        ] {
+            let report = run(io, cache);
+            assert_eq!(
+                report.responses.len(),
+                workload.len(),
+                "{io} cache={cache:?} lost responses"
+            );
+            assert_eq!(
+                token_crc(&report),
+                pinned,
+                "{io} cache={cache:?} drifted from the cache-off token digest"
+            );
+            if let BlockCacheMode::Bytes(cap) = cache {
+                let stats = report.block_cache.expect("cache-on run reports stats");
+                assert_eq!(stats.capacity, cap);
+                assert!(
+                    stats.hits + stats.misses > 0,
+                    "{io} cache={cache:?} never consulted the cache"
+                );
+                if cap == 1 << 30 {
+                    assert!(
+                        stats.hits > 0,
+                        "{io}: a generously sized warm cache must hit"
+                    );
+                    assert_eq!(stats.evictions, 0, "{io}: nothing to evict at 1 GiB");
+                }
+            } else {
+                assert!(report.block_cache.is_none());
+            }
+        }
+    }
     std::fs::remove_file(&path).ok();
 }
 

@@ -2,16 +2,21 @@
 //! `proptest_lite` (the vendored set has no proptest).
 
 use dfloat11::bf16::{merge_planes, split_planes, Bf16};
-use dfloat11::coordinator::{Request, RequestQueue};
+use dfloat11::coordinator::{
+    BlockCacheMode, Engine, Request, RequestQueue, SchedulerConfig, Server, WeightMode,
+};
 use dfloat11::dfloat11::decompress::decompress_sequential;
 use dfloat11::dfloat11::parallel::decompress_parallel;
 use dfloat11::dfloat11::serial::{pack_gaps, unpack_gaps};
 use dfloat11::dfloat11::Df11Tensor;
+use dfloat11::fuzz::Mutator;
 use dfloat11::gpu_sim::prefix_sum::{blelloch_exclusive_scan, serial_exclusive_scan};
 use dfloat11::gpu_sim::KernelConfig;
 use dfloat11::huffman::canonical::is_prefix_free;
-use dfloat11::huffman::{decode_all, encode_symbols, Codebook};
-use dfloat11::proptest_lite::{check, Config};
+use dfloat11::huffman::decode::decode_all_scalar;
+use dfloat11::huffman::{decode_all, encode_symbols, BitCursor, Codebook, FastLut, HierarchicalLut};
+use dfloat11::model::ModelConfig;
+use dfloat11::proptest_lite::{check, Config, Gen};
 use dfloat11::rng::Rng;
 
 fn cfg(cases: u32, max_size: usize) -> Config {
@@ -323,6 +328,242 @@ fn prop_container_roundtrip() {
             return Err("corrupted payload byte went undetected".into());
         }
         std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+}
+
+/// Stream-level decoder through the multi-symbol fast table, mirroring
+/// the production loop in `dfloat11::decompress::decode_stream`:
+/// batched multi-symbol lookups, single-symbol fast hits, hierarchical
+/// fallback for long codes, and the same overrun-is-an-error bit-budget
+/// semantics as [`decode_all`].
+fn decode_all_fast(cb: &Codebook, bytes: &[u8], len_bits: u64) -> Result<Vec<u8>, String> {
+    let lut = HierarchicalLut::build(cb).map_err(|e| e.to_string())?;
+    let fast = FastLut::build(&lut).map_err(|e| e.to_string())?;
+    let mut cur = BitCursor::new(bytes, 0);
+    let mut out = Vec::new();
+    while cur.position() < len_bits {
+        cur.refill();
+        let e = fast.lookup_multi(cur.window16());
+        // Commit a multi-symbol batch only when it fits the bit budget —
+        // a partial batch falls through to symbol-at-a-time decode so
+        // tail behavior matches the scalar oracle exactly.
+        if e != 0 && cur.position() + (e & 0x1F) <= len_bits {
+            let count = ((e >> 5) & 0x7) as usize;
+            let mut se = e >> 8;
+            for _ in 0..count {
+                out.push(se as u8);
+                se >>= 8;
+            }
+            cur.consume((e & 0x1F) as u32);
+            continue;
+        }
+        let (symbol, len) = match fast.lookup(cur.window16()) {
+            Some(hit) => hit,
+            None => lut.lookup(cur.window32()).map_err(|e| e.to_string())?,
+        };
+        if cur.position() + len as u64 > len_bits {
+            return Err(format!("codeword overruns stream at bit {}", cur.position()));
+        }
+        out.push(symbol);
+        cur.consume(len as u32);
+    }
+    Ok(out)
+}
+
+/// Random codebook from one of three shapes: arbitrary skewed
+/// frequencies, a Kraft-complete chain forcing max-length (32-bit)
+/// codes past every fast-table width, or the degenerate one-symbol
+/// book (1-bit code, zero entropy).
+fn arb_codebook(g: &mut Gen) -> Codebook {
+    match g.usize_in(0, 3) {
+        0 => {
+            // Chain 1,2,...,31,32,32 — Kraft-complete with L = 32.
+            let base = g.usize_in(0, 255);
+            let mut lengths = [0u8; 256];
+            for i in 0..31 {
+                lengths[(base + i) % 256] = (i + 1) as u8;
+            }
+            lengths[(base + 31) % 256] = 32;
+            lengths[(base + 32) % 256] = 32;
+            Codebook::from_lengths(&lengths).unwrap()
+        }
+        1 => {
+            let mut freqs = [0u64; 256];
+            freqs[g.usize_in(0, 255)] = 1;
+            Codebook::from_frequencies(&freqs).unwrap()
+        }
+        _ => {
+            // Exponentially skewed random frequencies: drives a mix of
+            // sub-16-bit fast-path codes and long fallback codes.
+            let n_syms = g.usize_in(2, 64);
+            let mut freqs = [0u64; 256];
+            for _ in 0..n_syms {
+                let shift = g.usize_in(0, 40);
+                freqs[g.usize_in(0, 255)] += 1u64 << shift;
+            }
+            Codebook::from_frequencies(&freqs).unwrap()
+        }
+    }
+}
+
+/// Symbols actually present in a codebook (code length > 0).
+fn present_symbols(cb: &Codebook) -> Vec<u8> {
+    (0..=255u8).filter(|&s| cb.lengths()[s as usize] > 0).collect()
+}
+
+/// THE fast-path correctness property (satellite of the multi-symbol
+/// LUT tentpole): over random codebooks — including max-length 32-bit
+/// codes and degenerate one-symbol books — the multi-symbol fast
+/// decode, the hierarchical LUT walk, and the scalar oracle produce
+/// bit-identical symbol streams for every valid encode.
+#[test]
+fn prop_fast_hierarchical_scalar_decode_agree() {
+    check("fast-hier-scalar-agree", cfg(60, 2_000), |g| {
+        let cb = arb_codebook(g);
+        let pool = present_symbols(&cb);
+        let n = g.len();
+        let syms: Vec<u8> = {
+            let k = pool.len();
+            g.vec_of(n, |r| pool[r.next_index(k)])
+        };
+        let (bytes, bits) = encode_symbols(&cb, &syms).map_err(|e| e.to_string())?;
+        let scalar = decode_all_scalar(cb.canonical(), &bytes, bits).map_err(|e| e.to_string())?;
+        let hier = decode_all(&cb, &bytes, bits).map_err(|e| e.to_string())?;
+        let fast = decode_all_fast(&cb, &bytes, bits)?;
+        if scalar != syms {
+            return Err(format!("scalar oracle broke at n={n} (L={})", cb.max_len()));
+        }
+        if hier != syms {
+            return Err(format!("hierarchical decode broke at n={n} (L={})", cb.max_len()));
+        }
+        if fast != syms {
+            return Err(format!("fast-path decode broke at n={n} (L={})", cb.max_len()));
+        }
+        Ok(())
+    });
+}
+
+/// Hostile streams (the fuzz corpus's mutation engine over valid
+/// encodes, plus pure-random bytes) never make the fast path diverge
+/// from the hierarchical walk: both reject with an error or both
+/// decode the identical symbol stream. (The scalar oracle is excluded
+/// here by design — its length-scan matches codewords through the
+/// zero-filled tail, a leniency the production decoders reject.)
+#[test]
+fn prop_fast_equals_hierarchical_on_hostile_streams() {
+    check("fast-hier-hostile-agree", cfg(60, 1_000), |g| {
+        let cb = arb_codebook(g);
+        let pool = present_symbols(&cb);
+        let n = g.len();
+        let syms: Vec<u8> = {
+            let k = pool.len();
+            g.vec_of(n, |r| pool[r.next_index(k)])
+        };
+        let (mut bytes, bits) = encode_symbols(&cb, &syms).map_err(|e| e.to_string())?;
+        // Half the cases mutate a valid encode (bit flips, truncations,
+        // splices); half are raw attacker-controlled bytes. The claimed
+        // bit length lies in both directions.
+        if g.usize_in(0, 1) == 0 {
+            let mut m = Mutator::new(g.rng.next_u64());
+            m.mutate_n(&mut bytes, 1 + g.usize_in(0, 3));
+        } else {
+            let blen = g.usize_in(0, 64);
+            bytes = g.bytes(blen);
+        }
+        let max_claim = bytes.len() as u64 * 8 + 40;
+        let claimed = if g.usize_in(0, 1) == 0 {
+            bits.min(max_claim)
+        } else {
+            g.usize_in(0, max_claim as usize) as u64
+        };
+        let hier = decode_all(&cb, &bytes, claimed);
+        let fast = decode_all_fast(&cb, &bytes, claimed);
+        match (hier, fast) {
+            (Ok(h), Ok(f)) => {
+                if h != f {
+                    return Err(format!(
+                        "hostile stream decoded differently: hier {} syms, fast {} syms",
+                        h.len(),
+                        f.len()
+                    ));
+                }
+            }
+            (Err(_), Err(_)) => {}
+            (Ok(h), Err(e)) => {
+                return Err(format!("fast rejected ({e}) what hier decoded ({} syms)", h.len()));
+            }
+            (Err(e), Ok(f)) => {
+                return Err(format!("hier rejected ({e}) what fast decoded ({} syms)", f.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// THE decoded-block-cache property (satellite of the cache tentpole):
+/// any eviction schedule — random byte capacities from degenerate
+/// (nothing fits) through thrash (one block) to all-resident — yields
+/// greedy tokens bit-identical to cache-off serving. The cache may
+/// only move simulated time, never token content.
+#[test]
+fn prop_block_cache_eviction_schedule_token_identical() {
+    let tokens_by_id = |report: &dfloat11::coordinator::ServeReport| {
+        let mut v: Vec<(u64, Vec<u32>)> = report
+            .responses
+            .iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    check("block-cache-token-identical", cfg(8, 0), |g| {
+        let cfg = ModelConfig::test_tiny();
+        let vocab = cfg.vocab_size as u32;
+        let seed = g.rng.next_u64() % 1000;
+        let n_reqs = g.usize_in(1, 4);
+        let workload: Vec<Request> = (0..n_reqs)
+            .map(|_| {
+                let plen = g.usize_in(1, 4);
+                let prompt = g.vec_of(plen, |r| r.next_u32() % vocab);
+                Request::new(prompt, g.usize_in(1, 5))
+            })
+            .collect();
+        // 1 KiB starves every block; tens of MiB holds the whole tiny
+        // model; the middle of the range forces LRU eviction churn.
+        let capacity = 1u64 << g.usize_in(10, 25);
+        let run = |mode: BlockCacheMode| -> Result<_, String> {
+            let engine = Engine::build(&cfg, seed, WeightMode::Df11).map_err(|e| e.to_string())?;
+            let mut server = Server::new(
+                engine,
+                SchedulerConfig {
+                    max_batch: 2,
+                    block_cache: mode,
+                    ..SchedulerConfig::default()
+                },
+            );
+            for r in &workload {
+                server.submit(r.clone()).map_err(|e| e.to_string())?;
+            }
+            server.drain().map_err(|e| e.to_string())
+        };
+        let off = run(BlockCacheMode::Off)?;
+        let on = run(BlockCacheMode::Bytes(capacity))?;
+        if off.block_cache.is_some() {
+            return Err("cache-off run reported cache stats".into());
+        }
+        let stats = on
+            .block_cache
+            .ok_or_else(|| "cache-on run reported no cache stats".to_string())?;
+        if stats.hits + stats.misses == 0 {
+            return Err("cache-on run never consulted the cache".into());
+        }
+        if tokens_by_id(&off) != tokens_by_id(&on) {
+            return Err(format!(
+                "token divergence at capacity {capacity} ({} hits, {} evictions)",
+                stats.hits, stats.evictions
+            ));
+        }
         Ok(())
     });
 }

@@ -208,6 +208,7 @@ fn df11_sustains_more_slots_than_bf16_under_same_hbm_budget() {
                 policy: SchedPolicy::Continuous,
                 hbm_bytes: Some(budget),
                 page_tokens,
+                ..SchedulerConfig::default()
             },
         );
         for r in &workload {

@@ -373,6 +373,7 @@ fn df11_shards_sustain_more_slots_than_bf16_under_same_per_gpu_budget() {
                 policy: SchedPolicy::Continuous,
                 hbm_bytes: Some(budget),
                 page_tokens,
+                ..SchedulerConfig::default()
             },
         );
         for r in &workload {
